@@ -1,0 +1,102 @@
+//! Mining smart-drill-bit driver (§4.2) — the throughput-oriented example.
+//!
+//! 1. Executes the three real ML classifiers (SVM / KNN / MLP artifacts)
+//!    on a synthetic force-sensor window through PJRT and reports their
+//!    per-window host latencies and rock-class votes.
+//! 2. Runs the collaborative edge+server mining workload through the
+//!    Orchestrator and every baseline, reporting completion latency and
+//!    QoS at increasing sensor counts — the Fig. 10a story.
+//!
+//! ```text
+//! cargo run --release --example mining_drill [-- --sensors 20 --horizon 1.0]
+//! ```
+
+use anyhow::Result;
+
+use heye::baselines;
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::runtime::Runtime;
+use heye::sim::{SimConfig, Simulation, Workload};
+use heye::task::workloads::MINING_DEADLINE_S;
+use heye::telemetry;
+use heye::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let sensors = args.get_usize("sensors", 20);
+    let horizon = args.get_f64("horizon", 1.0);
+
+    // --- real classifier executions --------------------------------------
+    let mut rt = Runtime::open("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("\nreal sensor-window classification (batch of 32 windows):");
+    // a synthetic force window: a slow ramp + tool-chatter oscillation
+    let window: Vec<f32> = (0..64)
+        .map(|i| 0.01 * i as f32 + 0.3 * ((i as f32) * 0.9).sin())
+        .collect();
+    println!("{:<14} {:>10} {:>16}", "classifier", "host (ms)", "top class (w0)");
+    for name in ["mining_svm", "mining_knn", "mining_mlp"] {
+        let m = rt.load(name)?;
+        let input = m.input_from(0, &window)?;
+        let (_, _) = m.execute(&[m.input_from(0, &window)?])?; // warm
+        let (outs, dt) = m.execute(&[input])?;
+        let scores: Vec<f32> = outs[0].to_vec()?;
+        // scores are (32, 8); argmax of the first window's 8 class scores
+        let first = &scores[..8];
+        let top = first
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        println!("{:<14} {:>10.3} {:>16}", name, dt * 1e3, top);
+    }
+
+    // --- collaborative processing at scale --------------------------------
+    println!(
+        "\n{sensors} sensors @ 10 Hz across the paper testbed ({}s horizon, {} ms deadline):",
+        horizon,
+        MINING_DEADLINE_S * 1e3
+    );
+    for name in ["heye", "ace", "lats"] {
+        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+        let mut sched = baselines::by_name(name, &sim.decs);
+        let wl = Workload::mining(&sim.decs, sensors, 10.0);
+        let cfg = SimConfig::default().horizon(horizon).seed(42);
+        let m = sim.run(sched.as_mut(), wl, vec![], vec![], &cfg);
+        telemetry::summary_line(name, &m);
+    }
+
+    // --- the Fig. 10a sweep: how many sensors fit 100 ms? -----------------
+    println!("\nmax sensors within 100 ms on Orin Nano + server-1 (Fig. 10a):");
+    println!(
+        "{:<8} {:>14} {:>14} {:>10}",
+        "sensors", "heye (ms)", "ace (ms)", "winner-ok"
+    );
+    for n in [10, 20, 30, 40] {
+        let mut lat = Vec::new();
+        for name in ["heye", "ace"] {
+            let decs = Decs::build(&DecsSpec::validation_pair());
+            let origin = decs.edge_devices[0];
+            let mut sim = Simulation::new(decs);
+            let mut sched = baselines::by_name(name, &sim.decs);
+            let wl = Workload::mining_burst(origin, n);
+            let cfg = SimConfig::default().horizon(3.0).seed(7).noise(0.0);
+            let m = sim.run(sched.as_mut(), wl, vec![], vec![], &cfg);
+            let worst = m
+                .frames
+                .iter()
+                .map(|f| f.latency_s)
+                .fold(0.0f64, f64::max);
+            lat.push(worst);
+        }
+        println!(
+            "{:<8} {:>14.1} {:>14.1} {:>10}",
+            n,
+            lat[0] * 1e3,
+            lat[1] * 1e3,
+            if lat[0] <= MINING_DEADLINE_S { "yes" } else { "no" }
+        );
+    }
+    Ok(())
+}

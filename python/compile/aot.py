@@ -1,0 +1,85 @@
+"""AOT bridge: lower every L2 model to HLO **text** + a JSON manifest.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla_extension 0.5.1 the rust `xla` crate links against rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Python runs exactly once here; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MODEL_SPECS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text, with return_tuple=True so the
+    rust side always unwraps a tuple (see load path in rust/src/runtime)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str):
+    spec = MODEL_SPECS[name]
+    lowered = jax.jit(spec["fn"]).lower(*spec["inputs"])
+    text = to_hlo_text(lowered)
+    out_avals = lowered.out_info
+    outputs = [
+        {"shape": list(o.shape), "dtype": str(o.dtype)}
+        for o in jax.tree_util.tree_leaves(out_avals)
+    ]
+    inputs = [
+        {"shape": list(i.shape), "dtype": str(i.dtype)} for i in spec["inputs"]
+    ]
+    meta = {
+        "app": spec["app"],
+        "task": spec["task"],
+        "flops": int(spec["flops"]),
+        "inputs": inputs,
+        "outputs": outputs,
+        "hlo_file": f"{name}.hlo.txt",
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated subset of model names"
+    )
+    args = ap.parse_args()
+    names = list(MODEL_SPECS) if args.only is None else args.only.split(",")
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format": 1, "models": {}}
+    for name in names:
+        text, meta = lower_model(name)
+        path = os.path.join(args.out, meta["hlo_file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["models"][name] = meta
+        print(f"  {name:<18} -> {path} ({len(text)} chars)")
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

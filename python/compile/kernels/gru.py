@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: fused GRU cell (the VR pose-prediction RNN step).
+
+The paper's pose predictor is an RNN [49] running every frame on the edge.
+A naive implementation round-trips HBM three times (two projections, then
+the gate arithmetic). This kernel fuses the whole cell: both gate
+projections ride the MXU from VMEM-resident tiles and the elementwise gate
+math happens in-register before the single output store — the TPU analogue
+of the CUDA "persistent-RNN" fusion.
+
+Hidden sizes for this workload are small (<=256), so a single grid step
+holds everything in VMEM; batching tiles over rows if b grows.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sigmoid(v):
+    return jnp.tanh(v * 0.5) * 0.5 + 0.5
+
+
+def _gru_kernel(x_ref, h_ref, wx_ref, wh_ref, bx_ref, bh_ref, o_ref, *, d: int):
+    x = x_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    gx = jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32) + bx_ref[...]
+    gh = jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32) + bh_ref[...]
+    r = _sigmoid(gx[:, :d] + gh[:, :d])
+    z = _sigmoid(gx[:, d : 2 * d] + gh[:, d : 2 * d])
+    n = jnp.tanh(gx[:, 2 * d :] + r * gh[:, 2 * d :])
+    o_ref[...] = (1.0 - z) * n + z * h
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def gru_cell(x, h, wx, wh, bx, bh, *, block_b=128, interpret=True):
+    """Next hidden state for a fused GRU cell; see ref.gru_cell_ref."""
+    b, i = x.shape
+    b2, d = h.shape
+    assert b == b2 and wx.shape == (i, 3 * d) and wh.shape == (d, 3 * d)
+    assert bx.shape == (3 * d,) and bh.shape == (3 * d,)
+    bb = min(block_b, b)
+    # pad batch to a multiple of the row block
+    bp = (b + bb - 1) // bb * bb
+    xp = jnp.zeros((bp, i), jnp.float32).at[:b].set(x.astype(jnp.float32))
+    hp = jnp.zeros((bp, d), jnp.float32).at[:b].set(h.astype(jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_gru_kernel, d=d),
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, i), lambda r: (r, 0)),
+            pl.BlockSpec((bb, d), lambda r: (r, 0)),
+            pl.BlockSpec((i, 3 * d), lambda r: (0, 0)),
+            pl.BlockSpec((d, 3 * d), lambda r: (0, 0)),
+            pl.BlockSpec((3 * d,), lambda r: (0,)),
+            pl.BlockSpec((3 * d,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d), jnp.float32),
+        interpret=interpret,
+    )(
+        xp,
+        hp,
+        wx.astype(jnp.float32),
+        wh.astype(jnp.float32),
+        bx.astype(jnp.float32),
+        bh.astype(jnp.float32),
+    )
+    return out[:b]

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: VMEM-tiled dense matmul.
+
+TPU adaptation of the paper's dense-MM hot-spot (the microbenchmark behind
+Fig. 2 and the compute core of the MLP / SVM / render tasks): instead of the
+CUDA threadblock tiling the paper's Jetson targets use, the HBM<->VMEM
+schedule is expressed with BlockSpecs — each grid step owns an
+(block_m x block_n) output tile resident in VMEM and walks the K dimension,
+accumulating partial products that ride the MXU (f32 accumulation).
+
+Must run with ``interpret=True`` on CPU PJRT (Mosaic custom-calls only
+execute on real TPUs); the lowered HLO is backend-portable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: accumulate x[i,k] @ w[k,j] into o[i,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped partial product with explicit f32 accumulation.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul(x, w, *, block_m=128, block_n=128, block_k=128, interpret=True):
+    """``x (m,k) @ w (k,n) -> (m,n) f32`` via the tiled Pallas kernel.
+
+    Arbitrary shapes are supported by zero-padding up to the block grid;
+    padding contributes exact zeros to the accumulation.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 8))
+    bk = min(block_k, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.zeros((mp, kp), jnp.float32).at[:m, :k].set(x.astype(jnp.float32))
+    wp = jnp.zeros((kp, np_), jnp.float32).at[:k, :n].set(w.astype(jnp.float32))
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(block_m=128, block_n=128, block_k=128) -> int:
+    """Estimated per-step VMEM residency (x-tile + w-tile + out-tile), bytes.
+
+    Used by the §Perf roofline estimate in DESIGN.md: the default 128^3 f32
+    blocking holds 3 * 128*128*4 = 196 KiB in VMEM, far under the ~16 MiB
+    budget, leaving room for double buffering of both input streams.
+    """
+    return 4 * (block_m * block_k + block_k * block_n + block_m * block_n)

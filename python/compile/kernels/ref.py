@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package must match its oracle to float32 tolerance for
+all shapes/dtypes the hypothesis sweeps in ``python/tests`` generate.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain dense matmul with f32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(jnp.float32)
+
+
+def pairwise_sqdist_ref(x, y):
+    """Squared L2 distances between rows of ``x`` (m,d) and rows of ``y`` (n,d)."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # (m, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T  # (1, n)
+    xy = x @ y.T  # (m, n)
+    # clamp: numerically the decomposition can dip epsilon-negative
+    return jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+def sigmoid(v):
+    return jnp.tanh(v * 0.5) * 0.5 + 0.5
+
+
+def gru_cell_ref(x, h, wx, wh, bx, bh):
+    """Fused GRU cell (PyTorch gate convention: r, z, n).
+
+    x  : (b, i)  input features
+    h  : (b, d)  previous hidden state
+    wx : (i, 3d) input projection,   gates concatenated [r | z | n]
+    wh : (d, 3d) hidden projection,  gates concatenated [r | z | n]
+    bx : (3d,)   input bias
+    bh : (3d,)   hidden bias
+    returns (b, d) next hidden state
+    """
+    x = x.astype(jnp.float32)
+    h = h.astype(jnp.float32)
+    d = h.shape[1]
+    gx = x @ wx.astype(jnp.float32) + bx.astype(jnp.float32)
+    gh = h @ wh.astype(jnp.float32) + bh.astype(jnp.float32)
+    rx, zx, nx = gx[:, :d], gx[:, d : 2 * d], gx[:, 2 * d :]
+    rh, zh, nh = gh[:, :d], gh[:, d : 2 * d], gh[:, 2 * d :]
+    r = sigmoid(rx + rh)
+    z = sigmoid(zx + zh)
+    n = jnp.tanh(nx + r * nh)
+    return (1.0 - z) * n + z * h

@@ -1,0 +1,282 @@
+"""L2: the H-EYE workload compute graphs, written in JAX on top of the L1
+Pallas kernels.
+
+Two applications from the paper (§4):
+
+* **Mining (smart drill bits)** — three ML classifiers that each map a
+  window of force-sensor samples to one of 8 rock classes: an MLP, an
+  RBF-SVM and a KNN voter (Fig. 8).
+* **Cloud-rendered VR** — the five-stage frame pipeline (Fig. 7): capture
+  featurization + GRU pose prediction, speculative render, encode, decode,
+  reproject, display.
+
+Weights are deterministic (seeded) and *baked into the lowered HLO as
+constants*, so the rust runtime only feeds the activation inputs. Every
+function here is shape-polymorphic python; `aot.py` freezes the shapes
+listed in `MODEL_SPECS` when lowering.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+from .kernels.distance import pairwise_sqdist
+from .kernels.gru import gru_cell
+from .kernels.ref import sigmoid
+
+# ---------------------------------------------------------------------------
+# deterministic parameter construction
+# ---------------------------------------------------------------------------
+
+SEED = 0x48455945  # "HEYE"
+
+
+def _rng(tag: str) -> np.random.Generator:
+    return np.random.default_rng([SEED, sum(tag.encode())])
+
+
+def _glorot(rng, shape):
+    fan = sum(shape) / len(shape)
+    return rng.normal(0.0, (1.0 / fan) ** 0.5, size=shape).astype(np.float32)
+
+
+# mining dimensions: 64-sample force window -> 8 rock classes
+FORCE_DIM = 64
+N_CLASSES = 8
+MLP_HIDDEN = (128, 64)
+SVM_SV = 256
+KNN_TRAIN = 512
+KNN_K = 16
+
+# VR dimensions
+POSE_FEAT = 32
+POSE_HIDDEN = 64
+POSE_DOF = 6
+FRAME = 256  # square frame side for the render/encode/decode/reproject proxies
+
+
+def mlp_params():
+    r = _rng("mlp")
+    dims = (FORCE_DIM,) + MLP_HIDDEN + (N_CLASSES,)
+    ws = [_glorot(r, (dims[i], dims[i + 1])) for i in range(len(dims) - 1)]
+    bs = [np.zeros(dims[i + 1], np.float32) for i in range(len(dims) - 1)]
+    return ws, bs
+
+
+def svm_params():
+    r = _rng("svm")
+    sv = _glorot(r, (SVM_SV, FORCE_DIM))
+    coef = _glorot(r, (SVM_SV, N_CLASSES))
+    bias = np.zeros(N_CLASSES, np.float32)
+    return sv, coef, bias
+
+
+def knn_params():
+    r = _rng("knn")
+    train = _glorot(r, (KNN_TRAIN, FORCE_DIM))
+    labels = np.eye(N_CLASSES, dtype=np.float32)[
+        r.integers(0, N_CLASSES, size=KNN_TRAIN)
+    ]
+    return train, labels
+
+
+def pose_params():
+    r = _rng("pose")
+    wx = _glorot(r, (POSE_FEAT, 3 * POSE_HIDDEN))
+    wh = _glorot(r, (POSE_HIDDEN, 3 * POSE_HIDDEN))
+    bx = np.zeros(3 * POSE_HIDDEN, np.float32)
+    bh = np.zeros(3 * POSE_HIDDEN, np.float32)
+    wp = _glorot(r, (POSE_HIDDEN, POSE_DOF))
+    bp = np.zeros(POSE_DOF, np.float32)
+    return wx, wh, bx, bh, wp, bp
+
+
+def render_params():
+    r = _rng("render")
+    return _glorot(r, (FRAME, FRAME)), _glorot(r, (FRAME, FRAME))
+
+
+def warp_params():
+    # near-identity tri-diagonal warp (reprojection to the predicted pose)
+    r = _rng("warp")
+    w = np.eye(FRAME, dtype=np.float32) * 0.9
+    w += 0.05 * np.roll(np.eye(FRAME, dtype=np.float32), 1, axis=1)
+    w += 0.05 * np.roll(np.eye(FRAME, dtype=np.float32), -1, axis=1)
+    return (w + 0.001 * _glorot(r, (FRAME, FRAME))).astype(np.float32)
+
+
+def _dct_matrix(n: int) -> np.ndarray:
+    """Orthonormal DCT-II basis, used by the encode/decode codec proxies."""
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    m = np.cos(np.pi * (2 * i + 1) * k / (2 * n)) * np.sqrt(2.0 / n)
+    m[0] /= np.sqrt(2.0)
+    return m.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# mining models
+# ---------------------------------------------------------------------------
+
+
+def mining_mlp(x):
+    """3-layer MLP rock classifier over force windows; logits (b, 8)."""
+    ws, bs = mlp_params()
+    h = x
+    for idx, (w, b) in enumerate(zip(ws, bs)):
+        h = matmul(h, jnp.asarray(w)) + jnp.asarray(b)
+        if idx + 1 < len(ws):
+            h = jax.nn.relu(h)
+    return (h,)
+
+
+def mining_svm(x, gamma=0.05):
+    """RBF-kernel SVM decision values: K(x, SV) @ coef + b."""
+    sv, coef, bias = svm_params()
+    d2 = pairwise_sqdist(x, jnp.asarray(sv))
+    k = jnp.exp(-gamma * d2)
+    return (matmul(k, jnp.asarray(coef)) + jnp.asarray(bias),)
+
+
+def mining_knn(x):
+    """Soft KNN vote: inverse-distance-weighted class scores of the k nearest.
+
+    Formulated as sort + threshold mask rather than ``lax.top_k``: the
+    ``topk`` HLO op grew a ``largest=`` attribute that the pinned
+    xla_extension 0.5.1 text parser rejects, while ``sort`` round-trips.
+    The mask formulation is numerically identical up to distance ties.
+    """
+    train, labels = knn_params()
+    d2 = pairwise_sqdist(x, jnp.asarray(train))
+    kth = jnp.sort(d2, axis=1)[:, KNN_K - 1 : KNN_K]  # (b, 1) k-th smallest
+    w = (d2 <= kth).astype(jnp.float32) / (1.0 + d2)  # inverse-distance weights
+    return (matmul(w, jnp.asarray(labels)),)
+
+
+# ---------------------------------------------------------------------------
+# VR pipeline models
+# ---------------------------------------------------------------------------
+
+
+def vr_pose_predict(feat, h):
+    """GRU step over capture features -> (pose (b,6), next hidden (b,d))."""
+    wx, wh, bx, bh, wp, bp = pose_params()
+    h2 = gru_cell(
+        feat, h, jnp.asarray(wx), jnp.asarray(wh), jnp.asarray(bx), jnp.asarray(bh)
+    )
+    pose = matmul(h2, jnp.asarray(wp)) + jnp.asarray(bp)
+    return (pose, h2)
+
+
+def vr_render(scene):
+    """Speculative render proxy: two dense mixing layers over the scene."""
+    w1, w2 = render_params()
+    h = jnp.tanh(matmul(scene, jnp.asarray(w1)) / jnp.sqrt(jnp.float32(FRAME)))
+    return (matmul(h, jnp.asarray(w2)) / jnp.sqrt(jnp.float32(FRAME)),)
+
+
+_QSTEP = 0.25
+
+
+def vr_encode(frame):
+    """Codec proxy: orthonormal 2-D DCT + uniform quantization."""
+    d = jnp.asarray(_dct_matrix(FRAME))
+    coefs = matmul(matmul(d, frame), d.T)
+    return (jnp.round(coefs / _QSTEP),)
+
+
+def vr_decode(q):
+    """Inverse of `vr_encode` (dequantize + inverse DCT)."""
+    d = jnp.asarray(_dct_matrix(FRAME))
+    return (matmul(matmul(d.T, q * _QSTEP), d),)
+
+
+def vr_reproject(frame):
+    """Reprojection proxy: near-identity learned warp to the predicted pose."""
+    w = jnp.asarray(warp_params())
+    return (matmul(w, frame),)
+
+
+def vr_display(frame):
+    """Display compositing proxy: gamma + clamp (elementwise, bandwidth-bound)."""
+    x = jnp.clip(frame, -8.0, 8.0)
+    return (sigmoid(x) * 255.0,)
+
+
+# ---------------------------------------------------------------------------
+# AOT specs: name -> (fn, example inputs, metadata)
+# ---------------------------------------------------------------------------
+
+MINING_BATCH = 32
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+MODEL_SPECS = {
+    "mining_mlp": dict(
+        fn=mining_mlp,
+        inputs=[_f32(MINING_BATCH, FORCE_DIM)],
+        app="mining",
+        task="mlp",
+        flops=2 * MINING_BATCH * (64 * 128 + 128 * 64 + 64 * 8),
+    ),
+    "mining_svm": dict(
+        fn=mining_svm,
+        inputs=[_f32(MINING_BATCH, FORCE_DIM)],
+        app="mining",
+        task="svm",
+        flops=2 * MINING_BATCH * (SVM_SV * FORCE_DIM + SVM_SV * N_CLASSES),
+    ),
+    "mining_knn": dict(
+        fn=mining_knn,
+        inputs=[_f32(MINING_BATCH, FORCE_DIM)],
+        app="mining",
+        task="knn",
+        flops=2 * MINING_BATCH * KNN_TRAIN * FORCE_DIM,
+    ),
+    "vr_pose_predict": dict(
+        fn=vr_pose_predict,
+        inputs=[_f32(1, POSE_FEAT), _f32(1, POSE_HIDDEN)],
+        app="vr",
+        task="pose_predict",
+        flops=2 * (POSE_FEAT + POSE_HIDDEN) * 3 * POSE_HIDDEN,
+    ),
+    "vr_render": dict(
+        fn=vr_render,
+        inputs=[_f32(FRAME, FRAME)],
+        app="vr",
+        task="render",
+        flops=2 * 2 * FRAME**3,
+    ),
+    "vr_encode": dict(
+        fn=vr_encode,
+        inputs=[_f32(FRAME, FRAME)],
+        app="vr",
+        task="encode",
+        flops=2 * 2 * FRAME**3,
+    ),
+    "vr_decode": dict(
+        fn=vr_decode,
+        inputs=[_f32(FRAME, FRAME)],
+        app="vr",
+        task="decode",
+        flops=2 * 2 * FRAME**3,
+    ),
+    "vr_reproject": dict(
+        fn=vr_reproject,
+        inputs=[_f32(FRAME, FRAME)],
+        app="vr",
+        task="reproject",
+        flops=2 * FRAME**3,
+    ),
+    "vr_display": dict(
+        fn=vr_display,
+        inputs=[_f32(FRAME, FRAME)],
+        app="vr",
+        task="display",
+        flops=4 * FRAME**2,
+    ),
+}

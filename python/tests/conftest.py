@@ -1,0 +1,19 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# allow `compile.*` imports when pytest is run from python/ or the repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# interpret-mode pallas is slow; keep sweeps bounded but meaningful
+settings.register_profile("heye", max_examples=25, deadline=None)
+settings.load_profile("heye")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

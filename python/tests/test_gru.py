@@ -1,0 +1,63 @@
+"""L1 correctness: fused GRU cell vs oracle + gate-math invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile.kernels.gru import gru_cell
+from compile.kernels.ref import gru_cell_ref
+
+
+def _inputs(b, i, d, seed):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.normal(size=(b, i)).astype(np.float32),
+        rng.normal(size=(b, d)).astype(np.float32),
+        rng.normal(scale=0.3, size=(i, 3 * d)).astype(np.float32),
+        rng.normal(scale=0.3, size=(d, 3 * d)).astype(np.float32),
+        rng.normal(scale=0.1, size=(3 * d,)).astype(np.float32),
+        rng.normal(scale=0.1, size=(3 * d,)).astype(np.float32),
+    )
+
+
+@given(
+    b=st.integers(1, 48),
+    i=st.integers(1, 48),
+    d=st.integers(1, 48),
+    bb=st.sampled_from([4, 16, 64, 128]),
+)
+def test_gru_matches_ref(b, i, d, bb):
+    args = _inputs(b, i, d, seed=[b, i, d])
+    got = gru_cell(*args, block_b=bb)
+    want = gru_cell_ref(*(jnp.asarray(a) for a in args))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_gru_zero_update_gate_keeps_candidate_bounded():
+    # with all weights/bias zero except huge z-bias, h' ~= h (update gate ~1)
+    b, i, d = 3, 8, 16
+    x = np.random.default_rng(0).normal(size=(b, i)).astype(np.float32)
+    h = np.random.default_rng(1).normal(size=(b, d)).astype(np.float32)
+    wx = np.zeros((i, 3 * d), np.float32)
+    wh = np.zeros((d, 3 * d), np.float32)
+    bx = np.zeros(3 * d, np.float32)
+    bx[d : 2 * d] = 50.0  # z -> sigmoid(50) ~ 1
+    bh = np.zeros(3 * d, np.float32)
+    out = np.asarray(gru_cell(x, h, wx, wh, bx, bh))
+    np.testing.assert_allclose(out, h, rtol=1e-4, atol=1e-4)
+
+
+def test_gru_output_is_convex_combination_bound():
+    # |h'| <= max(|h|, 1): output is z*h + (1-z)*tanh(...)
+    args = _inputs(16, 24, 32, seed=9)
+    out = np.asarray(gru_cell(*args))
+    bound = np.maximum(np.abs(args[1]), 1.0) + 1e-5
+    assert (np.abs(out) <= bound).all()
+
+
+def test_gru_batch_padding_consistency():
+    # result must not depend on the block size / padding amount
+    args = _inputs(7, 12, 20, seed=2)
+    a = np.asarray(gru_cell(*args, block_b=4))
+    b = np.asarray(gru_cell(*args, block_b=128))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

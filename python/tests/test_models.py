@@ -1,0 +1,144 @@
+"""L2 correctness: each workload model vs an independent pure-jnp replica,
+plus shape/determinism contracts the rust runtime relies on."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels.ref import pairwise_sqdist_ref, gru_cell_ref, sigmoid
+
+
+def _x(b=M.MINING_BATCH, d=M.FORCE_DIM, seed=0):
+    return np.random.default_rng(seed).normal(size=(b, d)).astype(np.float32)
+
+
+def test_mlp_matches_jnp_replica():
+    x = _x()
+    ws, bs = M.mlp_params()
+    h = jnp.asarray(x)
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        h = h @ w + b
+        if i + 1 < len(ws):
+            h = jax.nn.relu(h)
+    (got,) = M.mining_mlp(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(h), rtol=1e-4, atol=1e-4)
+    assert got.shape == (M.MINING_BATCH, M.N_CLASSES)
+
+
+def test_svm_matches_jnp_replica():
+    x = _x(seed=1)
+    sv, coef, bias = M.svm_params()
+    k = jnp.exp(-0.05 * pairwise_sqdist_ref(jnp.asarray(x), jnp.asarray(sv)))
+    want = k @ coef + bias
+    (got,) = M.mining_svm(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_knn_matches_jnp_replica():
+    x = _x(seed=2)
+    train, labels = M.knn_params()
+    d2 = pairwise_sqdist_ref(jnp.asarray(x), jnp.asarray(train))
+    neg, idx = jax.lax.top_k(-d2, M.KNN_K)
+    w = 1.0 / (1.0 - neg)
+    want = jnp.einsum("bk,bkc->bc", w, jnp.asarray(labels)[idx])
+    (got,) = M.mining_knn(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_knn_scores_are_probability_like():
+    (got,) = M.mining_knn(_x(seed=3))
+    s = np.asarray(got)
+    assert (s >= 0).all()
+    # scores sum to the total vote mass (sum of weights), strictly positive
+    assert (s.sum(axis=1) > 0).all()
+
+
+def test_pose_predict_matches_replica_and_updates_state():
+    feat = np.random.default_rng(4).normal(size=(1, M.POSE_FEAT)).astype(np.float32)
+    h0 = np.zeros((1, M.POSE_HIDDEN), np.float32)
+    wx, wh, bx, bh, wp, bp = M.pose_params()
+    h1 = gru_cell_ref(*(jnp.asarray(a) for a in (feat, h0, wx, wh, bx, bh)))
+    pose_want = h1 @ wp + bp
+    pose, h1_got = M.vr_pose_predict(feat, h0)
+    np.testing.assert_allclose(np.asarray(h1_got), np.asarray(h1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(pose), np.asarray(pose_want), rtol=1e-4, atol=1e-4
+    )
+    assert not np.allclose(np.asarray(h1_got), h0)  # state actually evolved
+
+
+def test_encode_decode_roundtrip_error_bounded_by_qstep():
+    frame = (
+        np.random.default_rng(5).normal(size=(M.FRAME, M.FRAME)).astype(np.float32)
+    )
+    (q,) = M.vr_encode(frame)
+    (rec,) = M.vr_decode(np.asarray(q))
+    # orthonormal DCT preserves the Frobenius norm, and the per-coefficient
+    # quantization error is <= qstep/2, so the pixel-domain RMS error is
+    # bounded by qstep/2 = 0.125
+    err = np.asarray(rec) - frame
+    rms = np.sqrt((err**2).mean())
+    assert rms <= 0.125 + 1e-4, f"round-trip RMS {rms} exceeds quantization bound"
+
+
+def test_encode_output_is_integer_grid():
+    frame = (
+        np.random.default_rng(6).normal(size=(M.FRAME, M.FRAME)).astype(np.float32)
+    )
+    (q,) = M.vr_encode(frame)
+    q = np.asarray(q)
+    np.testing.assert_allclose(q, np.round(q), atol=0)
+
+
+def test_render_is_deterministic_and_bounded_growth():
+    scene = (
+        np.random.default_rng(7).normal(size=(M.FRAME, M.FRAME)).astype(np.float32)
+    )
+    (a,) = M.vr_render(scene)
+    (b,) = M.vr_render(scene)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_reproject_near_identity_warp():
+    frame = np.ones((M.FRAME, M.FRAME), np.float32)
+    (out,) = M.vr_reproject(frame)
+    # row-stochastic-ish warp keeps a constant frame roughly constant
+    assert abs(np.asarray(out).mean() - 1.0) < 0.1
+
+
+def test_display_range():
+    frame = (
+        np.random.default_rng(8).normal(scale=10, size=(M.FRAME, M.FRAME))
+    ).astype(np.float32)
+    (out,) = M.vr_display(frame)
+    out = np.asarray(out)
+    assert out.min() >= 0.0 and out.max() <= 255.0
+    # monotone: brighter input -> brighter output
+    ramp = np.linspace(-8, 8, M.FRAME, dtype=np.float32)[None, :].repeat(M.FRAME, 0)
+    (o,) = M.vr_display(ramp)
+    o = np.asarray(o)
+    assert (np.diff(o[0]) >= -1e-4).all()
+
+
+def test_display_matches_sigmoid_formula():
+    frame = np.array([[0.0, 8.0, -8.0, 100.0]], np.float32)
+    (out,) = M.vr_display(frame)
+    want = np.asarray(sigmoid(jnp.clip(jnp.asarray(frame), -8, 8))) * 255.0
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5)
+
+
+def test_model_specs_cover_both_apps_and_all_pipeline_stages():
+    apps = {s["app"] for s in M.MODEL_SPECS.values()}
+    assert apps == {"mining", "vr"}
+    vr_tasks = {s["task"] for s in M.MODEL_SPECS.values() if s["app"] == "vr"}
+    assert vr_tasks == {
+        "pose_predict",
+        "render",
+        "encode",
+        "decode",
+        "reproject",
+        "display",
+    }
+    mining_tasks = {s["task"] for s in M.MODEL_SPECS.values() if s["app"] == "mining"}
+    assert mining_tasks == {"svm", "knn", "mlp"}

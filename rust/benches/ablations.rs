@@ -1,0 +1,71 @@
+//! Ablations on H-EYE's design choices (DESIGN.md §Perf):
+//!
+//! 1. **Contention model off** — H-EYE scheduling with a blind slowdown
+//!    oracle: how much of the win comes from pricing contention?
+//! 2. **Sticky stability hint off vs on** — placement churn and overhead.
+//! 3. **Tier-best vs first-fit** is structural; approximated here by
+//!    DirectToServer (one-tier) vs Hierarchical.
+//! 4. **Virtual sub-cluster fan-out** — ORC tree depth vs MapTask hops at
+//!    scale.
+
+use heye::baselines;
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::orchestrator::Hierarchy;
+use heye::sim::{RunMetrics, SimConfig, Simulation, Workload};
+use heye::util::bench::FigureTable;
+
+fn run_stressed(sched: &str) -> RunMetrics {
+    let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(8, 3)));
+    let mut s = baselines::by_name(sched, &sim.decs);
+    let wl = Workload::vr(&sim.decs);
+    let cfg = SimConfig::default().horizon(2.0).seed(61);
+    sim.run(s.as_mut(), wl, vec![], vec![], &cfg)
+}
+
+fn main() {
+    println!("=== ablations (stressed VR: 8 edges / 3 servers) ===");
+    let mut table = FigureTable::new(
+        "scheduler variants",
+        &["mean lat (ms)", "qos fail %", "overhead %"],
+    );
+    // ACE is exactly "H-EYE minus contention model minus dynamism";
+    // LaTS is "minus contention model, keep dynamism" — the two ablation
+    // axes the paper's Table 1 identifies.
+    for s in ["heye", "heye-direct", "heye-sticky", "lats", "ace"] {
+        let m = run_stressed(s);
+        table.row(
+            s,
+            vec![
+                m.mean_latency_s() * 1e3,
+                m.qos_failure_rate() * 100.0,
+                m.overhead_ratio() * 100.0,
+            ],
+        );
+    }
+    table.print();
+    println!("\n(lats = contention-blind ablation; ace = static + blind ablation)");
+
+    println!("\n=== ORC fan-out ablation: tree depth vs scale ===");
+    let mut table = FigureTable::new(
+        "hierarchy shape at fan-out 4 / 16 / unbounded",
+        &["depth@4", "virt@4", "depth@16", "virt@16", "depth@inf"],
+    );
+    for n in [16usize, 64, 256] {
+        let decs = Decs::build(&DecsSpec::mixed(n, n / 4));
+        let h4 = Hierarchy::from_decs_with_fanout(&decs, 4);
+        let h16 = Hierarchy::from_decs_with_fanout(&decs, 16);
+        let hinf = Hierarchy::from_decs_with_fanout(&decs, usize::MAX / 2);
+        table.row(
+            format!("{n} edges"),
+            vec![
+                h4.depth() as f64,
+                h4.virtual_orcs as f64,
+                h16.depth() as f64,
+                h16.virtual_orcs as f64,
+                hinf.depth() as f64,
+            ],
+        );
+    }
+    table.print();
+    println!("\nshape: bounded fan-out keeps depth logarithmic; flat trees keep depth 2 but fan-out O(n)");
+}

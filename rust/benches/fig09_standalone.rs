@@ -1,0 +1,79 @@
+//! Fig. 9 — Standalone execution times for the VR and mining tasks across
+//! every edge device and server (Table 2), plus the *measured* host
+//! latencies of the real AOT artifacts through PJRT.
+//!
+//! Paper shape to reproduce: Orin AGX < Xavier AGX < Xavier NX < Orin Nano
+//! in capability; servers 1/2 clearly faster than any edge; server 3
+//! (integrated graphics) markedly weaker; render infeasible on every edge
+//! within its frame period; KNN the heaviest mining task.
+
+use heye::hwgraph::presets::{EDGE_MODELS, SERVER_MODELS};
+use heye::hwgraph::PuClass;
+use heye::perfmodel::{PerfModel, ProfileModel, Unit};
+use heye::task::{workloads, TaskKind, TaskSpec};
+use heye::util::bench::FigureTable;
+
+fn main() {
+    println!("=== Fig. 9: standalone task latencies (ms) ===");
+    let perf = ProfileModel::new();
+    let tasks = [
+        TaskKind::Capture,
+        TaskKind::PosePredict,
+        TaskKind::Render,
+        TaskKind::Encode,
+        TaskKind::Decode,
+        TaskKind::Reproject,
+        TaskKind::Display,
+        TaskKind::Svm,
+        TaskKind::Knn,
+        TaskKind::Mlp,
+    ];
+    let models: Vec<&str> = EDGE_MODELS.iter().chain(SERVER_MODELS.iter()).copied().collect();
+    let cols: Vec<&str> = models.clone();
+    let mut table = FigureTable::new("best-PU standalone latency (ms)", &cols);
+    for kind in tasks {
+        let spec = TaskSpec::new(kind);
+        let row: Vec<f64> = models
+            .iter()
+            .map(|m| {
+                kind.allowed_pus()
+                    .iter()
+                    .filter_map(|&pu| perf.predict(&spec, m, pu, Unit::Seconds))
+                    .fold(f64::INFINITY, f64::min)
+                    * 1e3
+            })
+            .map(|v| if v.is_finite() { v } else { f64::NAN })
+            .collect();
+        table.row(kind.name(), row);
+    }
+    table.print();
+
+    // shape checks
+    let render = TaskSpec::new(TaskKind::Render);
+    let edge_infeasible = EDGE_MODELS.iter().all(|m| {
+        let t = perf
+            .predict(&render, m, PuClass::Gpu, Unit::Seconds)
+            .unwrap();
+        t > 1.0 / workloads::target_fps(m)
+    });
+    println!("\nshape: render exceeds the frame period on every edge = {edge_infeasible}");
+
+    // real PJRT host execution of the artifacts backing these tasks
+    match heye::runtime::Runtime::open("artifacts") {
+        Ok(mut rt) => {
+            println!("\nmeasured host latency of the AOT artifacts (PJRT CPU, min of 5):");
+            println!("{:<18} {:>12} {:>12}", "artifact", "host (ms)", "kflops");
+            for name in rt.artifact_names() {
+                let mut best = f64::INFINITY;
+                for _ in 0..5 {
+                    if let Ok((_, dt)) = rt.run(&name) {
+                        best = best.min(dt);
+                    }
+                }
+                let flops = rt.manifest.artifacts[&name].flops;
+                println!("{:<18} {:>12.3} {:>12}", name, best * 1e3, flops / 1000);
+            }
+        }
+        Err(e) => println!("\n(artifacts unavailable: {e} — run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,163 @@
+//! Fig. 11 — Performance evaluation on the paper VR testbed.
+//!
+//! (a) Bottleneck identification among 5 edges + 3 servers; H-EYE's
+//!     per-device pipeline latency vs the best baseline (paper: 11-47%
+//!     better) and edge/server balance (paper: 2.4% H-EYE vs 11.8% ACE,
+//!     12.6% LaTS).
+//! (b) Minimum number of servers to hold target FPS across deadline
+//!     configurations (paper: three servers suffice).
+//! (c) QoS failure per frame as the edge:server ratio grows (paper:
+//!     failures appear at >= 2 edges per server; degrade with edge count
+//!     at 50 servers).
+
+use heye::baselines;
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::sim::{RunMetrics, SimConfig, Simulation, Workload};
+use heye::task::workloads::target_fps;
+use heye::telemetry;
+use heye::util::bench::FigureTable;
+
+fn run_vr(decs_spec: &DecsSpec, sched: &str, horizon: f64, seed: u64) -> (Decs, RunMetrics) {
+    let mut sim = Simulation::new(Decs::build(decs_spec));
+    let mut s = baselines::by_name(sched, &sim.decs);
+    let wl = Workload::vr(&sim.decs);
+    let cfg = SimConfig::default().horizon(horizon).seed(seed);
+    let m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
+    (sim.decs, m)
+}
+
+fn fig11a() {
+    println!("=== Fig. 11a: bottleneck identification, 5 edges + 3 servers ===");
+    let spec = DecsSpec::paper_vr();
+    let scheds = ["heye", "ace", "lats", "cloudvr"];
+    let mut per_dev: Vec<Vec<f64>> = Vec::new(); // [sched][device]
+    let mut names: Vec<String> = Vec::new();
+    let mut imbalance = Vec::new();
+    let mut qos = Vec::new();
+    for s in scheds {
+        let (decs, m) = run_vr(&spec, s, 2.0, 3);
+        let rows = telemetry::per_device(&decs, &m);
+        if names.is_empty() {
+            names = rows
+                .iter()
+                .map(|r| format!("{}({})", r.name, decs.device_model(r.device)))
+                .collect();
+        }
+        per_dev.push(rows.iter().map(|r| r.mean_latency_s * 1e3).collect());
+        imbalance.push(m.edge_server_imbalance() * 100.0);
+        qos.push(m.qos_failure_rate() * 100.0);
+        if s == "heye" {
+            telemetry::print_breakdown("h-eye per-device breakdown + bottlenecks", &rows);
+        }
+    }
+    let mut table = FigureTable::new(
+        "per-device pipeline latency (ms)",
+        &["heye", "ace", "lats", "cloudvr", "win vs best %"],
+    );
+    for (d, name) in names.iter().enumerate() {
+        let h = per_dev[0].get(d).copied().unwrap_or(f64::NAN);
+        let best_base = (1..scheds.len())
+            .filter_map(|s| per_dev[s].get(d).copied())
+            .fold(f64::INFINITY, f64::min);
+        let win = 100.0 * (best_base - h) / best_base;
+        table.row(
+            name.clone(),
+            vec![
+                h,
+                per_dev[1].get(d).copied().unwrap_or(f64::NAN),
+                per_dev[2].get(d).copied().unwrap_or(f64::NAN),
+                per_dev[3].get(d).copied().unwrap_or(f64::NAN),
+                win,
+            ],
+        );
+    }
+    table.print();
+    println!("\nQoS failure %: heye {:.1} ace {:.1} lats {:.1} cloudvr {:.1}", qos[0], qos[1], qos[2], qos[3]);
+    println!(
+        "edge/server imbalance %: heye {:.1} (paper 2.4) ace {:.1} (paper 11.8) lats {:.1} (paper 12.6)",
+        imbalance[0], imbalance[1], imbalance[2]
+    );
+}
+
+fn fig11b() {
+    println!("\n=== Fig. 11b: servers needed to hold target FPS ===");
+    // three deadline configurations: proportional (None) and two skews
+    let configs: [(&str, Option<[f64; 7]>); 3] = [
+        ("proportional", None),
+        ("render-heavy", Some([0.02, 0.05, 0.55, 0.08, 0.10, 0.10, 0.10])),
+        ("codec-heavy", Some([0.03, 0.06, 0.35, 0.14, 0.14, 0.14, 0.14])),
+    ];
+    let mut table = FigureTable::new(
+        "achieved/target FPS (min over devices)",
+        &["2 servers", "3 servers", "4 servers"],
+    );
+    for (cname, weights) in configs {
+        let mut row = Vec::new();
+        for n_servers in [2usize, 3, 4] {
+            let mut spec = DecsSpec::paper_vr();
+            spec.servers = DecsSpec::mixed(1, n_servers).servers;
+            let mut sim = Simulation::new(Decs::build(&spec));
+            let mut s = baselines::by_name("heye", &sim.decs);
+            let sources = sim
+                .decs
+                .edge_devices
+                .iter()
+                .map(|&d| {
+                    let model = sim.decs.device_model(d).to_string();
+                    let fps = target_fps(&model);
+                    heye::sim::FrameSource {
+                        origin: d,
+                        period_s: 1.0 / fps,
+                        budget_s: 2.0 / fps,
+                        make_cfg: Box::new(move |r| {
+                            heye::task::workloads::vr_cfg(fps, r, weights.as_ref())
+                        }),
+                        start_t: 0.0,
+                        count: None,
+                    }
+                })
+                .collect();
+            let wl = Workload { sources };
+            let cfg = SimConfig::default().horizon(2.0).seed(5);
+            let m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
+            let min_ratio = sim
+                .decs
+                .edge_devices
+                .iter()
+                .map(|&d| {
+                    m.achieved_fps(d, cfg.horizon_s) / target_fps(sim.decs.device_model(d))
+                })
+                .fold(f64::INFINITY, f64::min);
+            row.push(min_ratio);
+        }
+        table.row(cname, row);
+    }
+    table.print();
+    println!("\nshape: >=0.95 with three servers across configs; two fall short");
+}
+
+fn fig11c() {
+    println!("\n=== Fig. 11c: QoS failure vs edge/server ratio ===");
+    let mut table = FigureTable::new(
+        "QoS failure % per frame",
+        &["1.0x edges", "1.5x edges", "2.0x edges", "3.0x edges"],
+    );
+    for servers in [4usize, 8, 12] {
+        let mut row = Vec::new();
+        for ratio in [1.0f64, 1.5, 2.0, 3.0] {
+            let edges = (servers as f64 * ratio).round() as usize;
+            let spec = DecsSpec::mixed(edges, servers);
+            let (_, m) = run_vr(&spec, "heye", 1.0, 7);
+            row.push(m.qos_failure_rate() * 100.0);
+        }
+        table.row(format!("{servers} servers"), row);
+    }
+    table.print();
+    println!("\nshape: failures emerge at >= 2 edges per server and grow with the ratio");
+}
+
+fn main() {
+    fig11a();
+    fig11b();
+    fig11c();
+}

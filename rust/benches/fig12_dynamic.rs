@@ -1,0 +1,138 @@
+//! Fig. 12 — Dynamic adaptability (§5.4).
+//!
+//! (a) Video quality vs CloudVR as the Orin AGX uplink drops 10 -> 1 Gb/s:
+//!     CloudVR shrinks the frame resolution below ~5 Gb/s; H-EYE holds
+//!     full resolution by re-balancing tasks across the system.
+//! (b) Achieved/target FPS at each bandwidth step, with the placement
+//!     shifts H-EYE makes (tasks migrating between edge and servers).
+//! (c) A new edge joins a running system at different scales: the
+//!     newcomer is scheduled within milliseconds and QoS recovers.
+
+use heye::baselines;
+use heye::hwgraph::presets::{Decs, DecsSpec, XAVIER_NX};
+use heye::sim::{JoinEvent, NetEvent, RunMetrics, SimConfig, Simulation, Workload};
+use heye::task::workloads::target_fps;
+use heye::util::bench::FigureTable;
+
+fn run_throttled(sched: &str, gbps: f64) -> (Decs, RunMetrics) {
+    let decs = Decs::build(&DecsSpec::paper_vr());
+    let agx = decs.edge_devices[0];
+    let uplink = decs.uplink_of(agx).unwrap();
+    let mut sim = Simulation::new(decs);
+    let mut s = baselines::by_name(sched, &sim.decs);
+    let wl = Workload::vr(&sim.decs);
+    let cfg = SimConfig::default().horizon(2.0).seed(11);
+    let net = vec![NetEvent {
+        t: 0.0,
+        link: uplink,
+        gbps: Some(gbps),
+    }];
+    let m = sim.run(s.as_mut(), wl, net, vec![], &cfg);
+    (sim.decs, m)
+}
+
+fn fig12ab() {
+    println!("=== Fig. 12a/b: Orin AGX uplink 10 -> 1 Gb/s ===");
+    let mut table = FigureTable::new(
+        "resolution + FPS ratio on Orin AGX",
+        &["heye res", "heye fps/tgt", "cloudvr res", "cloudvr fps/tgt"],
+    );
+    for gbps in [10.0, 7.5, 5.0, 2.5, 1.0] {
+        let mut row = Vec::new();
+        for sched in ["heye", "cloudvr"] {
+            let (decs, m) = run_throttled(sched, gbps);
+            let agx = decs.edge_devices[0];
+            let frames = m.frames_of(agx);
+            let res = if frames.is_empty() {
+                0.0
+            } else {
+                frames.iter().map(|f| f.resolution).sum::<f64>() / frames.len() as f64
+            };
+            let ratio = m.achieved_fps(agx, 2.0) / target_fps(decs.device_model(agx));
+            row.push(res);
+            row.push(ratio);
+        }
+        table.row(format!("{gbps:>4} Gb/s"), vec![row[0], row[1], row[2], row[3]]);
+    }
+    table.print();
+
+    // placement migration: where do AGX encode tasks run at 10 vs 1 Gb/s?
+    println!("\nh-eye placement shift under throttle (encode/render tiers):");
+    for gbps in [10.0, 1.0] {
+        let (_, m) = run_throttled("heye", gbps);
+        let count = |kind: &str, on_server: bool| -> u64 {
+            m.placements
+                .iter()
+                .filter(|((k, _, s), _)| k == kind && *s == on_server)
+                .map(|(_, n)| *n)
+                .sum()
+        };
+        println!(
+            "  {gbps:>4} Gb/s: render e/s = {}/{}  encode e/s = {}/{}  decode e/s = {}/{}",
+            count("render", false),
+            count("render", true),
+            count("encode", false),
+            count("encode", true),
+            count("decode", false),
+            count("decode", true),
+        );
+    }
+    println!("shape: cloudvr resolution drops below ~5 Gb/s; h-eye holds 1.0 and re-balances");
+}
+
+fn fig12c() {
+    println!("\n=== Fig. 12c: a Xavier NX joins a running system ===");
+    let mut table = FigureTable::new(
+        "worst-device FPS ratio before/after join",
+        &["before", "after", "newcomer"],
+    );
+    for (edges, servers) in [(3usize, 2usize), (5, 3), (8, 4)] {
+        let spec = DecsSpec::mixed(edges, servers);
+        let mut sim = Simulation::new(Decs::build(&spec));
+        let mut s = baselines::by_name("heye", &sim.decs);
+        let wl = Workload::vr(&sim.decs);
+        let cfg = SimConfig::default().horizon(2.0).seed(13);
+        let joins = vec![JoinEvent {
+            t: 1.0,
+            model: XAVIER_NX.to_string(),
+            uplink_gbps: 10.0,
+            vr_source: true,
+        }];
+        let m = sim.run(s.as_mut(), wl, vec![], joins, &cfg);
+        let ratio_window = |dev, lo: f64, hi: f64| -> f64 {
+            let frames: Vec<_> = m
+                .frames_of(dev)
+                .into_iter()
+                .filter(|f| f.release_t >= lo && f.release_t < hi)
+                .collect();
+            if frames.is_empty() {
+                return f64::NAN;
+            }
+            let ok = frames.iter().filter(|f| f.qos_ok()).count() as f64;
+            let span = hi - lo;
+            (ok / span) / target_fps(sim.decs.device_model(dev))
+        };
+        let worst = |lo, hi| -> f64 {
+            sim.decs.edge_devices[..edges]
+                .iter()
+                .map(|&d| ratio_window(d, lo, hi))
+                .fold(f64::INFINITY, f64::min)
+        };
+        let newcomer = *sim.decs.edge_devices.last().unwrap();
+        table.row(
+            format!("{edges}e/{servers}s"),
+            vec![
+                worst(0.0, 1.0),
+                worst(1.0, 2.0),
+                ratio_window(newcomer, 1.0, 2.0),
+            ],
+        );
+    }
+    table.print();
+    println!("\nshape: existing devices' FPS holds through the join; newcomer served immediately");
+}
+
+fn main() {
+    fig12ab();
+    fig12c();
+}

@@ -1,0 +1,106 @@
+//! Fig. 13 — Weak and strong scaling (§5.5).
+//!
+//! (a) Weak scaling, mining: sensors/edges/servers double together from
+//!     (100, 80, 24). Paper shape: completion time stays flat (~81 ms).
+//! (b) Weak scaling, VR: edges/servers double from (85, 50). Paper shape:
+//!     QoS failure minimally affected; the 80-edge variant stays near 0.
+//! (c) Strong scaling, mining: 1250 sensors fixed while devices grow to
+//!     640x192. Paper shape: completion time drops until the longest task
+//!     (KNN on Xavier NX) becomes the floor.
+
+use heye::baselines;
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::sim::{RunMetrics, SimConfig, Simulation, Workload};
+use heye::util::bench::FigureTable;
+
+fn main() {
+    fig13a();
+    fig13b();
+    fig13c();
+}
+
+fn run_mining(sensors: usize, edges: usize, servers: usize, horizon: f64) -> RunMetrics {
+    let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(edges, servers)));
+    let mut s = baselines::by_name("heye", &sim.decs);
+    let wl = Workload::mining(&sim.decs, sensors, 10.0);
+    let cfg = SimConfig::default().horizon(horizon).seed(23);
+    sim.run(s.as_mut(), wl, vec![], vec![], &cfg)
+}
+
+fn fig13a() {
+    println!("=== Fig. 13a: weak scaling, mining ===");
+    let mut table = FigureTable::new(
+        "completion time (ms), sensors x edges x servers",
+        &["mean", "p95", "qos fail %"],
+    );
+    for k in 0..4 {
+        let f = 1usize << k;
+        let (sensors, edges, servers) = (100 * f, 80 * f, 24 * f);
+        let m = run_mining(sensors, edges, servers, 0.3);
+        let mut lat: Vec<f64> = m.frames.iter().map(|fr| fr.latency_s * 1e3).collect();
+        lat.sort_by(f64::total_cmp);
+        let p95 = lat[((lat.len() as f64 * 0.95) as usize).min(lat.len() - 1)];
+        table.row(
+            format!("{sensors}x{edges}x{servers}"),
+            vec![m.mean_latency_s() * 1e3, p95, m.qos_failure_rate() * 100.0],
+        );
+    }
+    table.print();
+    println!("\nshape: completion time flat as the system doubles");
+}
+
+fn fig13b() {
+    println!("\n=== Fig. 13b: weak scaling, VR ===");
+    // the paper's 1.7 edges-per-server ratio at half / full scale, plus the
+    // 80-edge (1.6x) variant the paper notes stays near zero
+    let mut table = FigureTable::new("QoS failure % per frame", &["1.7x ratio", "1.6x variant"]);
+    for (scale, e17, e16, srv) in [("x0.5", 42usize, 40usize, 25usize), ("x1", 85, 80, 50)] {
+        let mut row = Vec::new();
+        for edges in [e17, e16] {
+            let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(edges, srv)));
+            let mut s = baselines::by_name("heye", &sim.decs);
+            let wl = Workload::vr(&sim.decs);
+            let cfg = SimConfig::default().horizon(0.15).seed(31);
+            let m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
+            row.push(m.qos_failure_rate() * 100.0);
+        }
+        table.row(scale, row);
+    }
+    table.print();
+    println!("\nshape: QoS failure is set by the edge/server ratio, not the absolute scale");
+}
+
+fn fig13c() {
+    println!("\n=== Fig. 13c: strong scaling, mining (1250 sensors) ===");
+    let mut table = FigureTable::new(
+        "completion time (ms) at fixed 1250 sensors",
+        &["mean", "p95"],
+    );
+    for (edges, servers) in [(80usize, 24usize), (160, 48), (320, 96), (640, 192)] {
+        let m = run_mining(1250, edges, servers, 0.3);
+        let mut lat: Vec<f64> = m.frames.iter().map(|fr| fr.latency_s * 1e3).collect();
+        lat.sort_by(f64::total_cmp);
+        let p95 = if lat.is_empty() {
+            f64::NAN
+        } else {
+            lat[((lat.len() as f64 * 0.95) as usize).min(lat.len() - 1)]
+        };
+        table.row(
+            format!("{edges}x{servers}"),
+            vec![m.mean_latency_s() * 1e3, p95],
+        );
+    }
+    table.print();
+    // the floor: KNN standalone on Xavier NX
+    let knn_nx = heye::perfmodel::calibration::standalone_s(
+        heye::hwgraph::presets::XAVIER_NX,
+        heye::hwgraph::PuClass::CpuCore,
+        heye::task::TaskKind::Knn,
+    )
+    .unwrap();
+    println!(
+        "\nshape: completion drops with scale toward the longest-task floor \
+         (KNN on Xavier NX CPU = {:.1} ms)",
+        knn_nx * 1e3
+    );
+}

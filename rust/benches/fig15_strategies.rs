@@ -1,0 +1,83 @@
+//! Fig. 15 — Alternative assignment strategies (§5.5.5).
+//!
+//! (a/b) Mean task latency per strategy: default hierarchy,
+//!       direct-to-server, sticky-server, grouped. Paper shape: direct
+//!       helps VR (skipping sibling edges avoids useless render probes);
+//!       the hierarchy wins for mining (sibling edges are useful there);
+//!       grouping helps mining but not VR.
+//! (c/d) Scheduling overhead vs load (mining at 20/10/5 Hz; VR at
+//!       1.10x/1x/0.75x of the default FPS). Paper shape: higher load ->
+//!       higher overhead; grouping lowers overhead except under VR's
+//!       degroup penalty.
+
+use heye::baselines;
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::sim::{RunMetrics, SimConfig, Simulation, Workload};
+use heye::util::bench::FigureTable;
+
+const STRATEGIES: [&str; 4] = ["heye", "heye-direct", "heye-sticky", "heye-grouped"];
+
+fn run(app: &str, strategy: &str, load: f64, horizon: f64) -> RunMetrics {
+    let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+    let mut s = baselines::by_name(strategy, &sim.decs);
+    let wl = match app {
+        "mining" => Workload::mining(&sim.decs, 30, 10.0 * load),
+        _ => Workload::vr_rate(&sim.decs, load),
+    };
+    let mut cfg = SimConfig::default().horizon(horizon).seed(47);
+    if strategy == "heye-grouped" {
+        cfg = cfg.grouped(true);
+    }
+    let mut m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
+    m.frames.retain(|f| f.latency_s.is_finite());
+    m
+}
+
+fn fig15ab() {
+    println!("=== Fig. 15a/b: mean frame latency per assignment strategy ===");
+    let mut table = FigureTable::new(
+        "mean latency (ms)",
+        &["hierarchy", "direct", "sticky", "grouped"],
+    );
+    for app in ["vr", "mining"] {
+        let row: Vec<f64> = STRATEGIES
+            .iter()
+            .map(|s| run(app, s, 1.0, 2.0).mean_latency_s() * 1e3)
+            .collect();
+        table.row(app, row);
+    }
+    table.print();
+    println!(
+        "\nshape: direct-to-server competitive/better for VR; hierarchy best for mining; \
+         grouping helps mining"
+    );
+}
+
+fn fig15cd() {
+    println!("\n=== Fig. 15c/d: overhead vs injection rate ===");
+    let mut table = FigureTable::new(
+        "scheduling overhead %",
+        &["hierarchy", "direct", "sticky", "grouped"],
+    );
+    for (label, app, load) in [
+        ("mining 20 Hz", "mining", 2.0),
+        ("mining 10 Hz", "mining", 1.0),
+        ("mining 5 Hz", "mining", 0.5),
+        ("vr 1.10x", "vr", 1.10),
+        ("vr 1.00x", "vr", 1.0),
+        ("vr 0.75x", "vr", 0.75),
+    ] {
+        let row: Vec<f64> = STRATEGIES
+            .iter()
+            .map(|s| run(app, s, load, 1.0).overhead_ratio() * 100.0)
+            .collect();
+        table.row(label, row);
+    }
+    table.print();
+    println!("\nshape: overhead rises with load; grouping cuts mining overhead");
+}
+
+fn main() {
+    fig15ab();
+    fig15cd();
+}

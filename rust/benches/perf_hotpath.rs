@@ -1,0 +1,120 @@
+//! §Perf — L3 coordinator hot paths: MapTask under load, the Traverser's
+//! contention-interval integration, the slowdown oracle, and the
+//! end-to-end simulator event loop. Record before/after in EXPERIMENTS.md.
+
+use heye::baselines;
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::netsim::Network;
+use heye::orchestrator::{Hierarchy, Loads, Orchestrator, Policy};
+use heye::perfmodel::ProfileModel;
+use heye::sim::{SimConfig, Simulation, Workload};
+use heye::slowdown::{CachedSlowdown, Placed, SlowdownStack};
+use heye::task::{workloads, TaskId, TaskKind};
+use heye::traverser::{ActiveTask, Traverser};
+use heye::util::bench::{bench, report};
+
+fn main() {
+    let decs = Decs::build(&DecsSpec::paper_vr());
+    let perf = ProfileModel::new();
+    let net = Network::new();
+    let slow = CachedSlowdown::new(&decs.graph);
+    let stack = SlowdownStack::new();
+    let tr = Traverser::new(&slow, &perf, &net);
+    let origin = decs.edge_devices[0];
+
+    // a realistic mid-run load: every server GPU busy, some edge activity
+    let mut loads = Loads::default();
+    let mut id = 1u64;
+    for &srv in &decs.servers {
+        let gpu = decs.graph.pus_in(srv).into_iter().find(|&p| {
+            decs.graph.pu_class(p) == Some(heye::hwgraph::PuClass::Gpu)
+        });
+        if let Some(gpu) = gpu {
+            loads.by_device.insert(
+                srv,
+                vec![ActiveTask {
+                    id: TaskId(id),
+                    kind: TaskKind::Render,
+                    pu: gpu,
+                    remaining_s: 0.01,
+                    deadline_abs: 0.05,
+                }],
+            );
+            id += 1;
+        }
+    }
+
+    let mut results = Vec::new();
+
+    // 1. slowdown oracle (memoized vs SSSP-per-query)
+    let g = &decs.graph;
+    let mm = Placed::new(TaskKind::MatMul, g.by_name("edge0.cpu0").unwrap());
+    let co = [
+        Placed::new(TaskKind::MatMul, g.by_name("edge0.cpu1").unwrap()),
+        Placed::new(TaskKind::DnnInfer, g.by_name("edge0.gpu").unwrap()),
+    ];
+    results.push(bench("slowdown: SlowdownStack (SSSP/query)", 200, 5000, || {
+        std::hint::black_box(stack.factor(g, &mm, &co));
+    }));
+    results.push(bench("slowdown: CachedSlowdown (memoized)", 200, 5000, || {
+        std::hint::black_box(slow.factor(&mm, &co));
+    }));
+
+    // 2. Traverser single-task prediction with active co-runners
+    let cfg = workloads::mining_cfg(1.0);
+    let mapping = vec![
+        g.by_name("edge0.cpu0").unwrap(),
+        g.by_name("edge0.cpu1").unwrap(),
+        g.by_name("edge0.cpu2").unwrap(),
+        g.by_name("edge0.gpu").unwrap(),
+    ];
+    results.push(bench("traverser: 4-task CFG predict", 200, 5000, || {
+        std::hint::black_box(tr.predict(&cfg, &mapping, origin, &[], 0.0));
+    }));
+
+    // 3. MapTask: local hit vs server escalation, under load
+    let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
+    let local_task = workloads::vr_cfg(30.0, 1.0, None).nodes[1].spec.clone(); // pose
+    let remote_task = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone(); // render
+    results.push(bench("maptask: local hit (pose)", 200, 5000, || {
+        std::hint::black_box(orc.map_task(&tr, &local_task, origin, origin, 0.0, &loads));
+    }));
+    results.push(bench("maptask: escalation (render, busy servers)", 200, 2000, || {
+        std::hint::black_box(orc.map_task(&tr, &remote_task, origin, origin, 0.0, &loads));
+    }));
+
+    // 4. end-to-end event loop throughput
+    results.push(bench("sim: 0.5 s VR on paper testbed", 2, 20, || {
+        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+        let mut s = baselines::by_name("heye", &sim.decs);
+        let wl = Workload::vr(&sim.decs);
+        let c = SimConfig::default().horizon(0.5).seed(1);
+        std::hint::black_box(sim.run(s.as_mut(), wl, vec![], vec![], &c));
+    }));
+    results.push(bench("sim: 0.3 s mining 100 sensors / 80e / 24s", 1, 10, || {
+        let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(80, 24)));
+        let mut s = baselines::by_name("heye", &sim.decs);
+        let wl = Workload::mining(&sim.decs, 100, 10.0);
+        let c = SimConfig::default().horizon(0.3).seed(2);
+        std::hint::black_box(sim.run(s.as_mut(), wl, vec![], vec![], &c));
+    }));
+
+    report("L3 hot paths", &results);
+
+    // simulated-vs-wall speed ratio for the event loop
+    let t0 = std::time::Instant::now();
+    let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+    let mut s = baselines::by_name("heye", &sim.decs);
+    let wl = Workload::vr(&sim.decs);
+    let c = SimConfig::default().horizon(2.0).seed(3);
+    let m = sim.run(s.as_mut(), wl, vec![], vec![], &c);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\nevent-loop speed: 2.0 simulated seconds ({} frames, {} tasks) in {:.1} ms wall \
+         = {:.0}x realtime",
+        m.frames.len(),
+        m.tasks_on_edge + m.tasks_on_server,
+        wall * 1e3,
+        2.0 / wall
+    );
+}

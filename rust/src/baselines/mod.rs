@@ -1,0 +1,687 @@
+//! The three state-of-the-art baselines H-EYE is evaluated against (§5.1.1).
+//!
+//! All three implement the same [`Scheduler`] trait as H-EYE, so every
+//! figure harness swaps schedulers with one line. Their defining
+//! characteristics (Table 1):
+//!
+//! * **ACE** [75] — a unified edge-cloud platform with *static* application
+//!   orchestration: the task→device plan is computed once per (origin,
+//!   task-kind) from contention-blind standalone profiles and never revised.
+//!   It does not adapt to network changes and "does not consider shared
+//!   resource utilization under a node".
+//! * **LaTS / Hetero-Edge** [87] — latency-aware dynamic task scheduling:
+//!   benchmarks standalone time per task, monitors PU availability, and
+//!   greedily picks the best *standalone* PU. No contention model — the
+//!   §5.3.1 trap (CPU beats VIC standalone but loses under GPU memory
+//!   pressure) is exactly what it falls into.
+//! * **Multi-tier CloudVR** [50] — remote-rendering specialist: rendering
+//!   is placed on the server minimizing compute + frame transfer, every
+//!   other task stays on the edge, and under bandwidth pressure it shrinks
+//!   the *frame resolution* to keep the pipeline inside the QoS budget
+//!   instead of re-balancing other tasks (Fig. 12a).
+
+use std::collections::BTreeMap;
+
+use crate::hwgraph::presets::Decs;
+use crate::hwgraph::{HwGraph, NodeId, PuClass};
+use crate::netsim::Network;
+use crate::orchestrator::hierarchy::{CLUSTER_HOP_S, DEVICE_HOP_S};
+use crate::orchestrator::{Loads, MapResult, Overhead};
+use crate::sim::Scheduler;
+use crate::task::{workloads, Cfg, TaskKind, TaskSpec};
+use crate::traverser::Traverser;
+
+/// One-way modeled message latency between an edge ORC and a remote device
+/// (through the cluster + root tiers) — same constants H-EYE's hierarchy
+/// charges, so overhead comparisons are apples-to-apples.
+const REMOTE_ONE_WAY_S: f64 = DEVICE_HOP_S + CLUSTER_HOP_S + CLUSTER_HOP_S + DEVICE_HOP_S;
+
+/// Contention-blind evaluation of one task on one PU: standalone latency
+/// plus the input transfer if remote. This is the entirety of what the
+/// baselines "see" — no slowdown model.
+fn blind_eval(tr: &Traverser, task: &TaskSpec, data_dev: NodeId, pu: NodeId) -> Option<(f64, f64)> {
+    let g = tr.slow.graph();
+    let mut cfg = Cfg::new();
+    cfg.add(task.clone());
+    let standalone = tr.standalone(&cfg, 0, pu)?;
+    let dev = g.device_of(pu)?;
+    let comm = if dev == data_dev || task.input_bytes <= 0.0 {
+        0.0
+    } else {
+        let route = tr.net.route(g, data_dev, dev)?;
+        tr.net.transfer_time_s(g, &route, task.input_bytes)
+    };
+    Some((standalone + comm, comm))
+}
+
+/// All candidate PUs of `dev` that may run `task`.
+fn candidate_pus(g: &HwGraph, dev: NodeId, task: &TaskSpec) -> Vec<NodeId> {
+    g.pus_in(dev)
+        .into_iter()
+        .filter(|&pu| {
+            g.pu_class(pu)
+                .map(|c| task.kind.allowed_pus().contains(&c))
+                .unwrap_or(false)
+        })
+        .collect()
+}
+
+/// Number of scheduler-visible active tasks on a PU.
+fn pu_load(loads: &Loads, dev: NodeId, pu: NodeId) -> usize {
+    loads.device(dev).iter().filter(|a| a.pu == pu).count()
+}
+
+fn remote_overhead(origin: NodeId, dev: NodeId) -> Overhead {
+    if origin == dev {
+        Overhead::default()
+    } else {
+        Overhead {
+            comm_s: 2.0 * REMOTE_ONE_WAY_S,
+            compute_s: 0.0,
+            hops: 2,
+            traverser_calls: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ACE
+// ---------------------------------------------------------------------------
+
+/// ACE: static, contention-blind orchestration. The plan per (origin,
+/// task-kind) is the (device, PU class) minimizing blind latency subject to
+/// the blind deadline check; once computed it is reused for every instance.
+/// Within the planned device, instances round-robin over the PUs of the
+/// planned class by visible queue length (ACE does load-balance across a
+/// device's identical workers; it just never revises the device choice).
+pub struct AceScheduler {
+    edges: Vec<NodeId>,
+    servers: Vec<NodeId>,
+    plan: BTreeMap<(NodeId, u8), (NodeId, PuClass)>,
+    /// how many plans already target each device — ACE's static planner
+    /// balances across equivalent devices at *plan* time (it scales), it
+    /// just never revises and never prices contention
+    plan_count: BTreeMap<NodeId, usize>,
+}
+
+impl AceScheduler {
+    pub fn new(decs: &Decs) -> Self {
+        AceScheduler {
+            edges: decs.edge_devices.clone(),
+            servers: decs.servers.clone(),
+            plan: BTreeMap::new(),
+            plan_count: BTreeMap::new(),
+        }
+    }
+
+    fn devices_from(&self, origin: NodeId) -> Vec<NodeId> {
+        let mut v = vec![origin];
+        for &d in self.edges.iter().chain(self.servers.iter()) {
+            if d != origin {
+                v.push(d);
+            }
+        }
+        v
+    }
+
+    fn make_plan(
+        &self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin: NodeId,
+        data_dev: NodeId,
+    ) -> Option<(NodeId, PuClass)> {
+        let g = tr.slow.graph();
+        // score satisfying devices by how many plans already target them
+        // (static balancing), then by blind latency
+        let mut best: Option<(usize, f64, NodeId, PuClass)> = None;
+        let mut fallback: Option<(f64, NodeId, PuClass)> = None;
+        for dev in self.devices_from(origin) {
+            if task.kind.pinned_to_origin() && dev != origin {
+                break;
+            }
+            let planned = self.plan_count.get(&dev).copied().unwrap_or(0);
+            for pu in candidate_pus(g, dev, task) {
+                if let Some((lat, _)) = blind_eval(tr, task, data_dev, pu) {
+                    let class = g.pu_class(pu).unwrap();
+                    if lat <= task.constraints.deadline_s {
+                        let better = match best {
+                            None => true,
+                            Some((bp, bl, _, _)) => {
+                                planned < bp || (planned == bp && lat < bl)
+                            }
+                        };
+                        if better {
+                            best = Some((planned, lat, dev, class));
+                        }
+                    }
+                    if fallback.map(|(b, _, _)| lat < b).unwrap_or(true) {
+                        fallback = Some((lat, dev, class));
+                    }
+                }
+            }
+            // local placements that satisfy the blind deadline short-circuit
+            // the search — the static planner has no reason to look remote
+            if dev == origin && best.is_some() {
+                break;
+            }
+        }
+        best.map(|(_, _, d, c)| (d, c))
+            .or(fallback.map(|(_, d, c)| (d, c)))
+    }
+}
+
+impl Scheduler for AceScheduler {
+    fn name(&self) -> String {
+        "ace".to_string()
+    }
+
+    fn assign(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin: NodeId,
+        data_dev: NodeId,
+        _now: f64,
+        loads: &Loads,
+    ) -> MapResult {
+        let key = (origin, task.kind as u8);
+        let mut overhead = Overhead::default();
+        let (dev, class) = match self.plan.get(&key) {
+            Some(&p) => p,
+            None => {
+                let p = match self.make_plan(tr, task, origin, data_dev) {
+                    Some(p) => p,
+                    None => {
+                        return MapResult {
+                            pu: None,
+                            predicted_latency_s: f64::INFINITY,
+                            overhead,
+                        }
+                    }
+                };
+                // one-time planning round trip if the plan is remote
+                overhead.add(&remote_overhead(origin, p.0));
+                self.plan.insert(key, p);
+                *self.plan_count.entry(p.0).or_insert(0) += 1;
+                p
+            }
+        };
+        let g = tr.slow.graph();
+        // round-robin by visible queue length within the planned class
+        let pu = candidate_pus(g, dev, task)
+            .into_iter()
+            .filter(|&pu| g.pu_class(pu) == Some(class))
+            .min_by_key(|&pu| pu_load(loads, dev, pu));
+        let pu = match pu {
+            Some(pu) => pu,
+            None => {
+                return MapResult {
+                    pu: None,
+                    predicted_latency_s: f64::INFINITY,
+                    overhead,
+                }
+            }
+        };
+        let predicted = blind_eval(tr, task, data_dev, pu)
+            .map(|(l, _)| l)
+            .unwrap_or(f64::INFINITY);
+        MapResult {
+            pu: Some(pu),
+            predicted_latency_s: predicted,
+            overhead,
+        }
+    }
+
+    fn on_device_join(&mut self, _g: &HwGraph, dev: NodeId) {
+        self.edges.push(dev);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LaTS (Hetero-Edge)
+// ---------------------------------------------------------------------------
+
+/// LaTS: latency-aware, standalone-greedy, availability-monitoring, and
+/// contention-blind. Local PUs are tried first (preferring *idle* PUs by
+/// standalone time); if no local PU passes the blind deadline check the
+/// task is offloaded to the remote device minimizing standalone + comm.
+pub struct LatsScheduler {
+    edges: Vec<NodeId>,
+    servers: Vec<NodeId>,
+}
+
+impl LatsScheduler {
+    pub fn new(decs: &Decs) -> Self {
+        LatsScheduler {
+            edges: decs.edge_devices.clone(),
+            servers: decs.servers.clone(),
+        }
+    }
+
+    /// Best PU of `dev` by (availability, blind latency).
+    fn best_on(
+        &self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        data_dev: NodeId,
+        dev: NodeId,
+        loads: &Loads,
+    ) -> Option<(NodeId, f64, usize)> {
+        let g = tr.slow.graph();
+        // availability monitor: rank by visible queue length, then by
+        // blind standalone latency (still no contention *model*)
+        let mut best: Option<(NodeId, f64, usize)> = None;
+        for pu in candidate_pus(g, dev, task) {
+            if let Some((lat, _)) = blind_eval(tr, task, data_dev, pu) {
+                let load = pu_load(loads, dev, pu);
+                let better = match best {
+                    None => true,
+                    Some((_, bl, bload)) => load < bload || (load == bload && lat < bl),
+                };
+                if better {
+                    best = Some((pu, lat, load));
+                }
+            }
+        }
+        best.map(|(pu, lat, load)| (pu, lat, load))
+    }
+}
+
+impl Scheduler for LatsScheduler {
+    fn name(&self) -> String {
+        "lats".to_string()
+    }
+
+    fn assign(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin: NodeId,
+        data_dev: NodeId,
+        _now: f64,
+        loads: &Loads,
+    ) -> MapResult {
+        // 1. local, if the blind deadline check passes
+        if let Some((pu, lat, _)) = self.best_on(tr, task, data_dev, origin, loads) {
+            if lat <= task.constraints.deadline_s || task.kind.pinned_to_origin() {
+                return MapResult {
+                    pu: Some(pu),
+                    predicted_latency_s: lat,
+                    overhead: Overhead {
+                        comm_s: 0.0,
+                        compute_s: 0.0,
+                        hops: 0,
+                        traverser_calls: 1,
+                    },
+                };
+            }
+        } else if task.kind.pinned_to_origin() {
+            return MapResult {
+                pu: None,
+                predicted_latency_s: f64::INFINITY,
+                overhead: Overhead::default(),
+            };
+        }
+        // 2. offload: availability-monitored min (standalone + comm).
+        // LaTS monitors PU availability *periodically*, so the per-task
+        // cost is a single round trip to the chosen device, not a poll of
+        // every device. The monitor sees queue depth, so a loaded PU is
+        // penalized proportionally — but still with *standalone* times
+        // (no contention model).
+        let mut best: Option<(NodeId, f64)> = None;
+        let mut calls = 0u32;
+        for &dev in self.servers.iter().chain(self.edges.iter()) {
+            if dev == origin {
+                continue;
+            }
+            calls += 1;
+            if let Some((pu, lat, load)) = self.best_on(tr, task, data_dev, dev, loads) {
+                let eff = lat * (1.0 + 0.5 * load as f64); // queue penalty
+                if best.map(|(_, b)| eff < b).unwrap_or(true) {
+                    best = Some((pu, eff));
+                }
+            }
+        }
+        let overhead = Overhead {
+            comm_s: if best.is_some() { 2.0 * REMOTE_ONE_WAY_S } else { 0.0 },
+            compute_s: 0.0,
+            hops: if best.is_some() { 2 } else { 0 },
+            traverser_calls: calls,
+        };
+        match best {
+            Some((pu, lat)) => MapResult {
+                pu: Some(pu),
+                predicted_latency_s: lat,
+                overhead,
+            },
+            None => MapResult {
+                pu: None,
+                predicted_latency_s: f64::INFINITY,
+                overhead,
+            },
+        }
+    }
+
+    fn on_device_join(&mut self, _g: &HwGraph, dev: NodeId) {
+        self.edges.push(dev);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tier CloudVR
+// ---------------------------------------------------------------------------
+
+/// Multi-tier CloudVR: render goes to the server minimizing blind compute +
+/// frame transfer; every other task stays on the origin edge. Under
+/// bandwidth pressure the *resolution* shrinks until the remote render
+/// segment fits its share of the frame budget.
+pub struct CloudVrScheduler {
+    servers: Vec<NodeId>,
+    /// resolution steps tried, best-first
+    steps: Vec<f64>,
+    /// last resolution chosen per origin (reported by Fig. 12a)
+    pub last_resolution: BTreeMap<NodeId, f64>,
+}
+
+impl CloudVrScheduler {
+    pub fn new(decs: &Decs) -> Self {
+        CloudVrScheduler {
+            servers: decs.servers.clone(),
+            steps: vec![1.0, 0.75, 0.5, 0.25],
+            last_resolution: BTreeMap::new(),
+        }
+    }
+
+    /// Blind render-segment latency at resolution `r`: best server's render
+    /// standalone plus the rendered-frame transfer back over the uplink.
+    fn render_segment_s(&self, g: &HwGraph, net: &Network, origin: NodeId, r: f64) -> f64 {
+        let mut best = f64::INFINITY;
+        for &s in &self.servers {
+            let model = match g.node(s).model.as_deref() {
+                Some(m) => m,
+                None => continue,
+            };
+            let render =
+                crate::perfmodel::calibration::standalone_s(model, PuClass::Gpu, TaskKind::Render)
+                    .map(|t| t * r)
+                    .unwrap_or(f64::INFINITY);
+            let comm = match net.route(g, s, origin) {
+                Some(route) => net.transfer_time_s(g, &route, workloads::RAW_FRAME_BYTES * r),
+                None => f64::INFINITY,
+            };
+            best = best.min(render + comm);
+        }
+        best
+    }
+}
+
+impl Scheduler for CloudVrScheduler {
+    fn name(&self) -> String {
+        "cloudvr".to_string()
+    }
+
+    fn assign(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin: NodeId,
+        data_dev: NodeId,
+        _now: f64,
+        loads: &Loads,
+    ) -> MapResult {
+        let g = tr.slow.graph();
+        if task.kind == TaskKind::Render {
+            // best server by blind compute + transfer, lightly load-balanced
+            let mut best: Option<(NodeId, f64, NodeId)> = None;
+            for &dev in &self.servers {
+                for pu in candidate_pus(g, dev, task) {
+                    if let Some((lat, _)) = blind_eval(tr, task, data_dev, pu) {
+                        let load = pu_load(loads, dev, pu) as f64;
+                        let eff = lat * (1.0 + 0.2 * load);
+                        if best.map(|(_, b, _)| eff < b).unwrap_or(true) {
+                            best = Some((pu, eff, dev));
+                        }
+                    }
+                }
+            }
+            return match best {
+                Some((pu, lat, dev)) => MapResult {
+                    pu: Some(pu),
+                    predicted_latency_s: lat,
+                    overhead: remote_overhead(origin, dev),
+                },
+                None => MapResult {
+                    pu: None,
+                    predicted_latency_s: f64::INFINITY,
+                    overhead: Overhead::default(),
+                },
+            };
+        }
+        // everything else: best standalone PU on the origin edge
+        let mut best: Option<(NodeId, f64)> = None;
+        for pu in candidate_pus(g, origin, task) {
+            if let Some((lat, _)) = blind_eval(tr, task, data_dev, pu) {
+                if best.map(|(_, b)| lat < b).unwrap_or(true) {
+                    best = Some((pu, lat));
+                }
+            }
+        }
+        match best {
+            Some((pu, lat)) => MapResult {
+                pu: Some(pu),
+                predicted_latency_s: lat,
+                overhead: Overhead {
+                    traverser_calls: 1,
+                    ..Overhead::default()
+                },
+            },
+            None => MapResult {
+                pu: None,
+                predicted_latency_s: f64::INFINITY,
+                overhead: Overhead::default(),
+            },
+        }
+    }
+
+    fn frame_resolution(&mut self, origin: NodeId, g: &HwGraph, net: &Network) -> f64 {
+        let model = g.node(origin).model.clone().unwrap_or_default();
+        let fps = workloads::target_fps(&model);
+        // the render stage's share of the 2-period frame budget — the
+        // pipeline segment CloudVR's resolution knob controls
+        let budget = 0.45 * 2.0 / fps;
+        for &r in &self.steps {
+            if self.render_segment_s(g, net, origin, r) <= budget {
+                self.last_resolution.insert(origin, r);
+                return r;
+            }
+        }
+        let r = *self.steps.last().unwrap();
+        self.last_resolution.insert(origin, r);
+        r
+    }
+
+    fn on_device_join(&mut self, _g: &HwGraph, _dev: NodeId) {}
+}
+
+// ---------------------------------------------------------------------------
+// factory
+// ---------------------------------------------------------------------------
+
+/// Build a scheduler by name: "heye", "heye-direct", "heye-sticky",
+/// "heye-grouped", "ace", "lats", "cloudvr".
+pub fn by_name(name: &str, decs: &Decs) -> Box<dyn Scheduler> {
+    use crate::orchestrator::{Hierarchy, Orchestrator, Policy};
+    use crate::sim::HeyeScheduler;
+    let heye = |p: Policy| -> Box<dyn Scheduler> {
+        Box::new(HeyeScheduler::new(Orchestrator::new(
+            Hierarchy::from_decs(decs),
+            p,
+        )))
+    };
+    match name {
+        "heye" => heye(Policy::Hierarchical),
+        "heye-direct" => heye(Policy::DirectToServer),
+        "heye-sticky" => heye(Policy::StickyServer),
+        "heye-grouped" => heye(Policy::Grouped),
+        "ace" => Box::new(AceScheduler::new(decs)),
+        "lats" => Box::new(LatsScheduler::new(decs)),
+        "cloudvr" => Box::new(CloudVrScheduler::new(decs)),
+        other => panic!("unknown scheduler `{other}`"),
+    }
+}
+
+pub const ALL_BASELINES: [&str; 3] = ["ace", "lats", "cloudvr"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::DecsSpec;
+    use crate::perfmodel::ProfileModel;
+    use crate::slowdown::CachedSlowdown;
+    use crate::task::workloads;
+
+    struct Ctx {
+        decs: Decs,
+        perf: ProfileModel,
+        net: Network,
+    }
+
+    impl Ctx {
+        fn new() -> Self {
+            Ctx {
+                decs: Decs::build(&DecsSpec::paper_vr()),
+                perf: ProfileModel::new(),
+                net: Network::new(),
+            }
+        }
+    }
+
+    #[test]
+    fn ace_plan_is_static_across_calls() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let mut ace = AceScheduler::new(&ctx.decs);
+        let render = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone();
+        let origin = ctx.decs.edge_devices[0];
+        let r1 = ace.assign(&tr, &render, origin, origin, 0.0, &Loads::default());
+        let r2 = ace.assign(&tr, &render, origin, origin, 0.0, &Loads::default());
+        let d1 = ctx.decs.graph.device_of(r1.pu.unwrap()).unwrap();
+        let d2 = ctx.decs.graph.device_of(r2.pu.unwrap()).unwrap();
+        assert_eq!(d1, d2, "ACE must not revise the device plan");
+        // the second call pays no planning round trip
+        assert_eq!(r2.overhead.comm_s, 0.0);
+    }
+
+    #[test]
+    fn lats_prefers_cpu_over_vic_for_reproject() {
+        // §5.3.1: LaTS assigns reproject to the CPU because its standalone
+        // time beats the VIC — the contention trap
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let mut lats = LatsScheduler::new(&ctx.decs);
+        let reproject = workloads::vr_cfg(30.0, 1.0, None).nodes[5].spec.clone();
+        let origin = ctx.decs.edge_devices[0];
+        let r = lats.assign(&tr, &reproject, origin, origin, 0.0, &Loads::default());
+        let pu = r.pu.unwrap();
+        assert_eq!(
+            ctx.decs.graph.pu_class(pu),
+            Some(PuClass::CpuCore),
+            "LaTS picks CPU standalone-greedily"
+        );
+    }
+
+    #[test]
+    fn lats_offloads_render() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let mut lats = LatsScheduler::new(&ctx.decs);
+        let render = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone();
+        let origin = ctx.decs.edge_devices[0];
+        let r = lats.assign(&tr, &render, origin, origin, 0.0, &Loads::default());
+        let dev = ctx.decs.graph.device_of(r.pu.unwrap()).unwrap();
+        assert!(ctx.decs.servers.contains(&dev));
+        assert!(r.overhead.hops > 0);
+    }
+
+    #[test]
+    fn cloudvr_renders_remotely_and_keeps_rest_local() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let mut cv = CloudVrScheduler::new(&ctx.decs);
+        let cfg = workloads::vr_cfg(30.0, 1.0, None);
+        let origin = ctx.decs.edge_devices[0];
+        let render = cv.assign(&tr, &cfg.nodes[2].spec, origin, origin, 0.0, &Loads::default());
+        let rdev = ctx.decs.graph.device_of(render.pu.unwrap()).unwrap();
+        assert!(ctx.decs.servers.contains(&rdev));
+        let encode = cv.assign(&tr, &cfg.nodes[3].spec, origin, origin, 0.0, &Loads::default());
+        let edev = ctx.decs.graph.device_of(encode.pu.unwrap()).unwrap();
+        assert_eq!(edev, origin, "CloudVR keeps non-render tasks local");
+    }
+
+    #[test]
+    fn cloudvr_shrinks_resolution_under_throttle() {
+        let mut ctx = Ctx::new();
+        let origin = ctx.decs.edge_devices[0];
+        let mut cv = CloudVrScheduler::new(&ctx.decs);
+        let full = cv.frame_resolution(origin, &ctx.decs.graph, &ctx.net);
+        assert_eq!(full, 1.0, "10 Gb/s sustains full resolution");
+        let uplink = ctx.decs.uplink_of(origin).unwrap();
+        ctx.net.set_bandwidth(uplink, Some(0.05));
+        let throttled = cv.frame_resolution(origin, &ctx.decs.graph, &ctx.net);
+        assert!(throttled < 1.0, "0.05 Gb/s must shrink resolution");
+    }
+
+    #[test]
+    fn factory_builds_every_scheduler() {
+        let ctx = Ctx::new();
+        for name in ["heye", "heye-direct", "heye-sticky", "heye-grouped"]
+            .iter()
+            .chain(ALL_BASELINES.iter())
+        {
+            let s = by_name(name, &ctx.decs);
+            assert!(!s.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn ace_blind_prediction_is_optimistic_under_load() {
+        // the fig10 story: ACE predicts the same latency regardless of how
+        // loaded the target is
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let mut ace = AceScheduler::new(&ctx.decs);
+        let svm = workloads::mining_cfg(1.0).nodes[1].spec.clone();
+        let origin = ctx.decs.edge_devices[0];
+        let empty = ace.assign(&tr, &svm, origin, origin, 0.0, &Loads::default());
+        // saturate the chosen PU
+        let pu = empty.pu.unwrap();
+        let dev = ctx.decs.graph.device_of(pu).unwrap();
+        let mut loads = Loads::default();
+        loads.by_device.insert(
+            dev,
+            (0..4)
+                .map(|i| crate::traverser::ActiveTask {
+                    id: crate::task::TaskId(i),
+                    kind: TaskKind::Knn,
+                    pu,
+                    remaining_s: 0.05,
+                    deadline_abs: f64::INFINITY,
+                })
+                .collect(),
+        );
+        let loaded = ace.assign(&tr, &svm, origin, origin, 0.0, &loads);
+        // blind: the prediction only differs by the (load-balanced) PU pick
+        assert!(
+            loaded.predicted_latency_s <= empty.predicted_latency_s * 1.05,
+            "ACE must not price contention in: {} vs {}",
+            loaded.predicted_latency_s,
+            empty.predicted_latency_s
+        );
+    }
+}

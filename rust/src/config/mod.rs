@@ -1,0 +1,246 @@
+//! Experiment configuration: JSON-described runs so every figure's setup
+//! is a reviewable artifact rather than code, and `heye run --config f`
+//! reproduces it.
+//!
+//! ```json
+//! {
+//!   "app": "vr",
+//!   "sched": "heye",
+//!   "edges": { "orin_agx": 1, "xavier_nx": 2 },
+//!   "servers": { "server1": 1 },
+//!   "horizon_s": 2.0,
+//!   "seed": 42,
+//!   "noise": 0.02,
+//!   "sensors": 20,
+//!   "net_events": [ { "t": 1.0, "edge_index": 0, "gbps": 2.5 } ],
+//!   "join_events": [ { "t": 1.0, "model": "xavier_nx", "vr_source": true } ]
+//! }
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::hwgraph::presets::{Decs, DecsSpec, EDGE_MODELS, SERVER_MODELS};
+use crate::sim::{JoinEvent, NetEvent, SimConfig, Workload};
+use crate::util::json::Json;
+
+/// A parsed experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    pub app: String,
+    pub sched: String,
+    pub decs_spec: DecsSpec,
+    pub sim: SimConfig,
+    pub sensors: usize,
+    /// (t, edge index whose uplink is changed, Some(gbps) | None=restore)
+    pub net_events: Vec<(f64, usize, Option<f64>)>,
+    pub join_events: Vec<(f64, String, bool)>,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            app: "vr".into(),
+            sched: "heye".into(),
+            decs_spec: DecsSpec::paper_vr(),
+            sim: SimConfig::default(),
+            sensors: 20,
+            net_events: Vec::new(),
+            join_events: Vec::new(),
+        }
+    }
+}
+
+fn device_counts(j: &Json, known: &[&str]) -> Result<Vec<(String, usize)>> {
+    let obj = j.as_obj().ok_or_else(|| anyhow!("device map expected"))?;
+    let mut out = Vec::new();
+    for (model, count) in obj {
+        if !known.contains(&model.as_str()) {
+            bail!("unknown device model `{model}` (known: {known:?})");
+        }
+        let c = count
+            .as_u64()
+            .ok_or_else(|| anyhow!("{model}: count must be a number"))? as usize;
+        if c > 0 {
+            out.push((model.clone(), c));
+        }
+    }
+    if out.is_empty() {
+        bail!("device map is empty");
+    }
+    Ok(out)
+}
+
+impl ExpConfig {
+    pub fn parse(text: &str) -> Result<ExpConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config parse: {e:?}"))?;
+        let mut c = ExpConfig::default();
+        if let Some(v) = j.get("app").and_then(|v| v.as_str()) {
+            if !["vr", "mining"].contains(&v) {
+                bail!("app must be vr|mining, got `{v}`");
+            }
+            c.app = v.to_string();
+        }
+        if let Some(v) = j.get("sched").and_then(|v| v.as_str()) {
+            c.sched = v.to_string();
+        }
+        if let Some(e) = j.get("edges") {
+            c.decs_spec.edges = device_counts(e, &EDGE_MODELS)?;
+        }
+        if let Some(s) = j.get("servers") {
+            c.decs_spec.servers = device_counts(s, &SERVER_MODELS)?;
+        }
+        if let Some(v) = j.get("edge_uplink_gbps").and_then(|v| v.as_f64()) {
+            c.decs_spec.edge_uplink_gbps = v;
+        }
+        if let Some(v) = j.get("wan_gbps").and_then(|v| v.as_f64()) {
+            c.decs_spec.wan_gbps = v;
+        }
+        if let Some(v) = j.get("horizon_s").and_then(|v| v.as_f64()) {
+            c.sim.horizon_s = v;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_u64()) {
+            c.sim.seed = v;
+        }
+        if let Some(v) = j.get("noise").and_then(|v| v.as_f64()) {
+            c.sim.noise_frac = v;
+        }
+        if let Some(v) = j.get("grouped").and_then(|v| v.as_bool()) {
+            c.sim.grouped = v;
+        }
+        if let Some(v) = j.get("sensors").and_then(|v| v.as_u64()) {
+            c.sensors = v as usize;
+        }
+        if let Some(arr) = j.get("net_events").and_then(|v| v.as_arr()) {
+            for e in arr {
+                let t = e.get("t").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let idx = e
+                    .get("edge_index")
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| anyhow!("net_events[].edge_index required"))?
+                    as usize;
+                let gbps = e.get("gbps").and_then(|v| v.as_f64());
+                c.net_events.push((t, idx, gbps));
+            }
+        }
+        if let Some(arr) = j.get("join_events").and_then(|v| v.as_arr()) {
+            for e in arr {
+                let t = e.get("t").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let model = e
+                    .get("model")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("join_events[].model required"))?;
+                if !EDGE_MODELS.contains(&model) {
+                    bail!("join model `{model}` unknown");
+                }
+                let vr = e
+                    .get("vr_source")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(c.app == "vr");
+                c.join_events.push((t, model.to_string(), vr));
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<ExpConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Materialize the run pieces: DECS, workload, dynamic events.
+    pub fn build(&self) -> Result<(Decs, Workload, Vec<NetEvent>, Vec<JoinEvent>)> {
+        let decs = Decs::build(&self.decs_spec);
+        let wl = match self.app.as_str() {
+            "mining" => Workload::mining(&decs, self.sensors, 10.0),
+            _ => Workload::vr(&decs),
+        };
+        let mut net = Vec::new();
+        for &(t, idx, gbps) in &self.net_events {
+            let dev = *decs
+                .edge_devices
+                .get(idx)
+                .ok_or_else(|| anyhow!("edge_index {idx} out of range"))?;
+            let link = decs
+                .uplink_of(dev)
+                .ok_or_else(|| anyhow!("edge {idx} has no uplink"))?;
+            net.push(NetEvent { t, link, gbps });
+        }
+        let joins = self
+            .join_events
+            .iter()
+            .map(|(t, model, vr)| JoinEvent {
+                t: *t,
+                model: model.clone(),
+                uplink_gbps: self.decs_spec.edge_uplink_gbps,
+                vr_source: *vr,
+            })
+            .collect();
+        Ok((decs, wl, net, joins))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "app": "vr",
+        "sched": "heye-direct",
+        "edges": { "orin_agx": 1, "xavier_nx": 2 },
+        "servers": { "server1": 1, "server2": 1 },
+        "horizon_s": 0.5,
+        "seed": 7,
+        "noise": 0.0,
+        "net_events": [ { "t": 0.2, "edge_index": 0, "gbps": 2.5 } ],
+        "join_events": [ { "t": 0.3, "model": "orin_nano" } ]
+    }"#;
+
+    #[test]
+    fn parses_and_builds() {
+        let c = ExpConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.sched, "heye-direct");
+        assert_eq!(c.sim.seed, 7);
+        let (decs, wl, net, joins) = c.build().unwrap();
+        assert_eq!(decs.edge_devices.len(), 3);
+        assert_eq!(decs.servers.len(), 2);
+        assert_eq!(wl.sources.len(), 3);
+        assert_eq!(net.len(), 1);
+        assert_eq!(joins.len(), 1);
+        assert!(joins[0].vr_source);
+    }
+
+    #[test]
+    fn rejects_unknown_models_and_apps() {
+        assert!(ExpConfig::parse(r#"{ "edges": { "rtx4090": 1 } }"#).is_err());
+        assert!(ExpConfig::parse(r#"{ "app": "weather" }"#).is_err());
+        assert!(
+            ExpConfig::parse(r#"{ "join_events": [ { "t": 1, "model": "nope" } ] }"#).is_err()
+        );
+    }
+
+    #[test]
+    fn defaults_are_the_paper_testbed() {
+        let c = ExpConfig::parse("{}").unwrap();
+        let (decs, _, _, _) = c.build().unwrap();
+        assert_eq!(decs.edge_devices.len(), 5);
+        assert_eq!(decs.servers.len(), 3);
+    }
+
+    #[test]
+    fn runs_end_to_end() {
+        let c = ExpConfig::parse(SAMPLE).unwrap();
+        let (decs, wl, net, joins) = c.build().unwrap();
+        let mut sim = crate::sim::Simulation::new(decs);
+        let mut sched = crate::baselines::by_name(&c.sched, &sim.decs);
+        let m = sim.run(sched.as_mut(), wl, net, joins, &c.sim);
+        assert!(!m.frames.is_empty());
+    }
+
+    #[test]
+    fn out_of_range_net_event_is_an_error() {
+        let c =
+            ExpConfig::parse(r#"{ "net_events": [ { "t": 0, "edge_index": 99, "gbps": 1 } ] }"#)
+                .unwrap();
+        assert!(c.build().is_err());
+    }
+}

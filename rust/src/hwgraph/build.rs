@@ -1,0 +1,121 @@
+//! Fluent construction helpers for HW-Graphs: used by the device presets
+//! and by user code describing custom topologies.
+
+use super::{GroupRole, HwGraph, LinkKind, NodeId, NodeKind, PuClass, ResourceKind};
+
+/// Builder over an owned graph; `finish()` returns it.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    pub g: HwGraph,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self { g: HwGraph::new() }
+    }
+
+    pub fn root(&mut self, name: &str) -> NodeId {
+        self.g.add_node(
+            name,
+            NodeKind::Group {
+                role: GroupRole::Root,
+            },
+            1,
+            None,
+        )
+    }
+
+    pub fn cluster(&mut self, name: &str, parent: NodeId) -> NodeId {
+        let layer = self.g.node(parent).layer + 1;
+        self.g.add_node(
+            name,
+            NodeKind::Group {
+                role: GroupRole::Cluster,
+            },
+            layer,
+            Some(parent),
+        )
+    }
+
+    pub fn device(&mut self, name: &str, model: &str, parent: Option<NodeId>) -> NodeId {
+        let layer = parent.map(|p| self.g.node(p).layer + 1).unwrap_or(1);
+        let id = self.g.add_node(
+            name,
+            NodeKind::Group {
+                role: GroupRole::Device,
+            },
+            layer,
+            parent,
+        );
+        self.g.set_model(id, model);
+        id
+    }
+
+    pub fn complex(&mut self, name: &str, parent: NodeId) -> NodeId {
+        let layer = self.g.node(parent).layer + 1;
+        self.g.add_node(
+            name,
+            NodeKind::Group {
+                role: GroupRole::Complex,
+            },
+            layer,
+            Some(parent),
+        )
+    }
+
+    pub fn pu(&mut self, name: &str, class: PuClass, parent: NodeId) -> NodeId {
+        let layer = self.g.node(parent).layer + 1;
+        self.g
+            .add_node(name, NodeKind::Compute { class }, layer, Some(parent))
+    }
+
+    pub fn storage(
+        &mut self,
+        name: &str,
+        resource: ResourceKind,
+        capacity_gbps: f64,
+        parent: NodeId,
+    ) -> NodeId {
+        let layer = self.g.node(parent).layer + 1;
+        self.g.add_node(
+            name,
+            NodeKind::Storage {
+                resource,
+                capacity_gbps,
+            },
+            layer,
+            Some(parent),
+        )
+    }
+
+    pub fn controller(&mut self, name: &str, resource: ResourceKind, parent: NodeId) -> NodeId {
+        let layer = self.g.node(parent).layer + 1;
+        self.g
+            .add_node(name, NodeKind::Controller { resource }, layer, Some(parent))
+    }
+
+    pub fn abstract_node(&mut self, name: &str, parent: Option<NodeId>) -> NodeId {
+        let layer = parent.map(|p| self.g.node(p).layer + 1).unwrap_or(1);
+        self.g.add_node(name, NodeKind::Abstract, layer, parent)
+    }
+
+    pub fn onchip(&mut self, a: NodeId, b: NodeId) {
+        self.g.add_edge(a, b, LinkKind::OnChip, 200.0, 1e-9);
+    }
+
+    pub fn membus(&mut self, a: NodeId, b: NodeId, bw: f64) {
+        self.g.add_edge(a, b, LinkKind::MemBus, bw, 1e-8);
+    }
+
+    pub fn lan(&mut self, a: NodeId, b: NodeId, bw_gbps: f64, latency_s: f64) {
+        self.g.add_edge(a, b, LinkKind::Lan, bw_gbps, latency_s);
+    }
+
+    pub fn wan(&mut self, a: NodeId, b: NodeId, bw_gbps: f64, latency_s: f64) {
+        self.g.add_edge(a, b, LinkKind::Wan, bw_gbps, latency_s);
+    }
+
+    pub fn finish(self) -> HwGraph {
+        self.g
+    }
+}

@@ -1,0 +1,354 @@
+//! HW-GRAPH: the multi-layer, graph-based hardware representation (§3.3).
+//!
+//! A node is (i) a computational unit, (ii) a storage unit, (iii) a dedicated
+//! controller, (iv) an abstract component with unknown internals, or (v) a
+//! *group* encapsulating a sub-graph (a device, a cluster, the root).
+//! Edges are typed interconnects. Cross-layer "refines" links relate the
+//! abstract and detailed versions of a component (the red dashed connections
+//! of Fig. 4a). Containment (`parent`) builds the hierarchy the Orchestrator
+//! mirrors (Fig. 4b).
+//!
+//! Everything the Traverser and Orchestrator do is algorithmic over this
+//! graph: `compute_path` (single-source shortest path from a PU to the
+//! storage/controller resources it relies on), `shared_resources`
+//! (path intersection — the mechanism that uncovers e.g. DLA+PVA sharing
+//! SRAM and LPDDR), `pus_in` (group traversal), and `device_of`.
+
+mod build;
+mod path;
+pub mod presets;
+
+pub use build::GraphBuilder;
+
+use std::collections::BTreeMap;
+
+/// Index of a node in the graph arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+/// Index of an edge in the graph arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct EdgeId(pub u32);
+
+/// Processing-unit classes found across the paper's testbed (Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PuClass {
+    CpuCore,
+    Gpu,
+    /// deep learning accelerator (Jetson DLA)
+    Dla,
+    /// programmable vision accelerator
+    Pva,
+    /// video image compositor
+    Vic,
+}
+
+impl PuClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PuClass::CpuCore => "cpu",
+            PuClass::Gpu => "gpu",
+            PuClass::Dla => "dla",
+            PuClass::Pva => "pva",
+            PuClass::Vic => "vic",
+        }
+    }
+}
+
+/// Shared-resource classes the slowdown models are keyed by (§2.2, Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ResourceKind {
+    L2Cache,
+    L3Cache,
+    /// last-level cache shared between CPU and GPU on Jetson-class SoCs
+    Llc,
+    /// vision-cluster scratchpad shared by DLA/PVA
+    Sram,
+    /// system DRAM (LPDDR on edges, DDR on servers)
+    SysDram,
+    /// memory controller / fabric
+    MemController,
+    /// a network link
+    NetLink,
+}
+
+impl ResourceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResourceKind::L2Cache => "l2",
+            ResourceKind::L3Cache => "l3",
+            ResourceKind::Llc => "llc",
+            ResourceKind::Sram => "sram",
+            ResourceKind::SysDram => "dram",
+            ResourceKind::MemController => "memctl",
+            ResourceKind::NetLink => "netlink",
+        }
+    }
+}
+
+/// Role of a group node in the hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupRole {
+    /// the whole continuum
+    Root,
+    /// a virtual grouping (edge cluster, server cluster)
+    Cluster,
+    /// a physical node: an edge device or a server
+    Device,
+    /// an intra-device complex (CPU cluster, vision cluster)
+    Complex,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    /// a processing unit tasks can be mapped to (`Predictable` in the paper)
+    Compute { class: PuClass },
+    /// cache / scratchpad / DRAM with a service capacity used by the
+    /// contention models (GB/s of demand it absorbs before saturating)
+    Storage {
+        resource: ResourceKind,
+        capacity_gbps: f64,
+    },
+    /// memory controller, network switch, ...
+    Controller { resource: ResourceKind },
+    /// a component whose internals are unknown to this side of the system
+    Abstract,
+    /// sub-graph boundary
+    Group { role: GroupRole },
+}
+
+/// Interconnect classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    OnChip,
+    MemBus,
+    PcIe,
+    /// local network (same router / WLAN-like)
+    Lan,
+    /// wide-area hop (edge <-> cloud)
+    Wan,
+    /// unknown infrastructure between abstract components
+    AbstractLink,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: NodeKind,
+    /// abstraction layer, 1 = top (most abstract); grows with detail (Fig. 4a)
+    pub layer: u8,
+    /// containment: the group this node lives in
+    pub parent: Option<NodeId>,
+    /// cross-layer link: the more abstract node this one refines
+    pub refines: Option<NodeId>,
+    /// device model tag on Device groups ("orin_agx", "server1", ...)
+    pub model: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub id: EdgeId,
+    pub a: NodeId,
+    pub b: NodeId,
+    pub kind: LinkKind,
+    pub bandwidth_gbps: f64,
+    pub latency_s: f64,
+}
+
+/// The multi-layer hardware graph.
+#[derive(Debug, Clone, Default)]
+pub struct HwGraph {
+    pub(crate) nodes: Vec<Node>,
+    pub(crate) edges: Vec<Edge>,
+    /// adjacency: node -> [(neighbor, edge)]
+    pub(crate) adj: Vec<Vec<(NodeId, EdgeId)>>,
+    /// containment children, derived from `parent`
+    pub(crate) children: Vec<Vec<NodeId>>,
+    /// name -> id (names are unique; enforced on insert)
+    pub(crate) by_name: BTreeMap<String, NodeId>,
+}
+
+impl HwGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- structure ---------------------------------------------------
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn edge(&self, id: EdgeId) -> &Edge {
+        &self.edges[id.0 as usize]
+    }
+
+    pub fn edge_mut(&mut self, id: EdgeId) -> &mut Edge {
+        &mut self.edges[id.0 as usize]
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<NodeId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn neighbors(&self, id: NodeId) -> &[(NodeId, EdgeId)] {
+        &self.adj[id.0 as usize]
+    }
+
+    pub fn children(&self, id: NodeId) -> &[NodeId] {
+        &self.children[id.0 as usize]
+    }
+
+    // ---- mutation ------------------------------------------------------
+
+    pub fn add_node(
+        &mut self,
+        name: &str,
+        kind: NodeKind,
+        layer: u8,
+        parent: Option<NodeId>,
+    ) -> NodeId {
+        assert!(
+            !self.by_name.contains_key(name),
+            "duplicate node name `{name}`"
+        );
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            kind,
+            layer,
+            parent,
+            refines: None,
+            model: None,
+        });
+        self.adj.push(Vec::new());
+        self.children.push(Vec::new());
+        self.by_name.insert(name.to_string(), id);
+        if let Some(p) = parent {
+            self.children[p.0 as usize].push(id);
+        }
+        id
+    }
+
+    pub fn add_edge(
+        &mut self,
+        a: NodeId,
+        b: NodeId,
+        kind: LinkKind,
+        bandwidth_gbps: f64,
+        latency_s: f64,
+    ) -> EdgeId {
+        let id = EdgeId(self.edges.len() as u32);
+        self.edges.push(Edge {
+            id,
+            a,
+            b,
+            kind,
+            bandwidth_gbps,
+            latency_s,
+        });
+        self.adj[a.0 as usize].push((b, id));
+        self.adj[b.0 as usize].push((a, id));
+        id
+    }
+
+    pub fn set_refines(&mut self, detailed: NodeId, abstract_node: NodeId) {
+        self.nodes[detailed.0 as usize].refines = Some(abstract_node);
+    }
+
+    pub fn set_model(&mut self, id: NodeId, model: &str) {
+        self.nodes[id.0 as usize].model = Some(model.to_string());
+    }
+
+    /// Re-parent `child` under `group` (dynamic adaptability: a new edge
+    /// device joining an edge cluster, §5.4.2).
+    pub fn attach(&mut self, child: NodeId, group: NodeId) {
+        if let Some(old) = self.nodes[child.0 as usize].parent {
+            self.children[old.0 as usize].retain(|&c| c != child);
+        }
+        self.nodes[child.0 as usize].parent = Some(group);
+        self.children[group.0 as usize].push(child);
+    }
+
+    // ---- queries -------------------------------------------------------
+
+    pub fn is_pu(&self, id: NodeId) -> bool {
+        matches!(self.node(id).kind, NodeKind::Compute { .. })
+    }
+
+    pub fn pu_class(&self, id: NodeId) -> Option<PuClass> {
+        match self.node(id).kind {
+            NodeKind::Compute { class } => Some(class),
+            _ => None,
+        }
+    }
+
+    /// All PUs contained (transitively) under a group.
+    pub fn pus_in(&self, group: NodeId) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        let mut stack = vec![group];
+        while let Some(n) = stack.pop() {
+            if self.is_pu(n) {
+                out.push(n);
+            }
+            stack.extend(self.children(n).iter().copied());
+        }
+        out.sort();
+        out
+    }
+
+    /// The Device group that (transitively) contains `id`.
+    pub fn device_of(&self, id: NodeId) -> Option<NodeId> {
+        let mut cur = Some(id);
+        while let Some(n) = cur {
+            if matches!(
+                self.node(n).kind,
+                NodeKind::Group {
+                    role: GroupRole::Device
+                }
+            ) {
+                return Some(n);
+            }
+            cur = self.node(n).parent;
+        }
+        None
+    }
+
+    /// The model tag of the device containing `id`.
+    pub fn device_model_of(&self, id: NodeId) -> Option<&str> {
+        self.device_of(id)
+            .and_then(|d| self.node(d).model.as_deref())
+    }
+
+    /// Groups with a given role.
+    pub fn groups(&self, role: GroupRole) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Group { role: r } if r == role))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Resource kind of a storage/controller node.
+    pub fn resource_kind(&self, id: NodeId) -> Option<ResourceKind> {
+        match self.node(id).kind {
+            NodeKind::Storage { resource, .. } => Some(resource),
+            NodeKind::Controller { resource } => Some(resource),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! Path algorithms over the HW-Graph: Dijkstra SSSP, `compute_path`
+//! (getComputePath() of §3.3) and shared-resource discovery.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::{HwGraph, NodeId, NodeKind, ResourceKind};
+
+#[derive(PartialEq)]
+struct HeapItem {
+    dist: f64,
+    node: NodeId,
+}
+
+impl Eq for HeapItem {}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on distance
+        other
+            .dist
+            .partial_cmp(&self.dist)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.node.0.cmp(&self.node.0))
+    }
+}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl HwGraph {
+    /// Single-source shortest path (by link latency, ties by hops) from
+    /// `src` to every reachable node. Returns `(dist, prev)` arrays.
+    pub fn sssp(&self, src: NodeId) -> (Vec<f64>, Vec<Option<NodeId>>) {
+        let n = self.node_count();
+        let mut dist = vec![f64::INFINITY; n];
+        let mut prev: Vec<Option<NodeId>> = vec![None; n];
+        let mut heap = BinaryHeap::new();
+        dist[src.0 as usize] = 0.0;
+        heap.push(HeapItem {
+            dist: 0.0,
+            node: src,
+        });
+        while let Some(HeapItem { dist: d, node }) = heap.pop() {
+            if d > dist[node.0 as usize] {
+                continue;
+            }
+            for &(next, eid) in self.neighbors(node) {
+                let e = self.edge(eid);
+                // epsilon keeps zero-latency on-chip hops strictly ordered
+                let nd = d + e.latency_s + 1e-12;
+                if nd < dist[next.0 as usize] {
+                    dist[next.0 as usize] = nd;
+                    prev[next.0 as usize] = Some(node);
+                    heap.push(HeapItem {
+                        dist: nd,
+                        node: next,
+                    });
+                }
+            }
+        }
+        (dist, prev)
+    }
+
+    /// Shortest path between two nodes as a node list (inclusive), or None
+    /// if unreachable.
+    pub fn path_between(&self, src: NodeId, dst: NodeId) -> Option<Vec<NodeId>> {
+        let (dist, prev) = self.sssp(src);
+        if dist[dst.0 as usize].is_infinite() {
+            return None;
+        }
+        let mut path = vec![dst];
+        let mut cur = dst;
+        while let Some(p) = prev[cur.0 as usize] {
+            path.push(p);
+            cur = p;
+        }
+        path.reverse();
+        debug_assert_eq!(path[0], src);
+        Some(path)
+    }
+
+    /// getComputePath(): the storage/controller resources a PU relies on as
+    /// it operates — the shortest path(s) from the PU to the system DRAM it
+    /// is backed by, i.e. the route its memory traffic takes through caches,
+    /// scratchpads and controllers. This is what profiling caches in the
+    /// TASK struct per §3.3; here it's cheap enough to recompute.
+    pub fn compute_path(&self, pu: NodeId) -> Vec<NodeId> {
+        let device = match self.device_of(pu) {
+            Some(d) => d,
+            None => return vec![pu],
+        };
+        let (dist, prev) = self.sssp(pu);
+        let mut out = vec![pu];
+        for n in self.nodes() {
+            let in_device = self.device_of(n.id) == Some(device);
+            let is_dram = matches!(
+                n.kind,
+                NodeKind::Storage {
+                    resource: ResourceKind::SysDram,
+                    ..
+                }
+            );
+            if in_device && is_dram && dist[n.id.0 as usize].is_finite() {
+                // walk the memory-access path back, collecting the
+                // storage/controller hops it crosses
+                let mut cur = n.id;
+                while cur != pu {
+                    let is_mem = matches!(
+                        self.node(cur).kind,
+                        NodeKind::Storage { .. } | NodeKind::Controller { .. }
+                    );
+                    if is_mem && !out.contains(&cur) {
+                        out.push(cur);
+                    }
+                    match prev[cur.0 as usize] {
+                        Some(p) => cur = p,
+                        None => break,
+                    }
+                }
+            }
+        }
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// The shared storage/controller resources of two PUs: the intersection
+    /// of their compute paths, restricted to memory-system nodes. In the
+    /// Fig. 4a example this uncovers {SRAM, LPDDR4x} for (DLA, PVA).
+    pub fn shared_resources(&self, pu_a: NodeId, pu_b: NodeId) -> Vec<NodeId> {
+        if pu_a == pu_b {
+            return vec![pu_a];
+        }
+        let pa = self.compute_path(pu_a);
+        let pb = self.compute_path(pu_b);
+        pa.into_iter()
+            .filter(|n| pb.contains(n))
+            .filter(|&n| self.resource_kind(n).is_some())
+            .collect()
+    }
+
+    /// Shared resource *kinds* of two PUs (what the slowdown registry keys on).
+    pub fn shared_resource_kinds(&self, pu_a: NodeId, pu_b: NodeId) -> Vec<ResourceKind> {
+        let mut kinds: Vec<ResourceKind> = self
+            .shared_resources(pu_a, pu_b)
+            .into_iter()
+            .filter_map(|n| self.resource_kind(n))
+            .collect();
+        kinds.sort();
+        kinds.dedup();
+        kinds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{GroupRole, LinkKind, NodeKind, PuClass};
+    use super::*;
+
+    /// tiny SoC: two cores behind one L2, a GPU, all meeting at DRAM
+    fn tiny() -> (HwGraph, NodeId, NodeId, NodeId) {
+        let mut g = HwGraph::new();
+        let dev = g.add_node(
+            "dev",
+            NodeKind::Group {
+                role: GroupRole::Device,
+            },
+            1,
+            None,
+        );
+        let c0 = g.add_node(
+            "c0",
+            NodeKind::Compute {
+                class: PuClass::CpuCore,
+            },
+            2,
+            Some(dev),
+        );
+        let c1 = g.add_node(
+            "c1",
+            NodeKind::Compute {
+                class: PuClass::CpuCore,
+            },
+            2,
+            Some(dev),
+        );
+        let gpu = g.add_node(
+            "gpu",
+            NodeKind::Compute {
+                class: PuClass::Gpu,
+            },
+            2,
+            Some(dev),
+        );
+        let l2 = g.add_node(
+            "l2",
+            NodeKind::Storage {
+                resource: ResourceKind::L2Cache,
+                capacity_gbps: 100.0,
+            },
+            2,
+            Some(dev),
+        );
+        let dram = g.add_node(
+            "dram",
+            NodeKind::Storage {
+                resource: ResourceKind::SysDram,
+                capacity_gbps: 60.0,
+            },
+            2,
+            Some(dev),
+        );
+        g.add_edge(c0, l2, LinkKind::OnChip, 200.0, 1e-9);
+        g.add_edge(c1, l2, LinkKind::OnChip, 200.0, 1e-9);
+        g.add_edge(l2, dram, LinkKind::MemBus, 60.0, 1e-8);
+        g.add_edge(gpu, dram, LinkKind::MemBus, 60.0, 1e-8);
+        (g, c0, c1, gpu)
+    }
+
+    #[test]
+    fn compute_path_collects_memory_chain() {
+        let (g, c0, _, gpu) = tiny();
+        let p = g.compute_path(c0);
+        let names: Vec<&str> = p.iter().map(|&n| g.node(n).name.as_str()).collect();
+        assert!(names.contains(&"l2") && names.contains(&"dram"));
+        let pg = g.compute_path(gpu);
+        let names: Vec<&str> = pg.iter().map(|&n| g.node(n).name.as_str()).collect();
+        assert!(names.contains(&"dram") && !names.contains(&"l2"));
+    }
+
+    #[test]
+    fn shared_resources_cores_share_l2_and_dram() {
+        let (g, c0, c1, gpu) = tiny();
+        let kinds = g.shared_resource_kinds(c0, c1);
+        assert!(kinds.contains(&ResourceKind::L2Cache));
+        assert!(kinds.contains(&ResourceKind::SysDram));
+        let kinds = g.shared_resource_kinds(c0, gpu);
+        assert_eq!(kinds, vec![ResourceKind::SysDram]);
+    }
+
+    #[test]
+    fn path_between_works_and_respects_latency() {
+        let (g, c0, c1, _) = tiny();
+        let p = g.path_between(c0, c1).unwrap();
+        assert_eq!(p.len(), 3); // c0 -> l2 -> c1
+        assert!(g.path_between(c0, c0).unwrap().len() == 1);
+    }
+
+    #[test]
+    fn same_pu_shares_itself() {
+        let (g, c0, _, _) = tiny();
+        assert_eq!(g.shared_resources(c0, c0), vec![c0]);
+    }
+
+    #[test]
+    fn unreachable_returns_none() {
+        let mut g = HwGraph::new();
+        let a = g.add_node(
+            "a",
+            NodeKind::Compute {
+                class: PuClass::CpuCore,
+            },
+            1,
+            None,
+        );
+        let b = g.add_node(
+            "b",
+            NodeKind::Compute {
+                class: PuClass::CpuCore,
+            },
+            1,
+            None,
+        );
+        assert!(g.path_between(a, b).is_none());
+    }
+}

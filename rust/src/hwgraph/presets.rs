@@ -1,0 +1,477 @@
+//! Device presets mirroring the paper's testbed (Table 2) and the DECS
+//! assembly used by every experiment.
+//!
+//! Each Jetson-class SoC follows Fig. 4a: CPU clusters with private L2s
+//! behind a shared L3, an LLC shared between CPU complex and GPU, a vision
+//! complex (DLA + PVA) around a private SRAM, a VIC with private storage,
+//! and everything meeting at the memory controller + LPDDR. These
+//! topologies make `shared_resources` reproduce exactly the five contention
+//! classes measured in Fig. 2.
+
+use super::{GraphBuilder, HwGraph, NodeId, PuClass, ResourceKind};
+
+/// Edge-device model tags.
+pub const ORIN_AGX: &str = "orin_agx";
+pub const XAVIER_AGX: &str = "xavier_agx";
+pub const ORIN_NANO: &str = "orin_nano";
+pub const XAVIER_NX: &str = "xavier_nx";
+/// Server model tags (Table 2).
+pub const SERVER1: &str = "server1"; // Titan RTX + EPYC 7402
+pub const SERVER2: &str = "server2"; // RTX 3080 Ti + i9-11900K
+pub const SERVER3: &str = "server3"; // Ryzen 5800H + integrated graphics
+
+pub const EDGE_MODELS: [&str; 4] = [ORIN_AGX, XAVIER_AGX, ORIN_NANO, XAVIER_NX];
+pub const SERVER_MODELS: [&str; 3] = [SERVER1, SERVER2, SERVER3];
+
+struct SocSpec {
+    clusters: usize,
+    cores_per_cluster: usize,
+    has_dla: bool,
+    has_pva: bool,
+    has_vic: bool,
+    dram_gbps: f64,
+}
+
+fn soc_spec(model: &str) -> SocSpec {
+    match model {
+        ORIN_AGX => SocSpec {
+            clusters: 2,
+            cores_per_cluster: 4,
+            has_dla: true,
+            has_pva: true,
+            has_vic: true,
+            dram_gbps: 100.0,
+        },
+        XAVIER_AGX => SocSpec {
+            clusters: 2,
+            cores_per_cluster: 4,
+            has_dla: true,
+            has_pva: true,
+            has_vic: true,
+            dram_gbps: 70.0,
+        },
+        ORIN_NANO => SocSpec {
+            clusters: 2,
+            cores_per_cluster: 3,
+            has_dla: false,
+            has_pva: false,
+            has_vic: true,
+            dram_gbps: 34.0,
+        },
+        XAVIER_NX => SocSpec {
+            clusters: 2,
+            cores_per_cluster: 3,
+            has_dla: true,
+            has_pva: false,
+            has_vic: true,
+            dram_gbps: 30.0,
+        },
+        other => panic!("unknown edge model `{other}`"),
+    }
+}
+
+/// Build a Jetson-class edge SoC under `parent`; returns the device group id.
+pub fn add_edge_device(
+    b: &mut GraphBuilder,
+    name: &str,
+    model: &str,
+    parent: Option<NodeId>,
+) -> NodeId {
+    let spec = soc_spec(model);
+    let dev = b.device(name, model, parent);
+    let p = |s: &str| format!("{name}.{s}");
+
+    // memory backbone
+    let emc = b.controller(&p("emc"), ResourceKind::MemController, dev);
+    let dram = b.storage(&p("dram"), ResourceKind::SysDram, spec.dram_gbps, dev);
+    b.membus(emc, dram, spec.dram_gbps);
+    // NIC attach: the device group node is the network endpoint; traffic
+    // DMAs through the memory controller
+    b.onchip(dev, emc);
+
+    // CPU complex: clusters with private L2s behind a shared L3, then LLC
+    let cpu_complex = b.complex(&p("cpu_complex"), dev);
+    let l3 = b.storage(&p("l3"), ResourceKind::L3Cache, 250.0, cpu_complex);
+    let llc = b.storage(&p("llc"), ResourceKind::Llc, 350.0, dev);
+    b.onchip(l3, llc);
+    b.membus(llc, emc, spec.dram_gbps);
+    for c in 0..spec.clusters {
+        let cluster = b.complex(&p(&format!("cl{c}")), cpu_complex);
+        let l2 = b.storage(
+            &p(&format!("l2_{c}")),
+            ResourceKind::L2Cache,
+            180.0,
+            cluster,
+        );
+        b.onchip(l2, l3);
+        for k in 0..spec.cores_per_cluster {
+            let core = b.pu(
+                &p(&format!("cpu{}", c * spec.cores_per_cluster + k)),
+                PuClass::CpuCore,
+                cluster,
+            );
+            b.onchip(core, l2);
+        }
+    }
+
+    // GPU shares the LLC with the CPU complex (the 4 MB LLC of §5.3.1)
+    let gpu = b.pu(&p("gpu"), PuClass::Gpu, dev);
+    b.onchip(gpu, llc);
+
+    // vision complex: DLA + PVA around a private SRAM (Fig. 4a)
+    if spec.has_dla || spec.has_pva {
+        let vision = b.complex(&p("vision"), dev);
+        let sram = b.storage(&p("sram"), ResourceKind::Sram, 120.0, vision);
+        b.membus(sram, emc, spec.dram_gbps);
+        if spec.has_dla {
+            let dla = b.pu(&p("dla"), PuClass::Dla, vision);
+            b.onchip(dla, sram);
+        }
+        if spec.has_pva {
+            let pva = b.pu(&p("pva"), PuClass::Pva, vision);
+            b.onchip(pva, sram);
+        }
+    }
+
+    // VIC has private data storage optimized for reprojection-style tasks
+    // (§5.3.1) — it only contends with others at the memory controller.
+    if spec.has_vic {
+        let vic = b.pu(&p("vic"), PuClass::Vic, dev);
+        let vmem = b.storage(&p("vic_mem"), ResourceKind::Sram, 60.0, dev);
+        b.onchip(vic, vmem);
+        b.membus(vmem, emc, spec.dram_gbps);
+    }
+
+    dev
+}
+
+/// Build a server under `parent`; returns the device group id.
+pub fn add_server(
+    b: &mut GraphBuilder,
+    name: &str,
+    model: &str,
+    parent: Option<NodeId>,
+) -> NodeId {
+    let (clusters, cores_per_cluster, dram_gbps, has_gpu) = match model {
+        SERVER1 => (2, 6, 180.0, true),
+        SERVER2 => (2, 4, 160.0, true),
+        SERVER3 => (2, 4, 90.0, true), // integrated graphics
+        other => panic!("unknown server model `{other}`"),
+    };
+    let dev = b.device(name, model, parent);
+    let p = |s: &str| format!("{name}.{s}");
+    let memctl = b.controller(&p("memctl"), ResourceKind::MemController, dev);
+    let dram = b.storage(&p("dram"), ResourceKind::SysDram, dram_gbps, dev);
+    b.membus(memctl, dram, dram_gbps);
+    // NIC attach (see add_edge_device)
+    b.onchip(dev, memctl);
+    let l3 = b.storage(&p("l3"), ResourceKind::L3Cache, 500.0, dev);
+    b.membus(l3, memctl, dram_gbps);
+    for c in 0..clusters {
+        let cluster = b.complex(&p(&format!("ccx{c}")), dev);
+        let l2 = b.storage(
+            &p(&format!("l2_{c}")),
+            ResourceKind::L2Cache,
+            400.0,
+            cluster,
+        );
+        b.onchip(l2, l3);
+        for k in 0..cores_per_cluster {
+            let core = b.pu(
+                &p(&format!("cpu{}", c * cores_per_cluster + k)),
+                PuClass::CpuCore,
+                cluster,
+            );
+            b.onchip(core, l2);
+        }
+    }
+    if has_gpu {
+        let gpu = b.pu(&p("gpu"), PuClass::Gpu, dev);
+        // discrete GPU: PCIe into the memory controller (no shared LLC)
+        b.g.add_edge(gpu, memctl, super::LinkKind::PcIe, 32.0, 1e-6);
+    }
+    dev
+}
+
+/// Specification of a DECS to assemble.
+#[derive(Debug, Clone)]
+pub struct DecsSpec {
+    /// (model, count) for edge devices
+    pub edges: Vec<(String, usize)>,
+    /// (model, count) for servers
+    pub servers: Vec<(String, usize)>,
+    /// per-edge uplink bandwidth (Gb/s); Fig. 12 sweeps this
+    pub edge_uplink_gbps: f64,
+    /// WAN backbone bandwidth (Gb/s) — the 10 Gb/s campus network
+    pub wan_gbps: f64,
+}
+
+impl DecsSpec {
+    /// The §5.3.1 testbed: five edges (Orin AGX, Xavier AGX, 2x Xavier NX,
+    /// Orin Nano) and three servers.
+    pub fn paper_vr() -> Self {
+        DecsSpec {
+            edges: vec![
+                (ORIN_AGX.into(), 1),
+                (XAVIER_AGX.into(), 1),
+                (XAVIER_NX.into(), 2),
+                (ORIN_NANO.into(), 1),
+            ],
+            servers: vec![
+                (SERVER1.into(), 1),
+                (SERVER2.into(), 1),
+                (SERVER3.into(), 1),
+            ],
+            edge_uplink_gbps: 10.0,
+            wan_gbps: 10.0,
+        }
+    }
+
+    /// The §5.2 validation pair: Orin Nano + server-1.
+    pub fn validation_pair() -> Self {
+        DecsSpec {
+            edges: vec![(ORIN_NANO.into(), 1)],
+            servers: vec![(SERVER1.into(), 1)],
+            edge_uplink_gbps: 10.0,
+            wan_gbps: 10.0,
+        }
+    }
+
+    /// Uniform mix of the four edge models and three server models
+    /// (the §5.5 scaling experiments use 20-of-each / 8-of-each blocks).
+    pub fn mixed(n_edges: usize, n_servers: usize) -> Self {
+        let mut edges = Vec::new();
+        for (i, m) in EDGE_MODELS.iter().enumerate() {
+            let c = n_edges / 4 + usize::from(i < n_edges % 4);
+            if c > 0 {
+                edges.push((m.to_string(), c));
+            }
+        }
+        let mut servers = Vec::new();
+        for (i, m) in SERVER_MODELS.iter().enumerate() {
+            let c = n_servers / 3 + usize::from(i < n_servers % 3);
+            if c > 0 {
+                servers.push((m.to_string(), c));
+            }
+        }
+        DecsSpec {
+            edges,
+            servers,
+            edge_uplink_gbps: 10.0,
+            wan_gbps: 10.0,
+        }
+    }
+}
+
+/// An assembled DECS: graph + the handles every other module needs.
+#[derive(Debug, Clone)]
+pub struct Decs {
+    pub graph: HwGraph,
+    pub root: NodeId,
+    pub edge_cluster: NodeId,
+    pub server_cluster: NodeId,
+    pub edge_devices: Vec<NodeId>,
+    pub servers: Vec<NodeId>,
+    /// local router all edges hang off (abstract component)
+    pub router: NodeId,
+    /// WAN gateway between the router and the server cluster (abstract)
+    pub wan_gw: NodeId,
+}
+
+impl Decs {
+    pub fn build(spec: &DecsSpec) -> Decs {
+        let mut b = GraphBuilder::new();
+        let root = b.root("root");
+        let edge_cluster = b.cluster("edge_cluster", root);
+        let server_cluster = b.cluster("server_cluster", root);
+
+        // unknown network infrastructure between the tiers (abstract nodes).
+        // The campus backbone is a non-blocking aggregation fabric: every
+        // *link* is `wan_gbps` (the paper's "10 Gbps WAN"), so the
+        // router<->gateway trunk scales with the number of edge ports —
+        // otherwise a single shared 10 Gb/s core would artificially cap
+        // the §5.5 scaling experiments.
+        let n_edges: usize = spec.edges.iter().map(|(_, c)| c).sum();
+        let router = b.abstract_node("router", Some(edge_cluster));
+        let wan_gw = b.abstract_node("wan_gw", Some(root));
+        b.wan(router, wan_gw, spec.wan_gbps * (n_edges.max(1) as f64), 2.5e-4);
+
+        let mut edge_devices = Vec::new();
+        let mut idx = 0usize;
+        for (model, count) in &spec.edges {
+            for _ in 0..*count {
+                let name = format!("edge{idx}");
+                let dev = add_edge_device(&mut b, &name, model, Some(edge_cluster));
+                // WLAN-like hop to the shared router
+                b.lan(dev, router, spec.edge_uplink_gbps, 1.0e-4);
+                edge_devices.push(dev);
+                idx += 1;
+            }
+        }
+        let mut servers = Vec::new();
+        let mut sidx = 0usize;
+        for (model, count) in &spec.servers {
+            for _ in 0..*count {
+                let name = format!("server{sidx}");
+                let dev = add_server(&mut b, &name, model, Some(server_cluster));
+                b.wan(dev, wan_gw, spec.wan_gbps, 1.0e-4);
+                servers.push(dev);
+                sidx += 1;
+            }
+        }
+        Decs {
+            graph: b.finish(),
+            root,
+            edge_cluster,
+            server_cluster,
+            edge_devices,
+            servers,
+            router,
+            wan_gw,
+        }
+    }
+
+    /// Dynamically attach one more edge device (§5.4.2); returns its id.
+    pub fn join_edge(&mut self, model: &str, uplink_gbps: f64) -> NodeId {
+        let idx = self.edge_devices.len();
+        let name = format!("edge{idx}");
+        let mut b = GraphBuilder {
+            g: std::mem::take(&mut self.graph),
+        };
+        let dev = add_edge_device(&mut b, &name, model, Some(self.edge_cluster));
+        b.lan(dev, self.router, uplink_gbps, 1.0e-4);
+        self.graph = b.finish();
+        self.edge_devices.push(dev);
+        dev
+    }
+
+    /// The uplink edge (device <-> router / wan_gw) of a device.
+    pub fn uplink_of(&self, dev: NodeId) -> Option<super::EdgeId> {
+        self.graph
+            .neighbors(dev)
+            .iter()
+            .find(|(n, _)| *n == self.router || *n == self.wan_gw)
+            .map(|(_, e)| *e)
+    }
+
+    pub fn device_model(&self, dev: NodeId) -> &str {
+        self.graph.node(dev).model.as_deref().unwrap_or("?")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn orin() -> (HwGraph, NodeId) {
+        let mut b = GraphBuilder::new();
+        let dev = add_edge_device(&mut b, "e0", ORIN_AGX, None);
+        (b.finish(), dev)
+    }
+
+    fn pu(g: &HwGraph, name: &str) -> NodeId {
+        g.by_name(name).unwrap_or_else(|| panic!("no node {name}"))
+    }
+
+    #[test]
+    fn orin_agx_has_expected_pus() {
+        let (g, dev) = orin();
+        let pus = g.pus_in(dev);
+        let classes: Vec<PuClass> = pus.iter().filter_map(|&p| g.pu_class(p)).collect();
+        assert_eq!(
+            classes.iter().filter(|c| **c == PuClass::CpuCore).count(),
+            8
+        );
+        assert!(classes.contains(&PuClass::Gpu));
+        assert!(classes.contains(&PuClass::Dla));
+        assert!(classes.contains(&PuClass::Pva));
+        assert!(classes.contains(&PuClass::Vic));
+    }
+
+    /// The five Fig. 2 contention classes fall out of path intersections.
+    #[test]
+    fn fig2_contention_classes_from_topology() {
+        let (g, _) = orin();
+        // same-cluster cores: nearest shared level is the L2
+        let k = g.shared_resource_kinds(pu(&g, "e0.cpu0"), pu(&g, "e0.cpu1"));
+        assert!(k.contains(&ResourceKind::L2Cache));
+        // cross-cluster cores: L3 but NOT L2
+        let k = g.shared_resource_kinds(pu(&g, "e0.cpu0"), pu(&g, "e0.cpu4"));
+        assert!(!k.contains(&ResourceKind::L2Cache) && k.contains(&ResourceKind::L3Cache));
+        // CPU + GPU: LLC
+        let k = g.shared_resource_kinds(pu(&g, "e0.cpu0"), pu(&g, "e0.gpu"));
+        assert!(k.contains(&ResourceKind::Llc) && !k.contains(&ResourceKind::L3Cache));
+        // GPU + DLA: only the DRAM side
+        let k = g.shared_resource_kinds(pu(&g, "e0.gpu"), pu(&g, "e0.dla"));
+        assert!(k.contains(&ResourceKind::SysDram) && !k.contains(&ResourceKind::Llc));
+        assert!(!k.contains(&ResourceKind::Sram));
+        // DLA + PVA: the vision-cluster SRAM (the Fig. 4a example)
+        let k = g.shared_resource_kinds(pu(&g, "e0.dla"), pu(&g, "e0.pva"));
+        assert!(k.contains(&ResourceKind::Sram));
+    }
+
+    #[test]
+    fn orin_nano_lacks_vision_complex() {
+        let mut b = GraphBuilder::new();
+        let dev = add_edge_device(&mut b, "n0", ORIN_NANO, None);
+        let g = b.finish();
+        let pus = g.pus_in(dev);
+        assert!(pus.iter().all(|&p| g.pu_class(p) != Some(PuClass::Dla)));
+        assert!(pus.iter().any(|&p| g.pu_class(p) == Some(PuClass::Vic)));
+    }
+
+    #[test]
+    fn decs_assembly_counts_and_membership() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        assert_eq!(decs.edge_devices.len(), 5);
+        assert_eq!(decs.servers.len(), 3);
+        for &d in &decs.edge_devices {
+            assert_eq!(decs.graph.device_of(d), Some(d));
+            assert!(decs.uplink_of(d).is_some());
+            assert!(!decs.graph.pus_in(d).is_empty());
+        }
+        // device groups live under the right clusters
+        for &d in &decs.edge_devices {
+            assert_eq!(decs.graph.node(d).parent, Some(decs.edge_cluster));
+        }
+        for &s in &decs.servers {
+            assert_eq!(decs.graph.node(s).parent, Some(decs.server_cluster));
+        }
+    }
+
+    #[test]
+    fn cross_device_reachability_via_network() {
+        let decs = Decs::build(&DecsSpec::validation_pair());
+        let g = &decs.graph;
+        let e_gpu = g.by_name("edge0.gpu").unwrap();
+        let s_gpu = g.by_name("server0.gpu").unwrap();
+        let path = g.path_between(e_gpu, s_gpu).expect("reachable");
+        let names: Vec<&str> = path.iter().map(|&n| g.node(n).name.as_str()).collect();
+        assert!(names.contains(&"router") && names.contains(&"wan_gw"));
+        // but compute_path stays inside the device
+        let cp = g.compute_path(e_gpu);
+        assert!(cp
+            .iter()
+            .all(|&n| g.device_of(n) == Some(decs.edge_devices[0])));
+    }
+
+    #[test]
+    fn join_edge_extends_system() {
+        let mut decs = Decs::build(&DecsSpec::validation_pair());
+        let before = decs.graph.node_count();
+        let dev = decs.join_edge(XAVIER_NX, 10.0);
+        assert_eq!(decs.edge_devices.len(), 2);
+        assert!(decs.graph.node_count() > before);
+        assert_eq!(decs.device_model(dev), XAVIER_NX);
+        assert!(decs.uplink_of(dev).is_some());
+    }
+
+    #[test]
+    fn mixed_spec_distributes_models() {
+        let spec = DecsSpec::mixed(10, 5);
+        let e: usize = spec.edges.iter().map(|(_, c)| c).sum();
+        let s: usize = spec.servers.iter().map(|(_, c)| c).sum();
+        assert_eq!(e, 10);
+        assert_eq!(s, 5);
+    }
+}

@@ -1,0 +1,38 @@
+//! # H-EYE — holistic resource modeling and management for diversely scaled
+//! edge-cloud systems
+//!
+//! Reproduction of Dagli et al. (CS.DC 2024). The library is organized as
+//! the paper's three mechanisms plus the substrates they stand on:
+//!
+//! * [`hwgraph`] — the multi-layer graph-based hardware representation
+//!   (HW-GRAPH, §3.3) with the Table-2 device presets.
+//! * [`perfmodel`] — the modular `Predictable` performance-model interface
+//!   and the Fig.-9-calibrated profile tables.
+//! * [`slowdown`] — decoupled shared-resource slowdown models (§2.2/Fig. 2):
+//!   memory-hierarchy contention, PU multi-tenancy, network sharing.
+//! * [`task`] — tasks, constraints, CFGs, and the two field applications
+//!   (cloud-rendered VR, mining smart drill bits; §4).
+//! * [`traverser`] — contention-interval performance prediction (§3.4/Fig. 6).
+//! * [`orchestrator`] — the decentralized hierarchical mapper (§3.5/Alg. 1).
+//! * [`netsim`] — fair-share network flows with dynamic bandwidth.
+//! * [`sim`] — the discrete-event DECS simulator driving every experiment.
+//! * [`baselines`] — ACE, LaTS (Hetero-Edge) and Multi-tier CloudVR.
+//! * [`config`] — JSON experiment configurations (`heye run --config`).
+//! * [`runtime`] — PJRT executor for the AOT artifacts (`artifacts/*.hlo.txt`)
+//!   compiled from the L2 JAX models; python is never on this path.
+//! * [`telemetry`] — metric collection and figure-style reporting.
+//! * [`util`] — from-scratch substrates (JSON, PRNG, CLI, stats, bench).
+
+pub mod baselines;
+pub mod config;
+pub mod hwgraph;
+pub mod netsim;
+pub mod orchestrator;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sim;
+pub mod slowdown;
+pub mod task;
+pub mod telemetry;
+pub mod traverser;
+pub mod util;

@@ -1,0 +1,189 @@
+//! `heye` — the H-EYE leader binary: CLI over the coordinator, the DECS
+//! simulator, and the PJRT artifact runtime.
+//!
+//! ```text
+//! heye info                          # platform, artifacts, device presets
+//! heye artifacts                     # compile + execute every AOT artifact
+//! heye run  --app vr --sched heye    # one simulation run
+//! heye compare --app mining          # H-EYE vs every baseline
+//! ```
+
+use anyhow::Result;
+
+use heye::baselines;
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::sim::{SimConfig, Simulation, Workload};
+use heye::telemetry;
+use heye::util::cli::Args;
+
+const USAGE: &str = "\
+heye — holistic resource modeling and management for edge-cloud systems
+
+USAGE:
+  heye info
+  heye artifacts [--reps N]
+  heye run     [--app vr|mining] [--sched NAME] [--edges N] [--servers M]
+               [--sensors K] [--horizon S] [--seed N] [--noise F] [--json]
+               [--config FILE] [--placements]
+  heye compare [--app vr|mining] [--edges N] [--servers M] [--sensors K]
+               [--horizon S] [--seed N]
+
+SCHEDULERS: heye heye-direct heye-sticky heye-grouped ace lats cloudvr";
+
+fn decs_from(args: &Args) -> Decs {
+    let edges = args.get_usize("edges", 0);
+    let servers = args.get_usize("servers", 0);
+    if edges == 0 && servers == 0 {
+        Decs::build(&DecsSpec::paper_vr())
+    } else {
+        Decs::build(&DecsSpec::mixed(edges.max(1), servers.max(1)))
+    }
+}
+
+fn sim_config(args: &Args) -> SimConfig {
+    SimConfig::default()
+        .horizon(args.get_f64("horizon", 1.0))
+        .seed(args.get_u64("seed", 42))
+        .noise(args.get_f64("noise", 0.02))
+}
+
+fn workload_from(args: &Args, decs: &Decs) -> Workload {
+    match args.get_or("app", "vr").as_str() {
+        "mining" => Workload::mining(decs, args.get_usize("sensors", 20), 10.0),
+        _ => Workload::vr(decs),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("H-EYE reproduction — Dagli et al., CS.DC 2024");
+    match heye::runtime::Runtime::open("artifacts") {
+        Ok(rt) => {
+            println!("PJRT platform : {}", rt.platform());
+            println!("artifacts     : {}", rt.artifact_names().join(", "));
+        }
+        Err(e) => println!("artifacts     : unavailable ({e}) — run `make artifacts`"),
+    }
+    let decs = Decs::build(&DecsSpec::paper_vr());
+    println!(
+        "paper testbed : {} edges, {} servers, {} HW-Graph nodes, {} links",
+        decs.edge_devices.len(),
+        decs.servers.len(),
+        decs.graph.node_count(),
+        decs.graph.edge_count()
+    );
+    for &d in decs.edge_devices.iter().chain(decs.servers.iter()) {
+        println!(
+            "  {:<10} model={:<12} PUs={}",
+            decs.graph.node(d).name,
+            decs.device_model(d),
+            decs.graph.pus_in(d).len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let reps = args.get_usize("reps", 5);
+    let mut rt = heye::runtime::Runtime::open("artifacts")?;
+    println!("platform: {}", rt.platform());
+    println!(
+        "{:<18} {:>10} {:>12} {:>14}",
+        "artifact", "flops", "host (ms)", "outputs"
+    );
+    let names = rt.artifact_names();
+    for name in names {
+        let mut best = f64::INFINITY;
+        let mut out_len = 0usize;
+        for _ in 0..reps.max(1) {
+            let (out, dt) = rt.run(&name)?;
+            best = best.min(dt);
+            out_len = out.len();
+        }
+        let flops = rt.manifest.artifacts[&name].flops;
+        println!(
+            "{:<18} {:>10} {:>12.3} {:>14}",
+            name,
+            flops,
+            best * 1e3,
+            out_len
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    // --config FILE overrides all other flags
+    let (name, mut sim, wl, net, joins, cfg) = if let Some(path) = args.get("config") {
+        let c = heye::config::ExpConfig::load(path)?;
+        let (decs, wl, net, joins) = c.build()?;
+        (c.sched.clone(), Simulation::new(decs), wl, net, joins, c.sim)
+    } else {
+        let name = args.get_or("sched", "heye");
+        let sim = Simulation::new(decs_from(args));
+        let wl = workload_from(args, &sim.decs);
+        let mut cfg = sim_config(args);
+        if name == "heye-grouped" {
+            cfg = cfg.grouped(true);
+        }
+        (name, sim, wl, vec![], vec![], cfg)
+    };
+    let mut sched = baselines::by_name(&name, &sim.decs);
+    let m = sim.run(sched.as_mut(), wl, net, joins, &cfg);
+    telemetry::summary_line(&name, &m);
+    let rows = telemetry::per_device(&sim.decs, &m);
+    telemetry::print_breakdown(&format!("per-device breakdown ({name})"), &rows);
+    if args.has("placements") {
+        println!("\nplacements (kind / pu class / tier):");
+        for ((kind, class, on_server), n) in &m.placements {
+            println!(
+                "  {:<14} {:<8} {:<7} {:>6}",
+                kind,
+                class,
+                if *on_server { "server" } else { "edge" },
+                n
+            );
+        }
+    }
+    if args.has("json") {
+        println!("{}", telemetry::to_json(&name, &m));
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let scheds = ["heye", "ace", "lats", "cloudvr"];
+    println!(
+        "comparing schedulers on app={} (horizon {} s)",
+        args.get_or("app", "vr"),
+        args.get_f64("horizon", 1.0)
+    );
+    for name in scheds {
+        let mut sim = Simulation::new(decs_from(args));
+        let mut sched = baselines::by_name(name, &sim.decs);
+        let wl = workload_from(args, &sim.decs);
+        let cfg = sim_config(args);
+        let m = sim.run(sched.as_mut(), wl, vec![], vec![], &cfg);
+        telemetry::summary_line(name, &m);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "artifacts" => cmd_artifacts(&args),
+        "run" => cmd_run(&args),
+        "compare" => cmd_compare(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Network substrate: transfer-time modeling over HW-Graph links with
+//! per-link fair sharing and dynamic bandwidth (the Fig. 12 experiments).
+//!
+//! A transfer between two devices follows the shortest HW-Graph path; its
+//! time is the sum of link latencies plus the volume over the bottleneck
+//! *effective* bandwidth, where each link's bandwidth is divided by the
+//! number of concurrent flows crossing it (fair share — the contention the
+//! paper attributes >90% of scheduling overhead to is also routed here).
+
+use std::collections::BTreeMap;
+
+use crate::hwgraph::{EdgeId, HwGraph, LinkKind, NodeId};
+
+/// Tracks concurrent flows per link and dynamic bandwidth overrides.
+#[derive(Debug, Clone, Default)]
+pub struct Network {
+    /// active flow count per network edge
+    flows: BTreeMap<EdgeId, usize>,
+    /// dynamic bandwidth overrides (Gb/s), e.g. the Fig. 12 throttle
+    overrides: BTreeMap<EdgeId, f64>,
+}
+
+/// A computed route between two devices.
+#[derive(Debug, Clone)]
+pub struct Route {
+    pub links: Vec<EdgeId>,
+    pub latency_s: f64,
+}
+
+impl Network {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Override a link's bandwidth at runtime (dynamic network conditions,
+    /// §5.4.1). Pass `None` to restore the graph's static value.
+    pub fn set_bandwidth(&mut self, link: EdgeId, gbps: Option<f64>) {
+        match gbps {
+            Some(v) => {
+                self.overrides.insert(link, v);
+            }
+            None => {
+                self.overrides.remove(&link);
+            }
+        }
+    }
+
+    pub fn bandwidth_gbps(&self, g: &HwGraph, link: EdgeId) -> f64 {
+        self.overrides
+            .get(&link)
+            .copied()
+            .unwrap_or_else(|| g.edge(link).bandwidth_gbps)
+    }
+
+    /// Is this edge a *network* link (vs an on-chip/memory interconnect)?
+    pub fn is_net_link(g: &HwGraph, link: EdgeId) -> bool {
+        matches!(
+            g.edge(link).kind,
+            LinkKind::Lan | LinkKind::Wan | LinkKind::AbstractLink
+        )
+    }
+
+    /// Shortest route between two *devices* over network links only.
+    pub fn route(&self, g: &HwGraph, from_dev: NodeId, to_dev: NodeId) -> Option<Route> {
+        if from_dev == to_dev {
+            return Some(Route {
+                links: Vec::new(),
+                latency_s: 0.0,
+            });
+        }
+        let path = g.path_between(from_dev, to_dev)?;
+        let mut links = Vec::new();
+        let mut latency = 0.0;
+        for w in path.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let eid = g
+                .neighbors(a)
+                .iter()
+                .find(|(n, _)| *n == b)
+                .map(|(_, e)| *e)?;
+            if Self::is_net_link(g, eid) {
+                links.push(eid);
+                latency += g.edge(eid).latency_s;
+            }
+        }
+        Some(Route {
+            links,
+            latency_s: latency,
+        })
+    }
+
+    /// Effective bottleneck bandwidth of a route given current flow counts,
+    /// counting this prospective transfer as one additional flow per link.
+    pub fn effective_gbps(&self, g: &HwGraph, route: &Route) -> f64 {
+        route
+            .links
+            .iter()
+            .map(|&l| {
+                let share = (self.flows.get(&l).copied().unwrap_or(0) + 1) as f64;
+                self.bandwidth_gbps(g, l) / share
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Transfer time for `bytes` over the route under current contention.
+    /// Local (same-device) transfers are free.
+    pub fn transfer_time_s(&self, g: &HwGraph, route: &Route, bytes: f64) -> f64 {
+        if route.links.is_empty() {
+            return 0.0;
+        }
+        let gbps = self.effective_gbps(g, route);
+        if gbps <= 0.0 {
+            return f64::INFINITY;
+        }
+        route.latency_s + bytes * 8.0 / (gbps * 1e9)
+    }
+
+    /// Book/release a flow on a route (while a transfer is in flight).
+    pub fn open_flow(&mut self, route: &Route) {
+        for &l in &route.links {
+            *self.flows.entry(l).or_insert(0) += 1;
+        }
+    }
+
+    pub fn close_flow(&mut self, route: &Route) {
+        for &l in &route.links {
+            if let Some(c) = self.flows.get_mut(&l) {
+                *c = c.saturating_sub(1);
+                if *c == 0 {
+                    self.flows.remove(&l);
+                }
+            }
+        }
+    }
+
+    pub fn active_flows(&self, link: EdgeId) -> usize {
+        self.flows.get(&link).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::{Decs, DecsSpec};
+
+    fn decs() -> Decs {
+        Decs::build(&DecsSpec::paper_vr())
+    }
+
+    #[test]
+    fn route_edge_to_server_crosses_router_and_wan() {
+        let d = decs();
+        let net = Network::new();
+        let r = net
+            .route(&d.graph, d.edge_devices[0], d.servers[0])
+            .unwrap();
+        assert_eq!(r.links.len(), 3); // edge->router, router->wan_gw, wan_gw->server
+        assert!(r.latency_s > 0.0);
+    }
+
+    #[test]
+    fn same_device_transfer_is_free() {
+        let d = decs();
+        let net = Network::new();
+        let r = net
+            .route(&d.graph, d.edge_devices[0], d.edge_devices[0])
+            .unwrap();
+        assert_eq!(net.transfer_time_s(&d.graph, &r, 1e9), 0.0);
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes_and_bandwidth() {
+        let d = decs();
+        let mut net = Network::new();
+        let r = net
+            .route(&d.graph, d.edge_devices[0], d.servers[0])
+            .unwrap();
+        let t1 = net.transfer_time_s(&d.graph, &r, 1e6);
+        let t2 = net.transfer_time_s(&d.graph, &r, 2e6);
+        assert!(t2 > t1);
+        // throttle the uplink 10 -> 1 Gb/s: the Fig. 12 sweep
+        let uplink = d.uplink_of(d.edge_devices[0]).unwrap();
+        net.set_bandwidth(uplink, Some(1.0));
+        let t3 = net.transfer_time_s(&d.graph, &r, 1e6);
+        assert!(t3 > t1);
+        net.set_bandwidth(uplink, None);
+        let t4 = net.transfer_time_s(&d.graph, &r, 1e6);
+        assert!((t4 - t1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fair_share_halves_bandwidth_under_two_flows() {
+        let d = decs();
+        let mut net = Network::new();
+        let r = net
+            .route(&d.graph, d.edge_devices[0], d.servers[0])
+            .unwrap();
+        let solo = net.effective_gbps(&d.graph, &r);
+        net.open_flow(&r);
+        let shared = net.effective_gbps(&d.graph, &r);
+        assert!((shared - solo / 2.0).abs() / solo < 0.26); // bottleneck link halves
+        net.close_flow(&r);
+        assert_eq!(net.effective_gbps(&d.graph, &r), solo);
+    }
+
+    #[test]
+    fn edge_to_edge_routes_via_router_only() {
+        let d = decs();
+        let net = Network::new();
+        let r = net
+            .route(&d.graph, d.edge_devices[0], d.edge_devices[1])
+            .unwrap();
+        assert_eq!(r.links.len(), 2); // edge->router->edge, no WAN hop
+    }
+
+    #[test]
+    fn flow_bookkeeping_is_balanced() {
+        let d = decs();
+        let mut net = Network::new();
+        let r = net
+            .route(&d.graph, d.edge_devices[0], d.servers[1])
+            .unwrap();
+        net.open_flow(&r);
+        net.open_flow(&r);
+        assert_eq!(net.active_flows(r.links[0]), 2);
+        net.close_flow(&r);
+        net.close_flow(&r);
+        assert_eq!(net.active_flows(r.links[0]), 0);
+        // closing an unopened flow must not underflow
+        net.close_flow(&r);
+        assert_eq!(net.active_flows(r.links[0]), 0);
+    }
+}

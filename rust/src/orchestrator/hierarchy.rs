@@ -1,0 +1,426 @@
+//! The ORC hierarchy (Fig. 4b): built from the HW-Graph's upper layers.
+//!
+//! One ORC per Root / Cluster / Device group node. Leaf PUs have no ORC —
+//! the device ORC has full knowledge of the PUs immediately under its
+//! device (§3.5). Each ORC records its parent, children, and the one-way
+//! message latency to its parent; `orc_distance_s` computes the modeled
+//! one-way communication cost between two devices' ORCs through the tree
+//! (up to the lowest common ancestor and down again).
+
+use std::collections::BTreeMap;
+
+use crate::hwgraph::presets::Decs;
+use crate::hwgraph::{GroupRole, HwGraph, NodeId, NodeKind};
+
+/// Index of an ORC in the hierarchy arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct OrcId(pub u32);
+
+#[derive(Debug, Clone)]
+pub enum OrcChild {
+    Orc(OrcId),
+    Pu(NodeId),
+}
+
+#[derive(Debug, Clone)]
+pub struct OrcNode {
+    pub id: OrcId,
+    /// the HW-Graph group this ORC manages
+    pub scope: NodeId,
+    pub parent: Option<OrcId>,
+    pub children: Vec<OrcChild>,
+    /// one-way message latency to the parent ORC (seconds)
+    pub uplink_s: f64,
+}
+
+/// The assembled hierarchy plus lookup tables.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub orcs: Vec<OrcNode>,
+    /// device group node -> its ORC
+    pub by_device: BTreeMap<NodeId, OrcId>,
+    /// all device group nodes, in insertion order (edges then servers)
+    pub devices: Vec<NodeId>,
+    pub root: OrcId,
+    /// fan-out bound above which virtual sub-cluster ORCs are inserted
+    pub max_fanout: usize,
+    /// number of virtual ORCs inserted for scalability
+    pub virtual_orcs: usize,
+}
+
+impl Default for Hierarchy {
+    fn default() -> Self {
+        Hierarchy {
+            orcs: Vec::new(),
+            by_device: BTreeMap::new(),
+            devices: Vec::new(),
+            root: OrcId(0),
+            max_fanout: MAX_FANOUT,
+            virtual_orcs: 0,
+        }
+    }
+}
+
+/// One-way ORC hop latencies (seconds): device<->cluster rides the LAN,
+/// cluster<->root rides the campus backbone.
+pub const DEVICE_HOP_S: f64 = 5.0e-5;
+pub const CLUSTER_HOP_S: f64 = 1.25e-4;
+
+/// Maximum ORC fan-out before virtual sub-cluster ORCs are inserted
+/// (§3.5 Scalability: "if a virtual cluster gets too large, logarithmic
+/// complexity could be maintained by inserting virtual nodes and
+/// corresponding ORCs").
+pub const MAX_FANOUT: usize = 16;
+
+impl Hierarchy {
+    /// Build the Fig. 4b hierarchy from an assembled DECS: Root over the
+    /// edge and server cluster ORCs, a device ORC per device, PU leaves.
+    /// Clusters wider than [`MAX_FANOUT`] get virtual sub-cluster ORCs.
+    pub fn from_decs(decs: &Decs) -> Hierarchy {
+        Self::from_decs_with_fanout(decs, MAX_FANOUT)
+    }
+
+    pub fn from_decs_with_fanout(decs: &Decs, max_fanout: usize) -> Hierarchy {
+        let g = &decs.graph;
+        let mut h = Hierarchy::default();
+        h.max_fanout = max_fanout.max(2);
+        let root = h.push(decs.root, None, 0.0);
+        h.root = root;
+        for &cluster in &[decs.edge_cluster, decs.server_cluster] {
+            let c = h.push(cluster, Some(root), CLUSTER_HOP_S);
+            h.orcs[root.0 as usize].children.push(OrcChild::Orc(c));
+            let devices: Vec<NodeId> = g
+                .children(cluster)
+                .iter()
+                .copied()
+                .filter(|&dev| {
+                    matches!(
+                        g.node(dev).kind,
+                        NodeKind::Group {
+                            role: GroupRole::Device
+                        }
+                    )
+                })
+                .collect();
+            h.attach_devices(g, &devices, c, cluster);
+        }
+        h
+    }
+
+    /// Attach `devices` under `parent`, inserting one layer of virtual
+    /// sub-cluster ORCs whenever the fan-out would exceed the bound.
+    /// Recursion keeps every ORC's fan-out bounded, so the tree depth —
+    /// and with it MapTask's escalation cost — is logarithmic in the
+    /// cluster size.
+    fn attach_devices(&mut self, g: &HwGraph, devices: &[NodeId], parent: OrcId, scope: NodeId) {
+        if devices.len() <= self.max_fanout {
+            for &dev in devices {
+                self.add_device(g, dev, parent);
+            }
+            return;
+        }
+        let chunks = devices.len().div_ceil(self.max_fanout).min(self.max_fanout);
+        let per = devices.len().div_ceil(chunks);
+        for chunk in devices.chunks(per) {
+            let sub = self.push(scope, Some(parent), DEVICE_HOP_S);
+            self.orcs[parent.0 as usize].children.push(OrcChild::Orc(sub));
+            self.virtual_orcs += 1;
+            self.attach_devices(g, chunk, sub, scope);
+        }
+    }
+
+    fn push(&mut self, scope: NodeId, parent: Option<OrcId>, uplink_s: f64) -> OrcId {
+        let id = OrcId(self.orcs.len() as u32);
+        self.orcs.push(OrcNode {
+            id,
+            scope,
+            parent,
+            children: Vec::new(),
+            uplink_s,
+        });
+        id
+    }
+
+    fn add_device(&mut self, g: &HwGraph, dev: NodeId, cluster: OrcId) -> OrcId {
+        let d = self.push(dev, Some(cluster), DEVICE_HOP_S);
+        self.orcs[cluster.0 as usize].children.push(OrcChild::Orc(d));
+        for pu in g.pus_in(dev) {
+            self.orcs[d.0 as usize].children.push(OrcChild::Pu(pu));
+        }
+        self.by_device.insert(dev, d);
+        self.devices.push(dev);
+        d
+    }
+
+    /// Register a device that joined at runtime (§5.4.2). With virtual
+    /// sub-clusters present, the newcomer attaches to the ORC of that
+    /// scope with the smallest fan-out.
+    pub fn join_device(&mut self, g: &HwGraph, dev: NodeId) -> OrcId {
+        let cluster_scope = g.node(dev).parent.expect("device has a cluster");
+        let cluster = self
+            .orcs
+            .iter()
+            .filter(|o| o.scope == cluster_scope)
+            .min_by_key(|o| o.children.len())
+            .map(|o| o.id)
+            .expect("cluster ORC exists");
+        self.add_device(g, dev, cluster)
+    }
+
+    /// All devices ordered by ORC distance from `origin` (ascending), the
+    /// escalation order MapTask broadcasts through.
+    pub fn devices_by_distance(&self, origin: NodeId) -> Vec<NodeId> {
+        let mut v: Vec<(f64, NodeId)> = self
+            .devices
+            .iter()
+            .filter(|&&d| d != origin)
+            .map(|&d| (self.orc_distance_s(origin, d), d))
+            .collect();
+        v.sort_by(|a, b| a.0.total_cmp(&b.0));
+        v.into_iter().map(|(_, d)| d).collect()
+    }
+
+    /// Tree depth below the root (longest ORC chain).
+    pub fn depth(&self) -> usize {
+        let mut best = 0;
+        for o in &self.orcs {
+            let mut d = 0;
+            let mut cur = o.id;
+            while let Some(p) = self.orcs[cur.0 as usize].parent {
+                d += 1;
+                cur = p;
+            }
+            best = best.max(d);
+        }
+        best
+    }
+
+    pub fn orc_of_device(&self, dev: NodeId) -> Option<OrcId> {
+        self.by_device.get(&dev).copied()
+    }
+
+    fn cluster_of(&self, dev: NodeId) -> Option<OrcId> {
+        self.by_device
+            .get(&dev)
+            .and_then(|o| self.orcs[o.0 as usize].parent)
+    }
+
+    /// Devices under the same cluster ORC (Alg. 1 AskParent, step a),
+    /// excluding the device itself.
+    pub fn siblings_of(&self, dev: NodeId) -> Vec<NodeId> {
+        let cluster = match self.cluster_of(dev) {
+            Some(c) => c,
+            None => return Vec::new(),
+        };
+        self.orcs[cluster.0 as usize]
+            .children
+            .iter()
+            .filter_map(|c| match c {
+                OrcChild::Orc(o) => Some(self.orcs[o.0 as usize].scope),
+                OrcChild::Pu(_) => None,
+            })
+            .filter(|&d| d != dev)
+            .collect()
+    }
+
+    /// Devices under *other* clusters, in DFS order (Alg. 1 step b).
+    pub fn foreign_devices(&self, dev: NodeId) -> Vec<NodeId> {
+        let own_cluster = self.cluster_of(dev);
+        let mut out = Vec::new();
+        for child in &self.orcs[self.root.0 as usize].children {
+            if let OrcChild::Orc(c) = child {
+                if Some(*c) == own_cluster {
+                    continue;
+                }
+                for cc in &self.orcs[c.0 as usize].children {
+                    if let OrcChild::Orc(d) = cc {
+                        out.push(self.orcs[d.0 as usize].scope);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// One-way modeled message latency between two devices' ORCs: the sum
+    /// of uplink latencies along the tree path through their lowest common
+    /// ancestor. Zero for the same device.
+    pub fn orc_distance_s(&self, a: NodeId, b: NodeId) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        let (oa, ob) = match (self.orc_of_device(a), self.orc_of_device(b)) {
+            (Some(x), Some(y)) => (x, y),
+            _ => return 0.0,
+        };
+        // ancestor chains with cumulative cost
+        let chain = |mut o: OrcId| {
+            let mut v = vec![(o, 0.0)];
+            let mut acc = 0.0;
+            while let Some(p) = self.orcs[o.0 as usize].parent {
+                acc += self.orcs[o.0 as usize].uplink_s;
+                v.push((p, acc));
+                o = p;
+            }
+            v
+        };
+        let ca = chain(oa);
+        let cb = chain(ob);
+        for &(anc, cost_a) in &ca {
+            if let Some(&(_, cost_b)) = cb.iter().find(|(o, _)| *o == anc) {
+                return cost_a + cost_b;
+            }
+        }
+        0.0
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::{DecsSpec, XAVIER_NX};
+
+    #[test]
+    fn hierarchy_mirrors_fig4b() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let h = Hierarchy::from_decs(&decs);
+        // root + 2 clusters + 8 devices
+        assert_eq!(h.orcs.len(), 1 + 2 + 8);
+        assert_eq!(h.device_count(), 8);
+        // every device ORC's children are PU leaves
+        for &dev in &decs.edge_devices {
+            let orc = h.orc_of_device(dev).unwrap();
+            let n = &h.orcs[orc.0 as usize];
+            assert!(n
+                .children
+                .iter()
+                .all(|c| matches!(c, OrcChild::Pu(_))));
+            assert!(!n.children.is_empty());
+        }
+    }
+
+    #[test]
+    fn siblings_and_foreign_partition_the_system() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let h = Hierarchy::from_decs(&decs);
+        let e0 = decs.edge_devices[0];
+        let sib = h.siblings_of(e0);
+        assert_eq!(sib.len(), 4); // the other 4 edges
+        let foreign = h.foreign_devices(e0);
+        assert_eq!(foreign.len(), 3); // the 3 servers
+        assert!(foreign.iter().all(|d| decs.servers.contains(d)));
+    }
+
+    #[test]
+    fn orc_distance_sibling_vs_cross_cluster() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let h = Hierarchy::from_decs(&decs);
+        let same = h.orc_distance_s(decs.edge_devices[0], decs.edge_devices[0]);
+        let sib = h.orc_distance_s(decs.edge_devices[0], decs.edge_devices[1]);
+        let cross = h.orc_distance_s(decs.edge_devices[0], decs.servers[0]);
+        assert_eq!(same, 0.0);
+        assert!(sib > 0.0);
+        assert!(cross > sib, "cross {cross} vs sibling {sib}");
+        // symmetric
+        assert!(
+            (h.orc_distance_s(decs.servers[0], decs.edge_devices[0]) - cross).abs() < 1e-15
+        );
+    }
+
+    #[test]
+    fn join_device_registers_new_orc() {
+        let mut decs = Decs::build(&DecsSpec::validation_pair());
+        let mut h = Hierarchy::from_decs(&decs);
+        let before = h.device_count();
+        let dev = decs.join_edge(XAVIER_NX, 10.0);
+        h.join_device(&decs.graph, dev);
+        assert_eq!(h.device_count(), before + 1);
+        assert!(h.orc_of_device(dev).is_some());
+        assert!(h.siblings_of(dev).contains(&decs.edge_devices[0]));
+    }
+}
+
+#[cfg(test)]
+mod virtual_tests {
+    use super::*;
+    use crate::hwgraph::presets::DecsSpec;
+
+    #[test]
+    fn small_clusters_get_no_virtual_orcs() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let h = Hierarchy::from_decs(&decs);
+        assert_eq!(h.virtual_orcs, 0);
+        assert_eq!(h.depth(), 2); // root -> cluster -> device
+    }
+
+    #[test]
+    fn wide_clusters_get_virtual_subclusters() {
+        let decs = Decs::build(&DecsSpec::mixed(64, 8));
+        let h = Hierarchy::from_decs_with_fanout(&decs, 8);
+        assert!(h.virtual_orcs > 0, "64 edges at fanout 8 need sub-ORCs");
+        assert!(h.depth() >= 3);
+        // every ORC's fan-out stays bounded
+        for o in &h.orcs {
+            let orc_children = o
+                .children
+                .iter()
+                .filter(|c| matches!(c, OrcChild::Orc(_)))
+                .count();
+            assert!(orc_children <= 8, "fan-out {} exceeds bound", orc_children);
+        }
+        // all devices still reachable
+        assert_eq!(h.device_count(), 72);
+        for &d in &decs.edge_devices {
+            assert!(h.orc_of_device(d).is_some());
+        }
+    }
+
+    #[test]
+    fn depth_grows_logarithmically() {
+        let mut last_depth = 0;
+        for n in [16usize, 64, 256] {
+            let decs = Decs::build(&DecsSpec::mixed(n, 4));
+            let h = Hierarchy::from_decs_with_fanout(&decs, 4);
+            let depth = h.depth();
+            assert!(depth >= last_depth);
+            // log_4(256) = 4 levels of sub-clustering at most (+2 fixed)
+            assert!(depth <= 7, "depth {depth} too deep for {n} devices");
+            last_depth = depth;
+        }
+    }
+
+    #[test]
+    fn distances_reflect_subcluster_tiers() {
+        let decs = Decs::build(&DecsSpec::mixed(32, 4));
+        let h = Hierarchy::from_decs_with_fanout(&decs, 4);
+        let e0 = decs.edge_devices[0];
+        let order = h.devices_by_distance(e0);
+        assert_eq!(order.len(), 35);
+        // distances are non-decreasing along the order
+        let dists: Vec<f64> = order.iter().map(|&d| h.orc_distance_s(e0, d)).collect();
+        for w in dists.windows(2) {
+            assert!(w[0] <= w[1] + 1e-15);
+        }
+        // at least three distinct tiers (same sub-cluster, same cluster
+        // further away, other cluster)
+        let mut uniq: Vec<f64> = dists.clone();
+        uniq.sort_by(f64::total_cmp);
+        uniq.dedup_by(|a, b| (*a - *b).abs() < 1e-15);
+        assert!(uniq.len() >= 3, "tiers: {uniq:?}");
+    }
+
+    #[test]
+    fn join_balances_across_subclusters() {
+        let mut decs = Decs::build(&DecsSpec::mixed(17, 2));
+        let mut h = Hierarchy::from_decs_with_fanout(&decs, 4);
+        let before = h.device_count();
+        let dev = decs.join_edge(crate::hwgraph::presets::XAVIER_NX, 10.0);
+        h.join_device(&decs.graph, dev);
+        assert_eq!(h.device_count(), before + 1);
+        assert!(h.orc_of_device(dev).is_some());
+    }
+}

@@ -1,0 +1,506 @@
+//! The Orchestrator mechanism (§3.5, Alg. 1): decentralized, hierarchical
+//! task-to-PU mapping with resource segregation.
+//!
+//! ORCs form a tree mirroring the upper layers of the HW-Graph (Fig. 4b):
+//! a Root ORC over the edge-cluster and server-cluster ORCs, one ORC per
+//! device, and PU leaves owned by the device ORC. Each ORC knows only its
+//! parent and children; a remote ORC is asked to map a task knowing only
+//! the task's constraints, never the requester's internals.
+//!
+//! `MapTask` follows Alg. 1: TraverseChildren over the local device's PUs
+//! (CheckTaskConstraints via the Traverser, which re-validates every active
+//! task's constraints too), then AskParent, which walks siblings and
+//! finally the other cluster in DFS order. Scheduling overhead — the
+//! message hops (>90% of the paper's measured overhead) plus the *actually
+//! measured* local compute time of the constraint checks — is accounted per
+//! mapping and reported by Fig. 14/15 harnesses.
+
+pub mod hierarchy;
+pub mod policy;
+
+pub use hierarchy::{Hierarchy, OrcChild, OrcId, OrcNode};
+pub use policy::Policy;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::hwgraph::NodeId;
+use crate::task::{Cfg, TaskKind, TaskSpec};
+use crate::traverser::{ActiveTask, Traverser};
+
+/// Scheduling-overhead accounting for one MapTask call.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Overhead {
+    /// modeled ORC-to-ORC message time (round trips over hop latencies)
+    pub comm_s: f64,
+    /// measured wall-clock spent in Traverser constraint checks
+    pub compute_s: f64,
+    /// number of ORC-to-ORC messages
+    pub hops: u32,
+    /// number of Traverser invocations
+    pub traverser_calls: u32,
+}
+
+impl Overhead {
+    pub fn total_s(&self) -> f64 {
+        self.comm_s + self.compute_s
+    }
+
+    pub fn add(&mut self, other: &Overhead) {
+        self.comm_s += other.comm_s;
+        self.compute_s += other.compute_s;
+        self.hops += other.hops;
+        self.traverser_calls += other.traverser_calls;
+    }
+}
+
+/// Outcome of MapTask.
+#[derive(Debug, Clone)]
+pub struct MapResult {
+    /// chosen PU, or None if no placement satisfies the constraints
+    pub pu: Option<NodeId>,
+    /// predicted completion latency on the chosen PU (from task readiness,
+    /// including any input transfer)
+    pub predicted_latency_s: f64,
+    pub overhead: Overhead,
+}
+
+/// A snapshot of what's running where — the state the Traverser needs.
+/// The simulator maintains it; device ORCs only ever see their own slice
+/// (resource segregation).
+#[derive(Debug, Clone, Default)]
+pub struct Loads {
+    /// active tasks grouped by device
+    pub by_device: BTreeMap<NodeId, Vec<ActiveTask>>,
+}
+
+impl Loads {
+    pub fn device(&self, dev: NodeId) -> &[ActiveTask] {
+        self.by_device.get(&dev).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn total(&self) -> usize {
+        self.by_device.values().map(|v| v.len()).sum()
+    }
+}
+
+/// The H-EYE orchestrator: the hierarchy plus policy + sticky state.
+pub struct Orchestrator {
+    pub hierarchy: Hierarchy,
+    pub policy: Policy,
+    /// StickyServer policy memory: (origin device, task kind) -> device
+    sticky: BTreeMap<(NodeId, u8), NodeId>,
+    /// overhead of the most recent failed `try_device` (accounted by caller)
+    last_try_overhead: Option<Overhead>,
+    /// memoized distance-ordered device lists per origin (§Perf: building
+    /// and sorting the escalation order per MapTask dominated at scale);
+    /// invalidated when the hierarchy changes (device join)
+    order_cache: BTreeMap<NodeId, std::rc::Rc<Vec<NodeId>>>,
+    cache_devices: usize,
+}
+
+fn kind_tag(k: TaskKind) -> u8 {
+    k as u8
+}
+
+impl Orchestrator {
+    pub fn new(hierarchy: Hierarchy, policy: Policy) -> Self {
+        Self {
+            hierarchy,
+            policy,
+            sticky: BTreeMap::new(),
+            last_try_overhead: None,
+            order_cache: BTreeMap::new(),
+            cache_devices: 0,
+        }
+    }
+
+    /// Distance-ordered devices from `origin`, memoized until the
+    /// hierarchy grows.
+    fn ordered_from(&mut self, origin: NodeId) -> std::rc::Rc<Vec<NodeId>> {
+        if self.cache_devices != self.hierarchy.device_count() {
+            self.order_cache.clear();
+            self.cache_devices = self.hierarchy.device_count();
+        }
+        if let Some(v) = self.order_cache.get(&origin) {
+            return v.clone();
+        }
+        let v = std::rc::Rc::new(self.hierarchy.devices_by_distance(origin));
+        self.order_cache.insert(origin, v.clone());
+        v
+    }
+
+    /// Alg. 1 `MapTask`: find a PU for `task`, generated on `origin_dev`
+    /// (whose ORC initiates the search) with input data on `data_dev`, at
+    /// `now`, under the current `loads`.
+    pub fn map_task(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin_dev: NodeId,
+        data_dev: NodeId,
+        now: f64,
+        loads: &Loads,
+    ) -> MapResult {
+        let mut overhead = Overhead::default();
+        // pinned stages never leave the origin (sensor/display attached)
+        let candidates: Vec<NodeId> = if task.kind.pinned_to_origin() {
+            vec![origin_dev]
+        } else {
+            self.search_order(origin_dev, data_dev, task)
+        };
+        // Escalation through the hierarchy is a *broadcast* per tier: the
+        // cluster ORC fans MapTask out to its children in parallel (this is
+        // what keeps the paper's ORC message complexity logarithmic, §3.5),
+        // so communication time is paid once per tier reached, while `hops`
+        // still counts every message sent. Within one tier, the ORC selects
+        // the *best* satisfying node among its children's answers (Alg. 1
+        // line 7, "BestNode <- select best node"); the search stops at the
+        // first tier that produces any satisfying node.
+        let mut tiers: Vec<(f64, Vec<NodeId>)> = Vec::new();
+        for dev in candidates {
+            let hop = self.hierarchy.orc_distance_s(origin_dev, dev);
+            match tiers.iter_mut().find(|(h, _)| (*h - hop).abs() < 1e-12) {
+                Some((_, v)) => v.push(dev),
+                None => tiers.push((hop, vec![dev])),
+            }
+        }
+        for (hop, devs) in tiers {
+            if hop > 0.0 {
+                overhead.comm_s += 2.0 * hop; // one broadcast round trip
+                overhead.hops += 2 * devs.len() as u32;
+            }
+            let mut best: Option<(NodeId, NodeId, f64)> = None;
+            for dev in devs {
+                if let Some((pu, latency, oh)) =
+                    self.try_device(tr, task, data_dev, dev, now, loads)
+                {
+                    overhead.add(&oh);
+                    if best.map(|(_, _, b)| latency < b).unwrap_or(true) {
+                        best = Some((dev, pu, latency));
+                    }
+                } else if let Some(oh) = self.last_try_overhead.take() {
+                    overhead.add(&oh);
+                }
+            }
+            if let Some((dev, pu, latency)) = best {
+                if !task.kind.pinned_to_origin() {
+                    self.sticky.insert((origin_dev, kind_tag(task.kind)), dev);
+                }
+                return MapResult {
+                    pu: Some(pu),
+                    predicted_latency_s: latency,
+                    overhead,
+                };
+            }
+        }
+        MapResult {
+            pu: None,
+            predicted_latency_s: f64::INFINITY,
+            overhead,
+        }
+    }
+
+    /// CheckTaskConstraints (Alg. 1 lines 11-19) over every candidate PU of
+    /// one device; returns the best (earliest-finishing) satisfying PU.
+    fn try_device(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        data_dev: NodeId,
+        dev: NodeId,
+        now: f64,
+        loads: &Loads,
+    ) -> Option<(NodeId, f64, Overhead)> {
+        let t0 = Instant::now();
+        let g = tr.slow.graph();
+        let active = loads.device(dev);
+        // a device with a deep backlog is saturated — the ORC rejects
+        // without simulating hundreds of co-tenants (sub-linear scaling,
+        // one of the §3.1 design principles)
+        if active.len() > 64 {
+            self.last_try_overhead = Some(Overhead {
+                comm_s: 0.0,
+                compute_s: t0.elapsed().as_secs_f64(),
+                hops: 0,
+                traverser_calls: 0,
+            });
+            return None;
+        }
+        let mut cfg = Cfg::new();
+        cfg.add(task.clone());
+        let mut best: Option<(NodeId, f64)> = None;
+        let mut calls = 0u32;
+        for pu in g.pus_in(dev) {
+            let class = match g.pu_class(pu) {
+                Some(c) => c,
+                None => continue,
+            };
+            if !task.kind.allowed_pus().contains(&class) {
+                continue;
+            }
+            calls += 1;
+            if let Some(p) = tr.predict(&cfg, &[pu], data_dev, active, now) {
+                if p.ok() {
+                    let latency = p.finish[0] - now;
+                    if best.map(|(_, b)| latency < b).unwrap_or(true) {
+                        best = Some((pu, latency));
+                    }
+                }
+            }
+        }
+        let oh = Overhead {
+            comm_s: 0.0,
+            compute_s: t0.elapsed().as_secs_f64(),
+            hops: 0,
+            traverser_calls: calls,
+        };
+        if best.is_none() && std::env::var("HEYE_TRACE_TRYDEV").is_ok() && now < 0.1 {
+            eprintln!(
+                "TRYDEV-FAIL t={now:.4} task={} dev={} deadline={:.2}ms active={:?}",
+                task.kind.name(),
+                g.node(dev).name,
+                task.constraints.deadline_s * 1e3,
+                active
+                    .iter()
+                    .map(|a| (a.kind.name(), a.remaining_s * 1e3, a.deadline_abs))
+                    .collect::<Vec<_>>()
+            );
+        }
+        match best {
+            Some((pu, lat)) => Some((pu, lat, oh)),
+            None => {
+                self.last_try_overhead = Some(oh);
+                None
+            }
+        }
+    }
+
+    /// Device visit order per policy: local first, then siblings / servers
+    /// per Alg. 1's parent propagation.
+    ///
+    /// One volume-aware refinement: a task that *shrinks* its data
+    /// (output < input, e.g. the encoder) is offered the device holding
+    /// its input first — computing at the data and shipping the smaller
+    /// result is strictly cheaper than the reverse. Data-expanding tasks
+    /// (e.g. the decoder) prefer the origin side, where their consumers
+    /// live. This is how the Orchestrator finds the minimum-volume wire
+    /// crossing of a pipeline without global CFG lookahead.
+    fn search_order(&mut self, origin_dev: NodeId, data_dev: NodeId, task: &TaskSpec) -> Vec<NodeId> {
+        let shrinks = task.output_bytes < task.input_bytes && data_dev != origin_dev;
+        let mut order = if shrinks {
+            vec![data_dev, origin_dev]
+        } else {
+            vec![origin_dev]
+        };
+        let push_unique = |order: &mut Vec<NodeId>, d: NodeId| {
+            if !order.contains(&d) {
+                order.push(d);
+            }
+        };
+        match self.policy {
+            Policy::Hierarchical => {
+                // stability hint: the device that last hosted this task
+                // kind is offered right after the local preference — the
+                // constraint check still re-validates it every time
+                if let Some(&d) = self.sticky.get(&(origin_dev, kind_tag(task.kind))) {
+                    push_unique(&mut order, d);
+                }
+                // escalate tier by tier through the ORC tree (virtual
+                // sub-clusters included): nearest ORCs first
+                for &d in self.ordered_from(origin_dev).iter() {
+                    push_unique(&mut order, d);
+                }
+            }
+            Policy::DirectToServer => {
+                // skip sibling edges entirely: go straight to the servers
+                for d in self.hierarchy.foreign_devices(origin_dev) {
+                    push_unique(&mut order, d);
+                }
+                for d in self.hierarchy.siblings_of(origin_dev) {
+                    push_unique(&mut order, d);
+                }
+            }
+            Policy::StickyServer => {
+                // re-ask the server used for the previous task of this kind
+                // first (the "re-communicate with the same server" strategy)
+                let stuck: Vec<NodeId> = self
+                    .sticky
+                    .iter()
+                    .filter(|((o, _), _)| *o == origin_dev)
+                    .map(|(_, &dev)| dev)
+                    .collect();
+                for dev in stuck {
+                    push_unique(&mut order, dev);
+                }
+                for d in self.hierarchy.siblings_of(origin_dev) {
+                    push_unique(&mut order, d);
+                }
+                for d in self.hierarchy.foreign_devices(origin_dev) {
+                    push_unique(&mut order, d);
+                }
+            }
+            Policy::Grouped => {
+                // same order as hierarchical; grouping happens at the
+                // simulator level (tasks batched per MapTask round)
+                for &d in self.ordered_from(origin_dev).iter() {
+                    push_unique(&mut order, d);
+                }
+            }
+        }
+        order
+    }
+}
+
+impl Orchestrator {
+    pub fn reset_sticky(&mut self) {
+        self.sticky.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::{Decs, DecsSpec};
+    use crate::netsim::Network;
+    use crate::perfmodel::ProfileModel;
+    use crate::slowdown::CachedSlowdown;
+    use crate::task::workloads;
+    use crate::task::TaskKind;
+
+    struct Ctx {
+        decs: Decs,
+        perf: ProfileModel,
+        net: Network,
+    }
+
+    impl Ctx {
+        fn new() -> Self {
+            Self {
+                decs: Decs::build(&DecsSpec::paper_vr()),
+                perf: ProfileModel::new(),
+                net: Network::new(),
+            }
+        }
+    }
+
+    #[test]
+    fn render_goes_to_a_server() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let h = Hierarchy::from_decs(&ctx.decs);
+        let mut orc = Orchestrator::new(h, Policy::Hierarchical);
+        let cfg = workloads::vr_cfg(30.0, 1.0, None);
+        let render = cfg.nodes[2].spec.clone();
+        let origin = ctx.decs.edge_devices[0];
+        let r = orc.map_task(&tr, &render, origin, origin, 0.0, &Loads::default());
+        let pu = r.pu.expect("render must map somewhere");
+        let dev = ctx.decs.graph.device_of(pu).unwrap();
+        assert!(
+            ctx.decs.servers.contains(&dev),
+            "render landed on {} instead of a server",
+            ctx.decs.graph.node(dev).name
+        );
+        assert!(r.overhead.comm_s > 0.0, "remote mapping must cost comm");
+        assert!(r.overhead.traverser_calls > 0);
+    }
+
+    #[test]
+    fn light_task_stays_local_with_zero_comm() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let h = Hierarchy::from_decs(&ctx.decs);
+        let mut orc = Orchestrator::new(h, Policy::Hierarchical);
+        let cfg = workloads::vr_cfg(30.0, 1.0, None);
+        let capture = cfg.nodes[0].spec.clone();
+        let origin = ctx.decs.edge_devices[0];
+        let r = orc.map_task(&tr, &capture, origin, origin, 0.0, &Loads::default());
+        let dev = ctx.decs.graph.device_of(r.pu.unwrap()).unwrap();
+        assert_eq!(dev, origin);
+        assert_eq!(r.overhead.comm_s, 0.0);
+        assert_eq!(r.overhead.hops, 0);
+    }
+
+    #[test]
+    fn impossible_constraints_are_rejected_after_full_search() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let h = Hierarchy::from_decs(&ctx.decs);
+        let mut orc = Orchestrator::new(h, Policy::Hierarchical);
+        let t = TaskSpec::new(TaskKind::Knn).deadline(1e-9);
+        let origin = ctx.decs.edge_devices[0];
+        let r = orc.map_task(&tr, &t, origin, origin, 0.0, &Loads::default());
+        assert!(r.pu.is_none());
+        // it searched remotely before giving up
+        assert!(r.overhead.hops > 0);
+    }
+
+    #[test]
+    fn existing_task_constraints_veto_colocation() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let h = Hierarchy::from_decs(&ctx.decs);
+        let mut orc = Orchestrator::new(h, Policy::Hierarchical);
+        // saturate server0's GPU with a task whose deadline just barely holds
+        let g = &ctx.decs.graph;
+        let s0 = ctx.decs.servers[0];
+        let s0_gpu = g.by_name("server0.gpu").unwrap();
+        let mut loads = Loads::default();
+        loads.by_device.insert(
+            s0,
+            vec![crate::traverser::ActiveTask {
+                id: crate::task::TaskId(1),
+                kind: TaskKind::Render,
+                pu: s0_gpu,
+                remaining_s: 0.005,
+                deadline_abs: 0.0055,
+            }],
+        );
+        let t = TaskSpec::new(TaskKind::Render).deadline(0.05);
+        let r = orc.map_task(&tr, &t, ctx.decs.edge_devices[0], ctx.decs.edge_devices[0], 0.0, &loads);
+        // must not land on server0.gpu — that would break the active task
+        assert_ne!(r.pu, Some(s0_gpu));
+    }
+
+    #[test]
+    fn direct_policy_skips_edge_siblings() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let h = Hierarchy::from_decs(&ctx.decs);
+        let mut direct = Orchestrator::new(h, Policy::DirectToServer);
+        let cfg = workloads::vr_cfg(30.0, 1.0, None);
+        let render = cfg.nodes[2].spec.clone();
+        let origin = ctx.decs.edge_devices[0];
+        let r1 = direct.map_task(&tr, &render, origin, origin, 0.0, &Loads::default());
+        let h2 = Hierarchy::from_decs(&ctx.decs);
+        let mut hier = Orchestrator::new(h2, Policy::Hierarchical);
+        let r2 = hier.map_task(&tr, &render, origin, origin, 0.0, &Loads::default());
+        // both find a server, but direct asks fewer ORCs for VR renders
+        assert!(r1.pu.is_some() && r2.pu.is_some());
+        assert!(r1.overhead.traverser_calls <= r2.overhead.traverser_calls);
+    }
+
+    #[test]
+    fn sticky_policy_reuses_previous_server() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let h = Hierarchy::from_decs(&ctx.decs);
+        let mut orc = Orchestrator::new(h, Policy::StickyServer);
+        let cfg = workloads::vr_cfg(30.0, 1.0, None);
+        let render = cfg.nodes[2].spec.clone();
+        let origin = ctx.decs.edge_devices[0];
+        let r1 = orc.map_task(&tr, &render, origin, origin, 0.0, &Loads::default());
+        let d1 = ctx.decs.graph.device_of(r1.pu.unwrap()).unwrap();
+        let r2 = orc.map_task(&tr, &render, origin, origin, 0.0, &Loads::default());
+        let d2 = ctx.decs.graph.device_of(r2.pu.unwrap()).unwrap();
+        assert_eq!(d1, d2);
+        // second call should be cheaper: it asks the sticky device first
+        assert!(r2.overhead.traverser_calls <= r1.overhead.traverser_calls);
+    }
+}

@@ -1,0 +1,48 @@
+//! Assignment strategies (§5.5.5, Fig. 15).
+
+/// How MapTask searches the hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// the default edge-to-parent ORC hierarchy of Alg. 1
+    Hierarchical,
+    /// edges talk straight to servers, bypassing sibling-edge ORCs
+    DirectToServer,
+    /// re-ask the server assigned in the previous iteration first
+    StickyServer,
+    /// group all ready tasks per mapping round (degroup on failure)
+    Grouped,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Hierarchical => "hierarchical",
+            Policy::DirectToServer => "direct-to-server",
+            Policy::StickyServer => "sticky-server",
+            Policy::Grouped => "grouped",
+        }
+    }
+
+    pub fn all() -> [Policy; 4] {
+        [
+            Policy::Hierarchical,
+            Policy::DirectToServer,
+            Policy::StickyServer,
+            Policy::Grouped,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_unique() {
+        let names: Vec<&str> = Policy::all().iter().map(|p| p.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+    }
+}

@@ -1,0 +1,275 @@
+//! Calibration tables: standalone latencies (Fig. 9), per-device scaling,
+//! memory intensities, contention coefficients (Fig. 2), multi-tenancy
+//! curves, and PU power draws.
+//!
+//! The paper reports Fig. 9 as a plot without a numeric table; values here
+//! are chosen to match every relationship the text states:
+//! * edge GPUs cannot render a frame within the FPS budget; server GPUs can
+//!   (rendering is "predominantly processed by servers", §4.1);
+//! * reproject: edge CPU standalone beats VIC, but VIC has private storage
+//!   (§5.3.1) so it wins under memory contention;
+//! * Orin AGX > Xavier AGX > Xavier NX > Orin Nano in capability;
+//! * server-3 (integrated graphics) is markedly weaker than 1 and 2;
+//! * KNN is the heaviest mining task and its Xavier-NX time is the strong-
+//!   scaling limit (§5.5.3).
+
+use crate::hwgraph::{presets, PuClass, ResourceKind};
+use crate::task::TaskKind;
+
+/// Device-level latency multiplier relative to Orin AGX (edges) or the
+/// absolute server factors.
+pub fn device_factor(model: &str) -> Option<f64> {
+    Some(match model {
+        presets::ORIN_AGX => 1.0,
+        presets::XAVIER_AGX => 1.4,
+        presets::XAVIER_NX => 1.9,
+        presets::ORIN_NANO => 2.3,
+        // Server factors put the three shared servers at the edge of
+        // saturation under the 5-headset VR load (§5.3.1: servers are the
+        // bottleneck for three of the five devices) — fast enough to render
+        // in-budget standalone, slow enough that multi-tenancy decisions
+        // decide QoS.
+        presets::SERVER1 => 0.45,
+        presets::SERVER2 => 0.40,
+        presets::SERVER3 => 0.60,
+        _ => return None,
+    })
+}
+
+fn is_server(model: &str) -> bool {
+    presets::SERVER_MODELS.contains(&model)
+}
+
+/// Base standalone latency (seconds) of a unit-scale task on an *Orin AGX*
+/// PU of the given class; `device_factor` scales it to other devices.
+fn base_s(pu: PuClass, kind: TaskKind) -> Option<f64> {
+    use PuClass::*;
+    use TaskKind::*;
+    let ms = match (kind, pu) {
+        // --- VR pipeline ---
+        (Capture, CpuCore) => 2.0,
+        (PosePredict, CpuCore) => 3.0,
+        (PosePredict, Gpu) => 2.5,
+        (Render, Gpu) => 45.0,
+        (Encode, CpuCore) => 15.0,
+        (Encode, Gpu) => 8.0,
+        (Encode, Vic) => 5.0,
+        (Decode, CpuCore) => 14.0,
+        (Decode, Gpu) => 7.0,
+        (Decode, Vic) => 5.0,
+        (Reproject, CpuCore) => 4.0,
+        (Reproject, Gpu) => 6.0,
+        (Reproject, Vic) => 5.0,
+        (Display, CpuCore) => 2.0,
+        // --- mining ---
+        (SensorRead, CpuCore) => 1.0,
+        (Svm, CpuCore) => 7.0,
+        (Svm, Gpu) => 3.0,
+        (Knn, CpuCore) => 11.0,
+        (Knn, Gpu) => 5.0,
+        (Mlp, CpuCore) => 4.5,
+        (Mlp, Gpu) => 1.8,
+        // --- microbenchmarks ---
+        (MatMul, CpuCore) => 10.0,
+        (MatMul, Gpu) => 2.0,
+        (MatMul, Dla) => 4.0,
+        (MatMul, Pva) => 6.0,
+        (DnnInfer, Gpu) => 8.0,
+        (DnnInfer, Dla) => 14.0,
+        (DnnInfer, CpuCore) => 40.0,
+        _ => return None,
+    };
+    Some(ms * 1e-3)
+}
+
+/// Standalone latency of a unit-scale task on (device model, PU class).
+pub fn standalone_s(model: &str, pu: PuClass, kind: TaskKind) -> Option<f64> {
+    // servers have no VIC/DLA/PVA in our presets; the graph guarantees the
+    // PU exists before this is asked, but keep the table honest anyway.
+    if is_server(model) && matches!(pu, PuClass::Vic | PuClass::Dla | PuClass::Pva) {
+        return None;
+    }
+    Some(base_s(pu, kind)? * device_factor(model)?)
+}
+
+/// Rough PU power draws (W) for the Joules unit.
+pub fn power_w(model: &str, pu: PuClass) -> f64 {
+    let base = match pu {
+        PuClass::CpuCore => 3.0,
+        PuClass::Gpu => 15.0,
+        PuClass::Dla => 4.0,
+        PuClass::Pva => 3.0,
+        PuClass::Vic => 2.5,
+    };
+    if is_server(model) {
+        base * 8.0
+    } else {
+        base
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared-resource slowdown calibration (Fig. 2)
+// ---------------------------------------------------------------------------
+
+/// Pairwise contention factor at full memory intensity for two co-runners
+/// whose *nearest* shared resource is `kind`: the Fig. 2 measurements on
+/// Orin AGX, inverted into slowdown multipliers.
+pub fn contention_factor(kind: ResourceKind) -> f64 {
+    match kind {
+        ResourceKind::L2Cache => 1.0 / 0.91,      // same-cluster cores
+        ResourceKind::L3Cache => 1.0 / 0.87,      // cross-cluster cores
+        ResourceKind::Llc => 1.0 / 0.89,          // CPU + GPU via the 4MB LLC
+        ResourceKind::Sram => 1.0 / 0.71,         // DLA + PVA vision SRAM
+        ResourceKind::SysDram => 1.0 / 0.68,      // GPU + DLA via DRAM
+        ResourceKind::MemController => 1.0 / 0.80,
+        ResourceKind::NetLink => 1.0, // handled by the flow model, not here
+    }
+}
+
+/// Memory intensity in [0, 1]: how hard a task drives the memory system
+/// relative to the dense-MM microbenchmark (= 1.0). Scales the pairwise
+/// contention factor (PCCS-style processor-centric demand abstraction).
+pub fn memory_intensity(kind: TaskKind, pu: PuClass) -> f64 {
+    use TaskKind::*;
+    let base = match kind {
+        MatMul | DnnInfer => 1.0,
+        Render => 0.9,
+        Encode | Decode => 0.7,
+        Reproject => 0.6,
+        Knn => 0.8,
+        Svm => 0.6,
+        Mlp => 0.5,
+        PosePredict => 0.3,
+        Capture | Display | SensorRead => 0.15,
+    };
+    // VIC's private storage keeps its traffic off the shared hierarchy
+    if pu == PuClass::Vic {
+        base * 0.25
+    } else {
+        base
+    }
+}
+
+/// Contention *sensitivity* in [0, ~4]: how much a task suffers per unit of
+/// co-runner pressure. Decoupled from `memory_intensity` (how much pressure
+/// the task *generates*): the pairwise slowdown a target experiences is
+/// `1 + (factor-1) * sensitivity(target) * intensity(co)`.
+///
+/// The asymmetries encode the §5.3.1 observations: pipeline stages whose
+/// working sets are LLC-resident on the CPU (reproject/codec/pose-RNN)
+/// suffer disproportionately when the GPU floods the shared LLC, while the
+/// VIC's private data storage makes it nearly immune.
+pub fn contention_sensitivity(kind: TaskKind, pu: PuClass) -> f64 {
+    use TaskKind::*;
+    if pu == PuClass::Vic {
+        return 0.2;
+    }
+    match (kind, pu) {
+        (Reproject | Encode | Decode, PuClass::CpuCore) => 3.5,
+        (PosePredict, PuClass::CpuCore) => 2.5,
+        (Svm | Knn | Mlp, PuClass::CpuCore) => 1.6,
+        _ => memory_intensity(kind, pu),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// multi-tenancy calibration (§2.2 and the server-GPU estimates of §5.1)
+// ---------------------------------------------------------------------------
+
+/// Relative speed of each tenant when `k` tasks time-share one PU.
+/// Edge GPU: Fig. 2 measures 0.66x for k=2 -> mu = 0.515 in
+/// `1 / (1 + mu (k-1))`. Server GPUs are better at co-tenancy (djay-style
+/// profiling, §5.1). CPU cores degrade as pure timeslicing, and beyond two
+/// tenants accelerators fall back to timeslicing on top of the measured
+/// 2-tenant interference (kernels serialize; interference does not keep
+/// compounding).
+pub fn multitenancy_rel_speed(model: &str, pu: PuClass, k: usize) -> f64 {
+    if k <= 1 {
+        return 1.0;
+    }
+    let kf = k as f64;
+    let mu = match (is_server(model), pu) {
+        (_, PuClass::CpuCore) => return 1.0 / kf, // timeslice
+        (false, PuClass::Gpu) => 0.515,
+        (true, PuClass::Gpu) => 0.25,
+        (_, PuClass::Dla) => 0.6,
+        (_, PuClass::Pva) => 0.6,
+        (_, PuClass::Vic) => 0.4,
+    };
+    let pair = 1.0 / (1.0 + mu); // measured 2-tenant relative speed
+    if k == 2 {
+        pair
+    } else {
+        pair * 2.0 / kf // timeslice beyond two tenants
+    }
+}
+
+/// Upper bound on the composed memory-contention multiplier: once the
+/// shared level saturates, adding co-runners queues requests instead of
+/// compounding interference (PCCS observes the same plateau).
+pub const MEM_CONTENTION_CAP: f64 = 4.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_targets_reproduced_exactly() {
+        // the five measured relative performances on Orin AGX
+        assert!((1.0 / contention_factor(ResourceKind::L2Cache) - 0.91).abs() < 1e-9);
+        assert!((1.0 / contention_factor(ResourceKind::L3Cache) - 0.87).abs() < 1e-9);
+        assert!((1.0 / contention_factor(ResourceKind::Llc) - 0.89).abs() < 1e-9);
+        assert!((1.0 / contention_factor(ResourceKind::SysDram) - 0.68).abs() < 1e-9);
+        assert!(
+            (multitenancy_rel_speed(presets::ORIN_AGX, PuClass::Gpu, 2) - 0.66).abs() < 0.005
+        );
+    }
+
+    #[test]
+    fn device_order() {
+        let f = |m| device_factor(m).unwrap();
+        assert!(f(presets::ORIN_AGX) < f(presets::XAVIER_AGX));
+        assert!(f(presets::XAVIER_AGX) < f(presets::XAVIER_NX));
+        assert!(f(presets::XAVIER_NX) < f(presets::ORIN_NANO));
+        assert!(f(presets::SERVER2) < f(presets::SERVER1));
+        assert!(f(presets::SERVER1) < f(presets::SERVER3));
+    }
+
+    #[test]
+    fn knn_is_heaviest_mining_task() {
+        for pu in [PuClass::CpuCore, PuClass::Gpu] {
+            let knn = base_s(pu, TaskKind::Knn).unwrap();
+            assert!(knn > base_s(pu, TaskKind::Svm).unwrap());
+            assert!(knn > base_s(pu, TaskKind::Mlp).unwrap());
+        }
+    }
+
+    #[test]
+    fn multitenancy_monotone_decreasing() {
+        for k in 1..8 {
+            let a = multitenancy_rel_speed(presets::SERVER1, PuClass::Gpu, k);
+            let b = multitenancy_rel_speed(presets::SERVER1, PuClass::Gpu, k + 1);
+            assert!(b < a || (k == 0));
+        }
+        // servers tolerate co-tenancy better than edges
+        assert!(
+            multitenancy_rel_speed(presets::SERVER1, PuClass::Gpu, 2)
+                > multitenancy_rel_speed(presets::ORIN_AGX, PuClass::Gpu, 2)
+        );
+    }
+
+    #[test]
+    fn vic_intensity_discounted() {
+        assert!(
+            memory_intensity(TaskKind::Reproject, PuClass::Vic)
+                < memory_intensity(TaskKind::Reproject, PuClass::CpuCore)
+        );
+    }
+
+    #[test]
+    fn servers_lack_accelerator_entries() {
+        assert!(standalone_s(presets::SERVER1, PuClass::Vic, TaskKind::Reproject).is_none());
+        assert!(standalone_s(presets::ORIN_AGX, PuClass::Vic, TaskKind::Reproject).is_some());
+    }
+}

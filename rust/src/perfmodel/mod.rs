@@ -1,0 +1,342 @@
+//! The modular performance-model interface (`Predictable` in §3.3).
+//!
+//! `predict()` takes the TASK (kind + size scale) and a UNIT and returns the
+//! *standalone* cost of running it on a PU — slowdown is deliberately
+//! decoupled and lives in [`crate::slowdown`] (§3.4 "Slowdown calculation").
+//! The default implementation is a profile table calibrated to the paper's
+//! Fig. 9 standalone latencies; a host-measured model (built from real PJRT
+//! executions of the AOT artifacts) can overlay it for the e2e examples.
+
+pub mod calibration;
+
+use std::collections::BTreeMap;
+
+use crate::hwgraph::PuClass;
+use crate::task::TaskSpec;
+
+/// What `predict()` should return (the paper's UNIT parameter).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    Seconds,
+    /// energy; modeled as time x PU-class power draw (used by reports only)
+    Joules,
+}
+
+/// The `Predictable` interface: standalone cost of a task on a PU of a
+/// given device model. Returns `None` when the PU class cannot run the task
+/// (not in its candidate set) or the model has no entry.
+pub trait PerfModel: Send + Sync {
+    fn predict(&self, task: &TaskSpec, device_model: &str, pu: PuClass, unit: Unit) -> Option<f64>;
+}
+
+/// Profile-table model calibrated to Fig. 9 (empirical profiling is what the
+/// paper uses in its experiments, §3.3).
+#[derive(Debug, Clone, Default)]
+pub struct ProfileModel {
+    /// optional overrides: (device_model, pu, task-kind-name) -> seconds
+    overrides: BTreeMap<(String, PuClass, &'static str), f64>,
+}
+
+impl ProfileModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Override one profile entry (used by the host-measured e2e path and
+    /// by ablations).
+    pub fn set(&mut self, device_model: &str, pu: PuClass, task_name: &'static str, secs: f64) {
+        self.overrides
+            .insert((device_model.to_string(), pu, task_name), secs);
+    }
+}
+
+impl PerfModel for ProfileModel {
+    fn predict(&self, task: &TaskSpec, device_model: &str, pu: PuClass, unit: Unit) -> Option<f64> {
+        if !task.kind.allowed_pus().contains(&pu) {
+            return None;
+        }
+        let base = self
+            .overrides
+            .get(&(device_model.to_string(), pu, task.kind.name()))
+            .copied()
+            .or_else(|| calibration::standalone_s(device_model, pu, task.kind))?;
+        // linear size scaling relative to the profiled unit workload
+        let secs = base * task.size_scale.max(0.0);
+        match unit {
+            Unit::Seconds => Some(secs),
+            Unit::Joules => Some(secs * calibration::power_w(device_model, pu)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::*;
+    use crate::task::{TaskKind, TaskSpec};
+
+    fn t(kind: TaskKind) -> TaskSpec {
+        TaskSpec::new(kind)
+    }
+
+    #[test]
+    fn render_only_on_gpu() {
+        let m = ProfileModel::new();
+        assert!(m
+            .predict(&t(TaskKind::Render), ORIN_AGX, PuClass::Gpu, Unit::Seconds)
+            .is_some());
+        assert!(m
+            .predict(
+                &t(TaskKind::Render),
+                ORIN_AGX,
+                PuClass::CpuCore,
+                Unit::Seconds
+            )
+            .is_none());
+    }
+
+    #[test]
+    fn size_scale_is_linear() {
+        let m = ProfileModel::new();
+        let one = m
+            .predict(&t(TaskKind::Svm), ORIN_NANO, PuClass::Gpu, Unit::Seconds)
+            .unwrap();
+        let five = m
+            .predict(
+                &t(TaskKind::Svm).scale(5.0),
+                ORIN_NANO,
+                PuClass::Gpu,
+                Unit::Seconds,
+            )
+            .unwrap();
+        assert!((five / one - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn server_gpus_beat_edge_gpus_on_render() {
+        let m = ProfileModel::new();
+        let edge = m
+            .predict(&t(TaskKind::Render), ORIN_AGX, PuClass::Gpu, Unit::Seconds)
+            .unwrap();
+        let srv = m
+            .predict(&t(TaskKind::Render), SERVER1, PuClass::Gpu, Unit::Seconds)
+            .unwrap();
+        assert!(srv < edge, "server render {srv} should beat edge {edge}");
+    }
+
+    #[test]
+    fn edge_render_misses_its_frame_budget() {
+        // the premise of the whole VR scenario: edges cannot render in time
+        let m = ProfileModel::new();
+        for model in EDGE_MODELS {
+            let r = m
+                .predict(&t(TaskKind::Render), model, PuClass::Gpu, Unit::Seconds)
+                .unwrap();
+            let period = 1.0 / crate::task::workloads::target_fps(model);
+            assert!(r > period, "{model}: render {r} fits {period}");
+        }
+    }
+
+    #[test]
+    fn overrides_take_precedence() {
+        let mut m = ProfileModel::new();
+        m.set(ORIN_AGX, PuClass::Gpu, "render", 0.001);
+        let v = m
+            .predict(&t(TaskKind::Render), ORIN_AGX, PuClass::Gpu, Unit::Seconds)
+            .unwrap();
+        assert_eq!(v, 0.001);
+    }
+
+    #[test]
+    fn joules_scale_with_power() {
+        let m = ProfileModel::new();
+        let s = m
+            .predict(&t(TaskKind::Mlp), ORIN_AGX, PuClass::Gpu, Unit::Seconds)
+            .unwrap();
+        let j = m
+            .predict(&t(TaskKind::Mlp), ORIN_AGX, PuClass::Gpu, Unit::Joules)
+            .unwrap();
+        assert!(j > s); // GPU power > 1 W
+    }
+
+    #[test]
+    fn reproject_cpu_beats_vic_standalone() {
+        // §5.3.1: LaTS prefers the CPU because its *standalone* time is
+        // better than the VIC's — the trap H-EYE avoids under contention.
+        let m = ProfileModel::new();
+        let cpu = m
+            .predict(
+                &t(TaskKind::Reproject),
+                ORIN_AGX,
+                PuClass::CpuCore,
+                Unit::Seconds,
+            )
+            .unwrap();
+        let vic = m
+            .predict(&t(TaskKind::Reproject), ORIN_AGX, PuClass::Vic, Unit::Seconds)
+            .unwrap();
+        assert!(cpu < vic);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// roofline model
+// ---------------------------------------------------------------------------
+
+/// Per-task compute/memory characteristics for the roofline model:
+/// FLOPs and bytes moved per unit-scale instance.
+fn task_flops_bytes(kind: crate::task::TaskKind) -> (f64, f64) {
+    use crate::task::TaskKind::*;
+    // derived from the L2 model shapes (see python/compile/model.py and
+    // artifacts/manifest.json): render/encode/decode are 256x256 dense
+    // mixes, the classifiers are (32, 64) batches
+    match kind {
+        Render => (67.1e6, 2.1e6),
+        Encode | Decode => (67.1e6, 1.6e6),
+        Reproject => (33.6e6, 1.3e6),
+        PosePredict => (36.9e3, 120.0e3),
+        Svm => (1.18e6, 180.0e3),
+        Knn => (2.10e6, 300.0e3),
+        Mlp => (1.08e6, 140.0e3),
+        Capture | Display | SensorRead => (0.26e6, 260.0e3),
+        MatMul => (33.6e6, 800.0e3),
+        DnnInfer => (134.0e6, 4.0e6),
+    }
+}
+
+/// Peak compute (GFLOP/s) and memory bandwidth (GB/s) per (device, PU).
+fn pu_peaks(device_model: &str, pu: PuClass) -> Option<(f64, f64)> {
+    let f = calibration::device_factor(device_model)?;
+    // Orin-AGX-class reference peaks, scaled inversely with the device
+    // latency factor (a faster device has proportionally higher peaks)
+    let (gflops, gbs) = match pu {
+        PuClass::CpuCore => (25.0, 20.0),
+        PuClass::Gpu => (1000.0, 100.0),
+        PuClass::Dla => (500.0, 60.0),
+        PuClass::Pva => (100.0, 30.0),
+        PuClass::Vic => (80.0, 40.0),
+    };
+    Some((gflops / f, gbs / f))
+}
+
+/// Roofline performance model (§3.3 lists it as one of the pluggable
+/// `predict()` backends): latency = max(flops / peak_flops,
+/// bytes / peak_bandwidth). Useful when no profile exists for a task; the
+/// arithmetic-intensity crossover decides compute- vs memory-bound.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RooflineModel;
+
+impl RooflineModel {
+    /// Arithmetic intensity (FLOP/byte) of a task.
+    pub fn intensity(kind: crate::task::TaskKind) -> f64 {
+        let (f, b) = task_flops_bytes(kind);
+        f / b
+    }
+
+    /// Machine balance (FLOP/byte) of a PU: the roofline ridge point.
+    pub fn balance(device_model: &str, pu: PuClass) -> Option<f64> {
+        let (gf, gb) = pu_peaks(device_model, pu)?;
+        Some(gf / gb)
+    }
+}
+
+impl PerfModel for RooflineModel {
+    fn predict(&self, task: &TaskSpec, device_model: &str, pu: PuClass, unit: Unit) -> Option<f64> {
+        if !task.kind.allowed_pus().contains(&pu) {
+            return None;
+        }
+        let (flops, bytes) = task_flops_bytes(task.kind);
+        let (gflops, gbs) = pu_peaks(device_model, pu)?;
+        let scale = task.size_scale.max(0.0);
+        let compute_s = flops * scale / (gflops * 1e9);
+        let memory_s = bytes * scale / (gbs * 1e9);
+        let secs = compute_s.max(memory_s);
+        match unit {
+            Unit::Seconds => Some(secs),
+            Unit::Joules => Some(secs * calibration::power_w(device_model, pu)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod roofline_tests {
+    use super::*;
+    use crate::hwgraph::presets::*;
+    use crate::task::{TaskKind, TaskSpec};
+
+    #[test]
+    fn roofline_respects_candidate_sets() {
+        let m = RooflineModel;
+        let t = TaskSpec::new(TaskKind::Render);
+        assert!(m.predict(&t, ORIN_AGX, PuClass::Gpu, Unit::Seconds).is_some());
+        assert!(m.predict(&t, ORIN_AGX, PuClass::CpuCore, Unit::Seconds).is_none());
+    }
+
+    #[test]
+    fn roofline_orders_devices_like_profiles() {
+        let m = RooflineModel;
+        let t = TaskSpec::new(TaskKind::Render);
+        let agx = m.predict(&t, ORIN_AGX, PuClass::Gpu, Unit::Seconds).unwrap();
+        let nano = m.predict(&t, ORIN_NANO, PuClass::Gpu, Unit::Seconds).unwrap();
+        let srv = m.predict(&t, SERVER2, PuClass::Gpu, Unit::Seconds).unwrap();
+        assert!(srv < agx && agx < nano);
+    }
+
+    #[test]
+    fn compute_bound_vs_memory_bound_split() {
+        // render has high arithmetic intensity: compute-bound on the GPU;
+        // capture is streaming: memory-bound everywhere
+        assert!(
+            RooflineModel::intensity(TaskKind::Render)
+                > RooflineModel::balance(ORIN_AGX, PuClass::Gpu).unwrap()
+        );
+        assert!(
+            RooflineModel::intensity(TaskKind::Capture)
+                < RooflineModel::balance(ORIN_AGX, PuClass::CpuCore).unwrap()
+        );
+    }
+
+    #[test]
+    fn roofline_scales_linearly() {
+        let m = RooflineModel;
+        let one = m
+            .predict(&TaskSpec::new(TaskKind::Knn), ORIN_AGX, PuClass::Gpu, Unit::Seconds)
+            .unwrap();
+        let three = m
+            .predict(
+                &TaskSpec::new(TaskKind::Knn).scale(3.0),
+                ORIN_AGX,
+                PuClass::Gpu,
+                Unit::Seconds,
+            )
+            .unwrap();
+        assert!((three / one - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roofline_usable_as_traverser_backend() {
+        // the modular-interface claim: swap the profile model for the
+        // roofline model and predictions still work end to end
+        use crate::hwgraph::presets::{Decs, DecsSpec};
+        use crate::netsim::Network;
+        use crate::slowdown::CachedSlowdown;
+        use crate::task::workloads;
+        use crate::traverser::Traverser;
+        let decs = Decs::build(&DecsSpec::validation_pair());
+        let slow = CachedSlowdown::new(&decs.graph);
+        let net = Network::new();
+        let roof = RooflineModel;
+        let tr = Traverser::new(&slow, &roof, &net);
+        let cfg = workloads::mining_cfg(1.0);
+        let pus = [
+            decs.graph.by_name("edge0.cpu0").unwrap(),
+            decs.graph.by_name("edge0.cpu1").unwrap(),
+            decs.graph.by_name("edge0.gpu").unwrap(),
+            decs.graph.by_name("edge0.gpu").unwrap(),
+        ];
+        let p = tr
+            .predict(&cfg, &pus, decs.edge_devices[0], &[], 0.0)
+            .expect("roofline-backed prediction");
+        assert!(p.makespan > 0.0 && p.makespan.is_finite());
+    }
+}

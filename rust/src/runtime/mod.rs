@@ -1,0 +1,364 @@
+//! PJRT runtime: loads the AOT artifacts compiled by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt` + `manifest.json`) and executes them on the host
+//! CPU through the `xla` crate. Python is never on this path — the rust
+//! binary is self-contained once `make artifacts` has run.
+//!
+//! The runtime serves two roles:
+//! * the e2e examples execute every task's *real* compute kernel through
+//!   PJRT while the coordinator handles placement, and
+//! * [`HostProfiler`] measures per-artifact host latencies and overlays
+//!   them onto the [`ProfileModel`] (the paper's empirical-profiling
+//!   methodology, §3.3, applied to this testbed).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::perfmodel::ProfileModel;
+use crate::task::TaskKind;
+use crate::util::json::Json;
+
+/// Tensor spec from the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled model from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub app: String,
+    pub task: String,
+    pub hlo_file: String,
+    pub flops: u64,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("tensor list"))?;
+    arr.iter()
+        .map(|t| {
+            let dtype = t
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| anyhow!("dtype"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("shape"))?
+                .iter()
+                .map(|v| v.as_u64().unwrap_or(0) as usize)
+                .collect();
+            Ok(TensorSpec { dtype, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e:?}"))?;
+        let models = j
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("manifest has no `models`"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, m) in models {
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                app: m.get("app").and_then(|v| v.as_str()).unwrap_or("").into(),
+                task: m.get("task").and_then(|v| v.as_str()).unwrap_or("").into(),
+                hlo_file: m
+                    .get("hlo_file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("{name}: hlo_file"))?
+                    .into(),
+                flops: m.get("flops").and_then(|v| v.as_u64()).unwrap_or(0),
+                inputs: tensor_specs(m.req("inputs").map_err(|e| anyhow!(e))?)?,
+                outputs: tensor_specs(m.req("outputs").map_err(|e| anyhow!(e))?)?,
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Artifact backing a given task kind, if one was compiled.
+    pub fn for_task(&self, kind: TaskKind) -> Option<&ArtifactSpec> {
+        self.artifacts.values().find(|a| a.task == kind.name())
+    }
+}
+
+/// A compiled executable plus its spec.
+pub struct LoadedModel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Deterministic synthetic input literals matching the manifest shapes.
+    pub fn synthetic_inputs(&self) -> Result<Vec<xla::Literal>> {
+        self.spec
+            .inputs
+            .iter()
+            .map(|t| {
+                let n = t.elements();
+                let data: Vec<f32> = (0..n).map(|i| ((i % 13) as f32) * 0.1 - 0.6).collect();
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+            })
+            .collect()
+    }
+
+    /// Build an input literal of this model's `idx`-th input shape from a
+    /// flat f32 buffer (truncated / cycled to fit).
+    pub fn input_from(&self, idx: usize, data: &[f32]) -> Result<xla::Literal> {
+        let t = self
+            .spec
+            .inputs
+            .get(idx)
+            .ok_or_else(|| anyhow!("{}: no input {idx}", self.spec.name))?;
+        let n = t.elements();
+        let buf: Vec<f32> = (0..n)
+            .map(|i| if data.is_empty() { 0.0 } else { data[i % data.len()] })
+            .collect();
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&buf).reshape(&dims)?)
+    }
+
+    /// Execute with caller-provided literals; returns all outputs (the AOT
+    /// path lowers with `return_tuple=True`) and host wall-clock seconds.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<(Vec<xla::Literal>, f64)> {
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        Ok((result.to_tuple()?, dt))
+    }
+
+    /// Execute with deterministic synthetic inputs; returns the first
+    /// output flattened to f32 and the host wall-clock seconds.
+    pub fn run(&self) -> Result<(Vec<f32>, f64)> {
+        let inputs = self.synthetic_inputs()?;
+        let (outs, dt) = self.execute(&inputs)?;
+        let first = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: empty output tuple", self.spec.name))?;
+        Ok((first.to_vec::<f32>()?, dt))
+    }
+}
+
+/// The artifact store: a PJRT CPU client plus lazily compiled executables.
+pub struct Runtime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    loaded: BTreeMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Open `dir` (usually `artifacts/`), parse the manifest, create the
+    /// PJRT CPU client. Compilation happens lazily per artifact.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            dir,
+            client,
+            manifest,
+            loaded: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+
+    /// Compile (once) and return the loaded model.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+        if !self.loaded.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+                .clone();
+            let path = self.dir.join(&spec.hlo_file);
+            if !path.exists() {
+                bail!("{} missing — run `make artifacts`", path.display());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.loaded.insert(name.to_string(), LoadedModel { spec, exe });
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Execute one artifact; returns (first output, host seconds).
+    pub fn run(&mut self, name: &str) -> Result<(Vec<f32>, f64)> {
+        self.load(name)?.run()
+    }
+}
+
+/// Host-measured profile overlay: runs every artifact a few times and maps
+/// the median host latency onto each (device model, PU) via the calibrated
+/// device factors, giving the e2e examples a profile grounded in *real*
+/// executions of *real* kernels.
+pub struct HostProfiler {
+    /// median host seconds per artifact
+    pub host_s: BTreeMap<String, f64>,
+}
+
+impl HostProfiler {
+    pub fn measure(rt: &mut Runtime, reps: usize) -> Result<HostProfiler> {
+        let mut host_s = BTreeMap::new();
+        for name in rt.artifact_names() {
+            let mut samples: Vec<f64> = Vec::with_capacity(reps);
+            // warm-up run includes compilation; excluded from the median
+            let _ = rt.run(&name)?;
+            for _ in 0..reps.max(1) {
+                let (_, dt) = rt.run(&name)?;
+                samples.push(dt);
+            }
+            samples.sort_by(f64::total_cmp);
+            host_s.insert(name, samples[samples.len() / 2]);
+        }
+        Ok(HostProfiler { host_s })
+    }
+
+    /// Overlay host-derived standalone latencies onto `perf`: each task
+    /// kind backed by an artifact gets `host_median x device_factor x
+    /// pu_ratio`, preserving the calibrated cross-device/PU relationships
+    /// while anchoring absolute scale to measured kernel executions.
+    pub fn overlay(&self, perf: &mut ProfileModel, manifest: &Manifest) {
+        use crate::hwgraph::presets::{EDGE_MODELS, SERVER_MODELS};
+        use crate::perfmodel::calibration;
+        use crate::perfmodel::{PerfModel, Unit};
+        for (name, &host) in &self.host_s {
+            let spec = match manifest.artifacts.get(name) {
+                Some(s) => s,
+                None => continue,
+            };
+            let kind = match TaskKind::ALL.iter().find(|k| k.name() == spec.task) {
+                Some(&k) => k,
+                None => continue,
+            };
+            // reference point: the task's fastest Orin-AGX PU in the table
+            let base = ProfileModel::new();
+            let t = crate::task::TaskSpec::new(kind);
+            let reference = kind
+                .allowed_pus()
+                .iter()
+                .filter_map(|&pu| {
+                    base.predict(&t, crate::hwgraph::presets::ORIN_AGX, pu, Unit::Seconds)
+                })
+                .fold(f64::INFINITY, f64::min);
+            if !reference.is_finite() || reference <= 0.0 {
+                continue;
+            }
+            let anchor = host / reference;
+            for model in EDGE_MODELS.iter().chain(SERVER_MODELS.iter()) {
+                for &pu in kind.allowed_pus() {
+                    if let Some(cal) =
+                        calibration::standalone_s(model, pu, kind)
+                    {
+                        perf.set(model, pu, kind.name(), cal * anchor);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_parses_and_covers_both_apps() {
+        let m = Manifest::load(&artifacts_dir()).expect("manifest");
+        assert!(m.artifacts.len() >= 8, "have {}", m.artifacts.len());
+        assert!(m.artifacts.values().any(|a| a.app == "vr"));
+        assert!(m.artifacts.values().any(|a| a.app == "mining"));
+        for a in m.artifacts.values() {
+            assert!(!a.inputs.is_empty());
+            assert!(!a.outputs.is_empty());
+            assert!(a.flops > 0);
+        }
+    }
+
+    #[test]
+    fn manifest_maps_task_kinds() {
+        let m = Manifest::load(&artifacts_dir()).expect("manifest");
+        for kind in [
+            TaskKind::Render,
+            TaskKind::Encode,
+            TaskKind::Decode,
+            TaskKind::Reproject,
+            TaskKind::PosePredict,
+            TaskKind::Svm,
+            TaskKind::Knn,
+            TaskKind::Mlp,
+        ] {
+            assert!(m.for_task(kind).is_some(), "no artifact for {kind:?}");
+        }
+    }
+
+    #[test]
+    fn runtime_executes_every_artifact() {
+        let mut rt = Runtime::open(artifacts_dir()).expect("runtime");
+        for name in rt.artifact_names() {
+            let (out, dt) = rt.run(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!out.is_empty(), "{name}: empty output");
+            assert!(out.iter().all(|v| v.is_finite()), "{name}: non-finite");
+            assert!(dt > 0.0);
+        }
+    }
+
+    #[test]
+    fn host_profile_overlays_anchor_scale() {
+        let mut rt = Runtime::open(artifacts_dir()).expect("runtime");
+        let prof = HostProfiler::measure(&mut rt, 3).expect("profile");
+        assert_eq!(prof.host_s.len(), rt.artifact_names().len());
+        let mut perf = ProfileModel::new();
+        prof.overlay(&mut perf, &rt.manifest);
+        // overlaid entries keep the server < edge relationship
+        use crate::hwgraph::presets::{ORIN_AGX, SERVER1};
+        use crate::hwgraph::PuClass;
+        use crate::perfmodel::{PerfModel, Unit};
+        let t = crate::task::TaskSpec::new(TaskKind::Render);
+        let edge = perf.predict(&t, ORIN_AGX, PuClass::Gpu, Unit::Seconds).unwrap();
+        let srv = perf.predict(&t, SERVER1, PuClass::Gpu, Unit::Seconds).unwrap();
+        assert!(srv < edge);
+    }
+}

@@ -1,0 +1,210 @@
+//! Simulation metrics: per-frame latency breakdowns, QoS accounting,
+//! scheduling overhead — everything the paper's figures report.
+
+use std::collections::BTreeMap;
+
+use crate::hwgraph::NodeId;
+use crate::util::stats::{Samples, Summary};
+
+/// Per-frame record emitted when the last task of a frame completes (or the
+/// frame is dropped).
+#[derive(Debug, Clone)]
+pub struct FrameRecord {
+    pub origin: NodeId,
+    pub release_t: f64,
+    pub finish_t: f64,
+    /// end-to-end latency (finish - release)
+    pub latency_s: f64,
+    /// QoS budget this frame had to meet
+    pub budget_s: f64,
+    /// standalone-equivalent compute seconds across its tasks
+    pub compute_s: f64,
+    /// extra seconds lost to shared-resource slowdown
+    pub slowdown_s: f64,
+    /// network transfer seconds on the critical path
+    pub comm_s: f64,
+    /// scheduling (orchestrator) seconds
+    pub sched_s: f64,
+    /// seconds of edge-side vs server-side execution (bottleneck attribution)
+    pub edge_busy_s: f64,
+    pub server_busy_s: f64,
+    /// true if any task had to be placed best-effort (constraints unmet)
+    pub degraded: bool,
+    /// frame resolution in (0, 1] (CloudVR shrinks this; everyone else 1.0)
+    pub resolution: f64,
+    /// the scheduler's own end-to-end latency prediction for this frame
+    /// (critical path over its per-task predictions; Fig. 10 validation)
+    pub predicted_s: f64,
+}
+
+impl FrameRecord {
+    pub fn qos_ok(&self) -> bool {
+        self.latency_s <= self.budget_s + 1e-9
+    }
+}
+
+/// Aggregated run metrics.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub frames: Vec<FrameRecord>,
+    /// per-device released frame counts
+    pub released: BTreeMap<NodeId, u64>,
+    /// total scheduling overhead components across all MapTask calls
+    pub sched_comm_s: f64,
+    pub sched_compute_s: f64,
+    pub sched_hops: u64,
+    pub traverser_calls: u64,
+    /// task-level execution seconds per device (busy accounting)
+    pub busy_by_device: BTreeMap<NodeId, f64>,
+    /// how many tasks were mapped to edges vs servers
+    pub tasks_on_edge: u64,
+    pub tasks_on_server: u64,
+    /// frames released but not completed by the horizon (and past budget)
+    pub dropped: u64,
+    /// task placement counts: (task kind, pu class, on-server?) -> count
+    pub placements: BTreeMap<(String, String, bool), u64>,
+}
+
+impl RunMetrics {
+    pub fn qos_failure_rate(&self) -> f64 {
+        let total = self.frames.len() as u64 + self.dropped;
+        if total == 0 {
+            return 0.0;
+        }
+        let bad = self.frames.iter().filter(|f| !f.qos_ok()).count() as u64 + self.dropped;
+        bad as f64 / total as f64
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        let mut s = Samples::new();
+        for f in &self.frames {
+            s.push(f.latency_s);
+        }
+        s.summary()
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.frames.is_empty() {
+            return 0.0;
+        }
+        self.frames.iter().map(|f| f.latency_s).sum::<f64>() / self.frames.len() as f64
+    }
+
+    /// Scheduling overhead as a fraction of total compute time (the Fig. 14
+    /// metric: assignment time over task execution time).
+    pub fn overhead_ratio(&self) -> f64 {
+        let compute: f64 = self.frames.iter().map(|f| f.compute_s).sum();
+        if compute <= 0.0 {
+            return 0.0;
+        }
+        (self.sched_comm_s + self.sched_compute_s) / compute
+    }
+
+    /// Fraction of scheduling overhead that is communication (paper: >90%).
+    pub fn overhead_comm_fraction(&self) -> f64 {
+        let total = self.sched_comm_s + self.sched_compute_s;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.sched_comm_s / total
+    }
+
+    /// Mean achieved inter-completion rate for one origin device (FPS).
+    pub fn achieved_fps(&self, origin: NodeId, horizon_s: f64) -> f64 {
+        let n = self
+            .frames
+            .iter()
+            .filter(|f| f.origin == origin && f.qos_ok())
+            .count();
+        n as f64 / horizon_s
+    }
+
+    /// Frames grouped per origin.
+    pub fn frames_of(&self, origin: NodeId) -> Vec<&FrameRecord> {
+        self.frames.iter().filter(|f| f.origin == origin).collect()
+    }
+
+    /// Mean absolute relative prediction error |pred - actual| / actual
+    /// over completed frames — the Fig. 10 validation metric.
+    pub fn prediction_error(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for f in &self.frames {
+            if f.latency_s > 0.0 && f.predicted_s > 0.0 {
+                sum += (f.predicted_s - f.latency_s).abs() / f.latency_s;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Edge-vs-server balance (Fig. 11a: "average latency difference
+    /// between edges and servers per frame").
+    pub fn edge_server_imbalance(&self) -> f64 {
+        let (mut e, mut s, mut n) = (0.0, 0.0, 0usize);
+        for f in &self.frames {
+            e += f.edge_busy_s;
+            s += f.server_busy_s;
+            n += 1;
+        }
+        if n == 0 || (e + s) <= 0.0 {
+            return 0.0;
+        }
+        (e - s).abs() / (e + s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(lat: f64, budget: f64) -> FrameRecord {
+        FrameRecord {
+            origin: NodeId(0),
+            release_t: 0.0,
+            finish_t: lat,
+            latency_s: lat,
+            budget_s: budget,
+            compute_s: lat * 0.8,
+            slowdown_s: lat * 0.1,
+            comm_s: lat * 0.05,
+            sched_s: lat * 0.05,
+            edge_busy_s: lat * 0.5,
+            server_busy_s: lat * 0.3,
+            degraded: false,
+            resolution: 1.0,
+            predicted_s: lat,
+        }
+    }
+
+    #[test]
+    fn qos_rate_counts_misses() {
+        let mut m = RunMetrics::default();
+        m.frames.push(frame(0.03, 0.05));
+        m.frames.push(frame(0.08, 0.05));
+        assert!((m.qos_failure_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overhead_ratio_is_relative_to_compute() {
+        let mut m = RunMetrics::default();
+        m.frames.push(frame(0.1, 1.0));
+        m.sched_comm_s = 0.0018;
+        m.sched_compute_s = 0.0002;
+        let r = m.overhead_ratio();
+        assert!((r - 0.002 / 0.08).abs() < 1e-9);
+        assert!((m.overhead_comm_fraction() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = RunMetrics::default();
+        assert_eq!(m.qos_failure_rate(), 0.0);
+        assert_eq!(m.overhead_ratio(), 0.0);
+        assert_eq!(m.mean_latency_s(), 0.0);
+    }
+}

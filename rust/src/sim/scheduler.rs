@@ -1,0 +1,148 @@
+//! The scheduler interface the simulator drives, and the H-EYE
+//! implementation (a thin wrapper over the Orchestrator).
+//!
+//! Baselines (ACE / LaTS / CloudVR) implement the same trait in
+//! [`crate::baselines`], so every figure harness swaps schedulers with one
+//! line.
+
+use crate::hwgraph::{HwGraph, NodeId};
+use crate::netsim::Network;
+use crate::orchestrator::{Loads, MapResult, Orchestrator, Overhead};
+use crate::task::TaskSpec;
+use crate::traverser::Traverser;
+
+/// A task-to-PU mapper, invoked by the simulator when a task becomes ready.
+pub trait Scheduler {
+    fn name(&self) -> String;
+
+    /// Choose a PU for `task` generated on `origin`, whose input data
+    /// currently lives on `data_dev` (the device that ran its last
+    /// predecessor; equals `origin` for root tasks). `loads` is the current
+    /// system snapshot (what each scheduler is *allowed* to see is up to
+    /// its implementation — H-EYE's ORCs only look at one device at a time).
+    fn assign(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin: NodeId,
+        data_dev: NodeId,
+        now: f64,
+        loads: &Loads,
+    ) -> MapResult;
+
+    /// Frame resolution in (0, 1] for the next frame of `origin` — CloudVR
+    /// shrinks this under bandwidth pressure; everyone else stays at 1.0.
+    fn frame_resolution(&mut self, _origin: NodeId, _g: &HwGraph, _net: &Network) -> f64 {
+        1.0
+    }
+
+    /// Notification that the network changed (Fig. 12 dynamics).
+    fn on_network_change(&mut self, _g: &HwGraph, _net: &Network) {}
+
+    /// Notification that a device joined (Fig. 12c).
+    fn on_device_join(&mut self, _g: &HwGraph, _dev: NodeId) {}
+}
+
+/// H-EYE: the Orchestrator as a Scheduler.
+pub struct HeyeScheduler {
+    pub orc: Orchestrator,
+}
+
+impl HeyeScheduler {
+    pub fn new(orc: Orchestrator) -> Self {
+        Self { orc }
+    }
+}
+
+impl Scheduler for HeyeScheduler {
+    fn name(&self) -> String {
+        format!("h-eye/{}", self.orc.policy.name())
+    }
+
+    fn assign(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin: NodeId,
+        data_dev: NodeId,
+        now: f64,
+        loads: &Loads,
+    ) -> MapResult {
+        self.orc.map_task(tr, task, origin, data_dev, now, loads)
+    }
+
+    fn on_device_join(&mut self, g: &HwGraph, dev: NodeId) {
+        self.orc.hierarchy.join_device(g, dev);
+    }
+}
+
+/// Best-effort fallback used by the engine when a scheduler rejects a task:
+/// place on the least-bad PU (min predicted finish ignoring constraints)
+/// among the origin device and all servers. Keeps the system delivering
+/// (late) frames so experiments can *measure* the miss, as Fig. 10 does.
+pub fn best_effort(
+    tr: &Traverser,
+    task: &TaskSpec,
+    origin: NodeId,
+    data_dev: NodeId,
+    candidates: &[NodeId],
+    now: f64,
+    loads: &Loads,
+) -> MapResult {
+    let g = tr.slow.graph();
+    let mut cfg = crate::task::Cfg::new();
+    cfg.add(task.clone());
+    // two tiers of degradation: prefer placements that only sacrifice the
+    // new task's own deadline; harm existing (feasible) tasks only as the
+    // very last resort
+    let mut best: Option<(NodeId, f64)> = None;
+    let mut best_harmless: Option<(NodeId, f64)> = None;
+    let mut calls = 0u32;
+    for &dev in std::iter::once(&origin).chain(candidates.iter()) {
+        for pu in g.pus_in(dev) {
+            let class = match g.pu_class(pu) {
+                Some(c) => c,
+                None => continue,
+            };
+            if !task.kind.allowed_pus().contains(&class) {
+                continue;
+            }
+            calls += 1;
+            if let Some(p) = tr.predict(&cfg, &[pu], data_dev, loads.device(dev), now) {
+                let lat = p.finish[0] - now;
+                if best.map(|(_, b)| lat < b).unwrap_or(true) {
+                    best = Some((pu, lat));
+                }
+                if p.active_deadlines_ok
+                    && best_harmless.map(|(_, b)| lat < b).unwrap_or(true)
+                {
+                    best_harmless = Some((pu, lat));
+                }
+            }
+        }
+        if task.kind.pinned_to_origin() {
+            break;
+        }
+    }
+    let best = best_harmless.or(best);
+    let (pu, lat) = match best {
+        Some(x) => x,
+        None => {
+            return MapResult {
+                pu: None,
+                predicted_latency_s: f64::INFINITY,
+                overhead: Overhead::default(),
+            }
+        }
+    };
+    MapResult {
+        pu: Some(pu),
+        predicted_latency_s: lat,
+        overhead: Overhead {
+            comm_s: 0.0,
+            compute_s: 0.0,
+            hops: 0,
+            traverser_calls: calls,
+        },
+    }
+}

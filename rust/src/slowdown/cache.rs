@@ -1,0 +1,167 @@
+//! Cached slowdown evaluation for the Traverser/simulator hot path.
+//!
+//! `nearest_shared_kind` runs Dijkstra over the device sub-graph; at
+//! simulation scale (hundreds of devices x thousands of task placements)
+//! that must not happen per query. `CachedSlowdown` memoizes the
+//! per-PU-pair nearest shared resource kind and each PU's class/model, and
+//! then evaluates exactly the same math as the `SlowdownStack` default
+//! models (a unit test asserts equivalence).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::hwgraph::{HwGraph, NodeId, PuClass, ResourceKind};
+use crate::perfmodel::calibration;
+
+use super::{nearest_shared_kind, Placed};
+
+#[derive(Debug, Clone, Copy)]
+struct PuInfo {
+    class: PuClass,
+    /// index into the model-name interning table
+    model_idx: u32,
+}
+
+/// Memoized slowdown oracle bound to one graph.
+pub struct CachedSlowdown<'g> {
+    g: &'g HwGraph,
+    pair_kind: RefCell<BTreeMap<(u32, u32), Option<ResourceKind>>>,
+    pu_info: RefCell<BTreeMap<u32, PuInfo>>,
+    models: RefCell<Vec<String>>,
+}
+
+impl<'g> CachedSlowdown<'g> {
+    pub fn new(g: &'g HwGraph) -> Self {
+        Self {
+            g,
+            pair_kind: RefCell::new(BTreeMap::new()),
+            pu_info: RefCell::new(BTreeMap::new()),
+            models: RefCell::new(Vec::new()),
+        }
+    }
+
+    pub fn graph(&self) -> &'g HwGraph {
+        self.g
+    }
+
+    fn info(&self, pu: NodeId) -> PuInfo {
+        if let Some(i) = self.pu_info.borrow().get(&pu.0) {
+            return *i;
+        }
+        let class = self
+            .g
+            .pu_class(pu)
+            .unwrap_or_else(|| panic!("{} is not a PU", self.g.node(pu).name));
+        let model = self.g.device_model_of(pu).unwrap_or("").to_string();
+        let mut models = self.models.borrow_mut();
+        let model_idx = match models.iter().position(|m| *m == model) {
+            Some(i) => i as u32,
+            None => {
+                models.push(model);
+                (models.len() - 1) as u32
+            }
+        };
+        let info = PuInfo { class, model_idx };
+        self.pu_info.borrow_mut().insert(pu.0, info);
+        info
+    }
+
+    fn shared_kind(&self, a: NodeId, b: NodeId) -> Option<ResourceKind> {
+        let key = if a.0 <= b.0 { (a.0, b.0) } else { (b.0, a.0) };
+        if let Some(k) = self.pair_kind.borrow().get(&key) {
+            return *k;
+        }
+        let k = nearest_shared_kind(self.g, a, b);
+        self.pair_kind.borrow_mut().insert(key, k);
+        k
+    }
+
+    /// Total slowdown multiplier (>= 1): multi-tenancy x memory contention.
+    /// Matches `SlowdownStack::new().factor(...)` exactly.
+    pub fn factor(&self, target: &Placed, co: &[Placed]) -> f64 {
+        let t_info = self.info(target.pu);
+        let t_sens = calibration::contention_sensitivity(target.kind, t_info.class);
+
+        let mut tenants = 1usize;
+        let mut mem = 1.0f64;
+        for c in co {
+            if c.pu == target.pu {
+                tenants += 1;
+                continue;
+            }
+            let kind = match self.shared_kind(target.pu, c.pu) {
+                Some(k) if k != ResourceKind::NetLink => k,
+                _ => continue,
+            };
+            let c_info = self.info(c.pu);
+            let c_int = calibration::memory_intensity(c.kind, c_info.class);
+            mem *= 1.0 + (calibration::contention_factor(kind) - 1.0) * t_sens * c_int;
+        }
+        let mem = mem.min(calibration::MEM_CONTENTION_CAP);
+        let mt = if tenants > 1 {
+            let model = &self.models.borrow()[t_info.model_idx as usize];
+            1.0 / calibration::multitenancy_rel_speed(model, t_info.class, tenants)
+        } else {
+            1.0
+        };
+        (mt * mem).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::{Decs, DecsSpec};
+    use crate::slowdown::SlowdownStack;
+    use crate::task::TaskKind;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cached_matches_uncached_on_random_placements() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let g = &decs.graph;
+        let cached = CachedSlowdown::new(g);
+        let stack = SlowdownStack::new();
+        let kinds = [
+            TaskKind::Render,
+            TaskKind::Encode,
+            TaskKind::Reproject,
+            TaskKind::Svm,
+            TaskKind::Knn,
+            TaskKind::MatMul,
+            TaskKind::Display,
+        ];
+        let mut pus: Vec<NodeId> = Vec::new();
+        for &d in decs.edge_devices.iter().chain(decs.servers.iter()) {
+            pus.extend(g.pus_in(d));
+        }
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let target = Placed::new(*rng.choice(&kinds), *rng.choice(&pus));
+            let n_co = rng.below(5);
+            let co: Vec<Placed> = (0..n_co)
+                .map(|_| Placed::new(*rng.choice(&kinds), *rng.choice(&pus)))
+                .collect();
+            let a = cached.factor(&target, &co);
+            let b = stack.factor(g, &target, &co);
+            assert!(
+                (a - b).abs() < 1e-12,
+                "mismatch: cached={a} stack={b} target={target:?} co={co:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_is_populated_and_reused() {
+        let decs = Decs::build(&DecsSpec::validation_pair());
+        let cached = CachedSlowdown::new(&decs.graph);
+        let pus = decs.graph.pus_in(decs.edge_devices[0]);
+        let t = Placed::new(TaskKind::Svm, pus[0]);
+        let co = [Placed::new(TaskKind::Knn, pus[1])];
+        let f1 = cached.factor(&t, &co);
+        let entries = cached.pair_kind.borrow().len();
+        let f2 = cached.factor(&t, &co);
+        assert_eq!(f1, f2);
+        assert_eq!(cached.pair_kind.borrow().len(), entries);
+    }
+}

@@ -1,0 +1,309 @@
+//! Decoupled shared-resource slowdown models (§3.4 "Slowdown calculation").
+//!
+//! The paper's key modeling decision: standalone performance and
+//! shared-resource slowdown are modeled separately and composed. Each model
+//! here answers "by what factor does `target` slow down given these
+//! co-runners" — the composition point for PCCS-style memory contention
+//! (integrated via the HW-Graph's shared-resource discovery) and the
+//! multi-tenancy estimates used on server GPUs (§5.1).
+
+pub mod cache;
+
+pub use cache::CachedSlowdown;
+
+use crate::hwgraph::{HwGraph, NodeId, ResourceKind};
+use crate::perfmodel::calibration;
+use crate::task::TaskKind;
+
+/// A task placed on a PU, as seen by the slowdown models.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placed {
+    pub kind: TaskKind,
+    pub pu: NodeId,
+    /// workload scale (affects demand intensity saturation)
+    pub scale: f64,
+}
+
+impl Placed {
+    pub fn new(kind: TaskKind, pu: NodeId) -> Self {
+        Self {
+            kind,
+            pu,
+            scale: 1.0,
+        }
+    }
+}
+
+/// A slowdown model: multiplier >= 1 for `target` given co-runners `co`.
+/// Implementations must be order-insensitive in `co`.
+pub trait SlowdownModel: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn factor(&self, g: &HwGraph, target: &Placed, co: &[Placed]) -> f64;
+}
+
+/// Specificity order for "nearest shared resource": sharing an L2 implies
+/// sharing everything behind it, and the measured Fig. 2 numbers are keyed
+/// by the *closest* level two PUs collide at.
+fn specificity(kind: ResourceKind) -> u8 {
+    match kind {
+        ResourceKind::L2Cache => 0,
+        ResourceKind::Sram => 1,
+        ResourceKind::L3Cache => 2,
+        ResourceKind::Llc => 3,
+        ResourceKind::SysDram => 4,
+        ResourceKind::MemController => 5,
+        ResourceKind::NetLink => 6,
+    }
+}
+
+/// The nearest (most specific) resource kind two PUs share, if any.
+pub fn nearest_shared_kind(g: &HwGraph, a: NodeId, b: NodeId) -> Option<ResourceKind> {
+    g.shared_resource_kinds(a, b)
+        .into_iter()
+        .min_by_key(|k| specificity(*k))
+}
+
+/// Memory-hierarchy contention between *different* PUs of the same device:
+/// pairwise factors keyed by the nearest shared resource, scaled by both
+/// tasks' memory intensities, composed multiplicatively over co-runners.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemoryContention;
+
+impl SlowdownModel for MemoryContention {
+    fn name(&self) -> &'static str {
+        "memory-contention"
+    }
+
+    fn factor(&self, g: &HwGraph, target: &Placed, co: &[Placed]) -> f64 {
+        let t_class = match g.pu_class(target.pu) {
+            Some(c) => c,
+            None => return 1.0,
+        };
+        // how much the target *suffers* per unit of co-runner pressure
+        let t_sens = calibration::contention_sensitivity(target.kind, t_class);
+        let mut f = 1.0;
+        for c in co {
+            if c.pu == target.pu {
+                continue; // same-PU handled by MultiTenancy
+            }
+            let c_class = match g.pu_class(c.pu) {
+                Some(cc) => cc,
+                None => continue,
+            };
+            let kind = match nearest_shared_kind(g, target.pu, c.pu) {
+                Some(k) if k != ResourceKind::NetLink => k,
+                _ => continue, // different devices: no shared memory system
+            };
+            // how much pressure the co-runner *generates*
+            let c_int = calibration::memory_intensity(c.kind, c_class);
+            let pair = 1.0 + (calibration::contention_factor(kind) - 1.0) * t_sens * c_int;
+            f *= pair;
+        }
+        f.min(calibration::MEM_CONTENTION_CAP)
+    }
+}
+
+/// Multi-tenant execution on the *same* PU (GPU sharing on servers, CPU
+/// timeslicing, ...), per the calibration curves.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MultiTenancy;
+
+impl SlowdownModel for MultiTenancy {
+    fn name(&self) -> &'static str {
+        "multi-tenancy"
+    }
+
+    fn factor(&self, g: &HwGraph, target: &Placed, co: &[Placed]) -> f64 {
+        let class = match g.pu_class(target.pu) {
+            Some(c) => c,
+            None => return 1.0,
+        };
+        let tenants = 1 + co.iter().filter(|c| c.pu == target.pu).count();
+        if tenants == 1 {
+            return 1.0;
+        }
+        let model = g.device_model_of(target.pu).unwrap_or("").to_string();
+        1.0 / calibration::multitenancy_rel_speed(&model, class, tenants)
+    }
+}
+
+/// The composed stack used everywhere: multi-tenancy x memory contention.
+/// New models (e.g. an analytical cache model) plug in via `push`.
+pub struct SlowdownStack {
+    models: Vec<Box<dyn SlowdownModel>>,
+}
+
+impl Default for SlowdownStack {
+    fn default() -> Self {
+        Self {
+            models: vec![Box::new(MultiTenancy), Box::new(MemoryContention)],
+        }
+    }
+}
+
+impl SlowdownStack {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A stack with no models: predictions become contention-blind. This is
+    /// exactly what the ACE/LaTS baselines use.
+    pub fn blind() -> Self {
+        Self { models: Vec::new() }
+    }
+
+    pub fn push(&mut self, m: Box<dyn SlowdownModel>) {
+        self.models.push(m);
+    }
+
+    /// Total slowdown multiplier (>= 1) for `target` among `co`.
+    pub fn factor(&self, g: &HwGraph, target: &Placed, co: &[Placed]) -> f64 {
+        self.models
+            .iter()
+            .map(|m| m.factor(g, target, co))
+            .product::<f64>()
+            .max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::{add_edge_device, add_server, ORIN_AGX, SERVER1};
+    use crate::hwgraph::GraphBuilder;
+
+    fn orin() -> HwGraph {
+        let mut b = GraphBuilder::new();
+        add_edge_device(&mut b, "e0", ORIN_AGX, None);
+        b.finish()
+    }
+
+    fn pu(g: &HwGraph, n: &str) -> NodeId {
+        g.by_name(n).unwrap()
+    }
+
+    /// Each Fig. 2 experiment, reproduced through the full stack.
+    #[test]
+    fn fig2_composite_slowdowns() {
+        let g = orin();
+        let stack = SlowdownStack::new();
+        let mm = |p| Placed::new(TaskKind::MatMul, p);
+        let dnn = |p| Placed::new(TaskKind::DnnInfer, p);
+
+        // (1) MM on cpu0 + cpu1 (same cluster, shared L2): 0.91x
+        let f = stack.factor(&g, &mm(pu(&g, "e0.cpu0")), &[mm(pu(&g, "e0.cpu1"))]);
+        assert!((1.0 / f - 0.91).abs() < 0.01, "L2: rel={}", 1.0 / f);
+
+        // (2) MM on cpu0 + cpu4 (cross-cluster, shared L3): 0.87x
+        let f = stack.factor(&g, &mm(pu(&g, "e0.cpu0")), &[mm(pu(&g, "e0.cpu4"))]);
+        assert!((1.0 / f - 0.87).abs() < 0.01, "L3: rel={}", 1.0 / f);
+
+        // (3) two DNNs multi-tenant on the GPU: 0.66x
+        let f = stack.factor(&g, &dnn(pu(&g, "e0.gpu")), &[dnn(pu(&g, "e0.gpu"))]);
+        assert!((1.0 / f - 0.66).abs() < 0.01, "GPU MT: rel={}", 1.0 / f);
+
+        // (4) DNN on GPU + DNN on DLA through shared DRAM: 0.68x
+        let f = stack.factor(&g, &dnn(pu(&g, "e0.gpu")), &[dnn(pu(&g, "e0.dla"))]);
+        assert!((1.0 / f - 0.68).abs() < 0.01, "DRAM: rel={}", 1.0 / f);
+
+        // (5) MM on CPU + MM on GPU via the shared LLC: 0.89x
+        let f = stack.factor(&g, &mm(pu(&g, "e0.cpu0")), &[mm(pu(&g, "e0.gpu"))]);
+        assert!((1.0 / f - 0.89).abs() < 0.01, "LLC: rel={}", 1.0 / f);
+    }
+
+    #[test]
+    fn no_corunners_no_slowdown() {
+        let g = orin();
+        let stack = SlowdownStack::new();
+        let t = Placed::new(TaskKind::Render, pu(&g, "e0.gpu"));
+        assert_eq!(stack.factor(&g, &t, &[]), 1.0);
+    }
+
+    #[test]
+    fn cross_device_tasks_do_not_contend_in_memory() {
+        let mut b = GraphBuilder::new();
+        add_edge_device(&mut b, "e0", ORIN_AGX, None);
+        add_server(&mut b, "s0", SERVER1, None);
+        let g = b.finish();
+        let stack = SlowdownStack::new();
+        let t = Placed::new(TaskKind::Render, pu(&g, "e0.gpu"));
+        let co = [Placed::new(TaskKind::Render, pu(&g, "s0.gpu"))];
+        assert_eq!(stack.factor(&g, &t, &co), 1.0);
+    }
+
+    #[test]
+    fn light_tasks_contend_less_than_microbench() {
+        let g = orin();
+        let stack = SlowdownStack::new();
+        let heavy = stack.factor(
+            &g,
+            &Placed::new(TaskKind::MatMul, pu(&g, "e0.cpu0")),
+            &[Placed::new(TaskKind::MatMul, pu(&g, "e0.gpu"))],
+        );
+        let light = stack.factor(
+            &g,
+            &Placed::new(TaskKind::Display, pu(&g, "e0.cpu0")),
+            &[Placed::new(TaskKind::PosePredict, pu(&g, "e0.gpu"))],
+        );
+        assert!(light < heavy);
+    }
+
+    #[test]
+    fn vic_suffers_less_than_cpu_under_gpu_load() {
+        // the §5.3.1 insight: under heavy GPU memory use, reproject-on-VIC
+        // beats reproject-on-CPU even though CPU wins standalone
+        let g = orin();
+        let stack = SlowdownStack::new();
+        // heavy shared-memory utilization by the GPU (render + encode)
+        let gpu_load = [
+            Placed::new(TaskKind::Render, pu(&g, "e0.gpu")),
+            Placed::new(TaskKind::Encode, pu(&g, "e0.gpu")),
+        ];
+        let on_cpu = stack.factor(
+            &g,
+            &Placed::new(TaskKind::Reproject, pu(&g, "e0.cpu0")),
+            &gpu_load,
+        );
+        let on_vic = stack.factor(
+            &g,
+            &Placed::new(TaskKind::Reproject, pu(&g, "e0.vic")),
+            &gpu_load,
+        );
+        assert!(on_vic < on_cpu, "vic {on_vic} vs cpu {on_cpu}");
+        // and the crossover actually flips the total latency, even though
+        // the CPU wins standalone
+        use crate::perfmodel::{PerfModel, ProfileModel, Unit};
+        let m = ProfileModel::new();
+        let t = crate::task::TaskSpec::new(TaskKind::Reproject);
+        let cpu_t = m
+            .predict(&t, ORIN_AGX, crate::hwgraph::PuClass::CpuCore, Unit::Seconds)
+            .unwrap()
+            * on_cpu;
+        let vic_t = m
+            .predict(&t, ORIN_AGX, crate::hwgraph::PuClass::Vic, Unit::Seconds)
+            .unwrap()
+            * on_vic;
+        assert!(vic_t < cpu_t, "vic {vic_t} vs cpu {cpu_t}");
+    }
+
+    #[test]
+    fn factor_is_order_insensitive() {
+        let g = orin();
+        let stack = SlowdownStack::new();
+        let t = Placed::new(TaskKind::MatMul, pu(&g, "e0.cpu0"));
+        let a = Placed::new(TaskKind::MatMul, pu(&g, "e0.cpu1"));
+        let b2 = Placed::new(TaskKind::DnnInfer, pu(&g, "e0.gpu"));
+        let f1 = stack.factor(&g, &t, &[a, b2]);
+        let f2 = stack.factor(&g, &t, &[b2, a]);
+        assert!((f1 - f2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blind_stack_reports_unity() {
+        let g = orin();
+        let stack = SlowdownStack::blind();
+        let t = Placed::new(TaskKind::MatMul, pu(&g, "e0.gpu"));
+        let co = [Placed::new(TaskKind::MatMul, pu(&g, "e0.gpu"))];
+        assert_eq!(stack.factor(&g, &t, &co), 1.0);
+    }
+}

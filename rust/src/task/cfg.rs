@@ -1,0 +1,163 @@
+//! Control-flow graphs of tasks: DAGs with serial and parallel regions,
+//! traversed time-ordered by the Traverser (§3.4) and mapped task-by-task
+//! by the Orchestrator (§3.5).
+
+use super::TaskSpec;
+
+/// One node of a CFG: a task plus its dependency wiring.
+#[derive(Debug, Clone)]
+pub struct CfgNode {
+    pub spec: TaskSpec,
+    pub preds: Vec<usize>,
+    pub succs: Vec<usize>,
+}
+
+/// A task DAG. Indices are stable; `add` + `dep` build it.
+#[derive(Debug, Clone, Default)]
+pub struct Cfg {
+    pub nodes: Vec<CfgNode>,
+}
+
+impl Cfg {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, spec: TaskSpec) -> usize {
+        self.nodes.push(CfgNode {
+            spec,
+            preds: Vec::new(),
+            succs: Vec::new(),
+        });
+        self.nodes.len() - 1
+    }
+
+    /// Declare that `to` depends on `from`.
+    pub fn dep(&mut self, from: usize, to: usize) {
+        assert!(from != to, "self-dependency");
+        self.nodes[from].succs.push(to);
+        self.nodes[to].preds.push(from);
+    }
+
+    /// Chain a sequence of tasks serially; returns their indices.
+    pub fn chain(&mut self, specs: Vec<TaskSpec>) -> Vec<usize> {
+        let ids: Vec<usize> = specs.into_iter().map(|s| self.add(s)).collect();
+        for w in ids.windows(2) {
+            self.dep(w[0], w[1]);
+        }
+        ids
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Tasks with no predecessors.
+    pub fn roots(&self) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].preds.is_empty())
+            .collect()
+    }
+
+    /// Kahn topological order; panics on cycles (CFGs must be DAGs).
+    pub fn topo_order(&self) -> Vec<usize> {
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|n| n.preds.len()).collect();
+        let mut queue: Vec<usize> = self.roots();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for &s in &self.nodes[i].succs {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.nodes.len(), "CFG contains a cycle");
+        order
+    }
+
+    /// Critical-path length in units of `cost(node)`.
+    pub fn critical_path(&self, cost: impl Fn(usize) -> f64) -> f64 {
+        let order = self.topo_order();
+        let mut finish = vec![0.0f64; self.nodes.len()];
+        let mut best: f64 = 0.0;
+        for &i in &order {
+            let start = self.nodes[i]
+                .preds
+                .iter()
+                .map(|&p| finish[p])
+                .fold(0.0, f64::max);
+            finish[i] = start + cost(i);
+            best = best.max(finish[i]);
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::TaskKind;
+
+    fn diamond() -> Cfg {
+        // a -> {b, c} -> d
+        let mut cfg = Cfg::new();
+        let a = cfg.add(TaskSpec::new(TaskKind::SensorRead));
+        let b = cfg.add(TaskSpec::new(TaskKind::Svm));
+        let c = cfg.add(TaskSpec::new(TaskKind::Knn));
+        let d = cfg.add(TaskSpec::new(TaskKind::Mlp));
+        cfg.dep(a, b);
+        cfg.dep(a, c);
+        cfg.dep(b, d);
+        cfg.dep(c, d);
+        cfg
+    }
+
+    #[test]
+    fn roots_and_topo() {
+        let cfg = diamond();
+        assert_eq!(cfg.roots(), vec![0]);
+        let order = cfg.topo_order();
+        let pos = |i: usize| order.iter().position(|&x| x == i).unwrap();
+        assert!(pos(0) < pos(1) && pos(0) < pos(2));
+        assert!(pos(1) < pos(3) && pos(2) < pos(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_detected() {
+        let mut cfg = diamond();
+        cfg.dep(3, 0);
+        cfg.topo_order();
+    }
+
+    #[test]
+    fn critical_path_takes_longest_branch() {
+        let cfg = diamond();
+        // b costs 5, c costs 2, a and d cost 1 => 1 + 5 + 1 = 7
+        let cp = cfg.critical_path(|i| match i {
+            1 => 5.0,
+            2 => 2.0,
+            _ => 1.0,
+        });
+        assert_eq!(cp, 7.0);
+    }
+
+    #[test]
+    fn chain_builds_serial_pipeline() {
+        let mut cfg = Cfg::new();
+        let ids = cfg.chain(vec![
+            TaskSpec::new(TaskKind::Capture),
+            TaskSpec::new(TaskKind::Render),
+            TaskSpec::new(TaskKind::Display),
+        ]);
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(cfg.nodes[1].preds, vec![0]);
+        assert_eq!(cfg.nodes[1].succs, vec![2]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Tasks, constraints and control-flow graphs (CFGs).
+//!
+//! A `TaskSpec` carries what the paper's TASK struct does: identity, the
+//! information needed to retrieve modeled performance (kind + size scale),
+//! data movement volumes, the PU classes it may run on (Fig. 7 lists the
+//! potential targets under each VR task), and its latency constraint.
+
+pub mod cfg;
+pub mod workloads;
+
+pub use cfg::{Cfg, CfgNode};
+
+use crate::hwgraph::PuClass;
+
+/// Globally unique task instance id (assigned by the simulator / runtime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TaskId(pub u64);
+
+/// The two field applications (§4) plus synthetic microbenchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum App {
+    Vr,
+    Mining,
+    Micro,
+}
+
+/// Task kinds across both applications.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TaskKind {
+    // --- VR pipeline (Fig. 7) ---
+    Capture,
+    PosePredict,
+    Render,
+    Encode,
+    Decode,
+    Reproject,
+    Display,
+    // --- mining (Fig. 8) ---
+    SensorRead,
+    Svm,
+    Knn,
+    Mlp,
+    // --- microbenchmarks (Fig. 2) ---
+    MatMul,
+    DnnInfer,
+}
+
+impl TaskKind {
+    /// Every task kind, across both applications and the microbenchmarks.
+    pub const ALL: [TaskKind; 13] = [
+        TaskKind::Capture,
+        TaskKind::PosePredict,
+        TaskKind::Render,
+        TaskKind::Encode,
+        TaskKind::Decode,
+        TaskKind::Reproject,
+        TaskKind::Display,
+        TaskKind::SensorRead,
+        TaskKind::Svm,
+        TaskKind::Knn,
+        TaskKind::Mlp,
+        TaskKind::MatMul,
+        TaskKind::DnnInfer,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Capture => "capture",
+            TaskKind::PosePredict => "pose_predict",
+            TaskKind::Render => "render",
+            TaskKind::Encode => "encode",
+            TaskKind::Decode => "decode",
+            TaskKind::Reproject => "reproject",
+            TaskKind::Display => "display",
+            TaskKind::SensorRead => "sensor_read",
+            TaskKind::Svm => "svm",
+            TaskKind::Knn => "knn",
+            TaskKind::Mlp => "mlp",
+            TaskKind::MatMul => "matmul",
+            TaskKind::DnnInfer => "dnn_infer",
+        }
+    }
+
+    pub fn app(&self) -> App {
+        match self {
+            TaskKind::Capture
+            | TaskKind::PosePredict
+            | TaskKind::Render
+            | TaskKind::Encode
+            | TaskKind::Decode
+            | TaskKind::Reproject
+            | TaskKind::Display => App::Vr,
+            TaskKind::SensorRead | TaskKind::Svm | TaskKind::Knn | TaskKind::Mlp => App::Mining,
+            TaskKind::MatMul | TaskKind::DnnInfer => App::Micro,
+        }
+    }
+
+    /// PU classes this task may be mapped to (the candidate sets of Fig. 7;
+    /// mining ML tasks target CPU and GPU, §4.2).
+    pub fn allowed_pus(&self) -> &'static [PuClass] {
+        match self {
+            TaskKind::Capture | TaskKind::SensorRead | TaskKind::Display => &[PuClass::CpuCore],
+            TaskKind::PosePredict => &[PuClass::CpuCore, PuClass::Gpu],
+            TaskKind::Render => &[PuClass::Gpu],
+            TaskKind::Encode | TaskKind::Decode | TaskKind::Reproject => {
+                &[PuClass::CpuCore, PuClass::Gpu, PuClass::Vic]
+            }
+            TaskKind::Svm | TaskKind::Knn | TaskKind::Mlp => &[PuClass::CpuCore, PuClass::Gpu],
+            TaskKind::MatMul | TaskKind::DnnInfer => &[
+                PuClass::CpuCore,
+                PuClass::Gpu,
+                PuClass::Dla,
+                PuClass::Pva,
+            ],
+        }
+    }
+
+    /// Whether this task must stay on the device that generated it
+    /// (sensor-attached / display-attached stages).
+    pub fn pinned_to_origin(&self) -> bool {
+        matches!(
+            self,
+            TaskKind::Capture | TaskKind::Display | TaskKind::SensorRead
+        )
+    }
+}
+
+/// Latency constraints (QoS) attached to a task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Constraints {
+    /// per-task completion deadline, seconds from task readiness
+    pub deadline_s: f64,
+}
+
+impl Constraints {
+    pub fn new(deadline_s: f64) -> Self {
+        Self { deadline_s }
+    }
+
+    pub fn none() -> Self {
+        Self {
+            deadline_s: f64::INFINITY,
+        }
+    }
+}
+
+/// Specification of one task in a CFG.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub name: String,
+    pub kind: TaskKind,
+    /// workload scale relative to the profiled unit (e.g. #sensor windows,
+    /// or frame-resolution fraction for CloudVR's scaling)
+    pub size_scale: f64,
+    /// bytes consumed from each predecessor (network transfer if remote)
+    pub input_bytes: f64,
+    /// bytes produced for each successor
+    pub output_bytes: f64,
+    pub constraints: Constraints,
+}
+
+impl TaskSpec {
+    pub fn new(kind: TaskKind) -> Self {
+        TaskSpec {
+            name: kind.name().to_string(),
+            kind,
+            size_scale: 1.0,
+            input_bytes: 0.0,
+            output_bytes: 0.0,
+            constraints: Constraints::none(),
+        }
+    }
+
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn scale(mut self, s: f64) -> Self {
+        self.size_scale = s;
+        self
+    }
+
+    pub fn io(mut self, input_bytes: f64, output_bytes: f64) -> Self {
+        self.input_bytes = input_bytes;
+        self.output_bytes = output_bytes;
+        self
+    }
+
+    pub fn deadline(mut self, d: f64) -> Self {
+        self.constraints = Constraints::new(d);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowed_pus_match_fig7() {
+        assert_eq!(TaskKind::Render.allowed_pus(), &[PuClass::Gpu]);
+        assert!(TaskKind::Reproject.allowed_pus().contains(&PuClass::Vic));
+        assert!(TaskKind::Svm.allowed_pus().contains(&PuClass::Gpu));
+        assert!(!TaskKind::Capture.allowed_pus().contains(&PuClass::Gpu));
+    }
+
+    #[test]
+    fn pinned_stages() {
+        assert!(TaskKind::Capture.pinned_to_origin());
+        assert!(TaskKind::Display.pinned_to_origin());
+        assert!(!TaskKind::Render.pinned_to_origin());
+    }
+
+    #[test]
+    fn builder_chain() {
+        let t = TaskSpec::new(TaskKind::Render)
+            .scale(0.5)
+            .io(1e6, 2e6)
+            .deadline(0.02);
+        assert_eq!(t.size_scale, 0.5);
+        assert_eq!(t.constraints.deadline_s, 0.02);
+        assert_eq!(t.kind.app(), App::Vr);
+    }
+}

@@ -1,0 +1,187 @@
+//! Workload generators for the paper's two field applications (§4) and the
+//! Fig. 2 microbenchmarks.
+
+use super::{Cfg, TaskKind, TaskSpec};
+use crate::hwgraph::presets;
+
+/// Target FPS per edge-device model (§5.1: slower headsets get lower FPS
+/// requirements, e.g. 30 FPS for Orin AGX).
+pub fn target_fps(model: &str) -> f64 {
+    match model {
+        presets::ORIN_AGX => 30.0,
+        presets::XAVIER_AGX => 25.0,
+        presets::XAVIER_NX => 20.0,
+        presets::ORIN_NANO => 15.0,
+        _ => 30.0,
+    }
+}
+
+/// Frame data volumes (bytes) for the VR pipeline at full resolution:
+/// a 1Kx1K RGBA render target and a ~5:1 codec.
+pub const RAW_FRAME_BYTES: f64 = 4.0e6; // rendered frame
+pub const ENC_FRAME_BYTES: f64 = 0.8e6; // after the codec
+pub const POSE_FEAT_BYTES: f64 = 4.0e3; // capture features / scene request
+
+/// Per-task deadline weights: the paper's first Fig. 11b configuration
+/// divides the QoS budget proportionally to edge-standalone cost.
+pub const VR_STAGES: [TaskKind; 7] = [
+    TaskKind::Capture,
+    TaskKind::PosePredict,
+    TaskKind::Render,
+    TaskKind::Encode,
+    TaskKind::Decode,
+    TaskKind::Reproject,
+    TaskKind::Display,
+];
+
+/// The serial VR frame CFG (Fig. 7) for one frame of a device running at
+/// `fps`. `resolution` in (0, 1] scales the frame volume and render work
+/// (CloudVR's knob, Fig. 12a). `deadline_weights` distributes the frame
+/// budget across the 7 stages; pass `None` for the proportional default.
+pub fn vr_cfg(fps: f64, resolution: f64, deadline_weights: Option<&[f64; 7]>) -> Cfg {
+    let period = 1.0 / fps;
+    // proportional default: render dominates; every stage gets headroom
+    // over its worst-case standalone time, and display carries enough
+    // slack to absorb the rendered-frame pull when upstream ran remotely
+    let default_w = [0.05, 0.08, 0.40, 0.10, 0.12, 0.11, 0.14];
+    let w = deadline_weights.unwrap_or(&default_w);
+    let r = resolution;
+    let mut cfg = Cfg::new();
+    // the pipeline budget per stage: QoS gives each frame 2 periods of
+    // end-to-end latency (double buffering); stage deadlines split that.
+    let budget = 2.0 * period;
+    let specs = vec![
+        TaskSpec::new(TaskKind::Capture)
+            .io(0.0, POSE_FEAT_BYTES)
+            .deadline(w[0] * budget),
+        TaskSpec::new(TaskKind::PosePredict)
+            .io(POSE_FEAT_BYTES, POSE_FEAT_BYTES)
+            .deadline(w[1] * budget),
+        TaskSpec::new(TaskKind::Render)
+            .scale(r)
+            .io(POSE_FEAT_BYTES, RAW_FRAME_BYTES * r)
+            .deadline(w[2] * budget),
+        TaskSpec::new(TaskKind::Encode)
+            .scale(r)
+            .io(RAW_FRAME_BYTES * r, ENC_FRAME_BYTES * r)
+            .deadline(w[3] * budget),
+        TaskSpec::new(TaskKind::Decode)
+            .scale(r)
+            .io(ENC_FRAME_BYTES * r, RAW_FRAME_BYTES * r)
+            .deadline(w[4] * budget),
+        TaskSpec::new(TaskKind::Reproject)
+            .scale(r)
+            .io(RAW_FRAME_BYTES * r, RAW_FRAME_BYTES * r)
+            .deadline(w[5] * budget),
+        TaskSpec::new(TaskKind::Display)
+            .scale(r)
+            .io(RAW_FRAME_BYTES * r, 0.0)
+            .deadline(w[6] * budget),
+    ];
+    cfg.chain(specs);
+    cfg
+}
+
+/// Sensor window volume for the mining app: one 10 Hz batch of force
+/// samples from a smart drill-bit sensor.
+pub const SENSOR_WINDOW_BYTES: f64 = 8.0e3;
+
+/// Mining latency threshold (§5.2): sensor read until all three ML tasks
+/// complete, within 100 ms.
+pub const MINING_DEADLINE_S: f64 = 0.1;
+
+/// Share of the 100 ms budget granted to the sensor read stage; the ML
+/// stages get the rest. Stage deadlines are *cumulative* along the CFG
+/// (the simulator anchors them to the frame release), so the end-to-end
+/// bound is exactly `MINING_DEADLINE_S`.
+pub const MINING_READ_SHARE: f64 = 0.2;
+
+/// The mining CFG (Fig. 8): sensor read fans out to SVM / KNN / MLP which
+/// can run in parallel. `sensors` scales the batch each ML task processes.
+pub fn mining_cfg(sensors: f64) -> Cfg {
+    let mut cfg = Cfg::new();
+    let read = cfg.add(
+        TaskSpec::new(TaskKind::SensorRead)
+            .scale(sensors)
+            .io(0.0, SENSOR_WINDOW_BYTES * sensors)
+            .deadline(MINING_READ_SHARE * MINING_DEADLINE_S),
+    );
+    for kind in [TaskKind::Svm, TaskKind::Knn, TaskKind::Mlp] {
+        let t = cfg.add(
+            TaskSpec::new(kind)
+                .scale(sensors)
+                .io(SENSOR_WINDOW_BYTES * sensors, 64.0)
+                .deadline((1.0 - MINING_READ_SHARE) * MINING_DEADLINE_S),
+        );
+        cfg.dep(read, t);
+    }
+    cfg
+}
+
+/// A single-task CFG for the Fig. 2 contention microbenchmarks.
+pub fn micro_cfg(kind: TaskKind) -> Cfg {
+    let mut cfg = Cfg::new();
+    cfg.add(TaskSpec::new(kind).io(1.0e6, 1.0e6));
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vr_cfg_is_a_serial_pipeline_of_seven() {
+        let cfg = vr_cfg(30.0, 1.0, None);
+        assert_eq!(cfg.len(), 7);
+        assert_eq!(cfg.roots(), vec![0]);
+        for i in 0..6 {
+            assert_eq!(cfg.nodes[i].succs, vec![i + 1]);
+        }
+        // stage kinds in pipeline order
+        let kinds: Vec<TaskKind> = cfg.nodes.iter().map(|n| n.spec.kind).collect();
+        assert_eq!(kinds.as_slice(), &VR_STAGES);
+    }
+
+    #[test]
+    fn vr_deadlines_sum_to_budget() {
+        let fps = 25.0;
+        let cfg = vr_cfg(fps, 1.0, None);
+        let total: f64 = cfg
+            .nodes
+            .iter()
+            .map(|n| n.spec.constraints.deadline_s)
+            .sum();
+        assert!((total - 2.0 / fps).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vr_resolution_scales_volumes() {
+        let full = vr_cfg(30.0, 1.0, None);
+        let half = vr_cfg(30.0, 0.5, None);
+        assert!(
+            half.nodes[2].spec.output_bytes < full.nodes[2].spec.output_bytes
+        );
+        assert_eq!(half.nodes[2].spec.size_scale, 0.5);
+    }
+
+    #[test]
+    fn mining_cfg_fans_out_three_ml_tasks() {
+        let cfg = mining_cfg(1.0);
+        assert_eq!(cfg.len(), 4);
+        assert_eq!(cfg.roots(), vec![0]);
+        assert_eq!(cfg.nodes[0].succs.len(), 3);
+        for i in 1..4 {
+            assert_eq!(cfg.nodes[i].preds, vec![0]);
+            // cumulative read + ML deadlines bound the frame to 100 ms
+            let total = cfg.nodes[0].spec.constraints.deadline_s
+                + cfg.nodes[i].spec.constraints.deadline_s;
+            assert!((total - MINING_DEADLINE_S).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fps_targets_ordered_by_device_capability() {
+        assert!(target_fps(presets::ORIN_AGX) > target_fps(presets::XAVIER_AGX));
+        assert!(target_fps(presets::XAVIER_AGX) > target_fps(presets::ORIN_NANO));
+    }
+}

@@ -1,0 +1,187 @@
+//! Telemetry: turns [`RunMetrics`] into the tables the paper's figures
+//! report, and serializes runs to JSON for external plotting.
+
+use crate::hwgraph::presets::Decs;
+use crate::hwgraph::NodeId;
+use crate::sim::RunMetrics;
+use crate::util::json::Json;
+
+/// Per-device latency breakdown (the Fig. 1 / Fig. 11a view): computation,
+/// slowdown, communication and scheduling seconds averaged per frame.
+#[derive(Debug, Clone)]
+pub struct DeviceBreakdown {
+    pub device: NodeId,
+    pub name: String,
+    pub frames: usize,
+    pub mean_latency_s: f64,
+    pub compute_s: f64,
+    pub slowdown_s: f64,
+    pub comm_s: f64,
+    pub sched_s: f64,
+    pub edge_busy_s: f64,
+    pub server_busy_s: f64,
+    pub qos_failure: f64,
+}
+
+impl DeviceBreakdown {
+    /// "Bottleneck" attribution per Fig. 11a: whichever side of the
+    /// pipeline (edge or server) carries more busy time.
+    pub fn bottleneck(&self) -> &'static str {
+        if self.edge_busy_s >= self.server_busy_s {
+            "edge"
+        } else {
+            "server"
+        }
+    }
+}
+
+/// Break a run down per origin device.
+pub fn per_device(decs: &Decs, m: &RunMetrics) -> Vec<DeviceBreakdown> {
+    let mut out = Vec::new();
+    for &dev in &decs.edge_devices {
+        let frames = m.frames_of(dev);
+        if frames.is_empty() {
+            continue;
+        }
+        let n = frames.len() as f64;
+        let sum = |f: &dyn Fn(&crate::sim::FrameRecord) -> f64| -> f64 {
+            frames.iter().map(|fr| f(fr)).sum::<f64>() / n
+        };
+        let misses = frames.iter().filter(|f| !f.qos_ok()).count();
+        out.push(DeviceBreakdown {
+            device: dev,
+            name: decs.graph.node(dev).name.clone(),
+            frames: frames.len(),
+            mean_latency_s: sum(&|f| f.latency_s),
+            compute_s: sum(&|f| f.compute_s),
+            slowdown_s: sum(&|f| f.slowdown_s),
+            comm_s: sum(&|f| f.comm_s),
+            sched_s: sum(&|f| f.sched_s),
+            edge_busy_s: sum(&|f| f.edge_busy_s),
+            server_busy_s: sum(&|f| f.server_busy_s),
+            qos_failure: misses as f64 / n,
+        });
+    }
+    out
+}
+
+/// Print a Fig.-11a-style breakdown table.
+pub fn print_breakdown(title: &str, rows: &[DeviceBreakdown]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<10} {:>7} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8} {:>10}",
+        "device", "frames", "lat(ms)", "comp(ms)", "slow(ms)", "comm(ms)", "sched(ms)", "qos-fail", "bottleneck"
+    );
+    for r in rows {
+        println!(
+            "{:<10} {:>7} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.3} {:>7.1}% {:>10}",
+            r.name,
+            r.frames,
+            r.mean_latency_s * 1e3,
+            r.compute_s * 1e3,
+            r.slowdown_s * 1e3,
+            r.comm_s * 1e3,
+            r.sched_s * 1e3,
+            r.qos_failure * 100.0,
+            r.bottleneck(),
+        );
+    }
+}
+
+/// Summary line for scheduler-comparison harnesses.
+pub fn summary_line(name: &str, m: &RunMetrics) {
+    println!(
+        "{:<16} frames={:<6} mean_lat={:>8.2}ms qos_fail={:>5.1}% overhead={:>5.2}% comm_frac={:>4.0}% edge/server={}/{}",
+        name,
+        m.frames.len(),
+        m.mean_latency_s() * 1e3,
+        m.qos_failure_rate() * 100.0,
+        m.overhead_ratio() * 100.0,
+        m.overhead_comm_fraction() * 100.0,
+        m.tasks_on_edge,
+        m.tasks_on_server,
+    );
+}
+
+/// Serialize a run to JSON (for external plotting / EXPERIMENTS.md capture).
+pub fn to_json(name: &str, m: &RunMetrics) -> Json {
+    let frames: Vec<Json> = m
+        .frames
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("origin", Json::Num(f.origin.0 as f64)),
+                ("release_t", Json::Num(f.release_t)),
+                ("latency_s", Json::Num(f.latency_s)),
+                ("budget_s", Json::Num(f.budget_s)),
+                ("compute_s", Json::Num(f.compute_s)),
+                ("slowdown_s", Json::Num(f.slowdown_s)),
+                ("comm_s", Json::Num(f.comm_s)),
+                ("sched_s", Json::Num(f.sched_s)),
+                ("qos_ok", Json::Bool(f.qos_ok())),
+                ("degraded", Json::Bool(f.degraded)),
+                ("resolution", Json::Num(f.resolution)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("scheduler", Json::Str(name.to_string())),
+        ("frames", Json::Arr(frames)),
+        ("dropped", Json::Num(m.dropped as f64)),
+        ("qos_failure_rate", Json::Num(m.qos_failure_rate())),
+        ("mean_latency_s", Json::Num(m.mean_latency_s())),
+        ("overhead_ratio", Json::Num(m.overhead_ratio())),
+        (
+            "overhead_comm_fraction",
+            Json::Num(m.overhead_comm_fraction()),
+        ),
+        ("tasks_on_edge", Json::Num(m.tasks_on_edge as f64)),
+        ("tasks_on_server", Json::Num(m.tasks_on_server as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::{Decs, DecsSpec};
+    use crate::orchestrator::{Hierarchy, Orchestrator, Policy};
+    use crate::sim::{HeyeScheduler, SimConfig, Simulation, Workload};
+
+    fn run_small() -> (Decs, RunMetrics) {
+        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+        let mut sched = HeyeScheduler::new(Orchestrator::new(
+            Hierarchy::from_decs(&sim.decs),
+            Policy::Hierarchical,
+        ));
+        let wl = Workload::vr(&sim.decs);
+        let cfg = SimConfig::default().horizon(0.3).seed(11);
+        let m = sim.run(&mut sched, wl, vec![], vec![], &cfg);
+        (sim.decs, m)
+    }
+
+    #[test]
+    fn breakdown_covers_active_devices() {
+        let (decs, m) = run_small();
+        let rows = per_device(&decs, &m);
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.frames > 0);
+            assert!(r.mean_latency_s > 0.0);
+            assert!(r.compute_s > 0.0);
+            assert!(["edge", "server"].contains(&r.bottleneck()));
+        }
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let (_, m) = run_small();
+        let j = to_json("heye", &m);
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("reparse");
+        assert_eq!(
+            back.get("scheduler").and_then(|s| s.as_str()),
+            Some("heye")
+        );
+        assert!(back.get("frames").and_then(|f| f.as_arr()).is_some());
+    }
+}

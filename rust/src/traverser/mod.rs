@@ -1,0 +1,523 @@
+//! The Traverser (§3.4): predicts the performance of a CFG of tasks under a
+//! given task→PU mapping, accounting for shared-resource slowdown among
+//! concurrently running tasks via *contention intervals* (Fig. 6).
+//!
+//! The model: every task carries `work` = its standalone execution time on
+//! its assigned PU. While a set R of tasks runs, each task t in R progresses
+//! at rate `1 / slowdown(t, R \ {t})`. Whenever R changes (a task finishes,
+//! a dependency resolves, a transfer lands) a new contention interval
+//! begins and rates are re-evaluated. The Traverser performs NO scheduling —
+//! it evaluates the mapping the Orchestrator proposes.
+
+use crate::hwgraph::NodeId;
+use crate::netsim::Network;
+use crate::perfmodel::{PerfModel, Unit};
+use crate::slowdown::{CachedSlowdown, Placed};
+use crate::task::{Cfg, TaskId, TaskKind};
+
+/// A task already running somewhere in the system (visible to this
+/// Traverser invocation through its Orchestrator's scope).
+#[derive(Debug, Clone)]
+pub struct ActiveTask {
+    pub id: TaskId,
+    pub kind: TaskKind,
+    pub pu: NodeId,
+    /// standalone-equivalent seconds of work still to do
+    pub remaining_s: f64,
+    /// absolute deadline for this task's completion (f64::INFINITY if none)
+    pub deadline_abs: f64,
+}
+
+/// Prediction for one CFG under one mapping.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    /// absolute start/finish per CFG node
+    pub start: Vec<f64>,
+    pub finish: Vec<f64>,
+    /// extra seconds each CFG task spent due to shared-resource slowdown
+    pub slowdown_s: Vec<f64>,
+    /// communication seconds charged before each CFG task started
+    pub comm_s: Vec<f64>,
+    /// predicted completion of every pre-existing active task
+    pub active_finish: Vec<(TaskId, f64)>,
+    /// CFG makespan (last finish - t0)
+    pub makespan: f64,
+    /// did every CFG task meet its own deadline?
+    pub cfg_deadlines_ok: bool,
+    /// did every pre-existing task still meet its deadline?
+    pub active_deadlines_ok: bool,
+}
+
+impl Prediction {
+    pub fn ok(&self) -> bool {
+        self.cfg_deadlines_ok && self.active_deadlines_ok
+    }
+}
+
+/// The Traverser: borrows the system's models; cheap to construct.
+pub struct Traverser<'a> {
+    pub slow: &'a CachedSlowdown<'a>,
+    pub perf: &'a dyn PerfModel,
+    pub net: &'a Network,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum St {
+    /// waiting on `missing` predecessors
+    Waiting { missing: usize },
+    /// data in flight; becomes running at `until`
+    Transferring { until: f64 },
+    Running,
+    Done,
+}
+
+struct Ent {
+    kind: TaskKind,
+    pu: NodeId,
+    scale: f64,
+    work_left: f64,
+    state: St,
+    start: f64,
+    finish: f64,
+    /// None for pre-existing active tasks
+    cfg_idx: Option<usize>,
+    deadline_abs: f64,
+    comm_s: f64,
+}
+
+impl<'a> Traverser<'a> {
+    pub fn new(slow: &'a CachedSlowdown<'a>, perf: &'a dyn PerfModel, net: &'a Network) -> Self {
+        Self { slow, perf, net }
+    }
+
+    /// Standalone seconds of `cfg` node `i` on `pu`, or None if that PU
+    /// class cannot run it.
+    pub fn standalone(&self, cfg: &Cfg, i: usize, pu: NodeId) -> Option<f64> {
+        let g = self.slow.graph();
+        let class = g.pu_class(pu)?;
+        let model = g.device_model_of(pu)?;
+        self.perf
+            .predict(&cfg.nodes[i].spec, model, class, Unit::Seconds)
+    }
+
+    /// Predict the execution of `cfg` mapped to `mapping` starting at
+    /// absolute time `t0`, with `origin` the device whose runtime produced
+    /// the root tasks (data starts there), among `active` tasks.
+    /// Returns None if any mapping entry is infeasible for its task.
+    pub fn predict(
+        &self,
+        cfg: &Cfg,
+        mapping: &[NodeId],
+        origin: NodeId,
+        active: &[ActiveTask],
+        t0: f64,
+    ) -> Option<Prediction> {
+        assert_eq!(mapping.len(), cfg.len(), "mapping arity");
+        let g = self.slow.graph();
+        let n = cfg.len();
+
+        let mut ents: Vec<Ent> = Vec::with_capacity(n + active.len());
+        for i in 0..n {
+            let work = self.standalone(cfg, i, mapping[i])?;
+            ents.push(Ent {
+                kind: cfg.nodes[i].spec.kind,
+                pu: mapping[i],
+                scale: cfg.nodes[i].spec.size_scale,
+                work_left: work,
+                state: St::Waiting {
+                    missing: cfg.nodes[i].preds.len(),
+                },
+                start: f64::NAN,
+                finish: f64::NAN,
+                cfg_idx: Some(i),
+                deadline_abs: f64::INFINITY,
+                comm_s: 0.0,
+            });
+        }
+        for a in active {
+            // an active task that cannot meet its deadline even running
+            // alone from now is already lost; it must not veto every new
+            // placement (CheckTaskConstraints protects *feasible* tasks)
+            let deadline_abs = if t0 + a.remaining_s > a.deadline_abs {
+                f64::INFINITY
+            } else {
+                a.deadline_abs
+            };
+            ents.push(Ent {
+                kind: a.kind,
+                pu: a.pu,
+                scale: 1.0,
+                work_left: a.remaining_s,
+                state: St::Running,
+                start: t0,
+                finish: f64::NAN,
+                cfg_idx: None,
+                deadline_abs,
+                comm_s: 0.0,
+            });
+        }
+
+        // release roots: data originates on `origin`, so a root mapped to a
+        // remote device pays the input transfer first
+        let mut t = t0;
+        for i in cfg.roots() {
+            self.release(&mut ents[i], cfg, i, origin, t, g);
+        }
+
+        let mut slowdown_s = vec![0.0; n];
+        // contention-interval loop
+        let max_iters = 16 * (n + active.len()) + 64;
+        for _ in 0..max_iters {
+            if ents.iter().all(|e| e.state == St::Done) {
+                break;
+            }
+            // rates for the running set
+            let running: Vec<usize> = (0..ents.len())
+                .filter(|&i| ents[i].state == St::Running)
+                .collect();
+            let placed: Vec<Placed> = running
+                .iter()
+                .map(|&i| Placed {
+                    kind: ents[i].kind,
+                    pu: ents[i].pu,
+                    scale: ents[i].scale,
+                })
+                .collect();
+            let mut factors = vec![1.0; running.len()];
+            for ri in 0..running.len() {
+                let co: Vec<Placed> = placed
+                    .iter()
+                    .enumerate()
+                    .filter(|(rj, _)| *rj != ri)
+                    .map(|(_, p)| *p)
+                    .collect();
+                factors[ri] = self.slow.factor(&placed[ri], &co);
+            }
+            // next event: earliest running finish or transfer landing
+            let mut dt = f64::INFINITY;
+            for (ri, &i) in running.iter().enumerate() {
+                dt = dt.min(ents[i].work_left * factors[ri]);
+            }
+            for e in &ents {
+                if let St::Transferring { until } = e.state {
+                    dt = dt.min(until - t);
+                }
+            }
+            if !dt.is_finite() {
+                // only Waiting entries remain and nothing is in flight:
+                // unreachable CFG nodes — treat as failure
+                return None;
+            }
+            let dt = dt.max(0.0);
+            // advance work and collect completions
+            let t_next = t + dt;
+            let mut finished: Vec<usize> = Vec::new();
+            for (ri, &i) in running.iter().enumerate() {
+                let e = &mut ents[i];
+                e.work_left -= dt / factors[ri];
+                if let Some(ci) = e.cfg_idx {
+                    slowdown_s[ci] += dt * (1.0 - 1.0 / factors[ri]);
+                }
+                if e.work_left <= 1e-12 {
+                    e.state = St::Done;
+                    e.finish = t_next;
+                    finished.push(i);
+                }
+            }
+            for e in ents.iter_mut() {
+                if let St::Transferring { until } = e.state {
+                    if until <= t_next + 1e-15 {
+                        e.state = St::Running;
+                        e.start = t_next;
+                    }
+                }
+            }
+            t = t_next;
+            // dependency resolution for finished CFG tasks
+            for &i in &finished {
+                if let Some(ci) = ents[i].cfg_idx {
+                    let succs = cfg.nodes[ci].succs.clone();
+                    let from_pu = ents[i].pu;
+                    for s in succs {
+                        if let St::Waiting { missing } = ents[s].state {
+                            let m = missing - 1;
+                            ents[s].state = St::Waiting { missing: m };
+                            if m == 0 {
+                                let from_dev = g.device_of(from_pu).unwrap_or(origin);
+                                self.release(&mut ents[s], cfg, s, from_dev, t, g);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // collect
+        let mut start = vec![0.0; n];
+        let mut finish = vec![0.0; n];
+        let mut comm_s = vec![0.0; n];
+        let mut active_finish = Vec::new();
+        let mut cfg_ok = true;
+        let mut active_ok = true;
+        for e in &ents {
+            match e.cfg_idx {
+                Some(ci) => {
+                    if e.state != St::Done {
+                        return None; // did not converge
+                    }
+                    start[ci] = e.start;
+                    finish[ci] = e.finish;
+                    comm_s[ci] = e.comm_s;
+                    let rel_deadline = cfg.nodes[ci].spec.constraints.deadline_s;
+                    // deadline is relative to readiness (start minus comm)
+                    if e.finish - (e.start - e.comm_s) > rel_deadline + 1e-12 {
+                        cfg_ok = false;
+                    }
+                }
+                None => {
+                    let f = if e.state == St::Done {
+                        e.finish
+                    } else {
+                        f64::INFINITY
+                    };
+                    if f > e.deadline_abs + 1e-12 {
+                        active_ok = false;
+                    }
+                    active_finish.push((TaskId(0), f));
+                }
+            }
+        }
+        // re-key active finishes in input order
+        for (slot, a) in active_finish.iter_mut().zip(active.iter()) {
+            slot.0 = a.id;
+        }
+        let makespan = finish.iter().copied().fold(0.0, f64::max) - t0;
+        Some(Prediction {
+            start,
+            finish,
+            slowdown_s,
+            comm_s,
+            active_finish,
+            makespan,
+            cfg_deadlines_ok: cfg_ok,
+            active_deadlines_ok: active_ok,
+        })
+    }
+
+    /// Transition a waiting entity to transferring/running given its data
+    /// currently lives on `from_dev`.
+    fn release(
+        &self,
+        e: &mut Ent,
+        cfg: &Cfg,
+        i: usize,
+        from_dev: NodeId,
+        t: f64,
+        g: &crate::hwgraph::HwGraph,
+    ) {
+        let to_dev = g.device_of(e.pu).unwrap_or(from_dev);
+        let bytes = cfg.nodes[i].spec.input_bytes;
+        let delay = if to_dev == from_dev || bytes <= 0.0 {
+            0.0
+        } else {
+            match self.net.route(g, from_dev, to_dev) {
+                Some(route) => self.net.transfer_time_s(g, &route, bytes),
+                None => f64::INFINITY,
+            }
+        };
+        e.comm_s = delay;
+        if delay <= 0.0 {
+            e.state = St::Running;
+            e.start = t;
+        } else {
+            e.state = St::Transferring { until: t + delay };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::{Decs, DecsSpec};
+    use crate::perfmodel::ProfileModel;
+    use crate::task::workloads;
+    use crate::task::TaskSpec;
+
+    struct Ctx {
+        decs: Decs,
+        perf: ProfileModel,
+        net: Network,
+    }
+
+    impl Ctx {
+        fn new() -> Self {
+            Self {
+                decs: Decs::build(&DecsSpec::paper_vr()),
+                perf: ProfileModel::new(),
+                net: Network::new(),
+            }
+        }
+    }
+
+    fn pu(d: &Decs, name: &str) -> NodeId {
+        d.graph.by_name(name).unwrap()
+    }
+
+    #[test]
+    fn parallel_region_beats_serial_sum_despite_contention() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let cfg = workloads::mining_cfg(1.0);
+        let e0 = ctx.decs.edge_devices[0];
+        let mapping = vec![
+            pu(&ctx.decs, "edge0.cpu0"),
+            pu(&ctx.decs, "edge0.cpu1"),
+            pu(&ctx.decs, "edge0.cpu2"),
+            pu(&ctx.decs, "edge0.cpu4"),
+        ];
+        let p = tr.predict(&cfg, &mapping, e0, &[], 0.0).unwrap();
+        assert!(p.finish[0] <= p.start[1] + 1e-12);
+        let serial: f64 = (0..4)
+            .map(|i| tr.standalone(&cfg, i, mapping[i]).unwrap())
+            .sum();
+        assert!(p.makespan < serial);
+        // the three concurrent ML tasks contend in the cache hierarchy
+        assert!(p.slowdown_s.iter().skip(1).any(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn remote_mapping_pays_communication() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let mut cfg = Cfg::new();
+        cfg.add(TaskSpec::new(TaskKind::Svm).io(8.0e6, 64.0).deadline(1.0));
+        let e0 = ctx.decs.edge_devices[0];
+        let local = tr
+            .predict(&cfg, &[pu(&ctx.decs, "edge0.gpu")], e0, &[], 0.0)
+            .unwrap();
+        let remote = tr
+            .predict(&cfg, &[pu(&ctx.decs, "server0.gpu")], e0, &[], 0.0)
+            .unwrap();
+        assert_eq!(local.comm_s[0], 0.0);
+        assert!(remote.comm_s[0] > 0.0);
+        assert!(remote.start[0] > 0.0);
+    }
+
+    #[test]
+    fn active_tasks_slow_the_cfg_and_vice_versa() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let mut cfg = Cfg::new();
+        cfg.add(TaskSpec::new(TaskKind::DnnInfer).deadline(10.0));
+        let e0 = ctx.decs.edge_devices[0];
+        let gpu = pu(&ctx.decs, "edge0.gpu");
+        let alone = tr.predict(&cfg, &[gpu], e0, &[], 0.0).unwrap();
+        let active = vec![ActiveTask {
+            id: TaskId(7),
+            kind: TaskKind::DnnInfer,
+            pu: gpu,
+            remaining_s: 0.008,
+            deadline_abs: 10.0,
+        }];
+        let shared = tr.predict(&cfg, &[gpu], e0, &active, 0.0).unwrap();
+        // Fig. 2: two DNNs on the GPU run at 0.66x each
+        assert!(shared.finish[0] > alone.finish[0] * 1.3);
+        let (id, af) = shared.active_finish[0];
+        assert_eq!(id, TaskId(7));
+        assert!(af > 0.008 * 1.3);
+    }
+
+    #[test]
+    fn deadline_violations_are_detected() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let mut cfg = Cfg::new();
+        cfg.add(TaskSpec::new(TaskKind::Knn).deadline(1e-6)); // impossible
+        let e0 = ctx.decs.edge_devices[0];
+        let p = tr
+            .predict(&cfg, &[pu(&ctx.decs, "edge0.cpu0")], e0, &[], 0.0)
+            .unwrap();
+        assert!(!p.cfg_deadlines_ok);
+        // an active task pushed past its deadline by the new arrival
+        let gpu = pu(&ctx.decs, "edge0.gpu");
+        let mut cfg2 = Cfg::new();
+        cfg2.add(TaskSpec::new(TaskKind::DnnInfer).deadline(10.0));
+        let tight = vec![ActiveTask {
+            id: TaskId(1),
+            kind: TaskKind::DnnInfer,
+            pu: gpu,
+            remaining_s: 0.008,
+            deadline_abs: 0.0085, // fine alone, broken under multi-tenancy
+        }];
+        let p2 = tr.predict(&cfg2, &[gpu], e0, &tight, 0.0).unwrap();
+        assert!(!p2.active_deadlines_ok);
+    }
+
+    #[test]
+    fn infeasible_mapping_returns_none() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let mut cfg = Cfg::new();
+        cfg.add(TaskSpec::new(TaskKind::Render)); // GPU-only
+        let e0 = ctx.decs.edge_devices[0];
+        assert!(tr
+            .predict(&cfg, &[pu(&ctx.decs, "edge0.cpu0")], e0, &[], 0.0)
+            .is_none());
+    }
+
+    #[test]
+    fn vr_pipeline_is_time_ordered_and_misses_local_render() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let cfg = workloads::vr_cfg(30.0, 1.0, None);
+        let e0 = ctx.decs.edge_devices[0];
+        let m = |n: &str| pu(&ctx.decs, n);
+        let mapping = vec![
+            m("edge0.cpu0"),
+            m("edge0.cpu1"),
+            m("edge0.gpu"),
+            m("edge0.vic"),
+            m("edge0.vic"),
+            m("edge0.vic"),
+            m("edge0.cpu0"),
+        ];
+        let p = tr.predict(&cfg, &mapping, e0, &[], 0.0).unwrap();
+        for i in 1..cfg.len() {
+            assert!(p.start[i] >= p.finish[i - 1] - 1e-9);
+        }
+        // edge-local render cannot satisfy the 30 FPS stage deadline
+        assert!(!p.cfg_deadlines_ok);
+    }
+
+    #[test]
+    fn makespan_monotone_in_active_load() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let cfg = workloads::mining_cfg(1.0);
+        let e0 = ctx.decs.edge_devices[0];
+        let m = |n: &str| pu(&ctx.decs, n);
+        let mapping = vec![
+            m("edge0.cpu0"),
+            m("edge0.cpu1"),
+            m("edge0.cpu2"),
+            m("edge0.gpu"),
+        ];
+        let p0 = tr.predict(&cfg, &mapping, e0, &[], 0.0).unwrap();
+        let active = vec![ActiveTask {
+            id: TaskId(9),
+            kind: TaskKind::MatMul,
+            pu: m("edge0.gpu"),
+            remaining_s: 0.05,
+            deadline_abs: f64::INFINITY,
+        }];
+        let p1 = tr.predict(&cfg, &mapping, e0, &active, 0.0).unwrap();
+        assert!(p1.makespan >= p0.makespan);
+    }
+}

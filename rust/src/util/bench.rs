@@ -1,0 +1,153 @@
+//! Micro-benchmark harness substrate (no offline `criterion` in this image).
+//!
+//! Every `benches/*.rs` target uses `harness = false` and drives this module:
+//! warmup, timed iterations, median/p95 reporting, and aligned table output
+//! that mirrors the paper's figure series.
+
+use std::time::Instant;
+
+use super::stats::Samples;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.mean(),
+        p50_ns: samples.percentile(50.0),
+        p95_ns: samples.percentile(95.0),
+        min_ns: samples.min(),
+    }
+}
+
+/// Print a set of results as an aligned table.
+pub fn report(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12}",
+        "case", "iters", "mean", "p50", "p95"
+    );
+    for r in results {
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12}",
+            r.name,
+            r.iters,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p95_ns)
+        );
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Aligned series table used by the figure harnesses: a header row plus
+/// data rows, each a label and f64 columns.
+pub struct FigureTable {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl FigureTable {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) {
+        let v = values;
+        assert_eq!(v.len(), self.columns.len(), "column arity mismatch");
+        self.rows.push((label.into(), v));
+    }
+
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        print!("{:<36}", "");
+        for c in &self.columns {
+            print!(" {c:>14}");
+        }
+        println!();
+        for (label, vals) in &self.rows {
+            print!("{label:<36}");
+            for v in vals {
+                if v.abs() >= 1000.0 || (*v != 0.0 && v.abs() < 0.01) {
+                    print!(" {v:>14.3e}");
+                } else {
+                    print!(" {v:>14.3}");
+                }
+            }
+            println!();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_timings() {
+        let r = bench("noop-ish", 2, 20, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column arity mismatch")]
+    fn figure_table_arity_checked() {
+        let mut t = FigureTable::new("t", &["a", "b"]);
+        t.row("x", vec![1.0]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Property-testing substrate (no offline `proptest` in this image).
+//!
+//! `check` runs a closure across many seeded Rngs and reports the first
+//! failing seed, so a failure is reproducible with
+//! `PROP_SEED=<seed> cargo test <name>`. Coordinator invariants (routing,
+//! batching, state consistency) are verified this way in `rust/tests/`.
+
+use super::rng::Rng;
+
+/// Number of cases per property; override with env `PROP_CASES`.
+pub fn default_cases() -> u64 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `property` with `cases` independently-seeded Rngs. The closure
+/// returns `Err(msg)` (or panics) to signal a violation.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // single-seed reproduction path
+    if let Ok(seed) = std::env::var("PROP_SEED") {
+        let seed: u64 = seed.parse().expect("PROP_SEED must be a u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property `{name}` failed at PROP_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    let base: u64 = 0x5EED_0000;
+    for case in 0..cases {
+        let seed = base + case;
+        let mut rng = Rng::new(seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property `{name}` failed on case {case} (reproduce with PROP_SEED={seed}): {msg}"
+            ),
+            Err(p) => {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "panic".to_string());
+                panic!(
+                    "property `{name}` panicked on case {case} (reproduce with PROP_SEED={seed}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-true", 16, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce with PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        check("always-false", 4, |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked on case")]
+    fn panicking_property_is_caught() {
+        check("panics", 2, |_rng| panic!("boom"));
+    }
+}

@@ -1,0 +1,265 @@
+//! Streaming statistics substrate: Welford accumulators, percentiles,
+//! and the latency summaries every experiment harness reports.
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n as f64;
+        self.mean = mean;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Sample collector with exact percentiles (sorts on query).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.xs.extend_from_slice(xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = p / 100.0 * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let frac = rank - lo as f64;
+            self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.first().copied().unwrap_or(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn summary(&mut self) -> Summary {
+        Summary {
+            n: self.len(),
+            mean: self.mean(),
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+}
+
+/// One-line latency summary used across harness tables.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.3} p50={:.3} p95={:.3} p99={:.3} min={:.3} max={:.3}",
+            self.n, self.mean, self.p50, self.p95, self.p99, self.min, self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_basic() {
+        let mut w = Welford::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        assert_eq!(w.count(), 4);
+        assert!((w.mean() - 2.5).abs() < 1e-12);
+        assert!((w.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 4.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Welford::new();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.var() - all.var()).abs() < 1e-9);
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn percentiles_exact_on_known_data() {
+        let mut s = Samples::new();
+        s.extend(&[10.0, 20.0, 30.0, 40.0, 50.0]);
+        assert_eq!(s.median(), 30.0);
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(100.0), 50.0);
+        assert!((s.percentile(25.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.n, 100);
+        assert!((sum.mean - 50.5).abs() < 1e-12);
+        assert!((sum.p50 - 50.5).abs() < 1.0);
+        assert!(sum.p95 > 94.0 && sum.p95 < 97.0);
+    }
+
+    #[test]
+    fn empty_collections_are_safe() {
+        let mut s = Samples::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        let w = Welford::new();
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.var(), 0.0);
+    }
+}

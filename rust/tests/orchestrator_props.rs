@@ -1,0 +1,281 @@
+//! Property tests on the coordinator invariants: routing, constraint
+//! preservation, overhead accounting, and policy equivalences, across
+//! randomized topologies, loads, and task mixes.
+
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::netsim::Network;
+use heye::orchestrator::{Hierarchy, Loads, Orchestrator, Policy};
+use heye::perfmodel::ProfileModel;
+use heye::slowdown::CachedSlowdown;
+use heye::task::{TaskId, TaskKind, TaskSpec};
+use heye::traverser::{ActiveTask, Traverser};
+use heye::util::prop::{check, default_cases};
+use heye::util::rng::Rng;
+
+const MAPPABLE: [TaskKind; 9] = [
+    TaskKind::PosePredict,
+    TaskKind::Render,
+    TaskKind::Encode,
+    TaskKind::Decode,
+    TaskKind::Reproject,
+    TaskKind::Svm,
+    TaskKind::Knn,
+    TaskKind::Mlp,
+    TaskKind::MatMul,
+];
+
+fn random_decs(rng: &mut Rng) -> Decs {
+    let edges = rng.range(1, 6);
+    let servers = rng.range(1, 4);
+    Decs::build(&DecsSpec::mixed(edges, servers))
+}
+
+fn random_task(rng: &mut Rng) -> TaskSpec {
+    let kind = *rng.choice(&MAPPABLE);
+    TaskSpec::new(kind)
+        .scale(rng.range_f64(0.25, 2.0))
+        .io(rng.range_f64(0.0, 2.0e6), rng.range_f64(0.0, 1.0e6))
+        .deadline(rng.range_f64(0.005, 0.2))
+}
+
+fn random_loads(rng: &mut Rng, decs: &Decs, now: f64) -> Loads {
+    let mut loads = Loads::default();
+    let mut id = 1u64;
+    for &dev in decs.edge_devices.iter().chain(decs.servers.iter()) {
+        if !rng.bool(0.5) {
+            continue;
+        }
+        let pus = decs.graph.pus_in(dev);
+        let n = rng.below(3);
+        let mut v = Vec::new();
+        for _ in 0..n {
+            let kind = *rng.choice(&MAPPABLE);
+            let pu = *rng.choice(&pus);
+            if let Some(class) = decs.graph.pu_class(pu) {
+                if !kind.allowed_pus().contains(&class) {
+                    continue;
+                }
+            }
+            v.push(ActiveTask {
+                id: TaskId(id),
+                kind,
+                pu,
+                remaining_s: rng.range_f64(0.001, 0.05),
+                deadline_abs: now + rng.range_f64(0.02, 0.5),
+            });
+            id += 1;
+        }
+        if !v.is_empty() {
+            loads.by_device.insert(dev, v);
+        }
+    }
+    loads
+}
+
+/// Placements respect the task's allowed PU classes and land on a device
+/// the HW-Graph can actually route data to.
+#[test]
+fn placement_respects_candidate_sets_and_routing() {
+    check("placement-valid", default_cases(), |rng| {
+        let decs = random_decs(rng);
+        let perf = ProfileModel::new();
+        let net = Network::new();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let tr = Traverser::new(&slow, &perf, &net);
+        let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
+        let origin = *rng.choice(&decs.edge_devices);
+        let task = random_task(rng);
+        let loads = random_loads(rng, &decs, 0.0);
+        let r = orc.map_task(&tr, &task, origin, origin, 0.0, &loads);
+        if let Some(pu) = r.pu {
+            let class = decs
+                .graph
+                .pu_class(pu)
+                .ok_or_else(|| format!("mapped to non-PU {pu:?}"))?;
+            if !task.kind.allowed_pus().contains(&class) {
+                return Err(format!("{:?} mapped to disallowed class {class:?}", task.kind));
+            }
+            let dev = decs.graph.device_of(pu).ok_or("pu without device")?;
+            if dev != origin && net.route(&decs.graph, origin, dev).is_none() {
+                return Err("mapped to unreachable device".into());
+            }
+            if !r.predicted_latency_s.is_finite() || r.predicted_latency_s < 0.0 {
+                return Err(format!("bad predicted latency {}", r.predicted_latency_s));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A successful placement never predicts a violation of its own deadline
+/// or any existing task's deadline (CheckTaskConstraints, Alg. 1).
+#[test]
+fn accepted_placements_preserve_all_constraints() {
+    check("constraints-preserved", default_cases(), |rng| {
+        let decs = random_decs(rng);
+        let perf = ProfileModel::new();
+        let net = Network::new();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let tr = Traverser::new(&slow, &perf, &net);
+        let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
+        let origin = *rng.choice(&decs.edge_devices);
+        let task = random_task(rng);
+        let loads = random_loads(rng, &decs, 0.0);
+        let r = orc.map_task(&tr, &task, origin, origin, 0.0, &loads);
+        if let Some(pu) = r.pu {
+            // re-run the Traverser on the chosen placement and verify
+            let dev = decs.graph.device_of(pu).unwrap();
+            let mut cfg = heye::task::Cfg::new();
+            cfg.add(task.clone());
+            let p = tr
+                .predict(&cfg, &[pu], origin, loads.device(dev), 0.0)
+                .ok_or("accepted placement must be predictable")?;
+            if !p.ok() {
+                return Err(format!(
+                    "accepted placement violates constraints: cfg_ok={} active_ok={}",
+                    p.cfg_deadlines_ok, p.active_deadlines_ok
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pinned stages (capture / display / sensor read) never leave the origin.
+#[test]
+fn pinned_tasks_stay_on_origin() {
+    check("pinned-stays-local", default_cases(), |rng| {
+        let decs = random_decs(rng);
+        let perf = ProfileModel::new();
+        let net = Network::new();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let tr = Traverser::new(&slow, &perf, &net);
+        let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
+        let origin = *rng.choice(&decs.edge_devices);
+        let kind = *rng.choice(&[TaskKind::Capture, TaskKind::Display, TaskKind::SensorRead]);
+        let task = TaskSpec::new(kind).deadline(rng.range_f64(0.005, 0.1));
+        let loads = random_loads(rng, &decs, 0.0);
+        let r = orc.map_task(&tr, &task, origin, origin, 0.0, &loads);
+        if let Some(pu) = r.pu {
+            let dev = decs.graph.device_of(pu).unwrap();
+            if dev != origin {
+                return Err(format!("pinned {kind:?} left origin"));
+            }
+            if r.overhead.comm_s != 0.0 {
+                return Err("pinned task paid remote comm".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Overhead accounting is internally consistent: hops and comm move
+/// together; local placements cost no messages.
+#[test]
+fn overhead_accounting_is_consistent() {
+    check("overhead-consistent", default_cases(), |rng| {
+        let decs = random_decs(rng);
+        let perf = ProfileModel::new();
+        let net = Network::new();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let tr = Traverser::new(&slow, &perf, &net);
+        let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
+        let origin = *rng.choice(&decs.edge_devices);
+        let task = random_task(rng);
+        let r = orc.map_task(&tr, &task, origin, origin, 0.0, &Loads::default());
+        let oh = r.overhead;
+        if (oh.comm_s > 0.0) != (oh.hops > 0) {
+            return Err(format!("comm {} vs hops {}", oh.comm_s, oh.hops));
+        }
+        if oh.comm_s < 0.0 || oh.compute_s < 0.0 {
+            return Err("negative overhead".into());
+        }
+        if let Some(pu) = r.pu {
+            let dev = decs.graph.device_of(pu).unwrap();
+            if dev == origin && task.kind.pinned_to_origin() && oh.hops != 0 {
+                return Err("local pinned placement sent messages".into());
+            }
+        }
+        if oh.traverser_calls == 0 && r.pu.is_some() {
+            return Err("placement without any traverser call".into());
+        }
+        Ok(())
+    });
+}
+
+/// Every policy finds a placement whenever the default policy does
+/// (policies reorder the search; they do not shrink the candidate space).
+#[test]
+fn policies_agree_on_feasibility() {
+    check("policy-feasibility", default_cases(), |rng| {
+        let decs = random_decs(rng);
+        let perf = ProfileModel::new();
+        let net = Network::new();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let tr = Traverser::new(&slow, &perf, &net);
+        let origin = *rng.choice(&decs.edge_devices);
+        let task = random_task(rng);
+        let loads = random_loads(rng, &decs, 0.0);
+        let found: Vec<bool> = Policy::all()
+            .iter()
+            .map(|&p| {
+                let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), p);
+                orc.map_task(&tr, &task, origin, origin, 0.0, &loads).pu.is_some()
+            })
+            .collect();
+        if found.iter().any(|&f| f != found[0]) {
+            return Err(format!("policies disagree on feasibility: {found:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// The Traverser is monotone in load: adding a co-runner never speeds a
+/// task up, and never repairs a deadline violation.
+#[test]
+fn traverser_monotone_in_active_load() {
+    check("traverser-monotone", default_cases(), |rng| {
+        let decs = random_decs(rng);
+        let perf = ProfileModel::new();
+        let net = Network::new();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let tr = Traverser::new(&slow, &perf, &net);
+        let origin = *rng.choice(&decs.edge_devices);
+        let pus = decs.graph.pus_in(origin);
+        let task = random_task(rng);
+        let mut cfg = heye::task::Cfg::new();
+        cfg.add(task.clone());
+        // find a feasible PU first
+        let pu = pus.iter().copied().find(|&pu| {
+            decs.graph
+                .pu_class(pu)
+                .map(|c| task.kind.allowed_pus().contains(&c))
+                .unwrap_or(false)
+        });
+        let pu = match pu {
+            Some(p) => p,
+            None => return Ok(()),
+        };
+        let base = match tr.predict(&cfg, &[pu], origin, &[], 0.0) {
+            Some(p) => p,
+            None => return Ok(()),
+        };
+        let co = ActiveTask {
+            id: TaskId(99),
+            kind: *rng.choice(&MAPPABLE),
+            pu,
+            remaining_s: rng.range_f64(0.001, 0.05),
+            deadline_abs: f64::INFINITY,
+        };
+        let loaded = tr
+            .predict(&cfg, &[pu], origin, &[co], 0.0)
+            .ok_or("prediction must still exist")?;
+        if loaded.finish[0] + 1e-12 < base.finish[0] {
+            return Err(format!(
+                "co-runner sped the task up: {} -> {}",
+                base.finish[0], loaded.finish[0]
+            ));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,216 @@
+//! Integration tests across the whole stack: simulator + orchestrator +
+//! baselines + network + metrics, plus property tests on engine-level
+//! invariants (conservation, causality, QoS accounting).
+
+use heye::baselines;
+use heye::hwgraph::presets::{Decs, DecsSpec, XAVIER_NX};
+use heye::sim::{JoinEvent, NetEvent, RunMetrics, SimConfig, Simulation, Workload};
+use heye::util::prop::{check, default_cases};
+
+fn run(
+    sched: &str,
+    edges: usize,
+    servers: usize,
+    app: &str,
+    horizon: f64,
+    seed: u64,
+) -> (Decs, RunMetrics) {
+    let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(edges, servers)));
+    let mut s = baselines::by_name(sched, &sim.decs);
+    let wl = match app {
+        "mining" => Workload::mining(&sim.decs, edges * 4, 10.0),
+        _ => Workload::vr(&sim.decs),
+    };
+    let mut cfg = SimConfig::default().horizon(horizon).seed(seed);
+    if sched == "heye-grouped" {
+        cfg = cfg.grouped(true);
+    }
+    let m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
+    (sim.decs, m)
+}
+
+/// Conservation: every completed frame has coherent accounting.
+#[test]
+fn frame_accounting_is_coherent_across_schedulers() {
+    for sched in ["heye", "heye-direct", "heye-sticky", "heye-grouped", "ace", "lats", "cloudvr"] {
+        let (_, m) = run(sched, 4, 2, "vr", 0.6, 3);
+        assert!(!m.frames.is_empty(), "{sched}: no frames");
+        for f in &m.frames {
+            assert!(f.latency_s > 0.0, "{sched}: non-positive latency");
+            assert!(
+                f.finish_t >= f.release_t,
+                "{sched}: finish before release"
+            );
+            assert!(f.compute_s > 0.0, "{sched}: no compute recorded");
+            assert!(f.slowdown_s >= -1e-9, "{sched}: negative slowdown");
+            assert!(f.comm_s >= 0.0 && f.sched_s >= 0.0);
+            // components cannot exceed the end-to-end span (serial CFG)
+            assert!(
+                f.latency_s + 1e-9 >= f.comm_s,
+                "{sched}: comm {} > latency {}",
+                f.comm_s,
+                f.latency_s
+            );
+            assert!(f.resolution > 0.0 && f.resolution <= 1.0);
+        }
+    }
+}
+
+/// Tasks never run on PUs that cannot execute them, whatever the scheduler.
+#[test]
+fn placements_respect_candidate_sets_everywhere() {
+    for sched in ["heye", "ace", "lats", "cloudvr"] {
+        let (_, m) = run(sched, 5, 3, "vr", 0.6, 5);
+        for ((kind, class, _), n) in &m.placements {
+            assert!(*n > 0);
+            let k = heye::task::TaskKind::ALL
+                .iter()
+                .find(|k| k.name() == kind)
+                .unwrap_or_else(|| panic!("unknown kind {kind}"));
+            let ok = k
+                .allowed_pus()
+                .iter()
+                .any(|c| c.name() == class);
+            assert!(ok, "{sched}: {kind} ran on disallowed {class}");
+        }
+    }
+}
+
+/// Mining: all sensor-read stages run on the origin edges (pinned).
+#[test]
+fn mining_reads_stay_on_edges() {
+    let (_, m) = run("heye", 4, 2, "mining", 0.6, 7);
+    for ((kind, _, on_server), n) in &m.placements {
+        if kind == "sensor_read" {
+            assert!(!on_server, "sensor_read on a server ({n} times)");
+        }
+    }
+}
+
+/// Throttling a link can only increase communication time.
+#[test]
+fn throttle_monotonicity() {
+    let base = {
+        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+        let mut s = baselines::by_name("heye", &sim.decs);
+        let wl = Workload::vr(&sim.decs);
+        let cfg = SimConfig::default().horizon(1.0).seed(11).noise(0.0);
+        sim.run(s.as_mut(), wl, vec![], vec![], &cfg)
+    };
+    let throttled = {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let uplink = decs.uplink_of(decs.edge_devices[0]).unwrap();
+        let mut sim = Simulation::new(decs);
+        let mut s = baselines::by_name("heye", &sim.decs);
+        let wl = Workload::vr(&sim.decs);
+        let cfg = SimConfig::default().horizon(1.0).seed(11).noise(0.0);
+        let net = vec![NetEvent {
+            t: 0.0,
+            link: uplink,
+            gbps: Some(0.5),
+        }];
+        sim.run(s.as_mut(), wl, net, vec![], &cfg)
+    };
+    let comm = |m: &RunMetrics| m.frames.iter().map(|f| f.comm_s).sum::<f64>();
+    assert!(comm(&throttled) >= comm(&base));
+}
+
+/// Join events extend the system without corrupting existing accounting.
+#[test]
+fn join_preserves_existing_devices_metrics() {
+    let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+    let before_devices = sim.decs.edge_devices.len();
+    let mut s = baselines::by_name("heye", &sim.decs);
+    let wl = Workload::vr(&sim.decs);
+    let cfg = SimConfig::default().horizon(1.2).seed(13);
+    let joins = vec![
+        JoinEvent {
+            t: 0.4,
+            model: XAVIER_NX.to_string(),
+            uplink_gbps: 10.0,
+            vr_source: true,
+        },
+        JoinEvent {
+            t: 0.8,
+            model: XAVIER_NX.to_string(),
+            uplink_gbps: 10.0,
+            vr_source: true,
+        },
+    ];
+    let m = sim.run(s.as_mut(), wl, vec![], joins, &cfg);
+    assert_eq!(sim.decs.edge_devices.len(), before_devices + 2);
+    // all original devices kept completing frames after the joins
+    for &d in &sim.decs.edge_devices[..before_devices] {
+        let post = m
+            .frames_of(d)
+            .into_iter()
+            .filter(|f| f.release_t > 0.8)
+            .count();
+        assert!(post > 0, "original device starved after join");
+    }
+}
+
+/// Property: released = completed + dropped + still-in-flight, and QoS
+/// failure rate is within [0, 1], across random configurations.
+#[test]
+fn conservation_and_bounds_hold_on_random_configs() {
+    check("sim-conservation", default_cases().min(24), |rng| {
+        let edges = rng.range(1, 5);
+        let servers = rng.range(1, 3);
+        let sched = *rng.choice(&["heye", "ace", "lats", "cloudvr"]);
+        let app = *rng.choice(&["vr", "mining"]);
+        let seed = rng.next_u64();
+        let (_, m) = run(sched, edges, servers, app, 0.4, seed);
+        let released: u64 = m.released.values().sum();
+        let completed = m.frames.len() as u64;
+        if completed + m.dropped > released {
+            return Err(format!(
+                "completed {completed} + dropped {} > released {released}",
+                m.dropped
+            ));
+        }
+        let q = m.qos_failure_rate();
+        if !(0.0..=1.0).contains(&q) {
+            return Err(format!("qos rate {q}"));
+        }
+        if m.overhead_ratio() < 0.0 {
+            return Err("negative overhead ratio".into());
+        }
+        for f in &m.frames {
+            if f.finish_t < f.release_t {
+                return Err("causality violation".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The simulator is deterministic for any scheduler given a seed.
+#[test]
+fn determinism_across_schedulers() {
+    for sched in ["heye", "ace", "lats", "cloudvr"] {
+        let (_, a) = run(sched, 3, 2, "vr", 0.5, 17);
+        let (_, b) = run(sched, 3, 2, "vr", 0.5, 17);
+        assert_eq!(a.frames.len(), b.frames.len(), "{sched}");
+        let la: f64 = a.frames.iter().map(|f| f.latency_s).sum();
+        let lb: f64 = b.frames.iter().map(|f| f.latency_s).sum();
+        assert!((la - lb).abs() < 1e-12, "{sched}: {la} vs {lb}");
+    }
+}
+
+/// H-EYE never loses to the contention-blind baselines on QoS when the
+/// system is under pressure — 12 edges sharing 3 servers is past the
+/// feasibility knee (the paper's central claim).
+#[test]
+fn heye_wins_qos_under_pressure() {
+    let (_, heye) = run("heye", 12, 3, "vr", 1.0, 19);
+    for base in ["ace", "lats"] {
+        let (_, b) = run(base, 12, 3, "vr", 1.0, 19);
+        assert!(
+            heye.qos_failure_rate() <= b.qos_failure_rate() + 1e-9,
+            "h-eye {} vs {base} {}",
+            heye.qos_failure_rate(),
+            b.qos_failure_rate()
+        );
+    }
+}
