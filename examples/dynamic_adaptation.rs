@@ -1,4 +1,5 @@
-//! Dynamic adaptability (§5.4) — replays the Fig. 12 experiments live.
+//! Dynamic adaptability (§5.4) — replays the Fig. 12 experiments live,
+//! entirely through the [`heye::platform`] facade.
 //!
 //! 1. **Bandwidth sweep (Fig. 12a/b)**: Orin AGX's uplink is throttled
 //!    10 → 7.5 → 5 → 2.5 → 1 Gb/s. CloudVR keeps QoS by dropping the frame
@@ -12,19 +13,22 @@
 //! cargo run --release --example dynamic_adaptation
 //! ```
 
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec, XAVIER_NX};
-use heye::sim::{JoinEvent, NetEvent, SimConfig, Simulation, Workload};
+use heye::hwgraph::presets::XAVIER_NX;
+use heye::platform::{Platform, WorkloadSpec};
+use heye::sim::{JoinEvent, SimConfig};
 use heye::task::workloads::target_fps;
+use heye::util::error::Result;
 
-fn main() {
-    bandwidth_sweep();
-    device_join();
+fn main() -> Result<()> {
+    let platform = Platform::builder().paper_vr().build()?;
+    bandwidth_sweep(&platform)?;
+    device_join(&platform)?;
+    Ok(())
 }
 
 /// Fig. 12a/b: step the Orin AGX uplink down and compare H-EYE's and
 /// CloudVR's achieved FPS and frame resolution.
-fn bandwidth_sweep() {
+fn bandwidth_sweep(platform: &Platform) -> Result<()> {
     println!("== dynamic bandwidth (Fig. 12a/b): Orin AGX uplink sweep ==");
     println!(
         "{:>9} | {:>12} {:>12} | {:>12} {:>12}",
@@ -33,28 +37,21 @@ fn bandwidth_sweep() {
     for gbps in [10.0, 7.5, 5.0, 2.5, 1.0] {
         let mut row = Vec::new();
         for name in ["heye", "cloudvr"] {
-            let decs = Decs::build(&DecsSpec::paper_vr());
-            let agx = decs.edge_devices[0]; // edge0 = Orin AGX
-            let uplink = decs.uplink_of(agx).unwrap();
-            let mut sim = Simulation::new(decs);
-            let mut sched = baselines::by_name(name, &sim.decs);
-            let wl = Workload::vr(&sim.decs);
-            let cfg = SimConfig::default().horizon(2.0).seed(42);
-            let net = vec![NetEvent {
-                t: 0.0,
-                link: uplink,
-                gbps: Some(gbps),
-            }];
-            let m = sim.run(sched.as_mut(), wl, net, vec![], &cfg);
-            let target = target_fps(sim.decs.device_model(agx));
-            let achieved = m.achieved_fps(agx, cfg.horizon_s);
-            let res: f64 = {
-                let frames: Vec<_> = m.frames_of(agx);
-                if frames.is_empty() {
-                    0.0
-                } else {
-                    frames.iter().map(|f| f.resolution).sum::<f64>() / frames.len() as f64
-                }
+            // edge0 = Orin AGX; its uplink is throttled from t = 0
+            let report = platform
+                .session(WorkloadSpec::Vr)
+                .scheduler(name)
+                .config(SimConfig::default().horizon(2.0).seed(42))
+                .throttle_uplink(0, 0.0, Some(gbps))
+                .run()?;
+            let agx = report.decs.edge_devices[0];
+            let target = target_fps(report.decs.device_model(agx));
+            let achieved = report.achieved_fps(agx);
+            let frames = report.metrics.frames_of(agx);
+            let res: f64 = if frames.is_empty() {
+                0.0
+            } else {
+                frames.iter().map(|f| f.resolution).sum::<f64>() / frames.len() as f64
             };
             row.push((achieved / target, res));
         }
@@ -64,31 +61,32 @@ fn bandwidth_sweep() {
         );
     }
     println!("(H-EYE holds resolution 1.0 by re-balancing; CloudVR shrinks frames)");
+    Ok(())
 }
 
 /// Fig. 12c: a Xavier NX joins at t = 1 s; report per-device QoS before
 /// and after the join.
-fn device_join() {
+fn device_join(platform: &Platform) -> Result<()> {
     println!("\n== new edge joined (Fig. 12c): Xavier NX at t = 1.0 s ==");
-    let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
-    let mut sched = baselines::by_name("heye", &sim.decs);
-    let wl = Workload::vr(&sim.decs);
-    let cfg = SimConfig::default().horizon(2.0).seed(42);
-    let joins = vec![JoinEvent {
-        t: 1.0,
-        model: XAVIER_NX.to_string(),
-        uplink_gbps: 10.0,
-        vr_source: true,
-    }];
     let t0 = std::time::Instant::now();
-    let m = sim.run(sched.as_mut(), wl, vec![], joins, &cfg);
+    let report = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .config(SimConfig::default().horizon(2.0).seed(42))
+        .join(JoinEvent {
+            t: 1.0,
+            model: XAVIER_NX.to_string(),
+            uplink_gbps: 10.0,
+            vr_source: true,
+        })
+        .run()?;
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "{:<10} {:>10} {:>12} {:>12}",
         "device", "frames", "qos-ok pre", "qos-ok post"
     );
-    for &dev in &sim.decs.edge_devices {
-        let frames = m.frames_of(dev);
+    for &dev in &report.decs.edge_devices {
+        let frames = report.metrics.frames_of(dev);
         if frames.is_empty() {
             continue;
         }
@@ -104,7 +102,7 @@ fn device_join() {
         };
         println!(
             "{:<10} {:>10} {:>11.0}% {:>11.0}%",
-            sim.decs.graph.node(dev).name,
+            report.decs.graph.node(dev).name,
             frames.len(),
             rate(true) * 100.0,
             rate(false) * 100.0
@@ -115,4 +113,5 @@ fn device_join() {
          (rescheduling itself is sub-millisecond)",
         wall * 1e3
     );
+    Ok(())
 }

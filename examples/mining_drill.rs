@@ -1,33 +1,86 @@
 //! Mining smart-drill-bit driver (§4.2) — the throughput-oriented example.
 //!
 //! 1. Executes the three real ML classifiers (SVM / KNN / MLP artifacts)
-//!    on a synthetic force-sensor window through PJRT and reports their
-//!    per-window host latencies and rock-class votes.
-//! 2. Runs the collaborative edge+server mining workload through the
-//!    Orchestrator and every baseline, reporting completion latency and
-//!    QoS at increasing sensor counts — the Fig. 10a story.
+//!    on a synthetic force-sensor window through PJRT (when the `pjrt`
+//!    feature and artifacts are available) and reports their per-window
+//!    host latencies and rock-class votes.
+//! 2. Runs the collaborative edge+server mining workload through a
+//!    [`heye::platform::Session`] for H-EYE and every baseline, reporting
+//!    completion latency and QoS — the Fig. 10a story.
 //!
 //! ```text
 //! cargo run --release --example mining_drill [-- --sensors 20 --horizon 1.0]
 //! ```
 
-use anyhow::Result;
-
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::platform::{Platform, WorkloadSpec};
 use heye::runtime::Runtime;
-use heye::sim::{SimConfig, Simulation, Workload};
+use heye::sim::SimConfig;
 use heye::task::workloads::MINING_DEADLINE_S;
 use heye::telemetry;
 use heye::util::cli::Args;
+use heye::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let sensors = args.get_usize("sensors", 20);
     let horizon = args.get_f64("horizon", 1.0);
 
-    // --- real classifier executions --------------------------------------
-    let mut rt = Runtime::open("artifacts")?;
+    // --- real classifier executions (PJRT, when available) ----------------
+    match Runtime::open("artifacts") {
+        Ok(rt) => classify_window(rt)?,
+        Err(e) => println!("(skipping real classifier executions: {e})"),
+    }
+
+    // --- collaborative processing at scale --------------------------------
+    println!(
+        "\n{sensors} sensors @ 10 Hz across the paper testbed ({}s horizon, {} ms deadline):",
+        horizon,
+        MINING_DEADLINE_S * 1e3
+    );
+    let platform = Platform::builder().paper_vr().build()?;
+    telemetry::compare(
+        &platform,
+        WorkloadSpec::Mining { sensors, hz: 10.0 },
+        &["heye", "ace", "lats"],
+        &SimConfig::default().horizon(horizon).seed(42),
+    )?;
+
+    // --- the Fig. 10a sweep: how many sensors fit 100 ms? -----------------
+    println!("\nmax sensors within 100 ms on Orin Nano + server-1 (Fig. 10a):");
+    println!(
+        "{:<8} {:>14} {:>14} {:>10}",
+        "sensors", "heye (ms)", "ace (ms)", "winner-ok"
+    );
+    let pair = Platform::builder().validation_pair().build()?;
+    for n in [10, 20, 30, 40] {
+        let mut lat = Vec::new();
+        for name in ["heye", "ace"] {
+            let report = pair
+                .session(WorkloadSpec::MiningBurst { origin: 0, n })
+                .scheduler(name)
+                .config(SimConfig::default().horizon(3.0).seed(7).noise(0.0))
+                .run()?;
+            let worst = report
+                .metrics
+                .frames
+                .iter()
+                .map(|f| f.latency_s)
+                .fold(0.0f64, f64::max);
+            lat.push(worst);
+        }
+        println!(
+            "{:<8} {:>14.1} {:>14.1} {:>10}",
+            n,
+            lat[0] * 1e3,
+            lat[1] * 1e3,
+            if lat[0] <= MINING_DEADLINE_S { "yes" } else { "no" }
+        );
+    }
+    Ok(())
+}
+
+/// Run the three mining classifiers on one synthetic force window.
+fn classify_window(mut rt: Runtime) -> Result<()> {
     println!("PJRT platform: {}", rt.platform());
     println!("\nreal sensor-window classification (batch of 32 windows):");
     // a synthetic force window: a slow ramp + tool-chatter oscillation
@@ -50,53 +103,6 @@ fn main() -> Result<()> {
             .map(|(i, _)| i)
             .unwrap_or(0);
         println!("{:<14} {:>10.3} {:>16}", name, dt * 1e3, top);
-    }
-
-    // --- collaborative processing at scale --------------------------------
-    println!(
-        "\n{sensors} sensors @ 10 Hz across the paper testbed ({}s horizon, {} ms deadline):",
-        horizon,
-        MINING_DEADLINE_S * 1e3
-    );
-    for name in ["heye", "ace", "lats"] {
-        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
-        let mut sched = baselines::by_name(name, &sim.decs);
-        let wl = Workload::mining(&sim.decs, sensors, 10.0);
-        let cfg = SimConfig::default().horizon(horizon).seed(42);
-        let m = sim.run(sched.as_mut(), wl, vec![], vec![], &cfg);
-        telemetry::summary_line(name, &m);
-    }
-
-    // --- the Fig. 10a sweep: how many sensors fit 100 ms? -----------------
-    println!("\nmax sensors within 100 ms on Orin Nano + server-1 (Fig. 10a):");
-    println!(
-        "{:<8} {:>14} {:>14} {:>10}",
-        "sensors", "heye (ms)", "ace (ms)", "winner-ok"
-    );
-    for n in [10, 20, 30, 40] {
-        let mut lat = Vec::new();
-        for name in ["heye", "ace"] {
-            let decs = Decs::build(&DecsSpec::validation_pair());
-            let origin = decs.edge_devices[0];
-            let mut sim = Simulation::new(decs);
-            let mut sched = baselines::by_name(name, &sim.decs);
-            let wl = Workload::mining_burst(origin, n);
-            let cfg = SimConfig::default().horizon(3.0).seed(7).noise(0.0);
-            let m = sim.run(sched.as_mut(), wl, vec![], vec![], &cfg);
-            let worst = m
-                .frames
-                .iter()
-                .map(|f| f.latency_s)
-                .fold(0.0f64, f64::max);
-            lat.push(worst);
-        }
-        println!(
-            "{:<8} {:>14.1} {:>14.1} {:>10}",
-            n,
-            lat[0] * 1e3,
-            lat[1] * 1e3,
-            if lat[0] <= MINING_DEADLINE_S { "yes" } else { "no" }
-        );
     }
     Ok(())
 }

@@ -1,96 +1,58 @@
-//! Quickstart: a 60-line tour of the H-EYE public API.
-//!
-//! Builds the paper's testbed, asks the Orchestrator to place a render
-//! task, predicts its latency with and without a co-runner, and runs one
-//! short simulated second of the VR workload.
+//! Quickstart: the H-EYE public API in three steps — build a [`Platform`],
+//! pick a scheduler from the registry, run a [`Session`], read the
+//! [`RunReport`].
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 
-use heye::hwgraph::presets::{Decs, DecsSpec};
-use heye::netsim::Network;
-use heye::orchestrator::{Hierarchy, Loads, Orchestrator, Policy};
-use heye::perfmodel::ProfileModel;
-use heye::sim::{HeyeScheduler, SimConfig, Simulation, Workload};
-use heye::slowdown::CachedSlowdown;
-use heye::task::{workloads, TaskKind, TaskSpec};
-use heye::traverser::Traverser;
+use heye::platform::{Platform, SchedulerRegistry, WorkloadSpec};
+use heye::sim::SimConfig;
+use heye::util::error::Result;
 
-fn main() {
-    // 1. the HW-Graph: five Jetson-class edges + three servers (Table 2)
-    let decs = Decs::build(&DecsSpec::paper_vr());
+fn main() -> Result<()> {
+    // 1. the platform: the paper's testbed (five Jetson-class edges +
+    //    three servers, Table 2), perf model, network — one builder call
+    let platform = Platform::builder().paper_vr().build()?;
+    let decs = platform.decs();
     println!(
-        "DECS: {} nodes / {} links; edges={:?}",
+        "DECS: {} nodes / {} links; {} edges + {} servers",
         decs.graph.node_count(),
         decs.graph.edge_count(),
-        decs.edge_devices.len()
+        decs.edge_devices.len(),
+        decs.servers.len()
     );
 
-    // 2. the Traverser: contention-aware performance prediction
-    let perf = ProfileModel::new();
-    let net = Network::new();
-    let slow = CachedSlowdown::new(&decs.graph);
-    let tr = Traverser::new(&slow, &perf, &net);
-    let cfg = workloads::vr_cfg(30.0, 1.0, None);
-    let render_pu = decs.graph.by_name("server0.gpu").unwrap();
-    let alone = tr
-        .predict(&cfg, &full_mapping(&decs, render_pu), decs.edge_devices[0], &[], 0.0)
-        .expect("feasible mapping");
-    println!(
-        "VR frame makespan on edge0+server0: {:.2} ms (slowdown {:.2} ms, comm {:.2} ms)",
-        alone.makespan * 1e3,
-        alone.slowdown_s.iter().sum::<f64>() * 1e3,
-        alone.comm_s.iter().sum::<f64>() * 1e3
-    );
+    // 2. the scheduler registry: H-EYE's policies and every baseline,
+    //    resolvable by name (plug your own in with SchedulerRegistry::register)
+    println!("\nregistered schedulers:");
+    for e in SchedulerRegistry::entries() {
+        println!("  {:<14} {}", e.name, e.description);
+    }
 
-    // 3. the Orchestrator: decentralized task placement (Alg. 1)
-    let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
-    let render = TaskSpec::new(TaskKind::Render).deadline(0.030);
-    let r = orc.map_task(&tr, &render, decs.edge_devices[0], decs.edge_devices[0], 0.0, &Loads::default());
-    let pu = r.pu.expect("render placed");
+    // 3. a session: one simulated second of the VR workload under H-EYE
+    let report = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .config(SimConfig::default().horizon(1.0))
+        .run()?;
     println!(
-        "render mapped to {} (predicted {:.2} ms, overhead {:.3} ms / {} hops)",
-        decs.graph.node(pu).name,
-        r.predicted_latency_s * 1e3,
-        r.overhead.total_s() * 1e3,
-        r.overhead.hops
-    );
-
-    // 4. the simulator: one simulated second of the full VR workload
-    let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
-    let mut sched = HeyeScheduler::new(Orchestrator::new(
-        Hierarchy::from_decs(&sim.decs),
-        Policy::Hierarchical,
-    ));
-    let wl = Workload::vr(&sim.decs);
-    let m = sim.run(
-        &mut sched,
-        wl,
-        vec![],
-        vec![],
-        &SimConfig::default().horizon(1.0),
-    );
-    println!(
-        "1 s of VR: {} frames, mean latency {:.2} ms, QoS failures {:.1}%, \
+        "\n1 s of VR: {} frames, mean latency {:.2} ms, QoS failures {:.1}%, \
          scheduling overhead {:.2}%",
-        m.frames.len(),
-        m.mean_latency_s() * 1e3,
-        m.qos_failure_rate() * 100.0,
-        m.overhead_ratio() * 100.0
+        report.frames(),
+        report.mean_latency_s() * 1e3,
+        report.qos_failure_rate() * 100.0,
+        report.overhead_ratio() * 100.0
     );
-}
+    report.print_breakdown("per-device breakdown");
 
-/// Map the 7-stage VR CFG: everything local to edge0 except render.
-fn full_mapping(decs: &Decs, render_pu: heye::hwgraph::NodeId) -> Vec<heye::hwgraph::NodeId> {
-    let n = |s: &str| decs.graph.by_name(s).unwrap();
-    vec![
-        n("edge0.cpu0"),
-        n("edge0.cpu1"),
-        render_pu,
-        n("server0.cpu0"),
-        n("edge0.vic"),
-        n("edge0.vic"),
-        n("edge0.cpu0"),
-    ]
+    // swapping the scheduler is the one-line change the registry exists for
+    println!();
+    platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("ace")
+        .config(SimConfig::default().horizon(1.0))
+        .run()?
+        .print_summary();
+    Ok(())
 }

@@ -3,27 +3,26 @@
 //! All three layers compose here:
 //! 1. **L1/L2 (build-time)**: `make artifacts` lowered the Pallas-backed
 //!    JAX models to `artifacts/*.hlo.txt`.
-//! 2. **Runtime**: this binary compiles them on the PJRT CPU client and
-//!    (a) *really executes* the whole VR frame pipeline — pose-predict →
-//!    render → encode → decode → reproject → display — chaining real
-//!    tensors between stages, and (b) measures a host profile that anchors
-//!    the simulator's standalone latencies to measured kernel times.
-//! 3. **L3 (coordinator)**: the Orchestrator places every task of the
-//!    5-edge/3-server VR workload; the simulator executes the placements
-//!    under the contention model and reports the Fig.-11a-style breakdown.
+//! 2. **Runtime** (needs the `pjrt` feature): this binary compiles them on
+//!    the PJRT CPU client and *really executes* the whole VR frame
+//!    pipeline — pose-predict → render → encode → decode → reproject →
+//!    display — chaining real tensors between stages, plus a host profile
+//!    that anchors the simulator's standalone latencies to measured kernel
+//!    times. Without the feature this section degrades gracefully.
+//! 3. **L3 (coordinator)**: a [`heye::platform::Session`] places every
+//!    task of the 5-edge/3-server VR workload and reports the
+//!    Fig.-11a-style breakdown.
 //!
 //! ```text
 //! cargo run --release --example vr_pipeline [-- --frames 30 --horizon 2.0]
 //! ```
 
-use anyhow::Result;
-
-use heye::hwgraph::presets::{Decs, DecsSpec};
-use heye::orchestrator::{Hierarchy, Orchestrator, Policy};
+use heye::platform::{Platform, WorkloadSpec};
 use heye::runtime::{HostProfiler, Runtime};
-use heye::sim::{HeyeScheduler, SimConfig, Simulation, Workload};
-use heye::telemetry;
+use heye::sim::SimConfig;
+use heye::task::workloads::target_fps;
 use heye::util::cli::Args;
+use heye::util::error::Result;
 use heye::util::stats::Samples;
 
 fn main() -> Result<()> {
@@ -31,11 +30,39 @@ fn main() -> Result<()> {
     let frames = args.get_usize("frames", 30);
     let horizon = args.get_f64("horizon", 2.0);
 
-    // --- runtime: load + compile the AOT artifacts -----------------------
-    let mut rt = Runtime::open("artifacts")?;
+    // --- runtime: real PJRT frames, when the artifacts + feature exist ---
+    match Runtime::open("artifacts") {
+        Ok(rt) => real_frames(rt, frames)?,
+        Err(e) => println!("(skipping real PJRT frames: {e})"),
+    }
+
+    // --- the coordinated system, through the facade ----------------------
+    let platform = Platform::builder().paper_vr().build()?;
+    let report = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .config(SimConfig::default().horizon(horizon).seed(42))
+        .run()?;
+
+    println!();
+    report.print_summary();
+    report.print_breakdown("VR per-device breakdown (Fig. 11a view)");
+    for r in &report.per_device() {
+        println!(
+            "  {:<10} achieved {:>5.1} FPS (target {:.0})",
+            r.name,
+            report.achieved_fps(r.device),
+            target_fps(report.decs.device_model(r.device))
+        );
+    }
+    Ok(())
+}
+
+/// Execute `frames` real VR frames through PJRT and print per-stage and
+/// end-to-end host latencies plus the host profile.
+fn real_frames(mut rt: Runtime, frames: usize) -> Result<()> {
     println!("PJRT platform: {}", rt.platform());
 
-    // --- real end-to-end frames ------------------------------------------
     // pose-predict produces the gaze; render/encode/decode/reproject chain
     // real (256, 256) tensors; display consumes the final frame.
     println!("\nexecuting {frames} real VR frames through PJRT:");
@@ -108,30 +135,6 @@ fn main() -> Result<()> {
     println!("\nhost profile (median ms per artifact):");
     for (name, s) in &prof.host_s {
         println!("  {:<18} {:>8.3}", name, s * 1e3);
-    }
-
-    // --- the coordinated system ------------------------------------------
-    let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
-    let mut sched = HeyeScheduler::new(Orchestrator::new(
-        Hierarchy::from_decs(&sim.decs),
-        Policy::Hierarchical,
-    ));
-    let wl = Workload::vr(&sim.decs);
-    let cfg = SimConfig::default().horizon(horizon).seed(42);
-    let m = sim.run(&mut sched, wl, vec![], vec![], &cfg);
-
-    println!();
-    telemetry::summary_line("h-eye", &m);
-    let rows = telemetry::per_device(&sim.decs, &m);
-    telemetry::print_breakdown("VR per-device breakdown (Fig. 11a view)", &rows);
-    for r in &rows {
-        let fps = m.achieved_fps(r.device, horizon);
-        println!(
-            "  {:<10} achieved {:>5.1} FPS (target {:.0})",
-            r.name,
-            fps,
-            heye::task::workloads::target_fps(sim.decs.device_model(r.device))
-        );
     }
     Ok(())
 }

@@ -8,18 +8,24 @@
 //! 4. **Virtual sub-cluster fan-out** — ORC tree depth vs MapTask hops at
 //!    scale.
 
-use heye::baselines;
 use heye::hwgraph::presets::{Decs, DecsSpec};
 use heye::orchestrator::Hierarchy;
-use heye::sim::{RunMetrics, SimConfig, Simulation, Workload};
+use heye::platform::{Platform, WorkloadSpec};
+use heye::sim::{RunMetrics, SimConfig};
 use heye::util::bench::FigureTable;
 
 fn run_stressed(sched: &str) -> RunMetrics {
-    let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(8, 3)));
-    let mut s = baselines::by_name(sched, &sim.decs);
-    let wl = Workload::vr(&sim.decs);
-    let cfg = SimConfig::default().horizon(2.0).seed(61);
-    sim.run(s.as_mut(), wl, vec![], vec![], &cfg)
+    let platform = Platform::builder()
+        .mixed(8, 3)
+        .build()
+        .expect("ablation topology");
+    platform
+        .session(WorkloadSpec::Vr)
+        .scheduler(sched)
+        .config(SimConfig::default().horizon(2.0).seed(61))
+        .run()
+        .expect("ablation session")
+        .metrics
 }
 
 fn main() {

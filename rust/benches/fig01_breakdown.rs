@@ -9,10 +9,9 @@
 //! own edge pipelines remain the bottleneck; contention shows up on the
 //! shared server without breaking the slow edges' relaxed QoS.
 
-use heye::baselines;
 use heye::hwgraph::presets::{DecsSpec, ORIN_AGX, ORIN_NANO, XAVIER_NX, SERVER1, SERVER2};
-use heye::sim::{SimConfig, Simulation, Workload};
-use heye::telemetry;
+use heye::platform::{Platform, WorkloadSpec};
+use heye::sim::SimConfig;
 use heye::util::bench::FigureTable;
 
 fn main() {
@@ -27,20 +26,22 @@ fn main() {
         edge_uplink_gbps: 10.0,
         wan_gbps: 10.0,
     };
-    let mut sim = Simulation::new(heye::hwgraph::presets::Decs::build(&spec));
-    let mut sched = baselines::by_name("heye", &sim.decs);
-    let wl = Workload::vr(&sim.decs);
-    let cfg = SimConfig::default().horizon(2.0).seed(1);
-    let m = sim.run(sched.as_mut(), wl, vec![], vec![], &cfg);
+    let platform = Platform::from_spec(spec).expect("fig1 topology");
+    let report = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .config(SimConfig::default().horizon(2.0).seed(1))
+        .run()
+        .expect("fig1 session");
 
-    let rows = telemetry::per_device(&sim.decs, &m);
+    let rows = report.per_device();
     let mut table = FigureTable::new(
         "per-frame time breakdown (ms): [E]dge pair",
         &["compute", "contention", "network", "sched", "total"],
     );
     for r in &rows {
         table.row(
-            format!("{} ({})", r.name, sim.decs.device_model(r.device)),
+            format!("{} ({})", r.name, report.decs.device_model(r.device)),
             vec![
                 r.compute_s * 1e3,
                 r.slowdown_s * 1e3,
@@ -55,7 +56,7 @@ fn main() {
     // shape assertions (reported, not fatal)
     let slow_edges_ok = rows
         .iter()
-        .filter(|r| sim.decs.device_model(r.device) != ORIN_AGX)
+        .filter(|r| report.decs.device_model(r.device) != ORIN_AGX)
         .all(|r| r.qos_failure < 0.2);
     println!(
         "\nshape: computation dominates = {}; slow edges hold QoS on shared server = {}",

@@ -10,20 +10,24 @@
 //!     count that actually fits 100 ms, vs each model's claim. Paper
 //!     shape: H-EYE within ~2% of actual; ACE optimistic.
 
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec, ORIN_AGX, ORIN_NANO, XAVIER_AGX, SERVER1, SERVER2};
-use heye::sim::{RunMetrics, SimConfig, Simulation, Workload};
+use heye::hwgraph::presets::{DecsSpec, ORIN_AGX, ORIN_NANO, XAVIER_AGX, SERVER1, SERVER2};
+use heye::platform::{Platform, WorkloadSpec};
+use heye::sim::{RunMetrics, SimConfig};
 use heye::task::workloads::MINING_DEADLINE_S;
 use heye::util::bench::FigureTable;
 
 fn run_burst(spec: &DecsSpec, sched_name: &str, sensors: usize, seed: u64) -> RunMetrics {
-    let decs = Decs::build(spec);
-    let origin = decs.edge_devices[0];
-    let mut sim = Simulation::new(decs);
-    let mut sched = baselines::by_name(sched_name, &sim.decs);
-    let wl = Workload::mining_burst(origin, sensors);
-    let cfg = SimConfig::default().horizon(1.5).seed(seed).noise(0.03);
-    sim.run(sched.as_mut(), wl, vec![], vec![], &cfg)
+    let platform = Platform::from_spec(spec.clone()).expect("fig10 topology");
+    platform
+        .session(WorkloadSpec::MiningBurst {
+            origin: 0,
+            n: sensors,
+        })
+        .scheduler(sched_name)
+        .config(SimConfig::default().horizon(1.5).seed(seed).noise(0.03))
+        .run()
+        .expect("fig10 session")
+        .metrics
 }
 
 /// worst actual frame latency and worst predicted frame latency

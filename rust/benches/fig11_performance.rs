@@ -1,4 +1,5 @@
-//! Fig. 11 — Performance evaluation on the paper VR testbed.
+//! Fig. 11 — Performance evaluation on the paper VR testbed, driven
+//! entirely through the `heye::platform` facade.
 //!
 //! (a) Bottleneck identification among 5 edges + 3 servers; H-EYE's
 //!     per-device pipeline latency vs the best baseline (paper: 11-47%
@@ -10,44 +11,43 @@
 //!     failures appear at >= 2 edges per server; degrade with edge count
 //!     at 50 servers).
 
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec};
-use heye::sim::{RunMetrics, SimConfig, Simulation, Workload};
-use heye::task::workloads::target_fps;
-use heye::telemetry;
+use heye::hwgraph::presets::DecsSpec;
+use heye::platform::{Platform, RunReport, WorkloadSpec};
+use heye::sim::{FrameSource, SimConfig, Workload};
+use heye::task::workloads::{target_fps, vr_cfg};
 use heye::util::bench::FigureTable;
 
-fn run_vr(decs_spec: &DecsSpec, sched: &str, horizon: f64, seed: u64) -> (Decs, RunMetrics) {
-    let mut sim = Simulation::new(Decs::build(decs_spec));
-    let mut s = baselines::by_name(sched, &sim.decs);
-    let wl = Workload::vr(&sim.decs);
-    let cfg = SimConfig::default().horizon(horizon).seed(seed);
-    let m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
-    (sim.decs, m)
+fn run_vr(platform: &Platform, sched: &str, horizon: f64, seed: u64) -> RunReport {
+    platform
+        .session(WorkloadSpec::Vr)
+        .scheduler(sched)
+        .config(SimConfig::default().horizon(horizon).seed(seed))
+        .run()
+        .expect("vr session")
 }
 
 fn fig11a() {
     println!("=== Fig. 11a: bottleneck identification, 5 edges + 3 servers ===");
-    let spec = DecsSpec::paper_vr();
+    let platform = Platform::paper_vr();
     let scheds = ["heye", "ace", "lats", "cloudvr"];
     let mut per_dev: Vec<Vec<f64>> = Vec::new(); // [sched][device]
     let mut names: Vec<String> = Vec::new();
     let mut imbalance = Vec::new();
     let mut qos = Vec::new();
     for s in scheds {
-        let (decs, m) = run_vr(&spec, s, 2.0, 3);
-        let rows = telemetry::per_device(&decs, &m);
+        let report = run_vr(&platform, s, 2.0, 3);
+        let rows = report.per_device();
         if names.is_empty() {
             names = rows
                 .iter()
-                .map(|r| format!("{}({})", r.name, decs.device_model(r.device)))
+                .map(|r| format!("{}({})", r.name, report.decs.device_model(r.device)))
                 .collect();
         }
         per_dev.push(rows.iter().map(|r| r.mean_latency_s * 1e3).collect());
-        imbalance.push(m.edge_server_imbalance() * 100.0);
-        qos.push(m.qos_failure_rate() * 100.0);
+        imbalance.push(report.metrics.edge_server_imbalance() * 100.0);
+        qos.push(report.qos_failure_rate() * 100.0);
         if s == "heye" {
-            telemetry::print_breakdown("h-eye per-device breakdown + bottlenecks", &rows);
+            report.print_breakdown("h-eye per-device breakdown + bottlenecks");
         }
     }
     let mut table = FigureTable::new(
@@ -96,37 +96,37 @@ fn fig11b() {
         for n_servers in [2usize, 3, 4] {
             let mut spec = DecsSpec::paper_vr();
             spec.servers = DecsSpec::mixed(1, n_servers).servers;
-            let mut sim = Simulation::new(Decs::build(&spec));
-            let mut s = baselines::by_name("heye", &sim.decs);
-            let sources = sim
+            let platform = Platform::from_spec(spec).expect("paper edges + n servers");
+            // VR sources with per-stage deadline weights skewed per config
+            let workload = WorkloadSpec::custom(move |decs| {
+                let sources = decs
+                    .edge_devices
+                    .iter()
+                    .map(|&d| {
+                        let fps = target_fps(decs.device_model(d));
+                        FrameSource {
+                            origin: d,
+                            period_s: 1.0 / fps,
+                            budget_s: 2.0 / fps,
+                            make_cfg: Box::new(move |r| vr_cfg(fps, r, weights.as_ref())),
+                            start_t: 0.0,
+                            count: None,
+                        }
+                    })
+                    .collect();
+                Workload { sources }
+            });
+            let report = platform
+                .session(workload)
+                .scheduler("heye")
+                .config(SimConfig::default().horizon(2.0).seed(5))
+                .run()
+                .expect("fig11b session");
+            let min_ratio = report
                 .decs
                 .edge_devices
                 .iter()
-                .map(|&d| {
-                    let model = sim.decs.device_model(d).to_string();
-                    let fps = target_fps(&model);
-                    heye::sim::FrameSource {
-                        origin: d,
-                        period_s: 1.0 / fps,
-                        budget_s: 2.0 / fps,
-                        make_cfg: Box::new(move |r| {
-                            heye::task::workloads::vr_cfg(fps, r, weights.as_ref())
-                        }),
-                        start_t: 0.0,
-                        count: None,
-                    }
-                })
-                .collect();
-            let wl = Workload { sources };
-            let cfg = SimConfig::default().horizon(2.0).seed(5);
-            let m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
-            let min_ratio = sim
-                .decs
-                .edge_devices
-                .iter()
-                .map(|&d| {
-                    m.achieved_fps(d, cfg.horizon_s) / target_fps(sim.decs.device_model(d))
-                })
+                .map(|&d| report.achieved_fps(d) / target_fps(report.decs.device_model(d)))
                 .fold(f64::INFINITY, f64::min);
             row.push(min_ratio);
         }
@@ -146,9 +146,12 @@ fn fig11c() {
         let mut row = Vec::new();
         for ratio in [1.0f64, 1.5, 2.0, 3.0] {
             let edges = (servers as f64 * ratio).round() as usize;
-            let spec = DecsSpec::mixed(edges, servers);
-            let (_, m) = run_vr(&spec, "heye", 1.0, 7);
-            row.push(m.qos_failure_rate() * 100.0);
+            let platform = Platform::builder()
+                .mixed(edges, servers)
+                .build()
+                .expect("mixed topology");
+            let report = run_vr(&platform, "heye", 1.0, 7);
+            row.push(report.qos_failure_rate() * 100.0);
         }
         table.row(format!("{servers} servers"), row);
     }

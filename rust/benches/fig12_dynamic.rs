@@ -8,27 +8,22 @@
 //! (c) A new edge joins a running system at different scales: the
 //!     newcomer is scheduled within milliseconds and QoS recovers.
 
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec, XAVIER_NX};
-use heye::sim::{JoinEvent, NetEvent, RunMetrics, SimConfig, Simulation, Workload};
+use heye::hwgraph::presets::{Decs, XAVIER_NX};
+use heye::platform::{Platform, WorkloadSpec};
+use heye::sim::{JoinEvent, RunMetrics, SimConfig};
 use heye::task::workloads::target_fps;
 use heye::util::bench::FigureTable;
 
 fn run_throttled(sched: &str, gbps: f64) -> (Decs, RunMetrics) {
-    let decs = Decs::build(&DecsSpec::paper_vr());
-    let agx = decs.edge_devices[0];
-    let uplink = decs.uplink_of(agx).unwrap();
-    let mut sim = Simulation::new(decs);
-    let mut s = baselines::by_name(sched, &sim.decs);
-    let wl = Workload::vr(&sim.decs);
-    let cfg = SimConfig::default().horizon(2.0).seed(11);
-    let net = vec![NetEvent {
-        t: 0.0,
-        link: uplink,
-        gbps: Some(gbps),
-    }];
-    let m = sim.run(s.as_mut(), wl, net, vec![], &cfg);
-    (sim.decs, m)
+    let platform = Platform::paper_vr();
+    let report = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler(sched)
+        .config(SimConfig::default().horizon(2.0).seed(11))
+        .throttle_uplink(0, 0.0, Some(gbps))
+        .run()
+        .expect("fig12 session");
+    (report.decs, report.metrics)
 }
 
 fn fig12ab() {
@@ -87,18 +82,23 @@ fn fig12c() {
         &["before", "after", "newcomer"],
     );
     for (edges, servers) in [(3usize, 2usize), (5, 3), (8, 4)] {
-        let spec = DecsSpec::mixed(edges, servers);
-        let mut sim = Simulation::new(Decs::build(&spec));
-        let mut s = baselines::by_name("heye", &sim.decs);
-        let wl = Workload::vr(&sim.decs);
-        let cfg = SimConfig::default().horizon(2.0).seed(13);
-        let joins = vec![JoinEvent {
-            t: 1.0,
-            model: XAVIER_NX.to_string(),
-            uplink_gbps: 10.0,
-            vr_source: true,
-        }];
-        let m = sim.run(s.as_mut(), wl, vec![], joins, &cfg);
+        let platform = Platform::builder()
+            .mixed(edges, servers)
+            .build()
+            .expect("fig12c topology");
+        let report = platform
+            .session(WorkloadSpec::Vr)
+            .scheduler("heye")
+            .config(SimConfig::default().horizon(2.0).seed(13))
+            .join(JoinEvent {
+                t: 1.0,
+                model: XAVIER_NX.to_string(),
+                uplink_gbps: 10.0,
+                vr_source: true,
+            })
+            .run()
+            .expect("fig12c session");
+        let (decs, m) = (&report.decs, &report.metrics);
         let ratio_window = |dev, lo: f64, hi: f64| -> f64 {
             let frames: Vec<_> = m
                 .frames_of(dev)
@@ -110,15 +110,15 @@ fn fig12c() {
             }
             let ok = frames.iter().filter(|f| f.qos_ok()).count() as f64;
             let span = hi - lo;
-            (ok / span) / target_fps(sim.decs.device_model(dev))
+            (ok / span) / target_fps(decs.device_model(dev))
         };
         let worst = |lo, hi| -> f64 {
-            sim.decs.edge_devices[..edges]
+            decs.edge_devices[..edges]
                 .iter()
                 .map(|&d| ratio_window(d, lo, hi))
                 .fold(f64::INFINITY, f64::min)
         };
-        let newcomer = *sim.decs.edge_devices.last().unwrap();
+        let newcomer = *decs.edge_devices.last().unwrap();
         table.row(
             format!("{edges}e/{servers}s"),
             vec![

@@ -8,9 +8,8 @@
 //!     640x192. Paper shape: completion time drops until the longest task
 //!     (KNN on Xavier NX) becomes the floor.
 
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec};
-use heye::sim::{RunMetrics, SimConfig, Simulation, Workload};
+use heye::platform::{Platform, WorkloadSpec};
+use heye::sim::{RunMetrics, SimConfig};
 use heye::util::bench::FigureTable;
 
 fn main() {
@@ -20,11 +19,17 @@ fn main() {
 }
 
 fn run_mining(sensors: usize, edges: usize, servers: usize, horizon: f64) -> RunMetrics {
-    let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(edges, servers)));
-    let mut s = baselines::by_name("heye", &sim.decs);
-    let wl = Workload::mining(&sim.decs, sensors, 10.0);
-    let cfg = SimConfig::default().horizon(horizon).seed(23);
-    sim.run(s.as_mut(), wl, vec![], vec![], &cfg)
+    let platform = Platform::builder()
+        .mixed(edges, servers)
+        .build()
+        .expect("fig13 topology");
+    platform
+        .session(WorkloadSpec::Mining { sensors, hz: 10.0 })
+        .scheduler("heye")
+        .config(SimConfig::default().horizon(horizon).seed(23))
+        .run()
+        .expect("fig13 session")
+        .metrics
 }
 
 fn fig13a() {
@@ -57,12 +62,17 @@ fn fig13b() {
     for (scale, e17, e16, srv) in [("x0.5", 42usize, 40usize, 25usize), ("x1", 85, 80, 50)] {
         let mut row = Vec::new();
         for edges in [e17, e16] {
-            let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(edges, srv)));
-            let mut s = baselines::by_name("heye", &sim.decs);
-            let wl = Workload::vr(&sim.decs);
-            let cfg = SimConfig::default().horizon(0.15).seed(31);
-            let m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
-            row.push(m.qos_failure_rate() * 100.0);
+            let platform = Platform::builder()
+                .mixed(edges, srv)
+                .build()
+                .expect("fig13b topology");
+            let report = platform
+                .session(WorkloadSpec::Vr)
+                .scheduler("heye")
+                .config(SimConfig::default().horizon(0.15).seed(31))
+                .run()
+                .expect("fig13b session");
+            row.push(report.qos_failure_rate() * 100.0);
         }
         table.row(scale, row);
     }

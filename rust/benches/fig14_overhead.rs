@@ -1,14 +1,23 @@
-//! Fig. 14 — Orchestrator scheduling overhead (§5.5.4).
+//! Fig. 14 — Orchestrator scheduling overhead (§5.5.4), through the
+//! `heye::platform` facade.
 //!
 //! Overhead = time from task arrival until assignment, over task execution
 //! time. Paper shape: ~2% for mining and ~4% for VR, flat as the system
 //! scales, with >90% of the overhead coming from ORC communication rather
 //! than local constraint-check compute.
 
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec};
-use heye::sim::{SimConfig, Simulation, Workload};
+use heye::platform::{Platform, RunReport, WorkloadSpec};
+use heye::sim::SimConfig;
 use heye::util::bench::FigureTable;
+
+fn overhead_row(report: &RunReport) -> Vec<f64> {
+    let tasks = report.completed_tasks().max(1);
+    vec![
+        report.overhead_ratio() * 100.0,
+        report.overhead_comm_fraction() * 100.0,
+        report.metrics.sched_hops as f64 / tasks as f64,
+    ]
+}
 
 fn main() {
     println!("=== Fig. 14: scheduling overhead vs scale ===");
@@ -22,20 +31,14 @@ fn main() {
     // (the paper's mining runs offload; purely local runs would show ~0
     // communication overhead)
     for (sensors, edges, servers) in [(100usize, 20usize, 6usize), (200, 40, 12), (400, 80, 24), (800, 160, 48)] {
-        let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(edges, servers)));
-        let mut s = baselines::by_name("heye", &sim.decs);
-        let wl = Workload::mining(&sim.decs, sensors, 10.0);
-        let cfg = SimConfig::default().horizon(0.5).seed(41);
-        let m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
-        let tasks = (m.tasks_on_edge + m.tasks_on_server).max(1);
-        table.row(
-            format!("{sensors}s/{edges}e/{servers}srv"),
-            vec![
-                m.overhead_ratio() * 100.0,
-                m.overhead_comm_fraction() * 100.0,
-                m.sched_hops as f64 / tasks as f64,
-            ],
-        );
+        let platform = Platform::builder().mixed(edges, servers).build().expect("topology");
+        let report = platform
+            .session(WorkloadSpec::Mining { sensors, hz: 10.0 })
+            .scheduler("heye")
+            .config(SimConfig::default().horizon(0.5).seed(41))
+            .run()
+            .expect("mining session");
+        table.row(format!("{sensors}s/{edges}e/{servers}srv"), overhead_row(&report));
     }
     table.print();
 
@@ -45,20 +48,14 @@ fn main() {
         &["overhead %", "comm share %", "hops/task"],
     );
     for (edges, servers) in [(5usize, 3usize), (10, 6), (20, 12), (40, 24)] {
-        let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(edges, servers)));
-        let mut s = baselines::by_name("heye", &sim.decs);
-        let wl = Workload::vr(&sim.decs);
-        let cfg = SimConfig::default().horizon(0.5).seed(43);
-        let m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
-        let tasks = (m.tasks_on_edge + m.tasks_on_server).max(1);
-        table.row(
-            format!("{edges}e/{servers}srv"),
-            vec![
-                m.overhead_ratio() * 100.0,
-                m.overhead_comm_fraction() * 100.0,
-                m.sched_hops as f64 / tasks as f64,
-            ],
-        );
+        let platform = Platform::builder().mixed(edges, servers).build().expect("topology");
+        let report = platform
+            .session(WorkloadSpec::Vr)
+            .scheduler("heye")
+            .config(SimConfig::default().horizon(0.5).seed(43))
+            .run()
+            .expect("vr session");
+        table.row(format!("{edges}e/{servers}srv"), overhead_row(&report));
     }
     table.print();
     println!("\nshape: ~2% mining / ~4% VR, flat with scale; communication dominates (>90%)");

@@ -1,4 +1,6 @@
-//! Fig. 15 — Alternative assignment strategies (§5.5.5).
+//! Fig. 15 — Alternative assignment strategies (§5.5.5), through the
+//! `heye::platform` facade (the grouped variant's engine batching is
+//! applied by its registry entry's tuning hook).
 //!
 //! (a/b) Mean task latency per strategy: default hierarchy,
 //!       direct-to-server, sticky-server, grouped. Paper shape: direct
@@ -10,30 +12,32 @@
 //!       higher overhead; grouping lowers overhead except under VR's
 //!       degroup penalty.
 
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec};
-use heye::sim::{RunMetrics, SimConfig, Simulation, Workload};
+use heye::platform::{Platform, WorkloadSpec};
+use heye::sim::{RunMetrics, SimConfig};
 use heye::util::bench::FigureTable;
 
 const STRATEGIES: [&str; 4] = ["heye", "heye-direct", "heye-sticky", "heye-grouped"];
 
-fn run(app: &str, strategy: &str, load: f64, horizon: f64) -> RunMetrics {
-    let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
-    let mut s = baselines::by_name(strategy, &sim.decs);
-    let wl = match app {
-        "mining" => Workload::mining(&sim.decs, 30, 10.0 * load),
-        _ => Workload::vr_rate(&sim.decs, load),
+fn run(platform: &Platform, app: &str, strategy: &str, load: f64, horizon: f64) -> RunMetrics {
+    let workload = match app {
+        "mining" => WorkloadSpec::Mining {
+            sensors: 30,
+            hz: 10.0 * load,
+        },
+        _ => WorkloadSpec::VrRate(load),
     };
-    let mut cfg = SimConfig::default().horizon(horizon).seed(47);
-    if strategy == "heye-grouped" {
-        cfg = cfg.grouped(true);
-    }
-    let mut m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
+    let report = platform
+        .session(workload)
+        .scheduler(strategy)
+        .config(SimConfig::default().horizon(horizon).seed(47))
+        .run()
+        .expect("strategy session");
+    let mut m = report.metrics;
     m.frames.retain(|f| f.latency_s.is_finite());
     m
 }
 
-fn fig15ab() {
+fn fig15ab(platform: &Platform) {
     println!("=== Fig. 15a/b: mean frame latency per assignment strategy ===");
     let mut table = FigureTable::new(
         "mean latency (ms)",
@@ -42,7 +46,7 @@ fn fig15ab() {
     for app in ["vr", "mining"] {
         let row: Vec<f64> = STRATEGIES
             .iter()
-            .map(|s| run(app, s, 1.0, 2.0).mean_latency_s() * 1e3)
+            .map(|s| run(platform, app, s, 1.0, 2.0).mean_latency_s() * 1e3)
             .collect();
         table.row(app, row);
     }
@@ -53,7 +57,7 @@ fn fig15ab() {
     );
 }
 
-fn fig15cd() {
+fn fig15cd(platform: &Platform) {
     println!("\n=== Fig. 15c/d: overhead vs injection rate ===");
     let mut table = FigureTable::new(
         "scheduling overhead %",
@@ -69,7 +73,7 @@ fn fig15cd() {
     ] {
         let row: Vec<f64> = STRATEGIES
             .iter()
-            .map(|s| run(app, s, load, 1.0).overhead_ratio() * 100.0)
+            .map(|s| run(platform, app, s, load, 1.0).overhead_ratio() * 100.0)
             .collect();
         table.row(label, row);
     }
@@ -78,6 +82,7 @@ fn fig15cd() {
 }
 
 fn main() {
-    fig15ab();
-    fig15cd();
+    let platform = Platform::paper_vr();
+    fig15ab(&platform);
+    fig15cd(&platform);
 }

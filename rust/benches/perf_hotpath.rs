@@ -1,20 +1,24 @@
 //! §Perf — L3 coordinator hot paths: MapTask under load, the Traverser's
 //! contention-interval integration, the slowdown oracle, and the
 //! end-to-end simulator event loop. Record before/after in EXPERIMENTS.md.
+//!
+//! Schedulers come from the registry and full runs go through
+//! `Platform`/`Session`; only the slowdown/Traverser micro-benches touch
+//! the low-level types, because those *are* the subject being timed.
 
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::orchestrator::Loads;
 use heye::netsim::Network;
-use heye::orchestrator::{Hierarchy, Loads, Orchestrator, Policy};
 use heye::perfmodel::ProfileModel;
-use heye::sim::{SimConfig, Simulation, Workload};
+use heye::platform::{Platform, SchedulerRegistry, WorkloadSpec};
+use heye::sim::SimConfig;
 use heye::slowdown::{CachedSlowdown, Placed, SlowdownStack};
 use heye::task::{workloads, TaskId, TaskKind};
 use heye::traverser::{ActiveTask, Traverser};
 use heye::util::bench::{bench, report};
 
 fn main() {
-    let decs = Decs::build(&DecsSpec::paper_vr());
+    let platform = Platform::paper_vr();
+    let decs = platform.decs();
     let perf = ProfileModel::new();
     let net = Network::new();
     let slow = CachedSlowdown::new(&decs.graph);
@@ -72,48 +76,55 @@ fn main() {
         std::hint::black_box(tr.predict(&cfg, &mapping, origin, &[], 0.0));
     }));
 
-    // 3. MapTask: local hit vs server escalation, under load
-    let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
+    // 3. MapTask through the registry-built scheduler: local hit vs server
+    //    escalation, under load
+    let mut sched = SchedulerRegistry::create("heye", decs).expect("registry");
     let local_task = workloads::vr_cfg(30.0, 1.0, None).nodes[1].spec.clone(); // pose
     let remote_task = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone(); // render
     results.push(bench("maptask: local hit (pose)", 200, 5000, || {
-        std::hint::black_box(orc.map_task(&tr, &local_task, origin, origin, 0.0, &loads));
+        std::hint::black_box(sched.assign(&tr, &local_task, origin, origin, 0.0, &loads));
     }));
     results.push(bench("maptask: escalation (render, busy servers)", 200, 2000, || {
-        std::hint::black_box(orc.map_task(&tr, &remote_task, origin, origin, 0.0, &loads));
+        std::hint::black_box(sched.assign(&tr, &remote_task, origin, origin, 0.0, &loads));
     }));
 
-    // 4. end-to-end event loop throughput
+    // 4. end-to-end event loop throughput through the facade
+    let mixed = Platform::builder().mixed(80, 24).build().expect("topology");
     results.push(bench("sim: 0.5 s VR on paper testbed", 2, 20, || {
-        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
-        let mut s = baselines::by_name("heye", &sim.decs);
-        let wl = Workload::vr(&sim.decs);
-        let c = SimConfig::default().horizon(0.5).seed(1);
-        std::hint::black_box(sim.run(s.as_mut(), wl, vec![], vec![], &c));
+        let r = platform
+            .session(WorkloadSpec::Vr)
+            .scheduler("heye")
+            .config(SimConfig::default().horizon(0.5).seed(1))
+            .run()
+            .expect("vr session");
+        std::hint::black_box(r.metrics);
     }));
     results.push(bench("sim: 0.3 s mining 100 sensors / 80e / 24s", 1, 10, || {
-        let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(80, 24)));
-        let mut s = baselines::by_name("heye", &sim.decs);
-        let wl = Workload::mining(&sim.decs, 100, 10.0);
-        let c = SimConfig::default().horizon(0.3).seed(2);
-        std::hint::black_box(sim.run(s.as_mut(), wl, vec![], vec![], &c));
+        let r = mixed
+            .session(WorkloadSpec::Mining { sensors: 100, hz: 10.0 })
+            .scheduler("heye")
+            .config(SimConfig::default().horizon(0.3).seed(2))
+            .run()
+            .expect("mining session");
+        std::hint::black_box(r.metrics);
     }));
 
     report("L3 hot paths", &results);
 
     // simulated-vs-wall speed ratio for the event loop
     let t0 = std::time::Instant::now();
-    let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
-    let mut s = baselines::by_name("heye", &sim.decs);
-    let wl = Workload::vr(&sim.decs);
-    let c = SimConfig::default().horizon(2.0).seed(3);
-    let m = sim.run(s.as_mut(), wl, vec![], vec![], &c);
+    let r = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .config(SimConfig::default().horizon(2.0).seed(3))
+        .run()
+        .expect("vr session");
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "\nevent-loop speed: 2.0 simulated seconds ({} frames, {} tasks) in {:.1} ms wall \
          = {:.0}x realtime",
-        m.frames.len(),
-        m.tasks_on_edge + m.tasks_on_server,
+        r.frames(),
+        r.completed_tasks(),
         wall * 1e3,
         2.0 / wall
     );

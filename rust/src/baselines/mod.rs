@@ -504,33 +504,10 @@ impl Scheduler for CloudVrScheduler {
     fn on_device_join(&mut self, _g: &HwGraph, _dev: NodeId) {}
 }
 
-// ---------------------------------------------------------------------------
-// factory
-// ---------------------------------------------------------------------------
-
-/// Build a scheduler by name: "heye", "heye-direct", "heye-sticky",
-/// "heye-grouped", "ace", "lats", "cloudvr".
-pub fn by_name(name: &str, decs: &Decs) -> Box<dyn Scheduler> {
-    use crate::orchestrator::{Hierarchy, Orchestrator, Policy};
-    use crate::sim::HeyeScheduler;
-    let heye = |p: Policy| -> Box<dyn Scheduler> {
-        Box::new(HeyeScheduler::new(Orchestrator::new(
-            Hierarchy::from_decs(decs),
-            p,
-        )))
-    };
-    match name {
-        "heye" => heye(Policy::Hierarchical),
-        "heye-direct" => heye(Policy::DirectToServer),
-        "heye-sticky" => heye(Policy::StickyServer),
-        "heye-grouped" => heye(Policy::Grouped),
-        "ace" => Box::new(AceScheduler::new(decs)),
-        "lats" => Box::new(LatsScheduler::new(decs)),
-        "cloudvr" => Box::new(CloudVrScheduler::new(decs)),
-        other => panic!("unknown scheduler `{other}`"),
-    }
-}
-
+/// Registry names of the three baselines. Construction by name goes
+/// through [`crate::platform::SchedulerRegistry`], where every baseline
+/// self-registers next to the H-EYE policies (the old `by_name` string
+/// match is gone).
 pub const ALL_BASELINES: [&str; 3] = ["ace", "lats", "cloudvr"];
 
 #[cfg(test)]
@@ -637,14 +614,12 @@ mod tests {
     }
 
     #[test]
-    fn factory_builds_every_scheduler() {
+    fn registry_builds_every_baseline() {
         let ctx = Ctx::new();
-        for name in ["heye", "heye-direct", "heye-sticky", "heye-grouped"]
-            .iter()
-            .chain(ALL_BASELINES.iter())
-        {
-            let s = by_name(name, &ctx.decs);
-            assert!(!s.name().is_empty());
+        for name in ALL_BASELINES {
+            let s = crate::platform::SchedulerRegistry::create(name, &ctx.decs)
+                .unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(s.name(), name);
         }
     }
 

@@ -17,9 +17,11 @@
 //! }
 //! ```
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{bail, err};
 
 use crate::hwgraph::presets::{Decs, DecsSpec, EDGE_MODELS, SERVER_MODELS};
+use crate::platform::{Platform, PlatformError, Session, WorkloadSpec};
 use crate::sim::{JoinEvent, NetEvent, SimConfig, Workload};
 use crate::util::json::Json;
 
@@ -51,7 +53,7 @@ impl Default for ExpConfig {
 }
 
 fn device_counts(j: &Json, known: &[&str]) -> Result<Vec<(String, usize)>> {
-    let obj = j.as_obj().ok_or_else(|| anyhow!("device map expected"))?;
+    let obj = j.as_obj().ok_or_else(|| err!("device map expected"))?;
     let mut out = Vec::new();
     for (model, count) in obj {
         if !known.contains(&model.as_str()) {
@@ -59,7 +61,7 @@ fn device_counts(j: &Json, known: &[&str]) -> Result<Vec<(String, usize)>> {
         }
         let c = count
             .as_u64()
-            .ok_or_else(|| anyhow!("{model}: count must be a number"))? as usize;
+            .ok_or_else(|| err!("{model}: count must be a number"))? as usize;
         if c > 0 {
             out.push((model.clone(), c));
         }
@@ -72,7 +74,7 @@ fn device_counts(j: &Json, known: &[&str]) -> Result<Vec<(String, usize)>> {
 
 impl ExpConfig {
     pub fn parse(text: &str) -> Result<ExpConfig> {
-        let j = Json::parse(text).map_err(|e| anyhow!("config parse: {e:?}"))?;
+        let j = Json::parse(text).map_err(|e| err!("config parse: {e:?}"))?;
         let mut c = ExpConfig::default();
         if let Some(v) = j.get("app").and_then(|v| v.as_str()) {
             if !["vr", "mining"].contains(&v) {
@@ -116,7 +118,7 @@ impl ExpConfig {
                 let idx = e
                     .get("edge_index")
                     .and_then(|v| v.as_u64())
-                    .ok_or_else(|| anyhow!("net_events[].edge_index required"))?
+                    .ok_or_else(|| err!("net_events[].edge_index required"))?
                     as usize;
                 let gbps = e.get("gbps").and_then(|v| v.as_f64());
                 c.net_events.push((t, idx, gbps));
@@ -128,7 +130,7 @@ impl ExpConfig {
                 let model = e
                     .get("model")
                     .and_then(|v| v.as_str())
-                    .ok_or_else(|| anyhow!("join_events[].model required"))?;
+                    .ok_or_else(|| err!("join_events[].model required"))?;
                 if !EDGE_MODELS.contains(&model) {
                     bail!("join model `{model}` unknown");
                 }
@@ -147,7 +149,45 @@ impl ExpConfig {
         Self::parse(&text)
     }
 
-    /// Materialize the run pieces: DECS, workload, dynamic events.
+    /// The canonical way to run an experiment config: build its
+    /// [`Platform`] and configure a facade [`Session`] on it (workload,
+    /// scheduler, engine config, dynamic events). `heye run --config`
+    /// goes through here; [`ExpConfig::build`] is the low-level mirror
+    /// for by-hand composition and must be kept in step.
+    pub fn platform(&self) -> std::result::Result<Platform, PlatformError> {
+        Platform::from_spec(self.decs_spec.clone())
+    }
+
+    /// Configure a [`Session`] for this experiment on `platform` (built
+    /// via [`ExpConfig::platform`]).
+    pub fn session<'p>(&self, platform: &'p Platform) -> Session<'p> {
+        let workload = match self.app.as_str() {
+            "mining" => WorkloadSpec::Mining {
+                sensors: self.sensors,
+                hz: 10.0,
+            },
+            _ => WorkloadSpec::Vr,
+        };
+        let mut session = platform
+            .session(workload)
+            .scheduler(&self.sched)
+            .config(self.sim.clone());
+        for &(t, edge_index, gbps) in &self.net_events {
+            session = session.throttle_uplink(edge_index, t, gbps);
+        }
+        for (t, model, vr_source) in &self.join_events {
+            session = session.join(JoinEvent {
+                t: *t,
+                model: model.clone(),
+                uplink_gbps: self.decs_spec.edge_uplink_gbps,
+                vr_source: *vr_source,
+            });
+        }
+        session
+    }
+
+    /// Materialize the raw run pieces for by-hand composition: DECS,
+    /// workload, dynamic events. Facade callers use [`ExpConfig::session`].
     pub fn build(&self) -> Result<(Decs, Workload, Vec<NetEvent>, Vec<JoinEvent>)> {
         let decs = Decs::build(&self.decs_spec);
         let wl = match self.app.as_str() {
@@ -159,10 +199,10 @@ impl ExpConfig {
             let dev = *decs
                 .edge_devices
                 .get(idx)
-                .ok_or_else(|| anyhow!("edge_index {idx} out of range"))?;
+                .ok_or_else(|| err!("edge_index {idx} out of range"))?;
             let link = decs
                 .uplink_of(dev)
-                .ok_or_else(|| anyhow!("edge {idx} has no uplink"))?;
+                .ok_or_else(|| err!("edge {idx} has no uplink"))?;
             net.push(NetEvent { t, link, gbps });
         }
         let joins = self
@@ -231,9 +271,21 @@ mod tests {
         let c = ExpConfig::parse(SAMPLE).unwrap();
         let (decs, wl, net, joins) = c.build().unwrap();
         let mut sim = crate::sim::Simulation::new(decs);
-        let mut sched = crate::baselines::by_name(&c.sched, &sim.decs);
+        let mut sched =
+            crate::platform::SchedulerRegistry::create(&c.sched, &sim.decs).expect("registry");
         let m = sim.run(sched.as_mut(), wl, net, joins, &c.sim);
         assert!(!m.frames.is_empty());
+    }
+
+    #[test]
+    fn session_runs_through_facade() {
+        let c = ExpConfig::parse(SAMPLE).unwrap();
+        let platform = c.platform().unwrap();
+        let report = c.session(&platform).run().unwrap();
+        assert_eq!(report.scheduler, "heye-direct");
+        assert!(report.frames() > 0);
+        // the t=0.3 join extends the 3-edge system to 4
+        assert_eq!(report.decs.edge_devices.len(), 4);
     }
 
     #[test]

@@ -1,8 +1,37 @@
 //! # H-EYE — holistic resource modeling and management for diversely scaled
 //! edge-cloud systems
 //!
-//! Reproduction of Dagli et al. (CS.DC 2024). The library is organized as
-//! the paper's three mechanisms plus the substrates they stand on:
+//! Reproduction of Dagli et al. (CS.DC 2024).
+//!
+//! ## The public API: [`platform`]
+//!
+//! Start with the [`platform`] facade — a [`platform::Platform`] assembled
+//! from a topology preset (or custom `DecsSpec`), a global
+//! [`platform::SchedulerRegistry`] where H-EYE's policies and all
+//! baselines self-register, and a [`platform::Session`] that owns the
+//! whole stack for one run and returns a typed [`platform::RunReport`]:
+//!
+//! ```no_run
+//! use heye::platform::{Platform, WorkloadSpec};
+//!
+//! let platform = Platform::builder().paper_vr().build()?;
+//! let report = platform
+//!     .session(WorkloadSpec::Vr)
+//!     .scheduler("heye")
+//!     .horizon(1.0)
+//!     .run()?;
+//! report.print_summary();
+//! # Ok::<(), heye::platform::PlatformError>(())
+//! ```
+//!
+//! New serving scenarios are one registry entry plus one builder call; the
+//! `heye` binary, the examples, and the figure harnesses all go through
+//! this seam.
+//!
+//! ## The mechanisms underneath
+//!
+//! The low-level modules stay public for by-hand composition — the
+//! paper's three mechanisms plus the substrates they stand on:
 //!
 //! * [`hwgraph`] — the multi-layer graph-based hardware representation
 //!   (HW-GRAPH, §3.3) with the Table-2 device presets.
@@ -16,12 +45,15 @@
 //! * [`orchestrator`] — the decentralized hierarchical mapper (§3.5/Alg. 1).
 //! * [`netsim`] — fair-share network flows with dynamic bandwidth.
 //! * [`sim`] — the discrete-event DECS simulator driving every experiment.
-//! * [`baselines`] — ACE, LaTS (Hetero-Edge) and Multi-tier CloudVR.
+//! * [`baselines`] — ACE, LaTS (Hetero-Edge) and Multi-tier CloudVR,
+//!   registered alongside H-EYE in the scheduler registry.
 //! * [`config`] — JSON experiment configurations (`heye run --config`).
 //! * [`runtime`] — PJRT executor for the AOT artifacts (`artifacts/*.hlo.txt`)
-//!   compiled from the L2 JAX models; python is never on this path.
-//! * [`telemetry`] — metric collection and figure-style reporting.
-//! * [`util`] — from-scratch substrates (JSON, PRNG, CLI, stats, bench).
+//!   compiled from the L2 JAX models; gated behind the `pjrt` feature.
+//! * [`telemetry`] — metric collection, figure-style reporting, and
+//!   multi-scheduler comparison over the facade.
+//! * [`util`] — from-scratch substrates (errors, JSON, PRNG, CLI, stats,
+//!   bench, property testing).
 
 pub mod baselines;
 pub mod config;
@@ -29,6 +61,7 @@ pub mod hwgraph;
 pub mod netsim;
 pub mod orchestrator;
 pub mod perfmodel;
+pub mod platform;
 pub mod runtime;
 pub mod sim;
 pub mod slowdown;

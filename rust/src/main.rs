@@ -1,26 +1,26 @@
-//! `heye` — the H-EYE leader binary: CLI over the coordinator, the DECS
-//! simulator, and the PJRT artifact runtime.
+//! `heye` — the H-EYE leader binary: CLI over the [`heye::platform`]
+//! facade, the DECS simulator, and the PJRT artifact runtime.
 //!
 //! ```text
 //! heye info                          # platform, artifacts, device presets
+//! heye schedulers                    # list the scheduler registry
 //! heye artifacts                     # compile + execute every AOT artifact
 //! heye run  --app vr --sched heye    # one simulation run
 //! heye compare --app mining          # H-EYE vs every baseline
 //! ```
 
-use anyhow::Result;
-
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec};
-use heye::sim::{SimConfig, Simulation, Workload};
+use heye::platform::{Platform, RunReport, SchedulerRegistry, WorkloadSpec};
+use heye::sim::SimConfig;
 use heye::telemetry;
 use heye::util::cli::Args;
+use heye::util::error::Result;
 
 const USAGE: &str = "\
 heye — holistic resource modeling and management for edge-cloud systems
 
 USAGE:
   heye info
+  heye schedulers
   heye artifacts [--reps N]
   heye run     [--app vr|mining] [--sched NAME] [--edges N] [--servers M]
                [--sensors K] [--horizon S] [--seed N] [--noise F] [--json]
@@ -28,16 +28,18 @@ USAGE:
   heye compare [--app vr|mining] [--edges N] [--servers M] [--sensors K]
                [--horizon S] [--seed N]
 
-SCHEDULERS: heye heye-direct heye-sticky heye-grouped ace lats cloudvr";
+SCHEDULERS: resolved through the registry — run `heye schedulers` to list";
 
-fn decs_from(args: &Args) -> Decs {
+fn platform_from(args: &Args) -> Result<Platform> {
     let edges = args.get_usize("edges", 0);
     let servers = args.get_usize("servers", 0);
-    if edges == 0 && servers == 0 {
-        Decs::build(&DecsSpec::paper_vr())
+    let builder = Platform::builder();
+    let builder = if edges == 0 && servers == 0 {
+        builder.paper_vr()
     } else {
-        Decs::build(&DecsSpec::mixed(edges.max(1), servers.max(1)))
-    }
+        builder.mixed(edges.max(1), servers.max(1))
+    };
+    Ok(builder.build()?)
 }
 
 fn sim_config(args: &Args) -> SimConfig {
@@ -47,10 +49,13 @@ fn sim_config(args: &Args) -> SimConfig {
         .noise(args.get_f64("noise", 0.02))
 }
 
-fn workload_from(args: &Args, decs: &Decs) -> Workload {
+fn workload_from(args: &Args) -> WorkloadSpec {
     match args.get_or("app", "vr").as_str() {
-        "mining" => Workload::mining(decs, args.get_usize("sensors", 20), 10.0),
-        _ => Workload::vr(decs),
+        "mining" => WorkloadSpec::Mining {
+            sensors: args.get_usize("sensors", 20),
+            hz: 10.0,
+        },
+        _ => WorkloadSpec::Vr,
     }
 }
 
@@ -63,7 +68,8 @@ fn cmd_info() -> Result<()> {
         }
         Err(e) => println!("artifacts     : unavailable ({e}) — run `make artifacts`"),
     }
-    let decs = Decs::build(&DecsSpec::paper_vr());
+    let platform = Platform::paper_vr();
+    let decs = platform.decs();
     println!(
         "paper testbed : {} edges, {} servers, {} HW-Graph nodes, {} links",
         decs.edge_devices.len(),
@@ -78,6 +84,15 @@ fn cmd_info() -> Result<()> {
             decs.device_model(d),
             decs.graph.pus_in(d).len()
         );
+    }
+    Ok(())
+}
+
+fn cmd_schedulers() -> Result<()> {
+    println!("registered schedulers (pass to `heye run --sched NAME`):\n");
+    println!("{:<14} description", "name");
+    for e in SchedulerRegistry::entries() {
+        println!("{:<14} {}", e.name, e.description);
     }
     Ok(())
 }
@@ -111,30 +126,29 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
+fn run_report(args: &Args) -> Result<RunReport> {
     // --config FILE overrides all other flags
-    let (name, mut sim, wl, net, joins, cfg) = if let Some(path) = args.get("config") {
+    if let Some(path) = args.get("config") {
         let c = heye::config::ExpConfig::load(path)?;
-        let (decs, wl, net, joins) = c.build()?;
-        (c.sched.clone(), Simulation::new(decs), wl, net, joins, c.sim)
+        let platform = c.platform()?;
+        Ok(c.session(&platform).run()?)
     } else {
-        let name = args.get_or("sched", "heye");
-        let sim = Simulation::new(decs_from(args));
-        let wl = workload_from(args, &sim.decs);
-        let mut cfg = sim_config(args);
-        if name == "heye-grouped" {
-            cfg = cfg.grouped(true);
-        }
-        (name, sim, wl, vec![], vec![], cfg)
-    };
-    let mut sched = baselines::by_name(&name, &sim.decs);
-    let m = sim.run(sched.as_mut(), wl, net, joins, &cfg);
-    telemetry::summary_line(&name, &m);
-    let rows = telemetry::per_device(&sim.decs, &m);
-    telemetry::print_breakdown(&format!("per-device breakdown ({name})"), &rows);
+        let platform = platform_from(args)?;
+        Ok(platform
+            .session(workload_from(args))
+            .scheduler(&args.get_or("sched", "heye"))
+            .config(sim_config(args))
+            .run()?)
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let report = run_report(args)?;
+    report.print_summary();
+    report.print_breakdown(&format!("per-device breakdown ({})", report.scheduler));
     if args.has("placements") {
         println!("\nplacements (kind / pu class / tier):");
-        for ((kind, class, on_server), n) in &m.placements {
+        for ((kind, class, on_server), n) in report.placements() {
             println!(
                 "  {:<14} {:<8} {:<7} {:>6}",
                 kind,
@@ -145,26 +159,24 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
     }
     if args.has("json") {
-        println!("{}", telemetry::to_json(&name, &m));
+        println!("{}", report.to_json());
     }
     Ok(())
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
-    let scheds = ["heye", "ace", "lats", "cloudvr"];
+    let platform = platform_from(args)?;
     println!(
         "comparing schedulers on app={} (horizon {} s)",
         args.get_or("app", "vr"),
         args.get_f64("horizon", 1.0)
     );
-    for name in scheds {
-        let mut sim = Simulation::new(decs_from(args));
-        let mut sched = baselines::by_name(name, &sim.decs);
-        let wl = workload_from(args, &sim.decs);
-        let cfg = sim_config(args);
-        let m = sim.run(sched.as_mut(), wl, vec![], vec![], &cfg);
-        telemetry::summary_line(name, &m);
-    }
+    telemetry::compare(
+        &platform,
+        workload_from(args),
+        &["heye", "ace", "lats", "cloudvr"],
+        &sim_config(args),
+    )?;
     Ok(())
 }
 
@@ -178,6 +190,7 @@ fn main() -> Result<()> {
     let args = Args::parse(argv);
     match cmd.as_str() {
         "info" => cmd_info(),
+        "schedulers" => cmd_schedulers(),
         "artifacts" => cmd_artifacts(&args),
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),

@@ -1,0 +1,528 @@
+//! The canonical public API: a [`Platform`] built once from a topology,
+//! [`Session`]s that own the scheduler/simulation lifecycle, and the
+//! pluggable [`SchedulerRegistry`].
+//!
+//! Every entry point used to hand-wire the same ten-object stack
+//! (`Decs → ProfileModel → Network → CachedSlowdown → Traverser →
+//! Hierarchy → Orchestrator → Scheduler → Workload → Simulation`); the
+//! facade collapses that to:
+//!
+//! ```no_run
+//! use heye::platform::{Platform, WorkloadSpec};
+//! use heye::sim::SimConfig;
+//!
+//! let platform = Platform::builder().paper_vr().build().unwrap();
+//! let report = platform
+//!     .session(WorkloadSpec::Vr)
+//!     .scheduler("heye")
+//!     .config(SimConfig::default().horizon(1.0))
+//!     .run()
+//!     .unwrap();
+//! println!("{} frames, {:.1}% QoS failures",
+//!     report.frames(), report.qos_failure_rate() * 100.0);
+//! ```
+//!
+//! The low-level modules stay public — power users still compose the
+//! Traverser/Orchestrator/Simulation by hand — but new topologies,
+//! schedulers, and serving scenarios should be one registry entry plus one
+//! builder call.
+
+pub mod registry;
+
+pub use registry::{SchedulerEntry, SchedulerRegistry, BUILTIN_SCHEDULERS};
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::rc::Rc;
+
+use crate::hwgraph::presets::{Decs, DecsSpec, EDGE_MODELS, SERVER_MODELS};
+use crate::hwgraph::NodeId;
+use crate::sim::{JoinEvent, NetEvent, RunMetrics, SimConfig, Simulation, Workload};
+use crate::telemetry;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+/// Everything the facade can reject before (or instead of) running.
+#[derive(Debug, Clone)]
+pub enum PlatformError {
+    /// the topology cannot be assembled (no edges, unknown model, ...)
+    InvalidTopology(String),
+    /// the session configuration cannot drive a run
+    InvalidSession(String),
+    /// the scheduler name missed the registry; `known` lists valid names
+    UnknownScheduler { name: String, known: Vec<String> },
+}
+
+impl fmt::Display for PlatformError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlatformError::InvalidTopology(m) => write!(f, "invalid topology: {m}"),
+            PlatformError::InvalidSession(m) => write!(f, "invalid session: {m}"),
+            PlatformError::UnknownScheduler { name, known } => write!(
+                f,
+                "unknown scheduler `{name}` (valid: {})",
+                known.join(", ")
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlatformError {}
+
+impl From<PlatformError> for crate::util::error::Error {
+    fn from(e: PlatformError) -> Self {
+        crate::util::error::Error::msg(e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the platform and its builder
+// ---------------------------------------------------------------------------
+
+/// Typed construction of a [`Platform`]: a topology preset or a custom
+/// [`DecsSpec`], validated before anything is assembled.
+#[derive(Debug, Clone)]
+pub struct PlatformBuilder {
+    spec: DecsSpec,
+}
+
+impl Default for PlatformBuilder {
+    fn default() -> Self {
+        PlatformBuilder {
+            spec: DecsSpec::paper_vr(),
+        }
+    }
+}
+
+impl PlatformBuilder {
+    /// The §5.3.1 testbed: five Jetson-class edges + three servers.
+    pub fn paper_vr(mut self) -> Self {
+        self.spec = DecsSpec::paper_vr();
+        self
+    }
+
+    /// The §5.2 validation pair: Orin Nano + server-1.
+    pub fn validation_pair(mut self) -> Self {
+        self.spec = DecsSpec::validation_pair();
+        self
+    }
+
+    /// Uniform mix of the four edge models and three server models.
+    pub fn mixed(mut self, edges: usize, servers: usize) -> Self {
+        self.spec = DecsSpec::mixed(edges, servers);
+        self
+    }
+
+    /// Fully custom topology.
+    pub fn topology(mut self, spec: DecsSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Override the per-edge uplink bandwidth (Gb/s).
+    pub fn uplink_gbps(mut self, gbps: f64) -> Self {
+        self.spec.edge_uplink_gbps = gbps;
+        self
+    }
+
+    /// Override the WAN backbone bandwidth (Gb/s).
+    pub fn wan_gbps(mut self, gbps: f64) -> Self {
+        self.spec.wan_gbps = gbps;
+        self
+    }
+
+    /// Validate and assemble the platform.
+    pub fn build(self) -> Result<Platform, PlatformError> {
+        let n_edges: usize = self.spec.edges.iter().map(|(_, c)| c).sum();
+        if n_edges == 0 {
+            return Err(PlatformError::InvalidTopology(
+                "at least one edge device is required (workloads originate on edges)".into(),
+            ));
+        }
+        for (model, _) in &self.spec.edges {
+            if !EDGE_MODELS.contains(&model.as_str()) {
+                return Err(PlatformError::InvalidTopology(format!(
+                    "unknown edge model `{model}` (known: {EDGE_MODELS:?})"
+                )));
+            }
+        }
+        for (model, _) in &self.spec.servers {
+            if !SERVER_MODELS.contains(&model.as_str()) {
+                return Err(PlatformError::InvalidTopology(format!(
+                    "unknown server model `{model}` (known: {SERVER_MODELS:?})"
+                )));
+            }
+        }
+        if self.spec.edge_uplink_gbps.is_nan() || self.spec.edge_uplink_gbps <= 0.0 {
+            return Err(PlatformError::InvalidTopology(format!(
+                "edge uplink must be positive, got {} Gb/s",
+                self.spec.edge_uplink_gbps
+            )));
+        }
+        if self.spec.wan_gbps.is_nan() || self.spec.wan_gbps <= 0.0 {
+            return Err(PlatformError::InvalidTopology(format!(
+                "WAN bandwidth must be positive, got {} Gb/s",
+                self.spec.wan_gbps
+            )));
+        }
+        let decs = Decs::build(&self.spec);
+        Ok(Platform {
+            spec: self.spec,
+            decs,
+        })
+    }
+}
+
+/// A validated edge-cloud system: the HW-Graph topology plus everything a
+/// [`Session`] needs to drive runs against it. Each run clones the DECS
+/// assembled at build time (assembly is deterministic, so clones are
+/// interchangeable with rebuilds), so one platform serves any number of
+/// concurrent or repeated sessions.
+pub struct Platform {
+    spec: DecsSpec,
+    decs: Decs,
+}
+
+impl Platform {
+    pub fn builder() -> PlatformBuilder {
+        PlatformBuilder::default()
+    }
+
+    /// The paper testbed in one call.
+    pub fn paper_vr() -> Platform {
+        Self::builder()
+            .paper_vr()
+            .build()
+            .expect("the paper testbed is a valid topology")
+    }
+
+    /// A platform over a custom [`DecsSpec`].
+    pub fn from_spec(spec: DecsSpec) -> Result<Platform, PlatformError> {
+        Self::builder().topology(spec).build()
+    }
+
+    /// The assembled system (for inspection; sessions build their own).
+    pub fn decs(&self) -> &Decs {
+        &self.decs
+    }
+
+    pub fn spec(&self) -> &DecsSpec {
+        &self.spec
+    }
+
+    /// Start configuring a run of `workload` on this platform.
+    pub fn session(&self, workload: WorkloadSpec) -> Session<'_> {
+        Session {
+            platform: self,
+            workload,
+            scheduler: "heye".to_string(),
+            cfg: SimConfig::default(),
+            net_events: Vec::new(),
+            join_events: Vec::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// workloads
+// ---------------------------------------------------------------------------
+
+/// What to run: resolved against the session's freshly built DECS, so the
+/// same spec drives any topology.
+#[derive(Clone)]
+pub enum WorkloadSpec {
+    /// one VR source per edge device at its model's target FPS
+    Vr,
+    /// VR with the injection rate scaled (Fig. 15c/d)
+    VrRate(f64),
+    /// drill-bit sensors distributed over edges by computing capability
+    Mining { sensors: usize, hz: f64 },
+    /// one-shot burst of `n` windows on the `origin`-th edge (Fig. 10a)
+    MiningBurst { origin: usize, n: usize },
+    /// arbitrary sources built against the session's DECS
+    Custom(Rc<dyn Fn(&Decs) -> Workload>),
+}
+
+impl WorkloadSpec {
+    /// Wrap a closure building arbitrary [`Workload`] sources.
+    pub fn custom(f: impl Fn(&Decs) -> Workload + 'static) -> WorkloadSpec {
+        WorkloadSpec::Custom(Rc::new(f))
+    }
+
+    fn build(&self, decs: &Decs) -> Result<Workload, PlatformError> {
+        match self {
+            WorkloadSpec::Vr => Ok(Workload::vr(decs)),
+            WorkloadSpec::VrRate(rate) => {
+                if rate.is_nan() || *rate <= 0.0 {
+                    return Err(PlatformError::InvalidSession(format!(
+                        "VR rate multiplier must be positive, got {rate}"
+                    )));
+                }
+                Ok(Workload::vr_rate(decs, *rate))
+            }
+            WorkloadSpec::Mining { sensors, hz } => {
+                if hz.is_nan() || *hz <= 0.0 {
+                    return Err(PlatformError::InvalidSession(format!(
+                        "mining sensor rate must be positive, got {hz} Hz"
+                    )));
+                }
+                Ok(Workload::mining(decs, *sensors, *hz))
+            }
+            WorkloadSpec::MiningBurst { origin, n } => {
+                let dev = decs.edge_devices.get(*origin).copied().ok_or_else(|| {
+                    PlatformError::InvalidSession(format!(
+                        "burst origin edge index {origin} out of range (have {})",
+                        decs.edge_devices.len()
+                    ))
+                })?;
+                Ok(Workload::mining_burst(dev, *n))
+            }
+            WorkloadSpec::Custom(f) => Ok(f(decs)),
+        }
+    }
+}
+
+impl fmt::Debug for WorkloadSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WorkloadSpec::Vr => write!(f, "Vr"),
+            WorkloadSpec::VrRate(r) => write!(f, "VrRate({r})"),
+            WorkloadSpec::Mining { sensors, hz } => {
+                write!(f, "Mining {{ sensors: {sensors}, hz: {hz} }}")
+            }
+            WorkloadSpec::MiningBurst { origin, n } => {
+                write!(f, "MiningBurst {{ origin: {origin}, n: {n} }}")
+            }
+            WorkloadSpec::Custom(_) => write!(f, "Custom(..)"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sessions
+// ---------------------------------------------------------------------------
+
+/// Network events are kept symbolic until the run builds its DECS, so an
+/// out-of-range edge index is a typed error instead of a panic.
+#[derive(Debug, Clone)]
+enum NetEventSpec {
+    Raw(NetEvent),
+    Uplink {
+        edge: usize,
+        t: f64,
+        gbps: Option<f64>,
+    },
+}
+
+/// One configured run: workload + scheduler + engine config + dynamic
+/// events. `run()` owns the whole Traverser/Orchestrator/Simulation
+/// lifecycle and returns a typed [`RunReport`]; it borrows the session, so
+/// the same session can be re-run (deterministically) any number of times.
+pub struct Session<'p> {
+    platform: &'p Platform,
+    workload: WorkloadSpec,
+    scheduler: String,
+    cfg: SimConfig,
+    net_events: Vec<NetEventSpec>,
+    join_events: Vec<JoinEvent>,
+}
+
+impl Session<'_> {
+    /// Resolve the scheduler by registry name (default `"heye"`).
+    pub fn scheduler(mut self, name: &str) -> Self {
+        self.scheduler = name.to_string();
+        self
+    }
+
+    /// Replace the whole engine configuration.
+    pub fn config(mut self, cfg: SimConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn horizon(mut self, horizon_s: f64) -> Self {
+        self.cfg.horizon_s = horizon_s;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn noise(mut self, noise_frac: f64) -> Self {
+        self.cfg.noise_frac = noise_frac;
+        self
+    }
+
+    pub fn grouped(mut self, grouped: bool) -> Self {
+        self.cfg.grouped = grouped;
+        self
+    }
+
+    /// Apply a raw bandwidth event (link ids from [`Platform::decs`] are
+    /// valid — DECS assembly is deterministic).
+    pub fn net_event(mut self, event: NetEvent) -> Self {
+        self.net_events.push(NetEventSpec::Raw(event));
+        self
+    }
+
+    /// Throttle (`Some(gbps)`) or restore (`None`) the uplink of the
+    /// `edge`-th edge device at time `t` — the Fig. 12a/b knob.
+    pub fn throttle_uplink(mut self, edge: usize, t: f64, gbps: Option<f64>) -> Self {
+        self.net_events.push(NetEventSpec::Uplink { edge, t, gbps });
+        self
+    }
+
+    /// A new edge device joins mid-run (Fig. 12c).
+    pub fn join(mut self, event: JoinEvent) -> Self {
+        self.join_events.push(event);
+        self
+    }
+
+    /// Build the stack, drive the run, and report.
+    pub fn run(&self) -> Result<RunReport, PlatformError> {
+        if self.cfg.horizon_s.is_nan() || self.cfg.horizon_s <= 0.0 {
+            return Err(PlatformError::InvalidSession(format!(
+                "horizon must be positive, got {} s",
+                self.cfg.horizon_s
+            )));
+        }
+        if self.cfg.noise_frac.is_nan() || self.cfg.noise_frac < 0.0 {
+            return Err(PlatformError::InvalidSession(format!(
+                "noise fraction must be non-negative, got {}",
+                self.cfg.noise_frac
+            )));
+        }
+        let entry = SchedulerRegistry::lookup(&self.scheduler)?;
+        let mut cfg = self.cfg.clone();
+        if let Some(tune) = entry.tune {
+            tune(&mut cfg);
+        }
+        // each run gets its own copy of the deterministically assembled
+        // system (joins mutate it), without re-running graph assembly
+        let decs = self.platform.decs().clone();
+        let workload = self.workload.build(&decs)?;
+        let net_events = self
+            .net_events
+            .iter()
+            .map(|e| match e {
+                NetEventSpec::Raw(ev) => Ok(ev.clone()),
+                NetEventSpec::Uplink { edge, t, gbps } => {
+                    let dev = decs.edge_devices.get(*edge).copied().ok_or_else(|| {
+                        PlatformError::InvalidSession(format!(
+                            "net event edge index {edge} out of range (have {})",
+                            decs.edge_devices.len()
+                        ))
+                    })?;
+                    let link = decs.uplink_of(dev).ok_or_else(|| {
+                        PlatformError::InvalidSession(format!("edge {edge} has no uplink"))
+                    })?;
+                    Ok(NetEvent {
+                        t: *t,
+                        link,
+                        gbps: *gbps,
+                    })
+                }
+            })
+            .collect::<Result<Vec<_>, PlatformError>>()?;
+        let mut sched = entry.build(&decs);
+        let mut sim = Simulation::new(decs);
+        let metrics = sim.run(
+            sched.as_mut(),
+            workload,
+            net_events,
+            self.join_events.clone(),
+            &cfg,
+        );
+        let scheduler_label = sched.name();
+        let Simulation { decs, .. } = sim;
+        Ok(RunReport {
+            scheduler: self.scheduler.clone(),
+            scheduler_label,
+            config: cfg,
+            decs,
+            metrics,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reports
+// ---------------------------------------------------------------------------
+
+/// Everything a finished run produced: metrics, placements, overhead, and
+/// the post-run system (joins included), plus figure-style views — callers
+/// never poke [`Simulation`] internals.
+pub struct RunReport {
+    /// registry name the session resolved
+    pub scheduler: String,
+    /// the scheduler's own reported name
+    pub scheduler_label: String,
+    /// the engine configuration that actually ran (tuning hooks applied)
+    pub config: SimConfig,
+    /// the system after the run — includes devices that joined mid-run
+    pub decs: Decs,
+    pub metrics: RunMetrics,
+}
+
+impl RunReport {
+    /// Completed frames.
+    pub fn frames(&self) -> usize {
+        self.metrics.frames.len()
+    }
+
+    /// Tasks the schedulers placed (edge + server).
+    pub fn completed_tasks(&self) -> u64 {
+        self.metrics.tasks_on_edge + self.metrics.tasks_on_server
+    }
+
+    pub fn qos_failure_rate(&self) -> f64 {
+        self.metrics.qos_failure_rate()
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        self.metrics.mean_latency_s()
+    }
+
+    pub fn overhead_ratio(&self) -> f64 {
+        self.metrics.overhead_ratio()
+    }
+
+    pub fn overhead_comm_fraction(&self) -> f64 {
+        self.metrics.overhead_comm_fraction()
+    }
+
+    /// QoS-meeting completion rate of `origin` over the run horizon.
+    pub fn achieved_fps(&self, origin: NodeId) -> f64 {
+        self.metrics.achieved_fps(origin, self.config.horizon_s)
+    }
+
+    /// Task placement counts: (task kind, pu class, on-server?) -> count.
+    pub fn placements(&self) -> &BTreeMap<(String, String, bool), u64> {
+        &self.metrics.placements
+    }
+
+    /// Per-origin-device latency breakdown (the Fig. 11a view).
+    pub fn per_device(&self) -> Vec<telemetry::DeviceBreakdown> {
+        telemetry::per_device(&self.decs, &self.metrics)
+    }
+
+    /// One-line summary (scheduler, frames, latency, QoS, overhead).
+    pub fn print_summary(&self) {
+        telemetry::summary_line(&self.scheduler, &self.metrics);
+    }
+
+    /// Print the per-device breakdown table.
+    pub fn print_breakdown(&self, title: &str) {
+        telemetry::print_breakdown(title, &self.per_device());
+    }
+
+    /// Serialize the run for external plotting.
+    pub fn to_json(&self) -> Json {
+        telemetry::to_json(&self.scheduler, &self.metrics)
+    }
+}

@@ -1,0 +1,243 @@
+//! The global scheduler registry: H-EYE's policies and every baseline
+//! self-register behind `Box<dyn Scheduler>` factories, and new policies
+//! plug in with [`SchedulerRegistry::register`] — one registry entry plus
+//! one [`crate::platform::Session`] call is a whole new serving scenario.
+//!
+//! Entries carry a human-readable description (listed by
+//! `heye schedulers`) and an optional engine-tuning hook: the Grouped
+//! strategy, for example, needs the simulator to batch same-instant ready
+//! tasks, which it requests by flipping [`SimConfig::grouped`] before the
+//! session runs.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::baselines::{AceScheduler, CloudVrScheduler, LatsScheduler};
+use crate::hwgraph::presets::Decs;
+use crate::orchestrator::{Hierarchy, Orchestrator, Policy};
+use crate::sim::{HeyeScheduler, Scheduler, SimConfig};
+
+use super::PlatformError;
+
+/// Builds a scheduler for a freshly assembled DECS.
+pub type SchedulerFactory = Arc<dyn Fn(&Decs) -> Box<dyn Scheduler> + Send + Sync>;
+
+/// One registry entry: the factory plus the metadata `heye schedulers`
+/// lists.
+#[derive(Clone)]
+pub struct SchedulerEntry {
+    pub name: String,
+    pub description: String,
+    /// engine-configuration hook applied right before a session runs
+    pub tune: Option<fn(&mut SimConfig)>,
+    factory: SchedulerFactory,
+}
+
+impl SchedulerEntry {
+    /// Instantiate this entry's scheduler against `decs`.
+    pub fn build(&self, decs: &Decs) -> Box<dyn Scheduler> {
+        (self.factory)(decs)
+    }
+}
+
+fn heye_factory(policy: Policy) -> SchedulerFactory {
+    Arc::new(move |decs: &Decs| {
+        Box::new(HeyeScheduler::new(Orchestrator::new(
+            Hierarchy::from_decs(decs),
+            policy,
+        ))) as Box<dyn Scheduler>
+    })
+}
+
+fn builtin_entries() -> BTreeMap<String, SchedulerEntry> {
+    let mut reg = BTreeMap::new();
+    let mut add = |name: &str,
+                   description: &str,
+                   tune: Option<fn(&mut SimConfig)>,
+                   factory: SchedulerFactory| {
+        reg.insert(
+            name.to_string(),
+            SchedulerEntry {
+                name: name.to_string(),
+                description: description.to_string(),
+                tune,
+                factory,
+            },
+        );
+    };
+    add(
+        "heye",
+        "H-EYE hierarchical ORC mapping (Alg. 1, contention-aware)",
+        None,
+        heye_factory(Policy::Hierarchical),
+    );
+    add(
+        "heye-direct",
+        "H-EYE variant: edges ask servers directly, skipping sibling edges (§5.5.5)",
+        None,
+        heye_factory(Policy::DirectToServer),
+    );
+    add(
+        "heye-sticky",
+        "H-EYE variant: re-ask the previously chosen server first (§5.5.5)",
+        None,
+        heye_factory(Policy::StickyServer),
+    );
+    add(
+        "heye-grouped",
+        "H-EYE variant: same-instant ready tasks batched per mapping round (§5.5.5)",
+        Some(|cfg: &mut SimConfig| {
+            cfg.grouped = true;
+        }),
+        heye_factory(Policy::Grouped),
+    );
+    add(
+        "ace",
+        "ACE baseline: static contention-blind plan per (origin, task kind)",
+        None,
+        Arc::new(|decs: &Decs| Box::new(AceScheduler::new(decs)) as Box<dyn Scheduler>),
+    );
+    add(
+        "lats",
+        "LaTS / Hetero-Edge baseline: standalone-greedy, availability-monitoring",
+        None,
+        Arc::new(|decs: &Decs| Box::new(LatsScheduler::new(decs)) as Box<dyn Scheduler>),
+    );
+    add(
+        "cloudvr",
+        "Multi-tier CloudVR baseline: remote render, local rest, resolution scaling",
+        None,
+        Arc::new(|decs: &Decs| Box::new(CloudVrScheduler::new(decs)) as Box<dyn Scheduler>),
+    );
+    reg
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, SchedulerEntry>> {
+    static REG: OnceLock<Mutex<BTreeMap<String, SchedulerEntry>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(builtin_entries()))
+}
+
+/// Registry keys of every built-in scheduler.
+pub const BUILTIN_SCHEDULERS: [&str; 7] = [
+    "heye",
+    "heye-direct",
+    "heye-sticky",
+    "heye-grouped",
+    "ace",
+    "lats",
+    "cloudvr",
+];
+
+/// Namespace for the global registry operations.
+pub struct SchedulerRegistry;
+
+impl SchedulerRegistry {
+    /// Register (or replace) a scheduler under `name`.
+    pub fn register(
+        name: &str,
+        description: &str,
+        factory: impl Fn(&Decs) -> Box<dyn Scheduler> + Send + Sync + 'static,
+    ) {
+        Self::register_with(name, description, None, factory);
+    }
+
+    /// Register with an engine-tuning hook (see [`SchedulerEntry::tune`]).
+    pub fn register_with(
+        name: &str,
+        description: &str,
+        tune: Option<fn(&mut SimConfig)>,
+        factory: impl Fn(&Decs) -> Box<dyn Scheduler> + Send + Sync + 'static,
+    ) {
+        registry().lock().expect("registry poisoned").insert(
+            name.to_string(),
+            SchedulerEntry {
+                name: name.to_string(),
+                description: description.to_string(),
+                tune,
+                factory: Arc::new(factory),
+            },
+        );
+    }
+
+    /// Look an entry up by name; the error carries every valid name so CLI
+    /// callers get a helpful message on a miss.
+    pub fn lookup(name: &str) -> Result<SchedulerEntry, PlatformError> {
+        let reg = registry().lock().expect("registry poisoned");
+        reg.get(name)
+            .cloned()
+            .ok_or_else(|| PlatformError::UnknownScheduler {
+                name: name.to_string(),
+                known: reg.keys().cloned().collect(),
+            })
+    }
+
+    /// Resolve `name` and instantiate its scheduler against `decs`.
+    pub fn create(name: &str, decs: &Decs) -> Result<Box<dyn Scheduler>, PlatformError> {
+        Ok(Self::lookup(name)?.build(decs))
+    }
+
+    /// Sorted registry keys.
+    pub fn names() -> Vec<String> {
+        registry()
+            .lock()
+            .expect("registry poisoned")
+            .keys()
+            .cloned()
+            .collect()
+    }
+
+    /// All entries, sorted by name.
+    pub fn entries() -> Vec<SchedulerEntry> {
+        registry()
+            .lock()
+            .expect("registry poisoned")
+            .values()
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::DecsSpec;
+
+    #[test]
+    fn builtins_resolve_and_report_their_registry_name() {
+        let decs = Decs::build(&DecsSpec::validation_pair());
+        for name in BUILTIN_SCHEDULERS {
+            let s = SchedulerRegistry::create(name, &decs)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(s.name(), name, "registry key and scheduler name diverge");
+        }
+        // the const and the entry table must stay in lockstep
+        assert_eq!(
+            builtin_entries().len(),
+            BUILTIN_SCHEDULERS.len(),
+            "BUILTIN_SCHEDULERS is out of sync with builtin_entries()"
+        );
+    }
+
+    #[test]
+    fn miss_lists_every_valid_name() {
+        let e = SchedulerRegistry::lookup("nope").unwrap_err();
+        match e {
+            PlatformError::UnknownScheduler { name, known } => {
+                assert_eq!(name, "nope");
+                for b in BUILTIN_SCHEDULERS {
+                    assert!(known.iter().any(|k| k == b), "missing {b}");
+                }
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn grouped_entry_tunes_the_engine() {
+        let entry = SchedulerRegistry::lookup("heye-grouped").unwrap();
+        let mut cfg = SimConfig::default();
+        assert!(!cfg.grouped);
+        (entry.tune.expect("grouped needs a tune hook"))(&mut cfg);
+        assert!(cfg.grouped);
+    }
+}

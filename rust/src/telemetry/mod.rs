@@ -1,9 +1,11 @@
 //! Telemetry: turns [`RunMetrics`] into the tables the paper's figures
-//! report, and serializes runs to JSON for external plotting.
+//! report, serializes runs to JSON for external plotting, and compares
+//! schedulers head-to-head over the [`crate::platform`] facade.
 
 use crate::hwgraph::presets::Decs;
 use crate::hwgraph::NodeId;
-use crate::sim::RunMetrics;
+use crate::platform::{Platform, PlatformError, RunReport, WorkloadSpec};
+use crate::sim::{RunMetrics, SimConfig};
 use crate::util::json::Json;
 
 /// Per-device latency breakdown (the Fig. 1 / Fig. 11a view): computation,
@@ -103,6 +105,28 @@ pub fn summary_line(name: &str, m: &RunMetrics) {
     );
 }
 
+/// Run `workload` under each scheduler in `scheds` on `platform` (same
+/// engine config and seed throughout), printing one summary line per run —
+/// the `heye compare` view, H-EYE vs every baseline with one line each.
+pub fn compare(
+    platform: &Platform,
+    workload: WorkloadSpec,
+    scheds: &[&str],
+    cfg: &SimConfig,
+) -> Result<Vec<RunReport>, PlatformError> {
+    let mut reports = Vec::with_capacity(scheds.len());
+    for &name in scheds {
+        let report = platform
+            .session(workload.clone())
+            .scheduler(name)
+            .config(cfg.clone())
+            .run()?;
+        report.print_summary();
+        reports.push(report);
+    }
+    Ok(reports)
+}
+
 /// Serialize a run to JSON (for external plotting / EXPERIMENTS.md capture).
 pub fn to_json(name: &str, m: &RunMetrics) -> Json {
     let frames: Vec<Json> = m
@@ -143,20 +167,16 @@ pub fn to_json(name: &str, m: &RunMetrics) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hwgraph::presets::{Decs, DecsSpec};
-    use crate::orchestrator::{Hierarchy, Orchestrator, Policy};
-    use crate::sim::{HeyeScheduler, SimConfig, Simulation, Workload};
 
     fn run_small() -> (Decs, RunMetrics) {
-        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
-        let mut sched = HeyeScheduler::new(Orchestrator::new(
-            Hierarchy::from_decs(&sim.decs),
-            Policy::Hierarchical,
-        ));
-        let wl = Workload::vr(&sim.decs);
-        let cfg = SimConfig::default().horizon(0.3).seed(11);
-        let m = sim.run(&mut sched, wl, vec![], vec![], &cfg);
-        (sim.decs, m)
+        let platform = Platform::paper_vr();
+        let report = platform
+            .session(WorkloadSpec::Vr)
+            .scheduler("heye")
+            .config(SimConfig::default().horizon(0.3).seed(11))
+            .run()
+            .expect("facade run");
+        (report.decs, report.metrics)
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! From-scratch substrates the offline image lacks crates for:
-//! PRNG, JSON, CLI parsing, streaming stats, a micro-bench harness, and a
-//! property-testing helper. Everything above this module depends only on
-//! `std`, `anyhow`/`thiserror`, and `xla`.
+//! error handling, PRNG, JSON, CLI parsing, streaming stats, a micro-bench
+//! harness, and a property-testing helper. Everything above this module
+//! depends only on `std` (plus `xla` behind the optional `pjrt` feature).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,203 @@
+//! Tests for the `heye::platform` facade: registry round-trips, builder
+//! and session validation errors, and an end-to-end `Session::run` smoke
+//! test over the VR workload.
+
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::platform::{
+    Platform, PlatformError, SchedulerRegistry, WorkloadSpec, BUILTIN_SCHEDULERS,
+};
+use heye::sim::SimConfig;
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_builtin_resolves_and_reports_its_name() {
+    let decs = Decs::build(&DecsSpec::validation_pair());
+    for name in BUILTIN_SCHEDULERS {
+        let sched = SchedulerRegistry::create(name, &decs)
+            .unwrap_or_else(|e| panic!("{name} must resolve: {e}"));
+        assert_eq!(sched.name(), name, "registry key and scheduler name diverge");
+    }
+    let names = SchedulerRegistry::names();
+    for name in BUILTIN_SCHEDULERS {
+        assert!(names.iter().any(|n| n == name), "{name} missing from names()");
+    }
+    for entry in SchedulerRegistry::entries() {
+        assert!(!entry.description.is_empty(), "{} lacks a description", entry.name);
+    }
+}
+
+#[test]
+fn unknown_scheduler_error_lists_valid_names() {
+    let platform = Platform::paper_vr();
+    let err = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("does-not-exist")
+        .run()
+        .unwrap_err();
+    match &err {
+        PlatformError::UnknownScheduler { name, known } => {
+            assert_eq!(name, "does-not-exist");
+            for b in BUILTIN_SCHEDULERS {
+                assert!(known.iter().any(|k| k == b), "{b} missing from known list");
+            }
+        }
+        other => panic!("expected UnknownScheduler, got {other:?}"),
+    }
+    let msg = err.to_string();
+    assert!(msg.contains("does-not-exist") && msg.contains("heye"), "{msg}");
+}
+
+#[test]
+fn custom_schedulers_plug_into_the_registry() {
+    // a user-defined policy: delegate to ACE under a new name
+    SchedulerRegistry::register(
+        "ace-alias",
+        "ACE under a test alias",
+        |decs: &Decs| -> Box<dyn heye::sim::Scheduler> {
+            Box::new(heye::baselines::AceScheduler::new(decs))
+        },
+    );
+    assert!(SchedulerRegistry::names().iter().any(|n| n == "ace-alias"));
+    let platform = Platform::builder().validation_pair().build().unwrap();
+    let report = platform
+        .session(WorkloadSpec::MiningBurst { origin: 0, n: 2 })
+        .scheduler("ace-alias")
+        .horizon(0.4)
+        .noise(0.0)
+        .run()
+        .expect("custom entry must run");
+    assert!(report.frames() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// builder validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builder_rejects_invalid_topologies() {
+    // no edges at all
+    let empty = DecsSpec {
+        edges: vec![],
+        servers: vec![("server1".into(), 1)],
+        edge_uplink_gbps: 10.0,
+        wan_gbps: 10.0,
+    };
+    assert!(matches!(
+        Platform::from_spec(empty),
+        Err(PlatformError::InvalidTopology(_))
+    ));
+
+    // unknown device model
+    let unknown = DecsSpec {
+        edges: vec![("rtx4090".into(), 1)],
+        servers: vec![],
+        edge_uplink_gbps: 10.0,
+        wan_gbps: 10.0,
+    };
+    match Platform::from_spec(unknown) {
+        Err(PlatformError::InvalidTopology(msg)) => assert!(msg.contains("rtx4090"), "{msg}"),
+        other => panic!("expected InvalidTopology, got {:?}", other.map(|_| ())),
+    }
+
+    // non-positive bandwidth
+    let dead_link = Platform::builder().validation_pair().uplink_gbps(0.0).build();
+    assert!(matches!(dead_link, Err(PlatformError::InvalidTopology(_))));
+
+    // and a valid one still builds
+    assert!(Platform::builder().mixed(2, 1).build().is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// session validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_rejects_invalid_configuration() {
+    let platform = Platform::builder().validation_pair().build().unwrap();
+
+    // non-positive horizon
+    let r = platform.session(WorkloadSpec::Vr).horizon(0.0).run();
+    assert!(matches!(r, Err(PlatformError::InvalidSession(_))));
+
+    // negative noise
+    let r = platform.session(WorkloadSpec::Vr).noise(-0.1).run();
+    assert!(matches!(r, Err(PlatformError::InvalidSession(_))));
+
+    // non-positive VR rate
+    let r = platform.session(WorkloadSpec::VrRate(0.0)).run();
+    assert!(matches!(r, Err(PlatformError::InvalidSession(_))));
+
+    // burst origin out of range (validation pair has one edge)
+    let r = platform
+        .session(WorkloadSpec::MiningBurst { origin: 9, n: 3 })
+        .run();
+    assert!(matches!(r, Err(PlatformError::InvalidSession(_))));
+
+    // net event pointing at a non-existent edge
+    let r = platform
+        .session(WorkloadSpec::Vr)
+        .throttle_uplink(7, 0.0, Some(1.0))
+        .run();
+    assert!(matches!(r, Err(PlatformError::InvalidSession(_))));
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end smoke
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_run_reports_vr_work() {
+    let platform = Platform::paper_vr();
+    let report = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .config(SimConfig::default().horizon(0.5).seed(1))
+        .run()
+        .expect("vr smoke run");
+    assert_eq!(report.scheduler, "heye");
+    assert_eq!(report.scheduler_label, "heye");
+    assert!(report.frames() > 0, "no frames completed");
+    assert!(report.completed_tasks() > 0, "no tasks placed");
+    assert!(report.mean_latency_s() > 0.0);
+    assert!((0.0..=1.0).contains(&report.qos_failure_rate()));
+    assert!(!report.placements().is_empty());
+    let rows = report.per_device();
+    assert!(!rows.is_empty(), "per-device breakdown empty");
+    // the report carries the post-run system for breakdowns
+    assert_eq!(report.decs.edge_devices.len(), 5);
+    // JSON view round-trips through the parser
+    let j = report.to_json().to_string();
+    let back = heye::util::json::Json::parse(&j).expect("reparse");
+    assert_eq!(back.get("scheduler").and_then(|s| s.as_str()), Some("heye"));
+}
+
+#[test]
+fn grouped_registry_entry_tunes_the_engine() {
+    let platform = Platform::builder().validation_pair().build().unwrap();
+    let report = platform
+        .session(WorkloadSpec::MiningBurst { origin: 0, n: 4 })
+        .scheduler("heye-grouped")
+        .horizon(0.4)
+        .noise(0.0)
+        .run()
+        .expect("grouped run");
+    assert!(report.config.grouped, "tune hook must flip grouped mode");
+    assert!(report.frames() > 0);
+}
+
+#[test]
+fn sessions_rerun_deterministically() {
+    let platform = Platform::builder().mixed(2, 1).build().unwrap();
+    let session = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .horizon(0.3)
+        .seed(9);
+    let a = session.run().expect("first run");
+    let b = session.run().expect("second run");
+    assert_eq!(a.frames(), b.frames());
+    assert!((a.mean_latency_s() - b.mean_latency_s()).abs() < 1e-12);
+}

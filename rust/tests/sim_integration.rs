@@ -1,10 +1,11 @@
-//! Integration tests across the whole stack: simulator + orchestrator +
-//! baselines + network + metrics, plus property tests on engine-level
+//! Integration tests across the whole stack — driven through the
+//! `heye::platform` facade: simulator + orchestrator + registry-resolved
+//! schedulers + network + metrics, plus property tests on engine-level
 //! invariants (conservation, causality, QoS accounting).
 
-use heye::baselines;
-use heye::hwgraph::presets::{Decs, DecsSpec, XAVIER_NX};
-use heye::sim::{JoinEvent, NetEvent, RunMetrics, SimConfig, Simulation, Workload};
+use heye::hwgraph::presets::XAVIER_NX;
+use heye::platform::{Platform, RunReport, WorkloadSpec};
+use heye::sim::{JoinEvent, RunMetrics};
 use heye::util::prop::{check, default_cases};
 
 fn run(
@@ -14,26 +15,33 @@ fn run(
     app: &str,
     horizon: f64,
     seed: u64,
-) -> (Decs, RunMetrics) {
-    let mut sim = Simulation::new(Decs::build(&DecsSpec::mixed(edges, servers)));
-    let mut s = baselines::by_name(sched, &sim.decs);
-    let wl = match app {
-        "mining" => Workload::mining(&sim.decs, edges * 4, 10.0),
-        _ => Workload::vr(&sim.decs),
+) -> RunReport {
+    let platform = Platform::builder()
+        .mixed(edges, servers)
+        .build()
+        .expect("mixed topology");
+    let workload = match app {
+        "mining" => WorkloadSpec::Mining {
+            sensors: edges * 4,
+            hz: 10.0,
+        },
+        _ => WorkloadSpec::Vr,
     };
-    let mut cfg = SimConfig::default().horizon(horizon).seed(seed);
-    if sched == "heye-grouped" {
-        cfg = cfg.grouped(true);
-    }
-    let m = sim.run(s.as_mut(), wl, vec![], vec![], &cfg);
-    (sim.decs, m)
+    // heye-grouped's registry entry tunes the engine into grouped mode
+    platform
+        .session(workload)
+        .scheduler(sched)
+        .horizon(horizon)
+        .seed(seed)
+        .run()
+        .expect("session run")
 }
 
 /// Conservation: every completed frame has coherent accounting.
 #[test]
 fn frame_accounting_is_coherent_across_schedulers() {
     for sched in ["heye", "heye-direct", "heye-sticky", "heye-grouped", "ace", "lats", "cloudvr"] {
-        let (_, m) = run(sched, 4, 2, "vr", 0.6, 3);
+        let m = run(sched, 4, 2, "vr", 0.6, 3).metrics;
         assert!(!m.frames.is_empty(), "{sched}: no frames");
         for f in &m.frames {
             assert!(f.latency_s > 0.0, "{sched}: non-positive latency");
@@ -60,8 +68,8 @@ fn frame_accounting_is_coherent_across_schedulers() {
 #[test]
 fn placements_respect_candidate_sets_everywhere() {
     for sched in ["heye", "ace", "lats", "cloudvr"] {
-        let (_, m) = run(sched, 5, 3, "vr", 0.6, 5);
-        for ((kind, class, _), n) in &m.placements {
+        let report = run(sched, 5, 3, "vr", 0.6, 5);
+        for ((kind, class, _), n) in report.placements() {
             assert!(*n > 0);
             let k = heye::task::TaskKind::ALL
                 .iter()
@@ -79,8 +87,8 @@ fn placements_respect_candidate_sets_everywhere() {
 /// Mining: all sensor-read stages run on the origin edges (pinned).
 #[test]
 fn mining_reads_stay_on_edges() {
-    let (_, m) = run("heye", 4, 2, "mining", 0.6, 7);
-    for ((kind, _, on_server), n) in &m.placements {
+    let report = run("heye", 4, 2, "mining", 0.6, 7);
+    for ((kind, _, on_server), n) in report.placements() {
         if kind == "sensor_read" {
             assert!(!on_server, "sensor_read on a server ({n} times)");
         }
@@ -90,27 +98,24 @@ fn mining_reads_stay_on_edges() {
 /// Throttling a link can only increase communication time.
 #[test]
 fn throttle_monotonicity() {
-    let base = {
-        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
-        let mut s = baselines::by_name("heye", &sim.decs);
-        let wl = Workload::vr(&sim.decs);
-        let cfg = SimConfig::default().horizon(1.0).seed(11).noise(0.0);
-        sim.run(s.as_mut(), wl, vec![], vec![], &cfg)
-    };
-    let throttled = {
-        let decs = Decs::build(&DecsSpec::paper_vr());
-        let uplink = decs.uplink_of(decs.edge_devices[0]).unwrap();
-        let mut sim = Simulation::new(decs);
-        let mut s = baselines::by_name("heye", &sim.decs);
-        let wl = Workload::vr(&sim.decs);
-        let cfg = SimConfig::default().horizon(1.0).seed(11).noise(0.0);
-        let net = vec![NetEvent {
-            t: 0.0,
-            link: uplink,
-            gbps: Some(0.5),
-        }];
-        sim.run(s.as_mut(), wl, net, vec![], &cfg)
-    };
+    let platform = Platform::paper_vr();
+    let session = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .horizon(1.0)
+        .seed(11)
+        .noise(0.0);
+    let base = session.run().expect("base run").metrics;
+    let throttled = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .horizon(1.0)
+        .seed(11)
+        .noise(0.0)
+        .throttle_uplink(0, 0.0, Some(0.5))
+        .run()
+        .expect("throttled run")
+        .metrics;
     let comm = |m: &RunMetrics| m.frames.iter().map(|f| f.comm_s).sum::<f64>();
     assert!(comm(&throttled) >= comm(&base));
 }
@@ -118,30 +123,28 @@ fn throttle_monotonicity() {
 /// Join events extend the system without corrupting existing accounting.
 #[test]
 fn join_preserves_existing_devices_metrics() {
-    let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
-    let before_devices = sim.decs.edge_devices.len();
-    let mut s = baselines::by_name("heye", &sim.decs);
-    let wl = Workload::vr(&sim.decs);
-    let cfg = SimConfig::default().horizon(1.2).seed(13);
-    let joins = vec![
-        JoinEvent {
-            t: 0.4,
-            model: XAVIER_NX.to_string(),
-            uplink_gbps: 10.0,
-            vr_source: true,
-        },
-        JoinEvent {
-            t: 0.8,
-            model: XAVIER_NX.to_string(),
-            uplink_gbps: 10.0,
-            vr_source: true,
-        },
-    ];
-    let m = sim.run(s.as_mut(), wl, vec![], joins, &cfg);
-    assert_eq!(sim.decs.edge_devices.len(), before_devices + 2);
+    let platform = Platform::paper_vr();
+    let before_devices = platform.decs().edge_devices.len();
+    let join = |t: f64| JoinEvent {
+        t,
+        model: XAVIER_NX.to_string(),
+        uplink_gbps: 10.0,
+        vr_source: true,
+    };
+    let report = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .horizon(1.2)
+        .seed(13)
+        .join(join(0.4))
+        .join(join(0.8))
+        .run()
+        .expect("join run");
+    assert_eq!(report.decs.edge_devices.len(), before_devices + 2);
     // all original devices kept completing frames after the joins
-    for &d in &sim.decs.edge_devices[..before_devices] {
-        let post = m
+    for &d in &report.decs.edge_devices[..before_devices] {
+        let post = report
+            .metrics
             .frames_of(d)
             .into_iter()
             .filter(|f| f.release_t > 0.8)
@@ -160,7 +163,7 @@ fn conservation_and_bounds_hold_on_random_configs() {
         let sched = *rng.choice(&["heye", "ace", "lats", "cloudvr"]);
         let app = *rng.choice(&["vr", "mining"]);
         let seed = rng.next_u64();
-        let (_, m) = run(sched, edges, servers, app, 0.4, seed);
+        let m = run(sched, edges, servers, app, 0.4, seed).metrics;
         let released: u64 = m.released.values().sum();
         let completed = m.frames.len() as u64;
         if completed + m.dropped > released {
@@ -185,12 +188,13 @@ fn conservation_and_bounds_hold_on_random_configs() {
     });
 }
 
-/// The simulator is deterministic for any scheduler given a seed.
+/// The simulator is deterministic for any scheduler given a seed — and so
+/// is a re-run of the *same* session object.
 #[test]
 fn determinism_across_schedulers() {
     for sched in ["heye", "ace", "lats", "cloudvr"] {
-        let (_, a) = run(sched, 3, 2, "vr", 0.5, 17);
-        let (_, b) = run(sched, 3, 2, "vr", 0.5, 17);
+        let a = run(sched, 3, 2, "vr", 0.5, 17).metrics;
+        let b = run(sched, 3, 2, "vr", 0.5, 17).metrics;
         assert_eq!(a.frames.len(), b.frames.len(), "{sched}");
         let la: f64 = a.frames.iter().map(|f| f.latency_s).sum();
         let lb: f64 = b.frames.iter().map(|f| f.latency_s).sum();
@@ -203,9 +207,9 @@ fn determinism_across_schedulers() {
 /// feasibility knee (the paper's central claim).
 #[test]
 fn heye_wins_qos_under_pressure() {
-    let (_, heye) = run("heye", 12, 3, "vr", 1.0, 19);
+    let heye = run("heye", 12, 3, "vr", 1.0, 19);
     for base in ["ace", "lats"] {
-        let (_, b) = run(base, 12, 3, "vr", 1.0, 19);
+        let b = run(base, 12, 3, "vr", 1.0, 19);
         assert!(
             heye.qos_failure_rate() <= b.qos_failure_rate() + 1e-9,
             "h-eye {} vs {base} {}",
