@@ -1,0 +1,186 @@
+//! Fig. 16 (reproduction extension) — scheduling overhead at continuum
+//! scale: parallel candidate evaluation on the `fleet` preset.
+//!
+//! H-EYE's <2% overhead claim (§5, Fig. 14) holds only while one MapTask
+//! stays cheap; on a fleet of hundreds of edges a render escalation visits
+//! every edge ORC before reaching the servers, so constraint checking
+//! dominates. This harness sweeps the `parallelism` knob over that exact
+//! search and reports the wall-clock speedup — placements are asserted
+//! byte-identical to the serial search at every worker count (the per-tier
+//! reduce is device-ordered, not thread-ordered).
+//!
+//! Flags:
+//!   --reps N              timed sweeps per worker count (default 10)
+//!   --json PATH           write the runs as BENCH_fleet.json
+//!   --require-speedup X   exit 1 unless the 4-worker sweep is >= X times
+//!                         faster than serial (used locally; CI runners may
+//!                         not have 4 free cores)
+
+use heye::netsim::Network;
+use heye::orchestrator::{Hierarchy, Loads, Orchestrator, Policy};
+use heye::perfmodel::ProfileModel;
+use heye::platform::Platform;
+use heye::slowdown::CachedSlowdown;
+use heye::task::{workloads, TaskId, TaskKind};
+use heye::traverser::{ActiveTask, Traverser};
+use heye::util::bench::{bench, report, results_json, BenchResult};
+use heye::util::cli::Args;
+use heye::hwgraph::{NodeId, PuClass};
+
+/// A mid-run fleet load: every edge runs a handful of tasks (so each
+/// constraint check sweeps real co-runner sets) and half the server GPUs
+/// are busy (so the escalation has to price contention at the top, too).
+fn fleet_loads(decs: &heye::hwgraph::presets::Decs) -> Loads {
+    let g = &decs.graph;
+    let mut loads = Loads::default();
+    let mut id = 1u64;
+    let mut task = |kind: TaskKind, pu: NodeId, remaining: f64| {
+        id += 1;
+        ActiveTask {
+            id: TaskId(id),
+            kind,
+            pu,
+            remaining_s: remaining,
+            deadline_abs: f64::INFINITY,
+        }
+    };
+    for &dev in &decs.edge_devices {
+        let pus = g.pus_in(dev);
+        let cpus: Vec<NodeId> = pus
+            .iter()
+            .copied()
+            .filter(|&p| g.pu_class(p) == Some(PuClass::CpuCore))
+            .collect();
+        let gpu = pus.iter().copied().find(|&p| g.pu_class(p) == Some(PuClass::Gpu));
+        let mut v = Vec::new();
+        if cpus.len() >= 2 {
+            v.push(task(TaskKind::MatMul, cpus[0], 0.02));
+            v.push(task(TaskKind::Svm, cpus[1], 0.01));
+        }
+        if let Some(gpu) = gpu {
+            v.push(task(TaskKind::DnnInfer, gpu, 0.015));
+        }
+        loads.insert(dev, v);
+    }
+    for (si, &srv) in decs.servers.iter().enumerate() {
+        if si % 2 != 0 {
+            continue;
+        }
+        if let Some(gpu) = g
+            .pus_in(srv)
+            .into_iter()
+            .find(|&p| g.pu_class(p) == Some(PuClass::Gpu))
+        {
+            loads.insert(
+                srv,
+                vec![ActiveTask {
+                    id: TaskId(id + 1_000_000),
+                    kind: TaskKind::Render,
+                    pu: gpu,
+                    remaining_s: 0.01,
+                    deadline_abs: 0.05,
+                }],
+            );
+        }
+    }
+    loads
+}
+
+fn main() {
+    let args = Args::from_env();
+    let reps = args.get_usize("reps", 10).max(1);
+
+    println!("=== Fig. 16: fleet-scale MapTask with parallel candidate evaluation ===");
+    let platform = Platform::builder().fleet().build().expect("fleet topology");
+    let decs = platform.decs();
+    println!(
+        "fleet: {} edges, {} servers, {} HW-Graph nodes",
+        decs.edge_devices.len(),
+        decs.servers.len(),
+        decs.graph.node_count()
+    );
+    let perf = ProfileModel::new();
+    let net = Network::new();
+    let slow = CachedSlowdown::new(&decs.graph);
+    let tr = Traverser::new(&slow, &perf, &net);
+    let loads = fleet_loads(decs);
+
+    // the expensive search: a render must escalate past every edge ORC
+    let render = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone();
+    let origins: Vec<NodeId> = decs.edge_devices.iter().copied().step_by(8).collect();
+
+    let thread_counts = [1usize, 2, 4, 0];
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut reference: Option<Vec<Option<u32>>> = None;
+    for &threads in &thread_counts {
+        let mut orc = Orchestrator::new(Hierarchy::from_decs(decs), Policy::Hierarchical);
+        orc.set_parallelism(threads);
+        let resolved = orc.parallelism();
+
+        // determinism check (untimed): the full sweep's placements must be
+        // byte-identical to the serial reference
+        orc.reset_sticky();
+        let placements: Vec<Option<u32>> = origins
+            .iter()
+            .map(|&o| {
+                orc.map_task(&tr, &render, o, o, 0.0, &loads)
+                    .pu
+                    .map(|p| p.0)
+            })
+            .collect();
+        assert!(
+            placements.iter().any(|p| p.is_some()),
+            "fleet renders must map somewhere"
+        );
+        match &reference {
+            None => reference = Some(placements),
+            Some(rf) => assert_eq!(
+                rf, &placements,
+                "placements diverge at {resolved} workers — the parallel \
+                 search must be deterministic"
+            ),
+        }
+
+        // timed sweeps: scheduling overhead of one full mapping wave
+        let label = format!(
+            "fleet: {} maptasks, {} workers{}",
+            origins.len(),
+            resolved,
+            if threads == 0 { " (auto)" } else { "" }
+        );
+        results.push(bench(&label, 2, reps, || {
+            orc.reset_sticky();
+            for &o in &origins {
+                std::hint::black_box(orc.map_task(&tr, &render, o, o, 0.0, &loads));
+            }
+        }));
+    }
+
+    report("fleet MapTask sweeps", &results);
+
+    let serial = results[0].p50_ns;
+    println!("\nscheduling-overhead speedup vs serial (p50):");
+    for r in &results {
+        println!("  {:<44} {:>6.2}x", r.name, serial / r.p50_ns);
+    }
+    let idx_4 = thread_counts
+        .iter()
+        .position(|&t| t == 4)
+        .expect("thread_counts includes the 4-worker case");
+    let speedup_4 = serial / results[idx_4].p50_ns;
+    println!(
+        "\nshape: near-linear speedup with workers; placements identical at \
+         every worker count (asserted). 4-worker speedup: {speedup_4:.2}x"
+    );
+
+    if let Some(path) = args.get("json") {
+        let json = results_json("fig16_fleet", &results).to_string();
+        std::fs::write(path, json).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+    let need = args.get_f64("require-speedup", 0.0);
+    if need > 0.0 && speedup_4 < need {
+        eprintln!("FAIL: 4-worker speedup {speedup_4:.2}x below required {need:.2}x");
+        std::process::exit(1);
+    }
+}

@@ -5,18 +5,29 @@
 //! Schedulers come from the registry and full runs go through
 //! `Platform`/`Session`; only the slowdown/Traverser micro-benches touch
 //! the low-level types, because those *are* the subject being timed.
+//!
+//! CI bench gate:
+//!   cargo bench --bench perf_hotpath -- --json BENCH_hotpath.json \
+//!       --gate rust/benches/baselines/BENCH_hotpath.json --tol 6
+//! emits the run as JSON and fails (exit 1) when any case regresses past
+//! `tol` x the committed baseline's p50. Refresh the baseline by running
+//! with `--json` on a quiet machine and committing the output over
+//! `rust/benches/baselines/BENCH_hotpath.json`.
 
-use heye::orchestrator::Loads;
 use heye::netsim::Network;
+use heye::orchestrator::Loads;
 use heye::perfmodel::ProfileModel;
 use heye::platform::{Platform, SchedulerRegistry, WorkloadSpec};
 use heye::sim::SimConfig;
 use heye::slowdown::{CachedSlowdown, Placed, SlowdownStack};
 use heye::task::{workloads, TaskId, TaskKind};
 use heye::traverser::{ActiveTask, Traverser};
-use heye::util::bench::{bench, report};
+use heye::util::bench::{bench, gate, report, results_json};
+use heye::util::cli::Args;
+use heye::util::json::Json;
 
 fn main() {
+    let args = Args::from_env();
     let platform = Platform::paper_vr();
     let decs = platform.decs();
     let perf = ProfileModel::new();
@@ -34,7 +45,7 @@ fn main() {
             decs.graph.pu_class(p) == Some(heye::hwgraph::PuClass::Gpu)
         });
         if let Some(gpu) = gpu {
-            loads.by_device.insert(
+            loads.insert(
                 srv,
                 vec![ActiveTask {
                     id: TaskId(id),
@@ -50,7 +61,7 @@ fn main() {
 
     let mut results = Vec::new();
 
-    // 1. slowdown oracle (memoized vs SSSP-per-query)
+    // 1. slowdown oracle (precomputed vs SSSP-per-query)
     let g = &decs.graph;
     let mm = Placed::new(TaskKind::MatMul, g.by_name("edge0.cpu0").unwrap());
     let co = [
@@ -60,7 +71,7 @@ fn main() {
     results.push(bench("slowdown: SlowdownStack (SSSP/query)", 200, 5000, || {
         std::hint::black_box(stack.factor(g, &mm, &co));
     }));
-    results.push(bench("slowdown: CachedSlowdown (memoized)", 200, 5000, || {
+    results.push(bench("slowdown: CachedSlowdown (precomputed)", 200, 5000, || {
         std::hint::black_box(slow.factor(&mm, &co));
     }));
 
@@ -75,9 +86,13 @@ fn main() {
     results.push(bench("traverser: 4-task CFG predict", 200, 5000, || {
         std::hint::black_box(tr.predict(&cfg, &mapping, origin, &[], 0.0));
     }));
+    let mut scratch = heye::traverser::Scratch::default();
+    results.push(bench("traverser: 4-task CFG predict (scratch)", 200, 5000, || {
+        std::hint::black_box(tr.predict_with(&mut scratch, &cfg, &mapping, origin, &[], 0.0));
+    }));
 
     // 3. MapTask through the registry-built scheduler: local hit vs server
-    //    escalation, under load
+    //    escalation, under load, serial vs parallel candidate evaluation
     let mut sched = SchedulerRegistry::create("heye", decs).expect("registry");
     let local_task = workloads::vr_cfg(30.0, 1.0, None).nodes[1].spec.clone(); // pose
     let remote_task = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone(); // render
@@ -86,6 +101,45 @@ fn main() {
     }));
     results.push(bench("maptask: escalation (render, busy servers)", 200, 2000, || {
         std::hint::black_box(sched.assign(&tr, &remote_task, origin, origin, 0.0, &loads));
+    }));
+
+    // 3b. wide escalation where the sibling tier actually crosses the
+    //     worker pool (paper_vr tiers are too narrow to fan out) — the
+    //     per-call reset drops the sticky shortcut so every iteration
+    //     performs the full tier sweep
+    let wide = Platform::builder().mixed(16, 3).build().expect("wide topology");
+    let wdecs = wide.decs();
+    let wslow = CachedSlowdown::new(&wdecs.graph);
+    let wtr = Traverser::new(&wslow, &perf, &net);
+    let worigin = wdecs.edge_devices[0];
+    let mut wloads = Loads::default();
+    for &srv in &wdecs.servers {
+        let gpu = wdecs.graph.pus_in(srv).into_iter().find(|&p| {
+            wdecs.graph.pu_class(p) == Some(heye::hwgraph::PuClass::Gpu)
+        });
+        if let Some(gpu) = gpu {
+            wloads.insert(
+                srv,
+                vec![ActiveTask {
+                    id: TaskId(id),
+                    kind: TaskKind::Render,
+                    pu: gpu,
+                    remaining_s: 0.01,
+                    deadline_abs: 0.05,
+                }],
+            );
+            id += 1;
+        }
+    }
+    let mut wsched = SchedulerRegistry::create("heye", wdecs).expect("registry");
+    results.push(bench("maptask: wide escalation (16e, serial)", 50, 500, || {
+        wsched.reset();
+        std::hint::black_box(wsched.assign(&wtr, &remote_task, worigin, worigin, 0.0, &wloads));
+    }));
+    wsched.set_parallelism(4);
+    results.push(bench("maptask: wide escalation (16e, 4 workers)", 50, 500, || {
+        wsched.reset();
+        std::hint::black_box(wsched.assign(&wtr, &remote_task, worigin, worigin, 0.0, &wloads));
     }));
 
     // 4. end-to-end event loop throughput through the facade
@@ -128,4 +182,26 @@ fn main() {
         wall * 1e3,
         2.0 / wall
     );
+
+    if let Some(path) = args.get("json") {
+        let json = results_json("perf_hotpath", &results).to_string();
+        std::fs::write(path, json).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("gate") {
+        let tol = args.get_f64("tol", 4.0);
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("reading baseline {path}: {e}"));
+        let baseline = Json::parse(&text).unwrap_or_else(|e| panic!("parsing {path}: {e}"));
+        let violations = gate(&baseline, &results, tol);
+        if violations.is_empty() {
+            println!("bench gate: all cases within {tol:.1}x of {path}");
+        } else {
+            eprintln!("bench gate FAILED against {path}:");
+            for v in &violations {
+                eprintln!("  {v}");
+            }
+            std::process::exit(1);
+        }
+    }
 }

@@ -30,6 +30,7 @@ use crate::orchestrator::{Loads, MapResult, Overhead};
 use crate::sim::Scheduler;
 use crate::task::{workloads, Cfg, TaskKind, TaskSpec};
 use crate::traverser::Traverser;
+use crate::util::par;
 
 /// One-way modeled message latency between an edge ORC and a remote device
 /// (through the cluster + root tiers) — same constants H-EYE's hierarchy
@@ -102,6 +103,8 @@ pub struct AceScheduler {
     /// balances across equivalent devices at *plan* time (it scales), it
     /// just never revises and never prices contention
     plan_count: BTreeMap<NodeId, usize>,
+    /// resolved plan-scoring worker count (>= 1)
+    parallelism: usize,
 }
 
 impl AceScheduler {
@@ -111,6 +114,7 @@ impl AceScheduler {
             servers: decs.servers.clone(),
             plan: BTreeMap::new(),
             plan_count: BTreeMap::new(),
+            parallelism: 1,
         }
     }
 
@@ -132,38 +136,56 @@ impl AceScheduler {
         data_dev: NodeId,
     ) -> Option<(NodeId, PuClass)> {
         let g = tr.slow.graph();
-        // score satisfying devices by how many plans already target them
-        // (static balancing), then by blind latency
-        let mut best: Option<(usize, f64, NodeId, PuClass)> = None;
-        let mut fallback: Option<(f64, NodeId, PuClass)> = None;
-        for dev in self.devices_from(origin) {
-            if task.kind.pinned_to_origin() && dev != origin {
-                break;
-            }
+        // blind per-device scoring: the device's best deadline-satisfying
+        // candidate (planned count is constant per device) and its best
+        // fallback, reduced across devices in visit order below
+        let eval = |dev: NodeId| -> (Option<(usize, f64, PuClass)>, Option<(f64, PuClass)>) {
             let planned = self.plan_count.get(&dev).copied().unwrap_or(0);
+            let mut dev_best: Option<(usize, f64, PuClass)> = None;
+            let mut dev_fallback: Option<(f64, PuClass)> = None;
             for pu in candidate_pus(g, dev, task) {
                 if let Some((lat, _)) = blind_eval(tr, task, data_dev, pu) {
                     let class = g.pu_class(pu).unwrap();
-                    if lat <= task.constraints.deadline_s {
-                        let better = match best {
-                            None => true,
-                            Some((bp, bl, _, _)) => {
-                                planned < bp || (planned == bp && lat < bl)
-                            }
-                        };
-                        if better {
-                            best = Some((planned, lat, dev, class));
-                        }
+                    if lat <= task.constraints.deadline_s
+                        && dev_best.map(|(_, bl, _)| lat < bl).unwrap_or(true)
+                    {
+                        dev_best = Some((planned, lat, class));
                     }
+                    if dev_fallback.map(|(b, _)| lat < b).unwrap_or(true) {
+                        dev_fallback = Some((lat, class));
+                    }
+                }
+            }
+            (dev_best, dev_fallback)
+        };
+        let (origin_best, origin_fallback) = eval(origin);
+        let mut best: Option<(usize, f64, NodeId, PuClass)> =
+            origin_best.map(|(p, l, c)| (p, l, origin, c));
+        let mut fallback: Option<(f64, NodeId, PuClass)> =
+            origin_fallback.map(|(l, c)| (l, origin, c));
+        // local placements that satisfy the blind deadline short-circuit
+        // the search — the static planner has no reason to look remote;
+        // pinned stages never leave the origin at all
+        if best.is_none() && !task.kind.pinned_to_origin() {
+            let remote: Vec<NodeId> =
+                self.devices_from(origin).into_iter().skip(1).collect();
+            let scores = par::map(self.parallelism, &remote, |_, &dev| eval(dev));
+            for (di, (dev_best, dev_fallback)) in scores.into_iter().enumerate() {
+                let dev = remote[di];
+                if let Some((planned, lat, class)) = dev_best {
+                    let better = match best {
+                        None => true,
+                        Some((bp, bl, _, _)) => planned < bp || (planned == bp && lat < bl),
+                    };
+                    if better {
+                        best = Some((planned, lat, dev, class));
+                    }
+                }
+                if let Some((lat, class)) = dev_fallback {
                     if fallback.map(|(b, _, _)| lat < b).unwrap_or(true) {
                         fallback = Some((lat, dev, class));
                     }
                 }
-            }
-            // local placements that satisfy the blind deadline short-circuit
-            // the search — the static planner has no reason to look remote
-            if dev == origin && best.is_some() {
-                break;
             }
         }
         best.map(|(_, _, d, c)| (d, c))
@@ -236,6 +258,17 @@ impl Scheduler for AceScheduler {
     fn on_device_join(&mut self, _g: &HwGraph, dev: NodeId) {
         self.edges.push(dev);
     }
+
+    fn set_parallelism(&mut self, threads: usize) {
+        self.parallelism = par::resolve(threads);
+    }
+
+    fn reset(&mut self) {
+        // drop the static plans: ACE re-plans from scratch, as it would on
+        // a session restart
+        self.plan.clear();
+        self.plan_count.clear();
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -249,6 +282,8 @@ impl Scheduler for AceScheduler {
 pub struct LatsScheduler {
     edges: Vec<NodeId>,
     servers: Vec<NodeId>,
+    /// resolved offload-scoring worker count (>= 1)
+    parallelism: usize,
 }
 
 impl LatsScheduler {
@@ -256,6 +291,7 @@ impl LatsScheduler {
         LatsScheduler {
             edges: decs.edge_devices.clone(),
             servers: decs.servers.clone(),
+            parallelism: 1,
         }
     }
 
@@ -328,19 +364,24 @@ impl Scheduler for LatsScheduler {
         // cost is a single round trip to the chosen device, not a poll of
         // every device. The monitor sees queue depth, so a loaded PU is
         // penalized proportionally — but still with *standalone* times
-        // (no contention model).
+        // (no contention model). Scoring fans out over the worker pool and
+        // reduces in device order, so the pick is parallelism-invariant.
+        let cands: Vec<NodeId> = self
+            .servers
+            .iter()
+            .chain(self.edges.iter())
+            .copied()
+            .filter(|&d| d != origin)
+            .collect();
+        let scores = par::map(self.parallelism, &cands, |_, &dev| {
+            self.best_on(tr, task, data_dev, dev, loads)
+        });
+        let calls = cands.len() as u32;
         let mut best: Option<(NodeId, f64)> = None;
-        let mut calls = 0u32;
-        for &dev in self.servers.iter().chain(self.edges.iter()) {
-            if dev == origin {
-                continue;
-            }
-            calls += 1;
-            if let Some((pu, lat, load)) = self.best_on(tr, task, data_dev, dev, loads) {
-                let eff = lat * (1.0 + 0.5 * load as f64); // queue penalty
-                if best.map(|(_, b)| eff < b).unwrap_or(true) {
-                    best = Some((pu, eff));
-                }
+        for (pu, lat, load) in scores.into_iter().flatten() {
+            let eff = lat * (1.0 + 0.5 * load as f64); // queue penalty
+            if best.map(|(_, b)| eff < b).unwrap_or(true) {
+                best = Some((pu, eff));
             }
         }
         let overhead = Overhead {
@@ -366,6 +407,10 @@ impl Scheduler for LatsScheduler {
     fn on_device_join(&mut self, _g: &HwGraph, dev: NodeId) {
         self.edges.push(dev);
     }
+
+    fn set_parallelism(&mut self, threads: usize) {
+        self.parallelism = par::resolve(threads);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -382,6 +427,8 @@ pub struct CloudVrScheduler {
     steps: Vec<f64>,
     /// last resolution chosen per origin (reported by Fig. 12a)
     pub last_resolution: BTreeMap<NodeId, f64>,
+    /// resolved render-scoring worker count (>= 1)
+    parallelism: usize,
 }
 
 impl CloudVrScheduler {
@@ -390,6 +437,7 @@ impl CloudVrScheduler {
             servers: decs.servers.clone(),
             steps: vec![1.0, 0.75, 0.5, 0.25],
             last_resolution: BTreeMap::new(),
+            parallelism: 1,
         }
     }
 
@@ -432,16 +480,27 @@ impl Scheduler for CloudVrScheduler {
     ) -> MapResult {
         let g = tr.slow.graph();
         if task.kind == TaskKind::Render {
-            // best server by blind compute + transfer, lightly load-balanced
-            let mut best: Option<(NodeId, f64, NodeId)> = None;
-            for &dev in &self.servers {
+            // best server by blind compute + transfer, lightly
+            // load-balanced; per-server scoring fans out over the worker
+            // pool and reduces in server order
+            let scores = par::map(self.parallelism, &self.servers, |_, &dev| {
+                let mut dev_best: Option<(NodeId, f64)> = None;
                 for pu in candidate_pus(g, dev, task) {
                     if let Some((lat, _)) = blind_eval(tr, task, data_dev, pu) {
                         let load = pu_load(loads, dev, pu) as f64;
                         let eff = lat * (1.0 + 0.2 * load);
-                        if best.map(|(_, b, _)| eff < b).unwrap_or(true) {
-                            best = Some((pu, eff, dev));
+                        if dev_best.map(|(_, b)| eff < b).unwrap_or(true) {
+                            dev_best = Some((pu, eff));
                         }
+                    }
+                }
+                dev_best
+            });
+            let mut best: Option<(NodeId, f64, NodeId)> = None;
+            for (di, score) in scores.into_iter().enumerate() {
+                if let Some((pu, eff)) = score {
+                    if best.map(|(_, b, _)| eff < b).unwrap_or(true) {
+                        best = Some((pu, eff, self.servers[di]));
                     }
                 }
             }
@@ -502,6 +561,14 @@ impl Scheduler for CloudVrScheduler {
     }
 
     fn on_device_join(&mut self, _g: &HwGraph, _dev: NodeId) {}
+
+    fn set_parallelism(&mut self, threads: usize) {
+        self.parallelism = par::resolve(threads);
+    }
+
+    fn reset(&mut self) {
+        self.last_resolution.clear();
+    }
 }
 
 /// Registry names of the three baselines. Construction by name goes
@@ -638,7 +705,7 @@ mod tests {
         let pu = empty.pu.unwrap();
         let dev = ctx.decs.graph.device_of(pu).unwrap();
         let mut loads = Loads::default();
-        loads.by_device.insert(
+        loads.insert(
             dev,
             (0..4)
                 .map(|i| crate::traverser::ActiveTask {

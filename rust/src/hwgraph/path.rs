@@ -35,6 +35,16 @@ impl HwGraph {
     /// Single-source shortest path (by link latency, ties by hops) from
     /// `src` to every reachable node. Returns `(dist, prev)` arrays.
     pub fn sssp(&self, src: NodeId) -> (Vec<f64>, Vec<Option<NodeId>>) {
+        self.sssp_filtered(src, |_| true)
+    }
+
+    /// [`HwGraph::sssp`] restricted to nodes passing `allow` (the source is
+    /// always expanded).
+    fn sssp_filtered(
+        &self,
+        src: NodeId,
+        allow: impl Fn(NodeId) -> bool,
+    ) -> (Vec<f64>, Vec<Option<NodeId>>) {
         let n = self.node_count();
         let mut dist = vec![f64::INFINITY; n];
         let mut prev: Vec<Option<NodeId>> = vec![None; n];
@@ -49,6 +59,9 @@ impl HwGraph {
                 continue;
             }
             for &(next, eid) in self.neighbors(node) {
+                if !allow(next) {
+                    continue;
+                }
                 let e = self.edge(eid);
                 // epsilon keeps zero-latency on-chip hops strictly ordered
                 let nd = d + e.latency_s + 1e-12;
@@ -89,11 +102,32 @@ impl HwGraph {
     /// scratchpads and controllers. This is what profiling caches in the
     /// TASK struct per §3.3; here it's cheap enough to recompute.
     pub fn compute_path(&self, pu: NodeId) -> Vec<NodeId> {
+        self.memory_chain(pu, false)
+    }
+
+    /// [`HwGraph::compute_path`] restricted to the PU's own device
+    /// sub-graph. Memory traffic never profitably leaves the device (the
+    /// cheapest network hop costs ~1e-4 s against ~1e-8 s on-chip links),
+    /// so the result is identical — at device-local cost, which keeps the
+    /// eager slowdown-cache construction cheap on fleet-scale graphs.
+    pub fn compute_path_local(&self, pu: NodeId) -> Vec<NodeId> {
+        self.memory_chain(pu, true)
+    }
+
+    /// Shared implementation of the compute-path variants: SSSP from the
+    /// PU (optionally restricted to its device), then walk back from every
+    /// in-device system DRAM collecting the storage/controller hops the
+    /// memory traffic crosses.
+    fn memory_chain(&self, pu: NodeId, device_only: bool) -> Vec<NodeId> {
         let device = match self.device_of(pu) {
             Some(d) => d,
             None => return vec![pu],
         };
-        let (dist, prev) = self.sssp(pu);
+        let (dist, prev) = if device_only {
+            self.sssp_filtered(pu, |n| self.device_of(n) == Some(device))
+        } else {
+            self.sssp(pu)
+        };
         let mut out = vec![pu];
         for n in self.nodes() {
             let in_device = self.device_of(n.id) == Some(device);
@@ -248,6 +282,23 @@ mod tests {
         let p = g.path_between(c0, c1).unwrap();
         assert_eq!(p.len(), 3); // c0 -> l2 -> c1
         assert!(g.path_between(c0, c0).unwrap().len() == 1);
+    }
+
+    #[test]
+    fn local_compute_path_matches_global() {
+        use crate::hwgraph::presets::{Decs, DecsSpec};
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let g = &decs.graph;
+        for &dev in decs.edge_devices.iter().chain(decs.servers.iter()) {
+            for pu in g.pus_in(dev) {
+                assert_eq!(
+                    g.compute_path_local(pu),
+                    g.compute_path(pu),
+                    "compute paths diverge for {}",
+                    g.node(pu).name
+                );
+            }
+        }
     }
 
     #[test]

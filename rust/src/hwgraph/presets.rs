@@ -237,6 +237,16 @@ impl DecsSpec {
         }
     }
 
+    /// Continuum-scale fleet: hundreds of edge devices under multiple
+    /// (virtual sub-cluster) ORC groups plus a server block. This is the
+    /// topology the `fig16_fleet` harness measures parallel candidate
+    /// evaluation on — at this scale a render escalation visits every
+    /// edge ORC before reaching the servers, so per-MapTask constraint
+    /// checking is the dominant scheduling cost.
+    pub fn fleet() -> Self {
+        Self::mixed(192, 12)
+    }
+
     /// Uniform mix of the four edge models and three server models
     /// (the §5.5 scaling experiments use 20-of-each / 8-of-each blocks).
     pub fn mixed(n_edges: usize, n_servers: usize) -> Self {

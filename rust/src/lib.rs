@@ -28,6 +28,45 @@
 //! `heye` binary, the examples, and the figure harnesses all go through
 //! this seam.
 //!
+//! ## Parallel candidate evaluation: the `parallelism` knob
+//!
+//! MapTask's per-tier broadcast (Alg. 1) evaluates candidate devices on a
+//! zero-dependency scoped worker pool ([`util::par`]). The knob surfaces
+//! as [`platform::PlatformBuilder::parallelism`] (session default),
+//! `Session::parallelism` (per run), [`sim::SimConfig::parallelism`]
+//! (engine level), and `heye run --parallelism T` on the CLI: `1` (the
+//! default) keeps the search serial, `0` auto-detects the available
+//! cores, any other value pins the worker count. Placements, metrics, and
+//! the virtual timeline are **identical at every setting** — each tier
+//! reduces its candidates in device order, never thread-arrival order —
+//! so parallelism is purely a host-speed knob for the scheduling hot
+//! path. Per-worker reusable buffers (`traverser::Scratch`, the
+//! id-indexed [`orchestrator::Loads`] slots) keep that hot path
+//! allocation-free.
+//!
+//! ## The `fleet` preset and `fig16_fleet`
+//!
+//! `DecsSpec::fleet()` / `PlatformBuilder::fleet()` (also `heye run
+//! --fleet`) builds a continuum-scale system — 192 edge devices under
+//! multiple virtual ORC sub-clusters plus a 12-server block — where a
+//! single render escalation visits every edge ORC and constraint checking
+//! dominates scheduling overhead. `cargo bench --bench fig16_fleet`
+//! sweeps the `parallelism` knob over that search, asserts the placements
+//! stay byte-identical to the serial reference, and reports the
+//! wall-clock speedup (near-linear with cores).
+//!
+//! ## CI bench gate
+//!
+//! CI runs `perf_hotpath` with `--json BENCH_hotpath.json --gate
+//! rust/benches/baselines/BENCH_hotpath.json --tol 6`: each case's p50
+//! must stay within the tolerance multiple of the committed baseline or
+//! the job fails; both bench JSONs are uploaded as workflow artifacts. To
+//! refresh the baseline after an intentional perf change, run
+//! `cargo bench --bench perf_hotpath -- --json
+//! rust/benches/baselines/BENCH_hotpath.json` on a quiet machine and
+//! commit the result (cases missing from the baseline are ignored by the
+//! gate, so adding a bench case never breaks CI first).
+//!
 //! ## The mechanisms underneath
 //!
 //! The low-level modules stay public for by-hand composition — the

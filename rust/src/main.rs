@@ -23,18 +23,23 @@ USAGE:
   heye schedulers
   heye artifacts [--reps N]
   heye run     [--app vr|mining] [--sched NAME] [--edges N] [--servers M]
-               [--sensors K] [--horizon S] [--seed N] [--noise F] [--json]
-               [--config FILE] [--placements]
-  heye compare [--app vr|mining] [--edges N] [--servers M] [--sensors K]
-               [--horizon S] [--seed N]
+               [--fleet] [--sensors K] [--horizon S] [--seed N] [--noise F]
+               [--parallelism T] [--json] [--config FILE] [--placements]
+  heye compare [--app vr|mining] [--edges N] [--servers M] [--fleet]
+               [--sensors K] [--horizon S] [--seed N] [--parallelism T]
 
-SCHEDULERS: resolved through the registry — run `heye schedulers` to list";
+SCHEDULERS: resolved through the registry — run `heye schedulers` to list
+PARALLELISM: scheduler candidate-evaluation worker threads
+             (1 = serial, 0 = auto-detect cores; results are identical)
+FLEET: the continuum-scale preset (hundreds of edges; see fig16_fleet)";
 
 fn platform_from(args: &Args) -> Result<Platform> {
     let edges = args.get_usize("edges", 0);
     let servers = args.get_usize("servers", 0);
-    let builder = Platform::builder();
-    let builder = if edges == 0 && servers == 0 {
+    let builder = Platform::builder().parallelism(args.get_usize("parallelism", 1));
+    let builder = if args.has("fleet") {
+        builder.fleet()
+    } else if edges == 0 && servers == 0 {
         builder.paper_vr()
     } else {
         builder.mixed(edges.max(1), servers.max(1))
@@ -47,6 +52,7 @@ fn sim_config(args: &Args) -> SimConfig {
         .horizon(args.get_f64("horizon", 1.0))
         .seed(args.get_u64("seed", 42))
         .noise(args.get_f64("noise", 0.02))
+        .parallelism(args.get_usize("parallelism", 1))
 }
 
 fn workload_from(args: &Args) -> WorkloadSpec {

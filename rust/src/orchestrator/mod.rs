@@ -26,7 +26,8 @@ use std::time::Instant;
 
 use crate::hwgraph::NodeId;
 use crate::task::{Cfg, TaskKind, TaskSpec};
-use crate::traverser::{ActiveTask, Traverser};
+use crate::traverser::{ActiveTask, Scratch, Traverser};
+use crate::util::par;
 
 /// Scheduling-overhead accounting for one MapTask call.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -68,19 +69,53 @@ pub struct MapResult {
 /// A snapshot of what's running where — the state the Traverser needs.
 /// The simulator maintains it; device ORCs only ever see their own slice
 /// (resource segregation).
+///
+/// Storage is id-indexed reusable buffers: the simulator refreshes one
+/// device's slot in place (via [`Loads::buffer_mut`], clear + refill)
+/// instead of churning a fresh `Vec` through a `BTreeMap` on every event —
+/// at fleet scale the loads sync runs per task start/finish and dominated
+/// allocation in the hot path.
 #[derive(Debug, Clone, Default)]
 pub struct Loads {
-    /// active tasks grouped by device
-    pub by_device: BTreeMap<NodeId, Vec<ActiveTask>>,
+    /// active tasks per device, indexed by `NodeId`; an empty slot is
+    /// equivalent to an absent device
+    slots: Vec<Vec<ActiveTask>>,
 }
 
 impl Loads {
     pub fn device(&self, dev: NodeId) -> &[ActiveTask] {
-        self.by_device.get(&dev).map(|v| v.as_slice()).unwrap_or(&[])
+        self.slots
+            .get(dev.0 as usize)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// The reusable buffer for `dev`, growing the table on demand. Callers
+    /// refill it in place (`clear()` then push) so capacity survives
+    /// across frames and nothing is re-allocated at steady state.
+    pub fn buffer_mut(&mut self, dev: NodeId) -> &mut Vec<ActiveTask> {
+        let i = dev.0 as usize;
+        if self.slots.len() <= i {
+            self.slots.resize_with(i + 1, Vec::new);
+        }
+        &mut self.slots[i]
+    }
+
+    /// Replace `dev`'s snapshot wholesale (tests and harnesses; the
+    /// simulator refills [`Loads::buffer_mut`] in place instead).
+    pub fn insert(&mut self, dev: NodeId, tasks: Vec<ActiveTask>) {
+        *self.buffer_mut(dev) = tasks;
+    }
+
+    /// Drop `dev`'s snapshot, keeping the buffer's capacity for reuse.
+    pub fn clear_device(&mut self, dev: NodeId) {
+        if let Some(v) = self.slots.get_mut(dev.0 as usize) {
+            v.clear();
+        }
     }
 
     pub fn total(&self) -> usize {
-        self.by_device.values().map(|v| v.len()).sum()
+        self.slots.iter().map(Vec::len).sum()
     }
 }
 
@@ -90,13 +125,13 @@ pub struct Orchestrator {
     pub policy: Policy,
     /// StickyServer policy memory: (origin device, task kind) -> device
     sticky: BTreeMap<(NodeId, u8), NodeId>,
-    /// overhead of the most recent failed `try_device` (accounted by caller)
-    last_try_overhead: Option<Overhead>,
     /// memoized distance-ordered device lists per origin (§Perf: building
     /// and sorting the escalation order per MapTask dominated at scale);
     /// invalidated when the hierarchy changes (device join)
     order_cache: BTreeMap<NodeId, std::rc::Rc<Vec<NodeId>>>,
     cache_devices: usize,
+    /// resolved candidate-evaluation worker count (>= 1); 1 = serial
+    parallelism: usize,
 }
 
 fn kind_tag(k: TaskKind) -> u8 {
@@ -109,10 +144,24 @@ impl Orchestrator {
             hierarchy,
             policy,
             sticky: BTreeMap::new(),
-            last_try_overhead: None,
             order_cache: BTreeMap::new(),
             cache_devices: 0,
+            parallelism: 1,
         }
+    }
+
+    /// Set the candidate-evaluation worker count: the per-tier broadcast
+    /// of Alg. 1 evaluates its sibling devices concurrently on this many
+    /// threads. `0` auto-detects the available cores; `1` (the default)
+    /// keeps the search serial. Results are identical at any setting —
+    /// the per-tier reduce runs in device order, not thread-arrival order.
+    pub fn set_parallelism(&mut self, threads: usize) {
+        self.parallelism = par::resolve(threads);
+    }
+
+    /// The resolved worker count candidate evaluation fans out over.
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
     }
 
     /// Distance-ordered devices from `origin`, memoized until the
@@ -165,22 +214,34 @@ impl Orchestrator {
                 None => tiers.push((hop, vec![dev])),
             }
         }
+        // single-task probe CFG shared by every candidate evaluation
+        let mut probe = Cfg::new();
+        probe.add(task.clone());
         for (hop, devs) in tiers {
             if hop > 0.0 {
                 overhead.comm_s += 2.0 * hop; // one broadcast round trip
                 overhead.hops += 2 * devs.len() as u32;
             }
+            // the per-tier broadcast: evaluate every sibling device on the
+            // worker pool; reduce below in *device order* (not thread
+            // arrival order), so parallel and serial searches choose
+            // identical placements. Tiers too narrow to amortize thread
+            // spawns stay inline (par's built-in per-worker minimum).
+            let evals = par::map_with(
+                self.parallelism,
+                &devs,
+                Scratch::default,
+                |scratch, _, &dev| {
+                    Self::eval_device(tr, scratch, &probe, task, data_dev, dev, now, loads)
+                },
+            );
             let mut best: Option<(NodeId, NodeId, f64)> = None;
-            for dev in devs {
-                if let Some((pu, latency, oh)) =
-                    self.try_device(tr, task, data_dev, dev, now, loads)
-                {
-                    overhead.add(&oh);
+            for (di, (cand, oh)) in evals.iter().enumerate() {
+                overhead.add(oh);
+                if let Some((pu, latency)) = *cand {
                     if best.map(|(_, _, b)| latency < b).unwrap_or(true) {
-                        best = Some((dev, pu, latency));
+                        best = Some((devs[di], pu, latency));
                     }
-                } else if let Some(oh) = self.last_try_overhead.take() {
-                    overhead.add(&oh);
                 }
             }
             if let Some((dev, pu, latency)) = best {
@@ -202,16 +263,21 @@ impl Orchestrator {
     }
 
     /// CheckTaskConstraints (Alg. 1 lines 11-19) over every candidate PU of
-    /// one device; returns the best (earliest-finishing) satisfying PU.
-    fn try_device(
-        &mut self,
+    /// one device; returns the best (earliest-finishing) satisfying PU plus
+    /// the measured constraint-check overhead. Takes no `&self` — each
+    /// worker of the parallel broadcast calls it independently with its own
+    /// scratch.
+    #[allow(clippy::too_many_arguments)]
+    fn eval_device(
         tr: &Traverser,
+        scratch: &mut Scratch,
+        probe: &Cfg,
         task: &TaskSpec,
         data_dev: NodeId,
         dev: NodeId,
         now: f64,
         loads: &Loads,
-    ) -> Option<(NodeId, f64, Overhead)> {
+    ) -> (Option<(NodeId, f64)>, Overhead) {
         let t0 = Instant::now();
         let g = tr.slow.graph();
         let active = loads.device(dev);
@@ -219,19 +285,17 @@ impl Orchestrator {
         // without simulating hundreds of co-tenants (sub-linear scaling,
         // one of the §3.1 design principles)
         if active.len() > 64 {
-            self.last_try_overhead = Some(Overhead {
+            let oh = Overhead {
                 comm_s: 0.0,
                 compute_s: t0.elapsed().as_secs_f64(),
                 hops: 0,
                 traverser_calls: 0,
-            });
-            return None;
+            };
+            return (None, oh);
         }
-        let mut cfg = Cfg::new();
-        cfg.add(task.clone());
         let mut best: Option<(NodeId, f64)> = None;
         let mut calls = 0u32;
-        for pu in g.pus_in(dev) {
+        for &pu in tr.slow.pus_of(dev) {
             let class = match g.pu_class(pu) {
                 Some(c) => c,
                 None => continue,
@@ -240,7 +304,7 @@ impl Orchestrator {
                 continue;
             }
             calls += 1;
-            if let Some(p) = tr.predict(&cfg, &[pu], data_dev, active, now) {
+            if let Some(p) = tr.predict_with(scratch, probe, &[pu], data_dev, active, now) {
                 if p.ok() {
                     let latency = p.finish[0] - now;
                     if best.map(|(_, b)| latency < b).unwrap_or(true) {
@@ -267,13 +331,7 @@ impl Orchestrator {
                     .collect::<Vec<_>>()
             );
         }
-        match best {
-            Some((pu, lat)) => Some((pu, lat, oh)),
-            None => {
-                self.last_try_overhead = Some(oh);
-                None
-            }
-        }
+        (best, oh)
     }
 
     /// Device visit order per policy: local first, then siblings / servers
@@ -450,7 +508,7 @@ mod tests {
         let s0 = ctx.decs.servers[0];
         let s0_gpu = g.by_name("server0.gpu").unwrap();
         let mut loads = Loads::default();
-        loads.by_device.insert(
+        loads.insert(
             s0,
             vec![crate::traverser::ActiveTask {
                 id: crate::task::TaskId(1),
@@ -464,6 +522,35 @@ mod tests {
         let r = orc.map_task(&tr, &t, ctx.decs.edge_devices[0], ctx.decs.edge_devices[0], 0.0, &loads);
         // must not land on server0.gpu — that would break the active task
         assert_ne!(r.pu, Some(s0_gpu));
+    }
+
+    #[test]
+    fn parallel_search_matches_serial() {
+        // 16 edges put the sibling tier well past par's per-worker
+        // minimum, so the 4-worker run genuinely crosses threads
+        let decs = Decs::build(&DecsSpec::mixed(16, 3));
+        let perf = ProfileModel::new();
+        let net = Network::new();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let tr = Traverser::new(&slow, &perf, &net);
+        let cfg = workloads::vr_cfg(30.0, 1.0, None);
+        let origin = decs.edge_devices[0];
+        // pose stays local, render escalates to the servers — both search
+        // shapes must reduce identically at any worker count
+        for node in [1usize, 2] {
+            let task = cfg.nodes[node].spec.clone();
+            let mut serial = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
+            let mut par4 = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
+            par4.set_parallelism(4);
+            assert_eq!(par4.parallelism(), 4);
+            let a = serial.map_task(&tr, &task, origin, origin, 0.0, &Loads::default());
+            let b = par4.map_task(&tr, &task, origin, origin, 0.0, &Loads::default());
+            assert_eq!(a.pu, b.pu, "placement diverges under parallelism");
+            assert_eq!(a.predicted_latency_s, b.predicted_latency_s);
+            assert_eq!(a.overhead.comm_s, b.overhead.comm_s);
+            assert_eq!(a.overhead.hops, b.overhead.hops);
+            assert_eq!(a.overhead.traverser_calls, b.overhead.traverser_calls);
+        }
     }
 
     #[test]

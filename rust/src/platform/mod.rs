@@ -87,12 +87,14 @@ impl From<PlatformError> for crate::util::error::Error {
 #[derive(Debug, Clone)]
 pub struct PlatformBuilder {
     spec: DecsSpec,
+    parallelism: usize,
 }
 
 impl Default for PlatformBuilder {
     fn default() -> Self {
         PlatformBuilder {
             spec: DecsSpec::paper_vr(),
+            parallelism: 1,
         }
     }
 }
@@ -113,6 +115,22 @@ impl PlatformBuilder {
     /// Uniform mix of the four edge models and three server models.
     pub fn mixed(mut self, edges: usize, servers: usize) -> Self {
         self.spec = DecsSpec::mixed(edges, servers);
+        self
+    }
+
+    /// Continuum-scale fleet: hundreds of edges under multiple ORC groups
+    /// (the `fig16_fleet` topology).
+    pub fn fleet(mut self) -> Self {
+        self.spec = DecsSpec::fleet();
+        self
+    }
+
+    /// Default candidate-evaluation worker threads for sessions on this
+    /// platform (`1` = serial, `0` = auto-detect available cores).
+    /// Placements and metrics are identical at any setting — the knob only
+    /// changes how fast the mapping search runs on the host.
+    pub fn parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = threads;
         self
     }
 
@@ -172,6 +190,7 @@ impl PlatformBuilder {
         Ok(Platform {
             spec: self.spec,
             decs,
+            parallelism: self.parallelism,
         })
     }
 }
@@ -184,6 +203,9 @@ impl PlatformBuilder {
 pub struct Platform {
     spec: DecsSpec,
     decs: Decs,
+    /// default scheduler worker threads for sessions (see
+    /// [`PlatformBuilder::parallelism`])
+    parallelism: usize,
 }
 
 impl Platform {
@@ -219,7 +241,7 @@ impl Platform {
             platform: self,
             workload,
             scheduler: "heye".to_string(),
-            cfg: SimConfig::default(),
+            cfg: SimConfig::default().parallelism(self.parallelism),
             net_events: Vec::new(),
             join_events: Vec::new(),
         }
@@ -337,7 +359,10 @@ impl Session<'_> {
         self
     }
 
-    /// Replace the whole engine configuration.
+    /// Replace the whole engine configuration. This overwrites every
+    /// knob, including the platform's default `parallelism` — re-apply it
+    /// with [`Session::parallelism`] (or set it on the [`SimConfig`]) if
+    /// you replace the config and still want a parallel mapping search.
     pub fn config(mut self, cfg: SimConfig) -> Self {
         self.cfg = cfg;
         self
@@ -360,6 +385,23 @@ impl Session<'_> {
 
     pub fn grouped(mut self, grouped: bool) -> Self {
         self.cfg.grouped = grouped;
+        self
+    }
+
+    /// Candidate-evaluation worker threads for this run (`1` = serial,
+    /// `0` = auto-detect). Overrides the platform default; results are
+    /// identical at any setting.
+    pub fn parallelism(mut self, threads: usize) -> Self {
+        self.cfg.parallelism = threads;
+        self
+    }
+
+    /// Ask the scheduler to drop its adaptive session state (sticky
+    /// placements, static plans) at time `t` — the dynamic-adaptation
+    /// reset of the Fig. 12 runs, previously only reachable by hand-wiring
+    /// `Orchestrator::reset_sticky`.
+    pub fn reset_sticky_at(mut self, t: f64) -> Self {
+        self.cfg.reset_times.push(t);
         self
     }
 
@@ -396,6 +438,13 @@ impl Session<'_> {
                 "noise fraction must be non-negative, got {}",
                 self.cfg.noise_frac
             )));
+        }
+        for &t in &self.cfg.reset_times {
+            if !t.is_finite() || t < 0.0 {
+                return Err(PlatformError::InvalidSession(format!(
+                    "scheduler reset times must be finite and non-negative, got {t}"
+                )));
+            }
         }
         let entry = SchedulerRegistry::lookup(&self.scheduler)?;
         let mut cfg = self.cfg.clone();

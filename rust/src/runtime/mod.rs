@@ -11,9 +11,12 @@
 //!   methodology, §3.3, applied to this testbed).
 //!
 //! The `xla` crate is not part of the offline image, so actual PJRT
-//! execution is gated behind the `pjrt` cargo feature (which requires
-//! vendoring `xla`). Without it, the manifest/profiling types still
-//! compile and [`Runtime::open`] reports the gap — every consumer
+//! execution is double-gated: the `pjrt` cargo feature declares the
+//! runtime surface (and is checked in CI without any external code), and
+//! the `xla` feature additionally selects the real backend, which
+//! requires vendoring the `xla` crate under `[dependencies]`. Without
+//! both, the manifest/profiling types still compile and
+//! [`Runtime::open`] reports exactly what is missing — every consumer
 //! (`heye info`, the examples, fig. 9) degrades gracefully.
 
 use std::collections::BTreeMap;
@@ -112,7 +115,7 @@ impl Manifest {
     }
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 mod backend {
     use std::collections::BTreeMap;
     use std::path::{Path, PathBuf};
@@ -267,7 +270,7 @@ mod backend {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla")))]
 mod backend {
     //! Stub backend: the image carries no `xla` crate, so the types exist
     //! (uninhabited — they cannot be constructed) and [`Runtime::open`]
@@ -322,10 +325,18 @@ mod backend {
 
     impl Runtime {
         pub fn open(_dir: impl AsRef<Path>) -> Result<Runtime> {
-            Err(err!(
-                "built without the `pjrt` feature — PJRT artifact execution \
-                 needs the vendored `xla` crate (cargo build --features pjrt)"
-            ))
+            if cfg!(feature = "pjrt") {
+                Err(err!(
+                    "`pjrt` feature enabled but the `xla` backend is not — \
+                     vendor the `xla` crate under [dependencies] and build \
+                     with --features pjrt,xla"
+                ))
+            } else {
+                Err(err!(
+                    "built without the `pjrt` feature — PJRT artifact execution \
+                     needs the vendored `xla` crate (cargo build --features pjrt,xla)"
+                ))
+            }
         }
 
         pub fn platform(&self) -> String {
@@ -463,14 +474,19 @@ mod tests {
         }
     }
 
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(all(feature = "pjrt", feature = "xla")))]
     #[test]
     fn stub_runtime_reports_missing_feature() {
         let e = Runtime::open(artifacts_dir()).unwrap_err();
-        assert!(e.to_string().contains("pjrt"), "{e}");
+        let msg = e.to_string();
+        if cfg!(feature = "pjrt") {
+            assert!(msg.contains("xla"), "{msg}");
+        } else {
+            assert!(msg.contains("pjrt"), "{msg}");
+        }
     }
 
-    #[cfg(feature = "pjrt")]
+    #[cfg(all(feature = "pjrt", feature = "xla"))]
     #[test]
     fn runtime_executes_every_artifact() {
         let mut rt = Runtime::open(artifacts_dir()).expect("runtime");
@@ -482,7 +498,7 @@ mod tests {
         }
     }
 
-    #[cfg(feature = "pjrt")]
+    #[cfg(all(feature = "pjrt", feature = "xla"))]
     #[test]
     fn host_profile_overlays_anchor_scale() {
         let mut rt = Runtime::open(artifacts_dir()).expect("runtime");

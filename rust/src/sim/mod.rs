@@ -200,6 +200,15 @@ pub struct SimConfig {
     /// batch same-instant sibling tasks into one mapping round
     /// (the Grouped strategy of §5.5.5)
     pub grouped: bool,
+    /// candidate-evaluation worker threads handed to the scheduler
+    /// (1 = serial, 0 = auto-detect available cores); results are
+    /// identical at any setting
+    pub parallelism: usize,
+    /// times at which the engine asks the scheduler to drop its adaptive
+    /// session state (sticky placements, static plans) — the Fig. 12
+    /// dynamic-adaptation knob, reachable through
+    /// `Session::reset_sticky_at`
+    pub reset_times: Vec<f64>,
 }
 
 impl Default for SimConfig {
@@ -209,6 +218,8 @@ impl Default for SimConfig {
             seed: 42,
             noise_frac: 0.02,
             grouped: false,
+            parallelism: 1,
+            reset_times: Vec::new(),
         }
     }
 }
@@ -231,6 +242,19 @@ impl SimConfig {
 
     pub fn grouped(mut self, g: bool) -> Self {
         self.grouped = g;
+        self
+    }
+
+    /// Scheduler worker threads (0 = auto, 1 = serial).
+    pub fn parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = threads;
+        self
+    }
+
+    /// Schedule a scheduler-state reset at `t` (sticky placements, static
+    /// plans — whatever the scheduler considers adaptive session state).
+    pub fn reset_at(mut self, t: f64) -> Self {
+        self.reset_times.push(t);
         self
     }
 }
@@ -306,6 +330,8 @@ enum EvKind {
     TransferDone { frame: usize, node: usize, route: Route },
     Finish { uid: u64, epoch: u64 },
     NetSet { link: EdgeId, gbps: Option<f64> },
+    /// drop the scheduler's adaptive session state (SimConfig::reset_times)
+    SchedReset,
 }
 
 struct Ev {
@@ -414,6 +440,7 @@ impl Simulation {
             sources: workload.sources,
             released_count: Vec::new(),
         };
+        sched.set_parallelism(cfg.parallelism);
         st.released_count = vec![0; st.sources.len()];
         for i in 0..st.sources.len() {
             let t = st.sources[i].start_t;
@@ -427,6 +454,9 @@ impl Simulation {
                     gbps: e.gbps,
                 },
             );
+        }
+        for &t in &cfg.reset_times {
+            st.push(t, EvKind::SchedReset);
         }
         join_events.sort_by(|a, b| a.t.total_cmp(&b.t));
 
@@ -520,6 +550,7 @@ fn run_until(
                 net.set_bandwidth(link, gbps);
                 sched.on_network_change(&decs.graph, net);
             }
+            EvKind::SchedReset => sched.reset(),
         }
     }
     st.now = until;
@@ -1084,7 +1115,9 @@ fn reslowdown_device(slow: &CachedSlowdown, st: &mut SimState, dev: NodeId, now:
 }
 
 /// Refresh the scheduler-visible snapshot of `dev` (resource segregation:
-/// schedulers only ever read one device's slice at a time).
+/// schedulers only ever read one device's slice at a time). The device's
+/// `Loads` slot is refilled in place — its buffer survives across frames,
+/// so the per-event sync allocates nothing at steady state.
 fn sync_loads_device(st: &mut SimState, dev: NodeId) {
     let now = st.now;
     // a task that cannot meet its deadline even running alone is already
@@ -1097,25 +1130,25 @@ fn sync_loads_device(st: &mut SimState, dev: NodeId) {
             dl
         }
     };
-    let uids: Vec<u64> = st.by_dev.get(&dev).cloned().unwrap_or_default();
-    let mut tasks: Vec<ActiveTask> = uids
-        .iter()
-        .map(|&u| {
+    // take the reusable buffer out so filling it can read the rest of `st`
+    let mut tasks = std::mem::take(st.loads.buffer_mut(dev));
+    tasks.clear();
+    if let Some(uids) = st.by_dev.get(&dev) {
+        for &u in uids {
             let r = &st.running[&u];
-            ActiveTask {
+            tasks.push(ActiveTask {
                 id: TaskId(r.uid),
                 kind: r.kind,
                 pu: r.pu,
                 remaining_s: r.work_left,
                 deadline_abs: eff_deadline(r.work_left, r.deadline_abs),
-            }
-        })
-        .collect();
+            });
+        }
+    }
     if let Some(pend) = st.pending_by_dev.get(&dev) {
-        tasks.extend(pend.iter().map(|(k, a)| {
+        tasks.extend(pend.iter().map(|(_, a)| {
             let mut a = a.clone();
             a.deadline_abs = eff_deadline(a.remaining_s, a.deadline_abs);
-            let _ = k;
             a
         }));
     }
@@ -1132,11 +1165,7 @@ fn sync_loads_device(st: &mut SimState, dev: NodeId) {
             });
         }
     }
-    if tasks.is_empty() {
-        st.loads.by_device.remove(&dev);
-    } else {
-        st.loads.by_device.insert(dev, tasks);
-    }
+    *st.loads.buffer_mut(dev) = tasks;
 }
 
 #[cfg(test)]

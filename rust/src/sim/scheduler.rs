@@ -41,6 +41,18 @@ pub trait Scheduler {
 
     /// Notification that a device joined (Fig. 12c).
     fn on_device_join(&mut self, _g: &HwGraph, _dev: NodeId) {}
+
+    /// Candidate-evaluation worker threads (`0` = auto-detect, `1` =
+    /// serial). The engine forwards `SimConfig::parallelism` here before a
+    /// run; schedulers without a parallel hot path ignore the knob.
+    /// Implementations must keep results identical at any setting.
+    fn set_parallelism(&mut self, _threads: usize) {}
+
+    /// Drop adaptive session state (sticky placements, static plans). The
+    /// engine calls this at each `SimConfig::reset_times` entry — the
+    /// session-level reset the Fig. 12 dynamic-adaptation runs use without
+    /// hand-wiring the scheduler.
+    fn reset(&mut self) {}
 }
 
 /// H-EYE: the Orchestrator as a Scheduler.
@@ -83,6 +95,14 @@ impl Scheduler for HeyeScheduler {
 
     fn on_device_join(&mut self, g: &HwGraph, dev: NodeId) {
         self.orc.hierarchy.join_device(g, dev);
+    }
+
+    fn set_parallelism(&mut self, threads: usize) {
+        self.orc.set_parallelism(threads);
+    }
+
+    fn reset(&mut self) {
+        self.orc.reset_sticky();
     }
 }
 

@@ -1,42 +1,103 @@
 //! Cached slowdown evaluation for the Traverser/simulator hot path.
 //!
-//! `nearest_shared_kind` runs Dijkstra over the device sub-graph; at
-//! simulation scale (hundreds of devices x thousands of task placements)
-//! that must not happen per query. `CachedSlowdown` memoizes the
-//! per-PU-pair nearest shared resource kind and each PU's class/model, and
-//! then evaluates exactly the same math as the `SlowdownStack` default
-//! models (a unit test asserts equivalence).
+//! `nearest_shared_kind` runs Dijkstra over the graph; at simulation scale
+//! (hundreds of devices x thousands of task placements) that must not
+//! happen per query. `CachedSlowdown` precomputes — eagerly, at
+//! construction — each PU's class/model/device and the nearest shared
+//! resource kind of every *same-device* PU pair (PUs on different devices
+//! share no memory system, so those pairs never contend), and then
+//! evaluates exactly the same math as the `SlowdownStack` default models
+//! (a unit test asserts equivalence).
+//!
+//! The eager tables make the oracle plain read-only data: no interior
+//! mutability, so `CachedSlowdown` is `Sync` and one instance serves every
+//! worker of the parallel candidate-evaluation pool concurrently.
+//! Construction stays cheap on fleet-scale graphs because the per-pair
+//! discovery uses device-local compute paths
+//! ([`crate::hwgraph::HwGraph::compute_path_local`]) instead of
+//! whole-graph SSSP.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 
 use crate::hwgraph::{HwGraph, NodeId, PuClass, ResourceKind};
 use crate::perfmodel::calibration;
 
-use super::{nearest_shared_kind, Placed};
+use super::{specificity, Placed};
 
 #[derive(Debug, Clone, Copy)]
 struct PuInfo {
     class: PuClass,
     /// index into the model-name interning table
     model_idx: u32,
+    /// the device group containing this PU
+    device: NodeId,
 }
 
-/// Memoized slowdown oracle bound to one graph.
+/// Precomputed slowdown oracle bound to one graph. Plain data after
+/// construction — shareable across scheduler worker threads.
 pub struct CachedSlowdown<'g> {
     g: &'g HwGraph,
-    pair_kind: RefCell<BTreeMap<(u32, u32), Option<ResourceKind>>>,
-    pu_info: RefCell<BTreeMap<u32, PuInfo>>,
-    models: RefCell<Vec<String>>,
+    /// per-node PU info, indexed by `NodeId` (None for non-PU nodes)
+    pu_info: Vec<Option<PuInfo>>,
+    /// nearest shared resource kind per same-device PU pair, keyed by
+    /// `(min id, max id)`
+    pair_kind: BTreeMap<(u32, u32), Option<ResourceKind>>,
+    /// PUs per device, ascending id (matches `HwGraph::pus_in`)
+    device_pus: BTreeMap<NodeId, Vec<NodeId>>,
+    models: Vec<String>,
 }
 
 impl<'g> CachedSlowdown<'g> {
     pub fn new(g: &'g HwGraph) -> Self {
+        let mut pu_info: Vec<Option<PuInfo>> = vec![None; g.node_count()];
+        let mut models: Vec<String> = Vec::new();
+        let mut device_pus: BTreeMap<NodeId, Vec<NodeId>> = BTreeMap::new();
+        for node in g.nodes() {
+            let class = match g.pu_class(node.id) {
+                Some(c) => c,
+                None => continue,
+            };
+            let device = g.device_of(node.id).unwrap_or(node.id);
+            let model = g.device_model_of(node.id).unwrap_or("").to_string();
+            let model_idx = match models.iter().position(|m| *m == model) {
+                Some(i) => i as u32,
+                None => {
+                    models.push(model);
+                    (models.len() - 1) as u32
+                }
+            };
+            pu_info[node.id.0 as usize] = Some(PuInfo {
+                class,
+                model_idx,
+                device,
+            });
+            device_pus.entry(device).or_default().push(node.id);
+        }
+        // same-device pairwise nearest-shared-resource discovery from
+        // device-local compute paths (one tiny Dijkstra per PU, not one
+        // whole-graph SSSP per pair)
+        let mut pair_kind = BTreeMap::new();
+        for pus in device_pus.values() {
+            let paths: Vec<Vec<NodeId>> =
+                pus.iter().map(|&pu| g.compute_path_local(pu)).collect();
+            for (i, &a) in pus.iter().enumerate() {
+                for (j, &b) in pus.iter().enumerate().skip(i + 1) {
+                    let kind = paths[i]
+                        .iter()
+                        .filter(|n| paths[j].contains(n))
+                        .filter_map(|&n| g.resource_kind(n))
+                        .min_by_key(|k| specificity(*k));
+                    let key = if a.0 <= b.0 { (a.0, b.0) } else { (b.0, a.0) };
+                    pair_kind.insert(key, kind);
+                }
+            }
+        }
         Self {
             g,
-            pair_kind: RefCell::new(BTreeMap::new()),
-            pu_info: RefCell::new(BTreeMap::new()),
-            models: RefCell::new(Vec::new()),
+            pu_info,
+            pair_kind,
+            device_pus,
+            models,
         }
     }
 
@@ -44,36 +105,21 @@ impl<'g> CachedSlowdown<'g> {
         self.g
     }
 
-    fn info(&self, pu: NodeId) -> PuInfo {
-        if let Some(i) = self.pu_info.borrow().get(&pu.0) {
-            return *i;
-        }
-        let class = self
-            .g
-            .pu_class(pu)
-            .unwrap_or_else(|| panic!("{} is not a PU", self.g.node(pu).name));
-        let model = self.g.device_model_of(pu).unwrap_or("").to_string();
-        let mut models = self.models.borrow_mut();
-        let model_idx = match models.iter().position(|m| *m == model) {
-            Some(i) => i as u32,
-            None => {
-                models.push(model);
-                (models.len() - 1) as u32
-            }
-        };
-        let info = PuInfo { class, model_idx };
-        self.pu_info.borrow_mut().insert(pu.0, info);
-        info
+    /// The PUs of `dev`, ascending id — same contents and order as
+    /// `HwGraph::pus_in`, without the per-call traversal and allocation.
+    pub fn pus_of(&self, dev: NodeId) -> &[NodeId] {
+        self.device_pus
+            .get(&dev)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
     }
 
-    fn shared_kind(&self, a: NodeId, b: NodeId) -> Option<ResourceKind> {
-        let key = if a.0 <= b.0 { (a.0, b.0) } else { (b.0, a.0) };
-        if let Some(k) = self.pair_kind.borrow().get(&key) {
-            return *k;
-        }
-        let k = nearest_shared_kind(self.g, a, b);
-        self.pair_kind.borrow_mut().insert(key, k);
-        k
+    fn info(&self, pu: NodeId) -> PuInfo {
+        self.pu_info
+            .get(pu.0 as usize)
+            .copied()
+            .flatten()
+            .unwrap_or_else(|| panic!("{} is not a PU", self.g.node(pu).name))
     }
 
     /// Total slowdown multiplier (>= 1): multi-tenancy x memory contention.
@@ -89,17 +135,26 @@ impl<'g> CachedSlowdown<'g> {
                 tenants += 1;
                 continue;
             }
-            let kind = match self.shared_kind(target.pu, c.pu) {
+            let c_info = match self.pu_info.get(c.pu.0 as usize).copied().flatten() {
+                // different devices: no shared memory system
+                Some(i) if i.device == t_info.device => i,
+                _ => continue,
+            };
+            let key = if target.pu.0 <= c.pu.0 {
+                (target.pu.0, c.pu.0)
+            } else {
+                (c.pu.0, target.pu.0)
+            };
+            let kind = match self.pair_kind.get(&key).copied().flatten() {
                 Some(k) if k != ResourceKind::NetLink => k,
                 _ => continue,
             };
-            let c_info = self.info(c.pu);
             let c_int = calibration::memory_intensity(c.kind, c_info.class);
             mem *= 1.0 + (calibration::contention_factor(kind) - 1.0) * t_sens * c_int;
         }
         let mem = mem.min(calibration::MEM_CONTENTION_CAP);
         let mt = if tenants > 1 {
-            let model = &self.models.borrow()[t_info.model_idx as usize];
+            let model = &self.models[t_info.model_idx as usize];
             1.0 / calibration::multitenancy_rel_speed(model, t_info.class, tenants)
         } else {
             1.0
@@ -152,16 +207,32 @@ mod tests {
     }
 
     #[test]
-    fn cache_is_populated_and_reused() {
+    fn tables_are_precomputed_eagerly() {
         let decs = Decs::build(&DecsSpec::validation_pair());
         let cached = CachedSlowdown::new(&decs.graph);
+        // every same-device PU pair is present before any query
+        let mut expected = 0usize;
+        for &d in decs.edge_devices.iter().chain(decs.servers.iter()) {
+            let n = decs.graph.pus_in(d).len();
+            expected += n * (n - 1) / 2;
+        }
+        assert_eq!(cached.pair_kind.len(), expected);
         let pus = decs.graph.pus_in(decs.edge_devices[0]);
         let t = Placed::new(TaskKind::Svm, pus[0]);
         let co = [Placed::new(TaskKind::Knn, pus[1])];
         let f1 = cached.factor(&t, &co);
-        let entries = cached.pair_kind.borrow().len();
         let f2 = cached.factor(&t, &co);
         assert_eq!(f1, f2);
-        assert_eq!(cached.pair_kind.borrow().len(), entries);
+    }
+
+    #[test]
+    fn pus_of_matches_graph_traversal() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let cached = CachedSlowdown::new(&decs.graph);
+        for &d in decs.edge_devices.iter().chain(decs.servers.iter()) {
+            assert_eq!(cached.pus_of(d), decs.graph.pus_in(d).as_slice());
+        }
+        // unknown node: empty, not a panic
+        assert!(cached.pus_of(decs.root).is_empty());
     }
 }

@@ -55,10 +55,29 @@ impl Prediction {
 }
 
 /// The Traverser: borrows the system's models; cheap to construct.
+///
+/// All three borrowed models are plain read-only data (`PerfModel` is
+/// `Send + Sync` by trait bound; [`CachedSlowdown`] precomputes its tables
+/// eagerly), so a `&Traverser` crosses the candidate-evaluation worker
+/// threads of [`crate::util::par`] freely.
 pub struct Traverser<'a> {
     pub slow: &'a CachedSlowdown<'a>,
     pub perf: &'a dyn PerfModel,
     pub net: &'a Network,
+}
+
+/// Reusable buffers for one worker's [`Traverser::predict_with`] calls:
+/// the contention-interval sweep runs entirely inside these, so repeated
+/// candidate evaluations allocate nothing beyond the returned
+/// [`Prediction`].
+#[derive(Default)]
+pub struct Scratch {
+    ents: Vec<Ent>,
+    running: Vec<usize>,
+    placed: Vec<Placed>,
+    factors: Vec<f64>,
+    co: Vec<Placed>,
+    finished: Vec<usize>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -112,11 +131,36 @@ impl<'a> Traverser<'a> {
         active: &[ActiveTask],
         t0: f64,
     ) -> Option<Prediction> {
+        self.predict_with(&mut Scratch::default(), cfg, mapping, origin, active, t0)
+    }
+
+    /// [`Traverser::predict`] with caller-owned scratch buffers — the hot
+    /// path for the mapping search, where one worker evaluates hundreds of
+    /// candidates back to back and must not re-allocate the sweep state
+    /// every call.
+    pub fn predict_with(
+        &self,
+        scratch: &mut Scratch,
+        cfg: &Cfg,
+        mapping: &[NodeId],
+        origin: NodeId,
+        active: &[ActiveTask],
+        t0: f64,
+    ) -> Option<Prediction> {
         assert_eq!(mapping.len(), cfg.len(), "mapping arity");
         let g = self.slow.graph();
         let n = cfg.len();
 
-        let mut ents: Vec<Ent> = Vec::with_capacity(n + active.len());
+        let Scratch {
+            ents,
+            running,
+            placed,
+            factors,
+            co,
+            finished,
+        } = scratch;
+        ents.clear();
+        ents.reserve(n + active.len());
         for i in 0..n {
             let work = self.standalone(cfg, i, mapping[i])?;
             ents.push(Ent {
@@ -160,8 +204,10 @@ impl<'a> Traverser<'a> {
         // release roots: data originates on `origin`, so a root mapped to a
         // remote device pays the input transfer first
         let mut t = t0;
-        for i in cfg.roots() {
-            self.release(&mut ents[i], cfg, i, origin, t, g);
+        for i in 0..n {
+            if cfg.nodes[i].preds.is_empty() {
+                self.release(&mut ents[i], cfg, i, origin, t, g);
+            }
         }
 
         let mut slowdown_s = vec![0.0; n];
@@ -172,33 +218,32 @@ impl<'a> Traverser<'a> {
                 break;
             }
             // rates for the running set
-            let running: Vec<usize> = (0..ents.len())
-                .filter(|&i| ents[i].state == St::Running)
-                .collect();
-            let placed: Vec<Placed> = running
-                .iter()
-                .map(|&i| Placed {
-                    kind: ents[i].kind,
-                    pu: ents[i].pu,
-                    scale: ents[i].scale,
-                })
-                .collect();
-            let mut factors = vec![1.0; running.len()];
+            running.clear();
+            running.extend((0..ents.len()).filter(|&i| ents[i].state == St::Running));
+            placed.clear();
+            placed.extend(running.iter().map(|&i| Placed {
+                kind: ents[i].kind,
+                pu: ents[i].pu,
+                scale: ents[i].scale,
+            }));
+            factors.clear();
             for ri in 0..running.len() {
-                let co: Vec<Placed> = placed
-                    .iter()
-                    .enumerate()
-                    .filter(|(rj, _)| *rj != ri)
-                    .map(|(_, p)| *p)
-                    .collect();
-                factors[ri] = self.slow.factor(&placed[ri], &co);
+                co.clear();
+                co.extend(
+                    placed
+                        .iter()
+                        .enumerate()
+                        .filter(|(rj, _)| *rj != ri)
+                        .map(|(_, p)| *p),
+                );
+                factors.push(self.slow.factor(&placed[ri], co));
             }
             // next event: earliest running finish or transfer landing
             let mut dt = f64::INFINITY;
             for (ri, &i) in running.iter().enumerate() {
                 dt = dt.min(ents[i].work_left * factors[ri]);
             }
-            for e in &ents {
+            for e in ents.iter() {
                 if let St::Transferring { until } = e.state {
                     dt = dt.min(until - t);
                 }
@@ -211,7 +256,7 @@ impl<'a> Traverser<'a> {
             let dt = dt.max(0.0);
             // advance work and collect completions
             let t_next = t + dt;
-            let mut finished: Vec<usize> = Vec::new();
+            finished.clear();
             for (ri, &i) in running.iter().enumerate() {
                 let e = &mut ents[i];
                 e.work_left -= dt / factors[ri];
@@ -234,11 +279,11 @@ impl<'a> Traverser<'a> {
             }
             t = t_next;
             // dependency resolution for finished CFG tasks
-            for &i in &finished {
+            for &i in finished.iter() {
                 if let Some(ci) = ents[i].cfg_idx {
-                    let succs = cfg.nodes[ci].succs.clone();
                     let from_pu = ents[i].pu;
-                    for s in succs {
+                    for k in 0..cfg.nodes[ci].succs.len() {
+                        let s = cfg.nodes[ci].succs[k];
                         if let St::Waiting { missing } = ents[s].state {
                             let m = missing - 1;
                             ents[s].state = St::Waiting { missing: m };
@@ -259,7 +304,7 @@ impl<'a> Traverser<'a> {
         let mut active_finish = Vec::new();
         let mut cfg_ok = true;
         let mut active_ok = true;
-        for e in &ents {
+        for e in ents.iter() {
             match e.cfg_idx {
                 Some(ci) => {
                     if e.state != St::Done {

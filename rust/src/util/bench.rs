@@ -3,9 +3,16 @@
 //! Every `benches/*.rs` target uses `harness = false` and drives this module:
 //! warmup, timed iterations, median/p95 reporting, and aligned table output
 //! that mirrors the paper's figure series.
+//!
+//! The CI bench gate is also here: [`results_json`] serializes a run to the
+//! `BENCH_*.json` schema and [`gate`] compares it against a committed
+//! baseline with a tolerance multiplier (see `.github/workflows/ci.yml`;
+//! refresh the baseline by re-running the bench with `--json` on a quiet
+//! machine and committing the output).
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::Samples;
 
 /// Result of one benchmark case.
@@ -63,6 +70,67 @@ pub fn report(title: &str, results: &[BenchResult]) {
             fmt_ns(r.p95_ns)
         );
     }
+}
+
+/// Serialize a bench run to the stable `BENCH_*.json` schema the CI gate
+/// consumes: `{"label": ..., "cases": {name: {iters, mean_ns, p50_ns,
+/// p95_ns, min_ns}}}`.
+pub fn results_json(label: &str, results: &[BenchResult]) -> Json {
+    let cases = results
+        .iter()
+        .map(|r| {
+            (
+                r.name.clone(),
+                Json::obj(vec![
+                    ("iters", Json::Num(r.iters as f64)),
+                    ("mean_ns", Json::Num(r.mean_ns)),
+                    ("p50_ns", Json::Num(r.p50_ns)),
+                    ("p95_ns", Json::Num(r.p95_ns)),
+                    ("min_ns", Json::Num(r.min_ns)),
+                ]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("label", Json::Str(label.to_string())),
+        ("cases", Json::Obj(cases)),
+    ])
+}
+
+/// Benchmark-regression gate: every case present in both the committed
+/// `baseline` and `results` must keep its p50 within `tol` x the baseline
+/// p50 (p50 rides out scheduler noise better than the mean; the generous
+/// default tolerance in CI absorbs runner-hardware variance while still
+/// catching order-of-magnitude regressions). Returns the violation
+/// messages — empty means the gate passes. Cases missing from the baseline
+/// are reported as notes by the caller, not failures, so adding a bench
+/// case never breaks CI before the baseline is refreshed.
+pub fn gate(baseline: &Json, results: &[BenchResult], tol: f64) -> Vec<String> {
+    let cases = match baseline.get("cases").and_then(|c| c.as_obj()) {
+        Some(c) => c,
+        None => return vec!["baseline has no `cases` object".to_string()],
+    };
+    let mut violations = Vec::new();
+    for r in results {
+        let base = cases
+            .get(&r.name)
+            .and_then(|c| c.get("p50_ns"))
+            .and_then(|v| v.as_f64());
+        let base = match base {
+            Some(b) if b > 0.0 => b,
+            _ => continue,
+        };
+        if r.p50_ns > base * tol {
+            violations.push(format!(
+                "{}: p50 {} exceeds {tol:.1}x the committed baseline {} ({:.1}x)",
+                r.name,
+                fmt_ns(r.p50_ns),
+                fmt_ns(base),
+                r.p50_ns / base
+            ));
+        }
+    }
+    violations
 }
 
 /// Human duration formatting.
@@ -149,5 +217,44 @@ mod tests {
     fn figure_table_arity_checked() {
         let mut t = FigureTable::new("t", &["a", "b"]);
         t.row("x", vec![1.0]);
+    }
+
+    fn result(name: &str, p50: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 10,
+            mean_ns: p50,
+            p50_ns: p50,
+            p95_ns: p50 * 1.2,
+            min_ns: p50 * 0.9,
+        }
+    }
+
+    #[test]
+    fn results_json_roundtrips_through_the_parser() {
+        let j = results_json("hot paths", &[result("a", 1000.0), result("b", 2e6)]);
+        let back = Json::parse(&j.to_string()).expect("reparse");
+        assert_eq!(back.get("label").and_then(|l| l.as_str()), Some("hot paths"));
+        let p50 = back
+            .get("cases")
+            .and_then(|c| c.get("a"))
+            .and_then(|a| a.get("p50_ns"))
+            .and_then(|v| v.as_f64());
+        assert_eq!(p50, Some(1000.0));
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_fails_beyond() {
+        let baseline = results_json("base", &[result("a", 1000.0), result("b", 1000.0)]);
+        // within 2x: pass
+        assert!(gate(&baseline, &[result("a", 1900.0)], 2.0).is_empty());
+        // beyond 2x: violation names the case
+        let v = gate(&baseline, &[result("b", 2100.0)], 2.0);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].starts_with("b:"), "{v:?}");
+        // unknown case: ignored, not a failure
+        assert!(gate(&baseline, &[result("new-case", 9e9)], 2.0).is_empty());
+        // malformed baseline: reported
+        assert!(!gate(&Json::Null, &[result("a", 1.0)], 2.0).is_empty());
     }
 }

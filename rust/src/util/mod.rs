@@ -1,12 +1,14 @@
 //! From-scratch substrates the offline image lacks crates for:
 //! error handling, PRNG, JSON, CLI parsing, streaming stats, a micro-bench
-//! harness, and a property-testing helper. Everything above this module
-//! depends only on `std` (plus `xla` behind the optional `pjrt` feature).
+//! harness, a property-testing helper, and a scoped worker pool. Everything
+//! above this module depends only on `std` (plus `xla` behind the optional
+//! `pjrt` feature).
 
 pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

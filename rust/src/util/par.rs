@@ -1,0 +1,155 @@
+//! Zero-dependency data-parallel substrate (no offline `rayon` in this
+//! image): a scoped worker pool over `std::thread::scope` with
+//! *deterministic* results — every item's result lands in its input slot,
+//! so callers reduce in input order and parallel runs are bit-identical to
+//! serial ones regardless of thread scheduling.
+//!
+//! The mapping hot path (`Orchestrator::map_task`, the baselines'
+//! candidate scoring) fans out over this module; `map_with` additionally
+//! hands each worker its own scratch state so per-candidate evaluation
+//! stays allocation-free.
+
+use std::num::NonZeroUsize;
+
+/// Resolve a parallelism knob to a worker count: `0` means auto-detect
+/// (available cores), any other value is used as-is.
+pub fn resolve(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(NonZeroUsize::get)
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Minimum items each worker must have before a thread is spawned for it:
+/// a scoped spawn costs ~10 µs, which tiny batches cannot amortize, so
+/// small inputs automatically take the inline serial path (identical
+/// results either way — only the wall clock changes).
+pub const MIN_ITEMS_PER_WORKER: usize = 4;
+
+/// Deterministic parallel map: applies `f` to every item and returns the
+/// results in item order. With `threads <= 1` (or a single item) this runs
+/// inline on the caller's thread with zero spawn cost.
+pub fn map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    map_with(threads, items, || (), |_scratch, i, t| f(i, t))
+}
+
+/// Like [`map`], but each worker owns a scratch state built by `init`
+/// (reusable buffers, so the per-item work can stay allocation-free).
+/// Items are dealt to workers in strides; results are written back to
+/// their input slots, so the output order — and therefore any in-order
+/// reduction over it — is independent of which worker ran what.
+pub fn map_with<T, R, S, I, F>(threads: usize, items: &[T], init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = resolve(threads).min(n / MIN_ITEMS_PER_WORKER).max(1);
+    if workers <= 1 {
+        let mut scratch = init();
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, t)| f(&mut scratch, i, t))
+            .collect();
+    }
+    let f = &f;
+    let init = &init;
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut scratch = init();
+                    let mut results = Vec::with_capacity(n / workers + 1);
+                    let mut i = w;
+                    while i < n {
+                        results.push((i, f(&mut scratch, i, &items[i])));
+                        i += workers;
+                    }
+                    results
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("par worker panicked") {
+                out[i] = Some(r);
+            }
+        }
+    });
+    out.into_iter()
+        .map(|r| r.expect("every slot is filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_zero_is_auto() {
+        assert!(resolve(0) >= 1);
+        assert_eq!(resolve(3), 3);
+    }
+
+    #[test]
+    fn map_preserves_item_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let serial = map(1, &items, |_, &x| x * x);
+        let parallel = map(4, &items, |_, &x| x * x);
+        assert_eq!(serial, parallel);
+        assert_eq!(parallel[7], 49);
+    }
+
+    #[test]
+    fn map_handles_empty_and_singleton() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(map(4, &empty, |_, &x| x).is_empty());
+        assert_eq!(map(4, &[5u32], |_, &x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn small_inputs_stay_inline_and_large_fan_out() {
+        // under MIN_ITEMS_PER_WORKER items per worker the pool is skipped;
+        // results are identical either way
+        let small: Vec<u64> = (0..MIN_ITEMS_PER_WORKER as u64).collect();
+        let big: Vec<u64> = (0..64).collect();
+        assert_eq!(map(8, &small, |_, &x| x + 1), map(1, &small, |_, &x| x + 1));
+        assert_eq!(map(8, &big, |_, &x| x + 1), map(1, &big, |_, &x| x + 1));
+    }
+
+    #[test]
+    fn scratch_is_reused_within_a_worker() {
+        let items: Vec<usize> = (0..32).collect();
+        // the scratch buffer accumulates across a worker's items; every
+        // item still computes from its own input only
+        let results = map_with(
+            2,
+            &items,
+            Vec::<usize>::new,
+            |scratch, _, &x| {
+                scratch.push(x);
+                x * 2
+            },
+        );
+        assert_eq!(results, items.iter().map(|&x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn index_argument_matches_position() {
+        let items = ["a", "b", "c"];
+        let got = map(3, &items, |i, &s| format!("{i}{s}"));
+        assert_eq!(got, vec!["0a", "1b", "2c"]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Parallelism-invariance tests: a run with the candidate-evaluation
+//! worker pool enabled must produce byte-identical results to the serial
+//! (`parallelism = 1`) run — same placements, same virtual timeline, same
+//! counters. The only field excluded from the comparison is measured
+//! wall-clock constraint-check time (`sched_compute_s` and the per-frame
+//! `sched_s` that folds it in), which is host noise by definition and is
+//! kept off the virtual timeline by the engine.
+
+use std::fmt::Write as _;
+
+use heye::platform::{Platform, WorkloadSpec};
+use heye::sim::{RunMetrics, SimConfig};
+
+/// Deterministic fingerprint of a run: every virtual-time quantity, in
+/// order, at full f64 round-trip precision.
+fn fingerprint(m: &RunMetrics) -> String {
+    let mut s = String::new();
+    for f in &m.frames {
+        writeln!(
+            s,
+            "frame o={} rel={:?} fin={:?} lat={:?} bud={:?} comp={:?} slow={:?} \
+             comm={:?} edge={:?} srv={:?} deg={} res={:?} pred={:?}",
+            f.origin.0,
+            f.release_t,
+            f.finish_t,
+            f.latency_s,
+            f.budget_s,
+            f.compute_s,
+            f.slowdown_s,
+            f.comm_s,
+            f.edge_busy_s,
+            f.server_busy_s,
+            f.degraded,
+            f.resolution,
+            f.predicted_s
+        )
+        .unwrap();
+    }
+    for (dev, n) in &m.released {
+        writeln!(s, "released {}={n}", dev.0).unwrap();
+    }
+    for (dev, b) in &m.busy_by_device {
+        writeln!(s, "busy {}={b:?}", dev.0).unwrap();
+    }
+    for ((kind, class, srv), n) in &m.placements {
+        writeln!(s, "place {kind}/{class}/{srv}={n}").unwrap();
+    }
+    writeln!(
+        s,
+        "comm={:?} hops={} calls={} edge={} server={} dropped={}",
+        m.sched_comm_s,
+        m.sched_hops,
+        m.traverser_calls,
+        m.tasks_on_edge,
+        m.tasks_on_server,
+        m.dropped
+    )
+    .unwrap();
+    s
+}
+
+fn run(platform: &Platform, workload: WorkloadSpec, cfg: SimConfig) -> RunMetrics {
+    platform
+        .session(workload)
+        .scheduler("heye")
+        .config(cfg)
+        .run()
+        .expect("determinism run")
+        .metrics
+}
+
+#[test]
+fn vr_run_is_parallelism_invariant() {
+    // wide enough that the sibling tier crosses the parallel threshold
+    let platform = Platform::builder().mixed(24, 6).build().unwrap();
+    let cfg = SimConfig::default().horizon(0.12).seed(11);
+    let serial = run(&platform, WorkloadSpec::Vr, cfg.clone().parallelism(1));
+    let parallel = run(&platform, WorkloadSpec::Vr, cfg.clone().parallelism(4));
+    let auto = run(&platform, WorkloadSpec::Vr, cfg.parallelism(0));
+    assert!(!serial.frames.is_empty(), "run must complete frames");
+    assert_eq!(
+        fingerprint(&serial),
+        fingerprint(&parallel),
+        "4-worker VR run diverges from serial"
+    );
+    assert_eq!(
+        fingerprint(&serial),
+        fingerprint(&auto),
+        "auto-parallel VR run diverges from serial"
+    );
+}
+
+#[test]
+fn paper_vr_run_is_parallelism_invariant() {
+    let platform = Platform::paper_vr();
+    let cfg = SimConfig::default().horizon(0.2).seed(7);
+    let serial = run(&platform, WorkloadSpec::Vr, cfg.clone().parallelism(1));
+    let parallel = run(&platform, WorkloadSpec::Vr, cfg.parallelism(4));
+    assert!(!serial.frames.is_empty());
+    assert_eq!(fingerprint(&serial), fingerprint(&parallel));
+}
+
+#[test]
+fn fleet_run_is_parallelism_invariant() {
+    // the fleet preset: a saturated origin escalates through the virtual
+    // sub-cluster tiers, so the worker pool is exercised end to end
+    let platform = Platform::builder().fleet().build().unwrap();
+    let wl = || WorkloadSpec::MiningBurst { origin: 0, n: 32 };
+    let cfg = SimConfig::default().horizon(0.3).seed(13);
+    let serial = run(&platform, wl(), cfg.clone().parallelism(1));
+    let parallel = run(&platform, wl(), cfg.parallelism(4));
+    assert!(!serial.frames.is_empty(), "fleet burst must complete frames");
+    assert_eq!(
+        fingerprint(&serial),
+        fingerprint(&parallel),
+        "fleet burst diverges under parallelism"
+    );
+}

@@ -66,10 +66,76 @@ fn random_loads(rng: &mut Rng, decs: &Decs, now: f64) -> Loads {
             id += 1;
         }
         if !v.is_empty() {
-            loads.by_device.insert(dev, v);
+            loads.insert(dev, v);
         }
     }
     loads
+}
+
+/// `Loads` slot reuse never leaks tasks across frames: after any sequence
+/// of refill/clear operations on the id-indexed buffers, every device
+/// reads back exactly what its last refill wrote — verified against a
+/// plain map model.
+#[test]
+fn loads_buffer_reuse_never_leaks_across_frames() {
+    use std::collections::BTreeMap;
+    check("loads-reuse-no-leak", default_cases(), |rng| {
+        let decs = random_decs(rng);
+        let devices: Vec<_> = decs
+            .edge_devices
+            .iter()
+            .chain(decs.servers.iter())
+            .copied()
+            .collect();
+        let mut loads = Loads::default();
+        let mut model: BTreeMap<u32, Vec<TaskId>> = BTreeMap::new();
+        let mut id = 1u64;
+        // a few "frames": each refills or clears a random device's slot
+        for _ in 0..20 {
+            let dev = *rng.choice(&devices);
+            if rng.bool(0.25) {
+                loads.clear_device(dev);
+                model.remove(&dev.0);
+                continue;
+            }
+            let pus = decs.graph.pus_in(dev);
+            let n = rng.below(4);
+            // refill in place, as the simulator's loads sync does
+            let buf = loads.buffer_mut(dev);
+            buf.clear();
+            let mut ids = Vec::new();
+            for _ in 0..n {
+                buf.push(ActiveTask {
+                    id: TaskId(id),
+                    kind: TaskKind::Svm,
+                    pu: *rng.choice(&pus),
+                    remaining_s: 0.01,
+                    deadline_abs: f64::INFINITY,
+                });
+                ids.push(TaskId(id));
+                id += 1;
+            }
+            model.insert(dev.0, ids);
+        }
+        for &dev in &devices {
+            let got: Vec<TaskId> = loads.device(dev).iter().map(|a| a.id).collect();
+            let want = model.get(&dev.0).cloned().unwrap_or_default();
+            if got != want {
+                return Err(format!(
+                    "device {} leaked: got {got:?}, want {want:?}",
+                    dev.0
+                ));
+            }
+        }
+        let want_total: usize = model.values().map(Vec::len).sum();
+        if loads.total() != want_total {
+            return Err(format!(
+                "total {} != model {want_total}",
+                loads.total()
+            ));
+        }
+        Ok(())
+    });
 }
 
 /// Placements respect the task's allowed PU classes and land on a device

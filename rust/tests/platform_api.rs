@@ -189,6 +189,61 @@ fn grouped_registry_entry_tunes_the_engine() {
 }
 
 #[test]
+fn parallelism_knob_flows_from_builder_and_session() {
+    // builder default flows into sessions; a session override wins
+    let platform = Platform::builder()
+        .validation_pair()
+        .parallelism(2)
+        .build()
+        .unwrap();
+    let report = platform
+        .session(WorkloadSpec::MiningBurst { origin: 0, n: 2 })
+        .horizon(0.4)
+        .noise(0.0)
+        .run()
+        .expect("builder-parallelism run");
+    assert_eq!(report.config.parallelism, 2);
+    let report = platform
+        .session(WorkloadSpec::MiningBurst { origin: 0, n: 2 })
+        .horizon(0.4)
+        .noise(0.0)
+        .parallelism(4)
+        .run()
+        .expect("session-parallelism run");
+    assert_eq!(report.config.parallelism, 4);
+    assert!(report.frames() > 0);
+}
+
+#[test]
+fn session_level_scheduler_reset_runs_and_validates() {
+    // Fig. 12-style dynamic run: sticky state dropped mid-run through the
+    // facade, no hand-wiring of Orchestrator::reset_sticky
+    let platform = Platform::paper_vr();
+    let report = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .horizon(0.3)
+        .seed(3)
+        .reset_sticky_at(0.15)
+        .run()
+        .expect("reset run");
+    assert_eq!(report.config.reset_times, vec![0.15]);
+    assert!(report.frames() > 0, "reset run must still serve frames");
+
+    // invalid reset times are session errors, not panics
+    let r = platform
+        .session(WorkloadSpec::Vr)
+        .reset_sticky_at(-1.0)
+        .run();
+    assert!(matches!(r, Err(PlatformError::InvalidSession(_))));
+    let r = platform
+        .session(WorkloadSpec::Vr)
+        .reset_sticky_at(f64::NAN)
+        .run();
+    assert!(matches!(r, Err(PlatformError::InvalidSession(_))));
+}
+
+#[test]
 fn sessions_rerun_deterministically() {
     let platform = Platform::builder().mixed(2, 1).build().unwrap();
     let session = platform
