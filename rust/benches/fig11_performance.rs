@@ -111,6 +111,7 @@ fn fig11b() {
                             make_cfg: Box::new(move |r| vr_cfg(fps, r, weights.as_ref())),
                             start_t: 0.0,
                             count: None,
+                            arrival: heye::sim::ArrivalModel::Periodic,
                         }
                     })
                     .collect();

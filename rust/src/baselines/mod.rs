@@ -259,6 +259,15 @@ impl Scheduler for AceScheduler {
         self.edges.push(dev);
     }
 
+    fn on_device_leave(&mut self, _g: &HwGraph, dev: NodeId) {
+        self.edges.retain(|&d| d != dev);
+        self.servers.retain(|&d| d != dev);
+        // static plans involving the device are dead: re-plan on demand
+        self.plan
+            .retain(|&(origin, _), &mut (target, _)| origin != dev && target != dev);
+        self.plan_count.remove(&dev);
+    }
+
     fn set_parallelism(&mut self, threads: usize) {
         self.parallelism = par::resolve(threads);
     }
@@ -406,6 +415,11 @@ impl Scheduler for LatsScheduler {
 
     fn on_device_join(&mut self, _g: &HwGraph, dev: NodeId) {
         self.edges.push(dev);
+    }
+
+    fn on_device_leave(&mut self, _g: &HwGraph, dev: NodeId) {
+        self.edges.retain(|&d| d != dev);
+        self.servers.retain(|&d| d != dev);
     }
 
     fn set_parallelism(&mut self, threads: usize) {
@@ -561,6 +575,11 @@ impl Scheduler for CloudVrScheduler {
     }
 
     fn on_device_join(&mut self, _g: &HwGraph, _dev: NodeId) {}
+
+    fn on_device_leave(&mut self, _g: &HwGraph, dev: NodeId) {
+        self.servers.retain(|&d| d != dev);
+        self.last_resolution.remove(&dev);
+    }
 
     fn set_parallelism(&mut self, threads: usize) {
         self.parallelism = par::resolve(threads);

@@ -75,6 +75,12 @@ fn device_counts(j: &Json, known: &[&str]) -> Result<Vec<(String, usize)>> {
 impl ExpConfig {
     pub fn parse(text: &str) -> Result<ExpConfig> {
         let j = Json::parse(text).map_err(|e| err!("config parse: {e:?}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Build from an already-parsed document — [`crate::scenario`] shares
+    /// this schema and parses the text once.
+    pub fn from_json(j: &Json) -> Result<ExpConfig> {
         let mut c = ExpConfig::default();
         if let Some(v) = j.get("app").and_then(|v| v.as_str()) {
             if !["vr", "mining"].contains(&v) {
@@ -144,12 +150,55 @@ impl ExpConfig {
                 c.join_events.push((t, model.to_string(), vr));
             }
         }
+        c.validate()?;
         Ok(c)
     }
 
     pub fn load(path: &str) -> Result<ExpConfig> {
         let text = std::fs::read_to_string(path)?;
         Self::parse(&text)
+    }
+
+    /// Validate the dynamic-event lists against the topology and horizon:
+    /// rejects negative times, events scheduled past `horizon_s`, and
+    /// out-of-range `edge_index`, with an error naming the offending entry
+    /// (the seed engine silently ignored the former and panicked deep in
+    /// the sim on the latter). [`ExpConfig::parse`] calls this; callers
+    /// that mutate the lists afterwards (e.g. [`crate::scenario`]) call it
+    /// again before running.
+    pub fn validate(&self) -> Result<()> {
+        let n_edges: usize = self.decs_spec.edges.iter().map(|(_, c)| c).sum();
+        let h = self.sim.horizon_s;
+        for (i, &(t, idx, _)) in self.net_events.iter().enumerate() {
+            if !t.is_finite() || t < 0.0 {
+                bail!("net_events[{i}]: time {t} must be finite and non-negative");
+            }
+            if t > h {
+                bail!(
+                    "net_events[{i}]: t={t} is past the horizon ({h} s) and would be \
+                     silently ignored"
+                );
+            }
+            // uplinks are resolved against the *initial* topology, before
+            // any join extends it
+            if idx >= n_edges {
+                bail!("net_events[{i}]: edge_index {idx} out of range ({n_edges} edge devices)");
+            }
+        }
+        for (i, (t, _, _)) in self.join_events.iter().enumerate() {
+            if !t.is_finite() || *t < 0.0 {
+                bail!("join_events[{i}]: time {t} must be finite and non-negative");
+            }
+            // the engine skips structural events with t >= horizon (there
+            // is nothing left to run), so at-the-horizon is an error too
+            if *t >= h {
+                bail!(
+                    "join_events[{i}]: t={t} is at or past the horizon ({h} s) and \
+                     would be silently ignored"
+                );
+            }
+        }
+        Ok(())
     }
 
     /// The canonical way to run an experiment config: build its
@@ -292,10 +341,35 @@ mod tests {
     }
 
     #[test]
-    fn out_of_range_net_event_is_an_error() {
-        let c =
-            ExpConfig::parse(r#"{ "net_events": [ { "t": 0, "edge_index": 99, "gbps": 1 } ] }"#)
-                .unwrap();
-        assert!(c.build().is_err());
+    fn out_of_range_net_event_is_rejected_at_parse() {
+        // the default testbed has 5 edges: index 99 is named in the error
+        let e = ExpConfig::parse(r#"{ "net_events": [ { "t": 0, "edge_index": 99, "gbps": 1 } ] }"#)
+            .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("net_events[0]"), "{msg}");
+        assert!(msg.contains("99"), "{msg}");
+    }
+
+    #[test]
+    fn event_times_are_validated_against_the_horizon() {
+        // past the horizon
+        let e = ExpConfig::parse(
+            r#"{ "horizon_s": 1.0,
+                 "net_events": [ { "t": 2.0, "edge_index": 0, "gbps": 1 } ] }"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("past the horizon"), "{e}");
+        // negative time on a join
+        let e = ExpConfig::parse(
+            r#"{ "join_events": [ { "t": -0.5, "model": "orin_nano" } ] }"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("join_events[0]"), "{e}");
+        // in-range events still parse
+        assert!(ExpConfig::parse(
+            r#"{ "horizon_s": 1.0,
+                 "net_events": [ { "t": 0.5, "edge_index": 0, "gbps": 1 } ] }"#
+        )
+        .is_ok());
     }
 }

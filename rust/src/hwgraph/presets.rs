@@ -8,6 +8,8 @@
 //! topologies make `shared_resources` reproduce exactly the five contention
 //! classes measured in Fig. 2.
 
+use std::collections::BTreeSet;
+
 use super::{GraphBuilder, HwGraph, NodeId, PuClass, ResourceKind};
 
 /// Edge-device model tags.
@@ -286,6 +288,10 @@ pub struct Decs {
     pub router: NodeId,
     /// WAN gateway between the router and the server cluster (abstract)
     pub wan_gw: NodeId,
+    /// devices deactivated by a mid-run leave/failure (scenario churn);
+    /// the graph keeps their nodes so ids stay stable for metrics, but no
+    /// new work may land on them
+    pub inactive: BTreeSet<NodeId>,
 }
 
 impl Decs {
@@ -338,6 +344,7 @@ impl Decs {
             servers,
             router,
             wan_gw,
+            inactive: BTreeSet::new(),
         }
     }
 
@@ -353,6 +360,25 @@ impl Decs {
         self.graph = b.finish();
         self.edge_devices.push(dev);
         dev
+    }
+
+    /// Deactivate a device that left or failed mid-run (scenario churn).
+    pub fn deactivate(&mut self, dev: NodeId) {
+        self.inactive.insert(dev);
+    }
+
+    /// Is the device still part of the serving system?
+    pub fn is_active(&self, dev: NodeId) -> bool {
+        !self.inactive.contains(&dev)
+    }
+
+    /// Edge devices still active (joins included, leaves excluded).
+    pub fn active_edges(&self) -> Vec<NodeId> {
+        self.edge_devices
+            .iter()
+            .copied()
+            .filter(|&d| self.is_active(d))
+            .collect()
     }
 
     /// The uplink edge (device <-> router / wan_gw) of a device.
@@ -474,6 +500,19 @@ mod tests {
         assert!(decs.graph.node_count() > before);
         assert_eq!(decs.device_model(dev), XAVIER_NX);
         assert!(decs.uplink_of(dev).is_some());
+    }
+
+    #[test]
+    fn deactivate_marks_without_shrinking_the_graph() {
+        let mut decs = Decs::build(&DecsSpec::paper_vr());
+        let nodes = decs.graph.node_count();
+        let gone = decs.edge_devices[1];
+        assert!(decs.is_active(gone));
+        decs.deactivate(gone);
+        assert!(!decs.is_active(gone));
+        assert_eq!(decs.graph.node_count(), nodes, "ids stay stable");
+        assert_eq!(decs.active_edges().len(), 4);
+        assert!(decs.edge_devices.contains(&gone), "history is kept");
     }
 
     #[test]

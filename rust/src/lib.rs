@@ -67,6 +67,51 @@
 //! commit the result (cases missing from the baseline are ignored by the
 //! gate, so adding a bench case never breaks CI first).
 //!
+//! ## Scenarios: [`scenario`] — declarative dynamics
+//!
+//! Dynamic experiments are data files, not per-figure glue. A
+//! [`scenario::Scenario`] is a JSON document sharing the [`config`]
+//! schema (topology / app / scheduler / engine knobs) plus:
+//!
+//! * **open-loop arrivals** — `"arrival": {"kind": "poisson" | "bursty" |
+//!   "diurnal" | "periodic", ...}` selects a [`sim::ArrivalModel`]; every
+//!   multiplier is relative to the source's natural rate, and `"clients"`
+//!   scales the base rate for load sweeps. Each source draws from its own
+//!   deterministic RNG stream (seed + origin + per-origin index), so churn
+//!   never perturbs other sources' draws.
+//! * **a scripted event timeline** — `"events": [...]` mixing `throttle` /
+//!   `restore` (link bandwidth), `join`, `leave` / `fail` (device churn),
+//!   and `reset` (scheduler state drop). Leave/failure is first-class in
+//!   the engine: the device is deactivated, its frames are censored, and —
+//!   on failure — in-flight tasks of surviving frames are re-mapped
+//!   through the scheduler (or dropped when their input died with the
+//!   device), with the disruption recorded per event.
+//!
+//! Event lists are validated on load (negative times, events past the
+//! horizon, out-of-range `edge_index` are errors naming the entry). Runs
+//! return a [`scenario::ScenarioReport`]: p50/p95/p99 latency, QoS-miss
+//! rate, a goodput timeline, and per-disruption costs. Five presets ship
+//! built in — `steady`, `flashcrowd`, `diurnal`, `churn`, `partition` —
+//! listed by `heye scenario list` and run by `heye scenario run --preset
+//! churn` (or `--file rust/examples/scenario_churn.json`); `heye run
+//! --report-json out.json` and `heye scenario run --report-json out.json`
+//! dump the reports for external plotting. `cargo bench --bench
+//! fig17_churn` sweeps churn level x arrival burstiness across H-EYE and
+//! every baseline.
+//!
+//! ```no_run
+//! use heye::scenario::Scenario;
+//!
+//! let report = Scenario::preset("churn").unwrap().run()?;
+//! println!(
+//!     "p95 {:.1} ms, QoS-miss {:.1}%, {} disruptions",
+//!     report.latency.p95 * 1e3,
+//!     report.qos_miss_rate * 100.0,
+//!     report.disruptions.len()
+//! );
+//! # Ok::<(), heye::util::error::Error>(())
+//! ```
+//!
 //! ## The mechanisms underneath
 //!
 //! The low-level modules stay public for by-hand composition — the
@@ -87,6 +132,8 @@
 //! * [`baselines`] — ACE, LaTS (Hetero-Edge) and Multi-tier CloudVR,
 //!   registered alongside H-EYE in the scheduler registry.
 //! * [`config`] — JSON experiment configurations (`heye run --config`).
+//! * [`scenario`] — declarative dynamic scenarios: open-loop arrivals +
+//!   churn timelines compiled onto the facade (`heye scenario run`).
 //! * [`runtime`] — PJRT executor for the AOT artifacts (`artifacts/*.hlo.txt`)
 //!   compiled from the L2 JAX models; gated behind the `pjrt` feature.
 //! * [`telemetry`] — metric collection, figure-style reporting, and
@@ -102,6 +149,7 @@ pub mod orchestrator;
 pub mod perfmodel;
 pub mod platform;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod slowdown;
 pub mod task;

@@ -10,6 +10,7 @@
 //! ```
 
 use heye::platform::{Platform, RunReport, SchedulerRegistry, WorkloadSpec};
+use heye::scenario::Scenario;
 use heye::sim::SimConfig;
 use heye::telemetry;
 use heye::util::cli::Args;
@@ -24,14 +25,20 @@ USAGE:
   heye artifacts [--reps N]
   heye run     [--app vr|mining] [--sched NAME] [--edges N] [--servers M]
                [--fleet] [--sensors K] [--horizon S] [--seed N] [--noise F]
-               [--parallelism T] [--json] [--config FILE] [--placements]
+               [--parallelism T] [--json] [--report-json PATH]
+               [--config FILE] [--placements]
   heye compare [--app vr|mining] [--edges N] [--servers M] [--fleet]
                [--sensors K] [--horizon S] [--seed N] [--parallelism T]
+  heye scenario list
+  heye scenario run (--file FILE | --preset NAME) [--sched NAME] [--seed N]
+               [--horizon S] [--parallelism T] [--report-json PATH]
 
 SCHEDULERS: resolved through the registry — run `heye schedulers` to list
 PARALLELISM: scheduler candidate-evaluation worker threads
              (1 = serial, 0 = auto-detect cores; results are identical)
-FLEET: the continuum-scale preset (hundreds of edges; see fig16_fleet)";
+FLEET: the continuum-scale preset (hundreds of edges; see fig16_fleet)
+SCENARIOS: declarative dynamic runs (open-loop arrivals + churn); see
+           `heye scenario list` for presets and rust/examples/ for schema";
 
 fn platform_from(args: &Args) -> Result<Platform> {
     let edges = args.get_usize("edges", 0);
@@ -167,7 +174,65 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.has("json") {
         println!("{}", report.to_json());
     }
+    if let Some(path) = args.get("report-json") {
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("wrote report JSON to {path}");
+    }
     Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") => {
+            println!("built-in scenarios (run with `heye scenario run --preset NAME`):\n");
+            println!("{:<12} description", "name");
+            for (name, desc) in Scenario::presets() {
+                println!("{name:<12} {desc}");
+            }
+            Ok(())
+        }
+        Some("run") => {
+            let mut sc = if let Some(path) = args.get("file") {
+                Scenario::load(path)?
+            } else if let Some(name) = args.get("preset") {
+                Scenario::preset(name).ok_or_else(|| {
+                    heye::err!(
+                        "unknown preset `{name}` (valid: {})",
+                        Scenario::presets()
+                            .iter()
+                            .map(|(n, _)| *n)
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    )
+                })?
+            } else {
+                heye::bail!("pass --file FILE or --preset NAME (see `heye scenario list`)");
+            };
+            if let Some(s) = args.get("sched") {
+                sc.cfg.sched = s.to_string();
+            }
+            if args.has("seed") {
+                sc.cfg.sim.seed = args.get_u64("seed", sc.cfg.sim.seed);
+            }
+            if args.has("horizon") {
+                sc.cfg.sim.horizon_s = args.get_f64("horizon", sc.cfg.sim.horizon_s);
+            }
+            if args.has("parallelism") {
+                sc.cfg.sim.parallelism = args.get_usize("parallelism", sc.cfg.sim.parallelism);
+            }
+            let report = sc.run()?;
+            report.print(&sc.name);
+            if let Some(path) = args.get("report-json") {
+                std::fs::write(path, report.to_json().to_string())?;
+                println!("\nwrote report JSON to {path}");
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
@@ -200,6 +265,7 @@ fn main() -> Result<()> {
         "artifacts" => cmd_artifacts(&args),
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),
+        "scenario" => cmd_scenario(&args),
         _ => {
             println!("{USAGE}");
             Ok(())

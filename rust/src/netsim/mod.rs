@@ -203,6 +203,57 @@ mod tests {
         assert_eq!(net.effective_gbps(&d.graph, &r), solo);
     }
 
+    /// Two *distinct* flows sharing a bottleneck: each sees half the
+    /// effective bandwidth on the shared links, and restoring a bandwidth
+    /// override returns transfer times to the static value exactly.
+    #[test]
+    fn shared_bottleneck_fair_share_and_override_restore() {
+        let d = decs();
+        let mut net = Network::new();
+        let r1 = net
+            .route(&d.graph, d.edge_devices[0], d.servers[0])
+            .unwrap();
+        let r2 = net
+            .route(&d.graph, d.edge_devices[1], d.servers[0])
+            .unwrap();
+        // the two flows enter through different uplinks but share the
+        // server-side links (router->wan_gw, wan_gw->server0)
+        let shared: Vec<EdgeId> = r1
+            .links
+            .iter()
+            .copied()
+            .filter(|l| r2.links.contains(l))
+            .collect();
+        assert!(!shared.is_empty(), "routes must share the server-side path");
+        assert!(shared.len() < r1.links.len(), "uplinks must be private");
+        let solo_bw = net.effective_gbps(&d.graph, &r1);
+        let solo_t = net.transfer_time_s(&d.graph, &r1, 5e6);
+        net.open_flow(&r2);
+        // the 10 Gb/s wan_gw->server hop is the bottleneck and is shared:
+        // flow 1's effective bandwidth halves exactly
+        let shared_bw = net.effective_gbps(&d.graph, &r1);
+        assert!(
+            (shared_bw - solo_bw / 2.0).abs() < 1e-9,
+            "shared {shared_bw} vs solo {solo_bw}"
+        );
+        let shared_t = net.transfer_time_s(&d.graph, &r1, 5e6);
+        assert!(shared_t > solo_t);
+        // and symmetrically for the other flow (counting itself once)
+        net.close_flow(&r2);
+        net.open_flow(&r1);
+        let bw2 = net.effective_gbps(&d.graph, &r2);
+        assert!((bw2 - solo_bw / 2.0).abs() < 1e-9);
+        net.close_flow(&r1);
+
+        // dynamic override: throttle flow 1's uplink, then restore — the
+        // transfer time must return to the static value exactly
+        let uplink = d.uplink_of(d.edge_devices[0]).unwrap();
+        net.set_bandwidth(uplink, Some(0.5));
+        assert!(net.transfer_time_s(&d.graph, &r1, 5e6) > solo_t);
+        net.set_bandwidth(uplink, None);
+        assert!((net.transfer_time_s(&d.graph, &r1, 5e6) - solo_t).abs() < 1e-12);
+    }
+
     #[test]
     fn edge_to_edge_routes_via_router_only() {
         let d = decs();

@@ -167,6 +167,25 @@ impl Hierarchy {
         self.add_device(g, dev, cluster)
     }
 
+    /// Detach a departed device's ORC (scenario churn): the parent drops
+    /// the child, lookups stop resolving it, and the escalation order no
+    /// longer visits it. The arena slot stays — ORC ids are stable — and
+    /// PU leaves go with the device ORC. Returns `false` if the device had
+    /// no ORC (already left or never registered).
+    pub fn leave_device(&mut self, dev: NodeId) -> bool {
+        let orc = match self.by_device.remove(&dev) {
+            Some(o) => o,
+            None => return false,
+        };
+        if let Some(parent) = self.orcs[orc.0 as usize].parent {
+            self.orcs[parent.0 as usize]
+                .children
+                .retain(|c| !matches!(c, OrcChild::Orc(o) if *o == orc));
+        }
+        self.devices.retain(|&d| d != dev);
+        true
+    }
+
     /// All devices ordered by ORC distance from `origin` (ascending), the
     /// escalation order MapTask broadcasts through.
     pub fn devices_by_distance(&self, origin: NodeId) -> Vec<NodeId> {
@@ -329,6 +348,25 @@ mod tests {
         assert!(
             (h.orc_distance_s(decs.servers[0], decs.edge_devices[0]) - cross).abs() < 1e-15
         );
+    }
+
+    #[test]
+    fn leave_device_detaches_from_the_tree() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let mut h = Hierarchy::from_decs(&decs);
+        let gone = decs.edge_devices[2];
+        assert!(h.leave_device(gone));
+        assert!(!h.leave_device(gone), "second leave is a no-op");
+        assert_eq!(h.device_count(), 7);
+        assert!(h.orc_of_device(gone).is_none());
+        // siblings no longer see the departed device
+        let sib = h.siblings_of(decs.edge_devices[0]);
+        assert!(!sib.contains(&gone));
+        assert_eq!(sib.len(), 3);
+        // escalation order skips it too
+        let order = h.devices_by_distance(decs.edge_devices[0]);
+        assert!(!order.contains(&gone));
+        assert_eq!(order.len(), 6);
     }
 
     #[test]

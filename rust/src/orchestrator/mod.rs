@@ -414,6 +414,27 @@ impl Orchestrator {
     pub fn reset_sticky(&mut self) {
         self.sticky.clear();
     }
+
+    /// Register a device that joined at runtime and invalidate the
+    /// memoized escalation orders (the cached lists must offer the
+    /// newcomer).
+    pub fn on_device_join(&mut self, g: &crate::hwgraph::HwGraph, dev: NodeId) {
+        self.hierarchy.join_device(g, dev);
+        self.order_cache.clear();
+        self.cache_devices = self.hierarchy.device_count();
+    }
+
+    /// Detach a departed device: drop its ORC from the hierarchy, purge
+    /// sticky placements involving it, and invalidate the escalation-order
+    /// cache — a join after a leave restores the old device *count*, so
+    /// the count heuristic alone would serve stale orders.
+    pub fn on_device_leave(&mut self, _g: &crate::hwgraph::HwGraph, dev: NodeId) {
+        self.hierarchy.leave_device(dev);
+        self.sticky
+            .retain(|&(origin, _), &mut target| origin != dev && target != dev);
+        self.order_cache.clear();
+        self.cache_devices = self.hierarchy.device_count();
+    }
 }
 
 #[cfg(test)]

@@ -37,7 +37,11 @@ use std::rc::Rc;
 
 use crate::hwgraph::presets::{Decs, DecsSpec, EDGE_MODELS, SERVER_MODELS};
 use crate::hwgraph::NodeId;
-use crate::sim::{JoinEvent, NetEvent, RunMetrics, SimConfig, Simulation, Workload};
+use crate::scenario::ScenarioReport;
+use crate::sim::{
+    ArrivalModel, JoinEvent, LeaveEvent, NetEvent, RunMetrics, ScriptedEvent, SimConfig,
+    Simulation, Workload,
+};
 use crate::telemetry;
 use crate::util::json::Json;
 
@@ -244,6 +248,7 @@ impl Platform {
             cfg: SimConfig::default().parallelism(self.parallelism),
             net_events: Vec::new(),
             join_events: Vec::new(),
+            leave_events: Vec::new(),
         }
     }
 }
@@ -264,6 +269,18 @@ pub enum WorkloadSpec {
     Mining { sensors: usize, hz: f64 },
     /// one-shot burst of `n` windows on the `origin`-th edge (Fig. 10a)
     MiningBurst { origin: usize, n: usize },
+    /// open-loop VR: per-edge sources at their models' target FPS, the
+    /// release process modulated by `arrival`, base rate scaled by the
+    /// client-population multiplier (scenario load sweeps)
+    VrOpen { arrival: ArrivalModel, clients: f64 },
+    /// open-loop mining: `sensors` sensors at `hz * clients` windows/s,
+    /// released through `arrival`
+    MiningOpen {
+        sensors: usize,
+        hz: f64,
+        arrival: ArrivalModel,
+        clients: f64,
+    },
     /// arbitrary sources built against the session's DECS
     Custom(Rc<dyn Fn(&Decs) -> Workload>),
 }
@@ -302,8 +319,38 @@ impl WorkloadSpec {
                 })?;
                 Ok(Workload::mining_burst(dev, *n))
             }
+            WorkloadSpec::VrOpen { arrival, clients } => {
+                check_clients(*clients)?;
+                arrival.validate().map_err(PlatformError::InvalidSession)?;
+                Ok(Workload::vr_open(decs, *arrival, *clients))
+            }
+            WorkloadSpec::MiningOpen {
+                sensors,
+                hz,
+                arrival,
+                clients,
+            } => {
+                if hz.is_nan() || *hz <= 0.0 {
+                    return Err(PlatformError::InvalidSession(format!(
+                        "mining sensor rate must be positive, got {hz} Hz"
+                    )));
+                }
+                check_clients(*clients)?;
+                arrival.validate().map_err(PlatformError::InvalidSession)?;
+                Ok(Workload::mining_open(decs, *sensors, *hz, *arrival, *clients))
+            }
             WorkloadSpec::Custom(f) => Ok(f(decs)),
         }
+    }
+}
+
+fn check_clients(clients: f64) -> Result<(), PlatformError> {
+    if clients.is_finite() && clients > 0.0 {
+        Ok(())
+    } else {
+        Err(PlatformError::InvalidSession(format!(
+            "client-population multiplier must be positive and finite, got {clients}"
+        )))
     }
 }
 
@@ -318,6 +365,18 @@ impl fmt::Debug for WorkloadSpec {
             WorkloadSpec::MiningBurst { origin, n } => {
                 write!(f, "MiningBurst {{ origin: {origin}, n: {n} }}")
             }
+            WorkloadSpec::VrOpen { arrival, clients } => {
+                write!(f, "VrOpen {{ arrival: {arrival:?}, clients: {clients} }}")
+            }
+            WorkloadSpec::MiningOpen {
+                sensors,
+                hz,
+                arrival,
+                clients,
+            } => write!(
+                f,
+                "MiningOpen {{ sensors: {sensors}, hz: {hz}, arrival: {arrival:?}, clients: {clients} }}"
+            ),
             WorkloadSpec::Custom(_) => write!(f, "Custom(..)"),
         }
     }
@@ -350,6 +409,7 @@ pub struct Session<'p> {
     cfg: SimConfig,
     net_events: Vec<NetEventSpec>,
     join_events: Vec<JoinEvent>,
+    leave_events: Vec<LeaveEvent>,
 }
 
 impl Session<'_> {
@@ -425,6 +485,21 @@ impl Session<'_> {
         self
     }
 
+    /// The `edge`-th edge device leaves at `t` — gracefully (`failure =
+    /// false`: running tasks drain, nothing new lands) or by failure
+    /// (`failure = true`: in-flight work on it is killed and re-mapped
+    /// through the scheduler, or dropped if its input data died with the
+    /// device). Indices follow `edge_devices` in join order, so devices
+    /// joined before `t` are addressable.
+    pub fn leave(mut self, t: f64, edge: usize, failure: bool) -> Self {
+        self.leave_events.push(LeaveEvent {
+            t,
+            edge_index: edge,
+            failure,
+        });
+        self
+    }
+
     /// Build the stack, drive the run, and report.
     pub fn run(&self) -> Result<RunReport, PlatformError> {
         if self.cfg.horizon_s.is_nan() || self.cfg.horizon_s <= 0.0 {
@@ -454,6 +529,12 @@ impl Session<'_> {
         // each run gets its own copy of the deterministically assembled
         // system (joins mutate it), without re-running graph assembly
         let decs = self.platform.decs().clone();
+        for (i, l) in self.leave_events.iter().enumerate() {
+            l.check(cfg.horizon_s, |t| {
+                decs.edge_devices.len() + self.join_events.iter().filter(|j| j.t <= t).count()
+            })
+            .map_err(|m| PlatformError::InvalidSession(format!("leave_events[{i}]: {m}")))?;
+        }
         let workload = self.workload.build(&decs)?;
         let net_events = self
             .net_events
@@ -480,13 +561,11 @@ impl Session<'_> {
             .collect::<Result<Vec<_>, PlatformError>>()?;
         let mut sched = entry.build(&decs);
         let mut sim = Simulation::new(decs);
-        let metrics = sim.run(
-            sched.as_mut(),
-            workload,
-            net_events,
-            self.join_events.clone(),
-            &cfg,
-        );
+        let mut events: Vec<ScriptedEvent> =
+            net_events.into_iter().map(ScriptedEvent::Net).collect();
+        events.extend(self.join_events.iter().cloned().map(ScriptedEvent::Join));
+        events.extend(self.leave_events.iter().copied().map(ScriptedEvent::Leave));
+        let metrics = sim.run_scripted(sched.as_mut(), workload, events, &cfg);
         let scheduler_label = sched.name();
         let Simulation { decs, .. } = sim;
         Ok(RunReport {
@@ -496,6 +575,14 @@ impl Session<'_> {
             decs,
             metrics,
         })
+    }
+
+    /// Run and distill the scenario view of the result: latency
+    /// percentiles (p50/p95/p99), QoS-miss rate, the goodput timeline, and
+    /// per-disruption costs — the [`ScenarioReport`] every churn/arrival
+    /// experiment consumes.
+    pub fn run_scenario(&self) -> Result<ScenarioReport, PlatformError> {
+        Ok(ScenarioReport::from_run(self.run()?))
     }
 }
 

@@ -1,0 +1,688 @@
+//! The declarative scenario engine: JSON-loadable descriptions of *dynamic*
+//! edge-cloud serving runs — open-loop arrivals, fleet churn, network
+//! partitions — compiled onto the [`crate::platform`] facade and distilled
+//! into a [`ScenarioReport`].
+//!
+//! A [`Scenario`] extends the [`ExpConfig`] schema (same topology / app /
+//! engine keys) with three additions:
+//!
+//! * `arrival` + `clients` — an open-loop [`ArrivalModel`] (Poisson,
+//!   bursty, diurnal) and a client-population multiplier replacing the
+//!   closed-loop fixed-period sources,
+//! * `events` — one scripted timeline mixing `throttle` / `restore`
+//!   (link bandwidth), `join`, `leave` / `fail` (device churn), and
+//!   `reset` (scheduler session-state drop),
+//! * `name` / `description` — so a run is a reviewable artifact.
+//!
+//! ```text
+//! {
+//!   "name": "churn",
+//!   "app": "vr", "sched": "heye",
+//!   "edges": { "orin_agx": 1, "xavier_nx": 2 },
+//!   "servers": { "server1": 1 },
+//!   "horizon_s": 2.0, "seed": 42,
+//!   "arrival": { "kind": "poisson", "rate_mult": 1.0 },
+//!   "clients": 1.0,
+//!   "events": [
+//!     { "kind": "throttle", "t": 0.3, "edge_index": 0, "gbps": 1.0 },
+//!     { "kind": "restore",  "t": 0.8, "edge_index": 0 },
+//!     { "kind": "fail",     "t": 0.6, "edge_index": 1 },
+//!     { "kind": "join",     "t": 1.0, "model": "xavier_nx" },
+//!     { "kind": "leave",    "t": 1.4, "edge_index": 0 },
+//!     { "kind": "reset",    "t": 1.5 }
+//!   ]
+//! }
+//! ```
+//!
+//! Event lists are validated on load — negative times, events past the
+//! horizon, and out-of-range `edge_index` are rejected with an error
+//! naming the offending entry. Five presets ship built in (`heye scenario
+//! list`): [`Scenario::preset`] resolves `steady`, `flashcrowd`,
+//! `diurnal`, `churn`, and `partition`.
+
+use crate::config::ExpConfig;
+use crate::hwgraph::presets::EDGE_MODELS;
+use crate::platform::{Platform, RunReport, Session, WorkloadSpec};
+use crate::sim::{ArrivalModel, JoinEvent, LeaveEvent};
+use crate::telemetry;
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::stats::{Samples, Summary};
+use crate::{bail, err};
+
+// ---------------------------------------------------------------------------
+// the scenario model
+// ---------------------------------------------------------------------------
+
+/// A declarative scenario: topology + app + engine knobs (shared with
+/// [`ExpConfig`]) plus open-loop arrivals and the churn event timeline.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    /// topology, app, scheduler, engine config, and the net/join lists
+    pub cfg: ExpConfig,
+    /// release process of every source (relative to its base rate)
+    pub arrival: ArrivalModel,
+    /// client-population multiplier scaling every source's base rate
+    pub clients: f64,
+    /// device leave/failure timeline
+    pub leave_events: Vec<LeaveEvent>,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: "unnamed".into(),
+            description: String::new(),
+            cfg: ExpConfig::default(),
+            arrival: ArrivalModel::Periodic,
+            clients: 1.0,
+            leave_events: Vec::new(),
+        }
+    }
+}
+
+fn req_edge_index(e: &Json, i: usize) -> Result<usize> {
+    Ok(e.get("edge_index")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| err!("events[{i}]: `edge_index` required"))? as usize)
+}
+
+/// Parse an `arrival` object: `{"kind": "poisson", "rate_mult": 1.0}` etc.
+fn arrival_from_json(j: &Json) -> Result<ArrivalModel> {
+    let kind = j
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| err!("arrival: `kind` required (periodic|poisson|bursty|diurnal)"))?;
+    let f = |key: &str, default: f64| j.get(key).and_then(|v| v.as_f64()).unwrap_or(default);
+    let model = match kind {
+        "periodic" => ArrivalModel::Periodic,
+        "poisson" => ArrivalModel::Poisson {
+            rate_mult: f("rate_mult", 1.0),
+        },
+        "bursty" => ArrivalModel::Bursty {
+            on_mult: f("on_mult", 3.0),
+            off_mult: f("off_mult", 0.5),
+            on_s: f("on_s", 0.25),
+            off_s: f("off_s", 0.75),
+        },
+        "diurnal" => ArrivalModel::Diurnal {
+            low_mult: f("low_mult", 0.4),
+            peak_mult: f("peak_mult", 1.6),
+            day_s: f("day_s", 2.0),
+        },
+        other => bail!("arrival: unknown kind `{other}` (periodic|poisson|bursty|diurnal)"),
+    };
+    model.validate().map_err(|m| err!("arrival: {m}"))?;
+    Ok(model)
+}
+
+impl Scenario {
+    /// Parse a scenario document. Shares the [`ExpConfig`] schema for
+    /// topology / app / engine keys and validates every event list,
+    /// naming the offending entry on rejection.
+    pub fn parse(text: &str) -> Result<Scenario> {
+        let j = Json::parse(text).map_err(|e| err!("scenario parse: {e}"))?;
+        let mut cfg = ExpConfig::from_json(&j)?;
+        let mut sc = Scenario::default();
+        if let Some(v) = j.get("name").and_then(|v| v.as_str()) {
+            sc.name = v.to_string();
+        }
+        if let Some(v) = j.get("description").and_then(|v| v.as_str()) {
+            sc.description = v.to_string();
+        }
+        if let Some(a) = j.get("arrival") {
+            sc.arrival = arrival_from_json(a)?;
+        }
+        if let Some(v) = j.get("clients").and_then(|v| v.as_f64()) {
+            sc.clients = v;
+        }
+        if let Some(arr) = j.get("events").and_then(|v| v.as_arr()) {
+            for (i, e) in arr.iter().enumerate() {
+                let kind = e
+                    .get("kind")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| err!("events[{i}]: `kind` required"))?;
+                let t = e.get("t").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                match kind {
+                    "throttle" => {
+                        let idx = req_edge_index(e, i)?;
+                        let gbps = e
+                            .get("gbps")
+                            .and_then(|v| v.as_f64())
+                            .ok_or_else(|| err!("events[{i}]: throttle needs `gbps`"))?;
+                        cfg.net_events.push((t, idx, Some(gbps)));
+                    }
+                    "restore" => {
+                        let idx = req_edge_index(e, i)?;
+                        cfg.net_events.push((t, idx, None));
+                    }
+                    "join" => {
+                        let model = e
+                            .get("model")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| err!("events[{i}]: join needs `model`"))?;
+                        if !EDGE_MODELS.contains(&model) {
+                            bail!(
+                                "events[{i}]: join model `{model}` unknown \
+                                 (known: {EDGE_MODELS:?})"
+                            );
+                        }
+                        let vr = e
+                            .get("vr_source")
+                            .and_then(|v| v.as_bool())
+                            .unwrap_or(cfg.app == "vr");
+                        cfg.join_events.push((t, model.to_string(), vr));
+                    }
+                    "leave" | "fail" => {
+                        let idx = req_edge_index(e, i)?;
+                        let failure = e
+                            .get("failure")
+                            .and_then(|v| v.as_bool())
+                            .unwrap_or(kind == "fail");
+                        sc.leave_events.push(LeaveEvent {
+                            t,
+                            edge_index: idx,
+                            failure,
+                        });
+                    }
+                    "reset" => cfg.sim.reset_times.push(t),
+                    other => bail!(
+                        "events[{i}]: unknown kind `{other}` \
+                         (throttle|restore|join|leave|fail|reset)"
+                    ),
+                }
+            }
+        }
+        sc.cfg = cfg;
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    pub fn load(path: &str) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err!("reading scenario `{path}`: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Re-check the whole model: the shared [`ExpConfig`] event lists, the
+    /// arrival parameters, and the leave timeline (times inside the
+    /// horizon, `edge_index` in range counting prior joins).
+    pub fn validate(&self) -> Result<()> {
+        self.cfg.validate()?;
+        self.arrival.validate().map_err(|m| err!("arrival: {m}"))?;
+        if !self.clients.is_finite() || self.clients <= 0.0 {
+            bail!("clients multiplier must be positive and finite, got {}", self.clients);
+        }
+        let base: usize = self.cfg.decs_spec.edges.iter().map(|(_, c)| c).sum();
+        let h = self.cfg.sim.horizon_s;
+        for (i, l) in self.leave_events.iter().enumerate() {
+            l.check(h, |t| {
+                base + self
+                    .cfg
+                    .join_events
+                    .iter()
+                    .filter(|(jt, _, _)| *jt <= t)
+                    .count()
+            })
+            .map_err(|m| err!("leave events[{i}]: {m}"))?;
+        }
+        Ok(())
+    }
+
+    /// Built-in presets: `(name, one-line description)`.
+    pub fn presets() -> Vec<(&'static str, &'static str)> {
+        vec![
+            ("steady", "closed-loop VR on the paper testbed, no dynamics (baseline)"),
+            (
+                "flashcrowd",
+                "on/off bursty arrivals: 2.5x rate bursts every second (open-loop)",
+            ),
+            (
+                "diurnal",
+                "sinusoidal rate curve 0.4x..1.6x over the horizon (compressed day)",
+            ),
+            (
+                "churn",
+                "Poisson arrivals with a device failure, a join, and a graceful leave",
+            ),
+            (
+                "partition",
+                "two edge uplinks throttled to near-zero mid-run, then healed",
+            ),
+        ]
+    }
+
+    /// Resolve a built-in preset by name.
+    pub fn preset(name: &str) -> Option<Scenario> {
+        let mut sc = Scenario {
+            name: name.to_string(),
+            ..Scenario::default()
+        };
+        sc.cfg.sim.horizon_s = 2.0;
+        match name {
+            "steady" => {}
+            "flashcrowd" => {
+                sc.arrival = ArrivalModel::Bursty {
+                    on_mult: 2.5,
+                    off_mult: 0.6,
+                    on_s: 0.25,
+                    off_s: 0.75,
+                };
+            }
+            "diurnal" => {
+                sc.arrival = ArrivalModel::Diurnal {
+                    low_mult: 0.4,
+                    peak_mult: 1.6,
+                    day_s: 2.0,
+                };
+            }
+            "churn" => {
+                sc.arrival = ArrivalModel::Poisson { rate_mult: 1.0 };
+                sc.leave_events.push(LeaveEvent {
+                    t: 0.6,
+                    edge_index: 1,
+                    failure: true,
+                });
+                sc.cfg
+                    .join_events
+                    .push((1.0, "xavier_nx".to_string(), true));
+                sc.leave_events.push(LeaveEvent {
+                    t: 1.4,
+                    edge_index: 0,
+                    failure: false,
+                });
+            }
+            "partition" => {
+                sc.cfg.net_events.push((0.5, 0, Some(0.05)));
+                sc.cfg.net_events.push((0.5, 1, Some(0.05)));
+                sc.cfg.net_events.push((1.2, 0, None));
+                sc.cfg.net_events.push((1.2, 1, None));
+            }
+            _ => return None,
+        }
+        sc.description = Self::presets()
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, d)| d.to_string())
+            .unwrap_or_default();
+        Some(sc)
+    }
+
+    /// The workload this scenario drives: closed-loop when the arrival is
+    /// periodic at the natural rate, open-loop otherwise.
+    pub fn workload_spec(&self) -> WorkloadSpec {
+        let natural = self.arrival == ArrivalModel::Periodic && self.clients == 1.0;
+        match self.cfg.app.as_str() {
+            "mining" => {
+                if natural {
+                    WorkloadSpec::Mining {
+                        sensors: self.cfg.sensors,
+                        hz: 10.0,
+                    }
+                } else {
+                    WorkloadSpec::MiningOpen {
+                        sensors: self.cfg.sensors,
+                        hz: 10.0,
+                        arrival: self.arrival,
+                        clients: self.clients,
+                    }
+                }
+            }
+            _ => {
+                if natural {
+                    WorkloadSpec::Vr
+                } else {
+                    WorkloadSpec::VrOpen {
+                        arrival: self.arrival,
+                        clients: self.clients,
+                    }
+                }
+            }
+        }
+    }
+
+    /// The platform this scenario's topology assembles into.
+    pub fn platform(&self) -> Result<Platform> {
+        Ok(self.cfg.platform()?)
+    }
+
+    /// Configure a facade [`Session`] for this scenario on `platform`.
+    pub fn session<'p>(&self, platform: &'p Platform) -> Session<'p> {
+        let mut session = platform
+            .session(self.workload_spec())
+            .scheduler(&self.cfg.sched)
+            .config(self.cfg.sim.clone());
+        for &(t, edge, gbps) in &self.cfg.net_events {
+            session = session.throttle_uplink(edge, t, gbps);
+        }
+        for (t, model, vr_source) in &self.cfg.join_events {
+            session = session.join(JoinEvent {
+                t: *t,
+                model: model.clone(),
+                uplink_gbps: self.cfg.decs_spec.edge_uplink_gbps,
+                vr_source: *vr_source,
+            });
+        }
+        for l in &self.leave_events {
+            session = session.leave(l.t, l.edge_index, l.failure);
+        }
+        session
+    }
+
+    /// Validate, assemble, run, and distill — the one-call entry point
+    /// `heye scenario run` uses.
+    pub fn run(&self) -> Result<ScenarioReport> {
+        self.validate()?;
+        let platform = self.platform()?;
+        Ok(self.session(&platform).run_scenario()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the scenario report
+// ---------------------------------------------------------------------------
+
+/// One bucket of the goodput timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GoodputPoint {
+    /// bucket start (seconds)
+    pub t: f64,
+    /// frames completed in the bucket
+    pub frames: u64,
+    /// frames completed *within their QoS budget* (the goodput)
+    pub good: u64,
+}
+
+/// Cost of one device leave/failure: what it killed, and how the serving
+/// quality moved across the event.
+#[derive(Debug, Clone)]
+pub struct Disruption {
+    pub t: f64,
+    pub device: String,
+    pub failure: bool,
+    pub frames_abandoned: u64,
+    pub tasks_remapped: u64,
+    pub tasks_dropped: u64,
+    /// QoS-miss rate over completed frames in the window before the event
+    pub qos_miss_before: f64,
+    /// ... and in the window after it (the recovery cost)
+    pub qos_miss_after: f64,
+}
+
+/// A [`RunReport`] distilled for dynamic scenarios: latency percentiles,
+/// QoS-miss rate, the goodput timeline, and per-disruption costs.
+pub struct ScenarioReport {
+    /// the full underlying run (metrics, placements, post-run system)
+    pub run: RunReport,
+    /// end-to-end latency summary over completed frames (p50/p95/p99)
+    pub latency: Summary,
+    /// misses over completed + dropped frames (censored frames excluded)
+    pub qos_miss_rate: f64,
+    /// goodput bucket width (horizon / 20)
+    pub goodput_bucket_s: f64,
+    pub goodput: Vec<GoodputPoint>,
+    pub disruptions: Vec<Disruption>,
+}
+
+impl ScenarioReport {
+    /// Distill a finished run.
+    pub fn from_run(run: RunReport) -> ScenarioReport {
+        let horizon = run.config.horizon_s;
+        let bucket = (horizon / 20.0).max(1e-3);
+        let mut samples = Samples::new();
+        for f in &run.metrics.frames {
+            samples.push(f.latency_s);
+        }
+        let latency = samples.summary();
+        let goodput = run
+            .metrics
+            .goodput_timeline(bucket, horizon)
+            .into_iter()
+            .map(|(t, frames, good)| GoodputPoint { t, frames, good })
+            .collect();
+        // per-event disruption cost: QoS-miss over completed frames in a
+        // window on each side of the event
+        let w = (horizon / 8.0).max(bucket);
+        let miss_in = |lo: f64, hi: f64| -> f64 {
+            let mut total = 0u64;
+            let mut miss = 0u64;
+            for f in &run.metrics.frames {
+                if f.finish_t >= lo && f.finish_t < hi {
+                    total += 1;
+                    if !f.qos_ok() {
+                        miss += 1;
+                    }
+                }
+            }
+            if total == 0 {
+                0.0
+            } else {
+                miss as f64 / total as f64
+            }
+        };
+        let disruptions = run
+            .metrics
+            .leaves
+            .iter()
+            .map(|l| Disruption {
+                t: l.t,
+                device: run.decs.graph.node(l.device).name.clone(),
+                failure: l.failure,
+                frames_abandoned: l.frames_abandoned,
+                tasks_remapped: l.tasks_remapped,
+                tasks_dropped: l.tasks_dropped,
+                qos_miss_before: miss_in(l.t - w, l.t),
+                qos_miss_after: miss_in(l.t, l.t + w),
+            })
+            .collect();
+        let qos_miss_rate = run.metrics.qos_failure_rate();
+        ScenarioReport {
+            run,
+            latency,
+            qos_miss_rate,
+            goodput_bucket_s: bucket,
+            goodput,
+            disruptions,
+        }
+    }
+
+    /// Print the scenario view: summary line, percentiles, goodput
+    /// timeline, disruptions.
+    pub fn print(&self, title: &str) {
+        println!("\n== scenario `{title}` ({}) ==", self.run.scheduler);
+        println!(
+            "frames={} dropped={} abandoned={} qos_miss={:.1}%",
+            self.run.frames(),
+            self.run.metrics.dropped,
+            self.run.metrics.frames_abandoned(),
+            self.qos_miss_rate * 100.0
+        );
+        println!(
+            "latency  p50={:.2}ms  p95={:.2}ms  p99={:.2}ms  mean={:.2}ms",
+            self.latency.p50 * 1e3,
+            self.latency.p95 * 1e3,
+            self.latency.p99 * 1e3,
+            self.latency.mean * 1e3
+        );
+        println!("\ngoodput timeline ({}s buckets):", self.goodput_bucket_s);
+        println!("{:>8} {:>8} {:>8}", "t", "frames", "good");
+        for p in &self.goodput {
+            println!("{:>8.2} {:>8} {:>8}", p.t, p.frames, p.good);
+        }
+        if !self.disruptions.is_empty() {
+            println!("\ndisruptions:");
+            for d in &self.disruptions {
+                println!(
+                    "  t={:.2} {} {:<9} abandoned={} remapped={} dropped={} \
+                     qos_miss {:.0}% -> {:.0}%",
+                    d.t,
+                    d.device,
+                    if d.failure { "FAILURE" } else { "graceful" },
+                    d.frames_abandoned,
+                    d.tasks_remapped,
+                    d.tasks_dropped,
+                    d.qos_miss_before * 100.0,
+                    d.qos_miss_after * 100.0
+                );
+            }
+        }
+    }
+
+    /// Serialize for external plotting (`--report-json`).
+    pub fn to_json(&self) -> Json {
+        let goodput: Vec<Json> = self
+            .goodput
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("t", Json::Num(p.t)),
+                    ("frames", Json::Num(p.frames as f64)),
+                    ("good", Json::Num(p.good as f64)),
+                ])
+            })
+            .collect();
+        let disruptions: Vec<Json> = self
+            .disruptions
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("t", Json::Num(d.t)),
+                    ("device", Json::Str(d.device.clone())),
+                    ("failure", Json::Bool(d.failure)),
+                    ("frames_abandoned", Json::Num(d.frames_abandoned as f64)),
+                    ("tasks_remapped", Json::Num(d.tasks_remapped as f64)),
+                    ("tasks_dropped", Json::Num(d.tasks_dropped as f64)),
+                    ("qos_miss_before", Json::Num(d.qos_miss_before)),
+                    ("qos_miss_after", Json::Num(d.qos_miss_after)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("scheduler", Json::Str(self.run.scheduler.clone())),
+            ("latency", telemetry::summary_json(&self.latency)),
+            ("qos_miss_rate", Json::Num(self.qos_miss_rate)),
+            (
+                "frames_abandoned",
+                Json::Num(self.run.metrics.frames_abandoned() as f64),
+            ),
+            ("goodput_bucket_s", Json::Num(self.goodput_bucket_s)),
+            ("goodput", Json::Arr(goodput)),
+            ("disruptions", Json::Arr(disruptions)),
+            ("run", self.run.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_all_resolve_and_validate() {
+        for (name, _) in Scenario::presets() {
+            let sc = Scenario::preset(name).unwrap_or_else(|| panic!("preset {name}"));
+            sc.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(Scenario::preset("nope").is_none());
+    }
+
+    #[test]
+    fn parse_merges_events_into_the_config() {
+        let sc = Scenario::parse(
+            r#"{
+                "name": "t", "app": "vr", "horizon_s": 1.0,
+                "arrival": { "kind": "bursty", "on_mult": 2.0, "off_mult": 0.5,
+                             "on_s": 0.2, "off_s": 0.3 },
+                "clients": 2.0,
+                "events": [
+                    { "kind": "throttle", "t": 0.2, "edge_index": 0, "gbps": 1.0 },
+                    { "kind": "restore", "t": 0.5, "edge_index": 0 },
+                    { "kind": "fail", "t": 0.4, "edge_index": 1 },
+                    { "kind": "join", "t": 0.6, "model": "orin_nano" },
+                    { "kind": "reset", "t": 0.7 }
+                ]
+            }"#,
+        )
+        .expect("valid scenario");
+        assert_eq!(sc.name, "t");
+        assert_eq!(sc.clients, 2.0);
+        assert_eq!(sc.cfg.net_events.len(), 2);
+        assert_eq!(sc.cfg.join_events.len(), 1);
+        assert_eq!(sc.leave_events.len(), 1);
+        assert!(sc.leave_events[0].failure);
+        assert_eq!(sc.cfg.sim.reset_times, vec![0.7]);
+        assert!(matches!(
+            sc.workload_spec(),
+            WorkloadSpec::VrOpen { .. }
+        ));
+    }
+
+    #[test]
+    fn rejects_events_naming_the_offending_entry() {
+        // past the horizon
+        let e = Scenario::parse(
+            r#"{ "horizon_s": 1.0,
+                 "events": [ { "kind": "fail", "t": 5.0, "edge_index": 0 } ] }"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("events[0]"), "{e}");
+        // negative time
+        let e = Scenario::parse(
+            r#"{ "events": [ { "kind": "leave", "t": -1.0, "edge_index": 0 } ] }"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("events[0]"), "{e}");
+        // out-of-range edge index (default testbed has 5 edges)
+        let e = Scenario::parse(
+            r#"{ "events": [ { "kind": "fail", "t": 0.5, "edge_index": 9 } ] }"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("edge_index 9"), "{e}");
+        // unknown event kind
+        let e = Scenario::parse(r#"{ "events": [ { "kind": "meteor", "t": 0.1 } ] }"#)
+            .unwrap_err();
+        assert!(e.to_string().contains("meteor"), "{e}");
+        // bad arrival
+        let e = Scenario::parse(r#"{ "arrival": { "kind": "poisson", "rate_mult": -1 } }"#)
+            .unwrap_err();
+        assert!(e.to_string().contains("rate_mult"), "{e}");
+    }
+
+    #[test]
+    fn leave_index_accounts_for_prior_joins() {
+        // edge 5 only exists after the t=0.3 join: leaving it at 0.5 is
+        // valid, leaving it at 0.2 is not
+        let ok = Scenario::parse(
+            r#"{ "horizon_s": 1.0,
+                 "events": [ { "kind": "join", "t": 0.3, "model": "orin_nano" },
+                             { "kind": "fail", "t": 0.5, "edge_index": 5 } ] }"#,
+        );
+        assert!(ok.is_ok(), "{:?}", ok.err().map(|e| e.to_string()));
+        let bad = Scenario::parse(
+            r#"{ "horizon_s": 1.0,
+                 "events": [ { "kind": "join", "t": 0.3, "model": "orin_nano" },
+                             { "kind": "fail", "t": 0.2, "edge_index": 5 } ] }"#,
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn steady_preset_runs_end_to_end() {
+        let mut sc = Scenario::preset("steady").unwrap();
+        sc.cfg.sim.horizon_s = 0.3; // keep the unit test quick
+        let report = sc.run().expect("steady run");
+        assert!(report.run.frames() > 0);
+        assert!(report.latency.p50 > 0.0);
+        assert!(report.latency.p95 >= report.latency.p50);
+        assert!(report.latency.p99 >= report.latency.p95);
+        assert!(!report.goodput.is_empty());
+        let completed: u64 = report.goodput.iter().map(|p| p.frames).sum();
+        assert_eq!(completed as usize, report.run.frames());
+        // JSON roundtrips through the parser
+        let back = Json::parse(&report.to_json().to_string()).expect("reparse");
+        assert!(back.get("latency").is_some());
+        assert!(back.get("goodput").and_then(|g| g.as_arr()).is_some());
+    }
+}

@@ -1,0 +1,286 @@
+//! Open-loop arrival models: how a [`crate::sim::FrameSource`] spaces its
+//! releases over virtual time.
+//!
+//! The seed engine only knew fixed periods (closed-loop frame pacing).
+//! Real user traffic is open-loop and modulated — a flash crowd is an
+//! on/off burst process, a day of traffic is a diurnal rate curve — so a
+//! source now carries an [`ArrivalModel`] that generalizes its release
+//! process. Every model is expressed *relative to the source's base rate*
+//! (`1 / period_s`): a multiplier of `1.0` reproduces the source's natural
+//! FPS on average, and the scenario layer's client-population knob scales
+//! the base rate itself, so load sweeps and shape sweeps compose.
+//!
+//! Modulated models (bursty, diurnal) draw by Lewis–Shedler thinning over
+//! the rate curve, from the source's own deterministic RNG stream — churn
+//! on other sources never perturbs the draws.
+
+use crate::util::rng::Rng;
+
+/// The release process of one source, relative to its base rate
+/// `1 / period_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalModel {
+    /// fixed period (`FrameSource::period_s`) — the closed-loop seed model
+    Periodic,
+    /// Poisson process at `rate_mult` times the base rate
+    Poisson { rate_mult: f64 },
+    /// on/off modulated Poisson: `on_mult` times the base rate for `on_s`
+    /// seconds, then `off_mult` times for `off_s` seconds, repeating —
+    /// the flash-crowd shape
+    Bursty {
+        on_mult: f64,
+        off_mult: f64,
+        on_s: f64,
+        off_s: f64,
+    },
+    /// sinusoidal rate curve between `low_mult` and `peak_mult` with
+    /// period `day_s` (trough at phase 0) — compressed diurnal traffic
+    Diurnal {
+        low_mult: f64,
+        peak_mult: f64,
+        day_s: f64,
+    },
+}
+
+impl ArrivalModel {
+    /// Short tag used by reports and JSON (`periodic|poisson|bursty|diurnal`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ArrivalModel::Periodic => "periodic",
+            ArrivalModel::Poisson { .. } => "poisson",
+            ArrivalModel::Bursty { .. } => "bursty",
+            ArrivalModel::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// Rate multiplier at `rel_t` seconds after the source started.
+    pub fn mult_at(&self, rel_t: f64) -> f64 {
+        match *self {
+            ArrivalModel::Periodic => 1.0,
+            ArrivalModel::Poisson { rate_mult } => rate_mult,
+            ArrivalModel::Bursty {
+                on_mult,
+                off_mult,
+                on_s,
+                off_s,
+            } => {
+                let phase = rel_t.rem_euclid(on_s + off_s);
+                if phase < on_s {
+                    on_mult
+                } else {
+                    off_mult
+                }
+            }
+            ArrivalModel::Diurnal {
+                low_mult,
+                peak_mult,
+                day_s,
+            } => {
+                let phase = rel_t.rem_euclid(day_s) / day_s;
+                low_mult
+                    + (peak_mult - low_mult)
+                        * 0.5
+                        * (1.0 - (2.0 * std::f64::consts::PI * phase).cos())
+            }
+        }
+    }
+
+    /// Upper bound of the rate-multiplier curve (the thinning envelope).
+    fn max_mult(&self) -> f64 {
+        match *self {
+            ArrivalModel::Periodic => 1.0,
+            ArrivalModel::Poisson { rate_mult } => rate_mult,
+            ArrivalModel::Bursty {
+                on_mult, off_mult, ..
+            } => on_mult.max(off_mult),
+            ArrivalModel::Diurnal {
+                low_mult,
+                peak_mult,
+                ..
+            } => peak_mult.max(low_mult),
+        }
+    }
+
+    /// Draw the next inter-release interval for a source with base period
+    /// `period_s`, `rel_t` seconds after the source started. Deterministic
+    /// given the stream; returns `f64::INFINITY` if the process has no
+    /// further events (rate identically zero).
+    pub fn next_interval(&self, period_s: f64, rel_t: f64, rng: &mut Rng) -> f64 {
+        match *self {
+            ArrivalModel::Periodic => period_s,
+            ArrivalModel::Poisson { rate_mult } => {
+                if rate_mult <= 0.0 || period_s <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    rng.exp(rate_mult / period_s)
+                }
+            }
+            _ => {
+                let max_mult = self.max_mult();
+                if max_mult <= 0.0 || period_s <= 0.0 {
+                    return f64::INFINITY;
+                }
+                // Lewis–Shedler thinning: candidates at the envelope rate,
+                // accepted with probability rate(t) / envelope
+                let max_rate = max_mult / period_s;
+                let mut t = rel_t;
+                for _ in 0..100_000 {
+                    t += rng.exp(max_rate);
+                    if rng.f64() * max_mult <= self.mult_at(t) {
+                        return t - rel_t;
+                    }
+                }
+                f64::INFINITY
+            }
+        }
+    }
+
+    /// Reject non-finite or non-positive parameters with a message naming
+    /// the offending field.
+    pub fn validate(&self) -> Result<(), String> {
+        fn pos(name: &str, v: f64) -> Result<(), String> {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{name} must be positive and finite, got {v}"))
+            }
+        }
+        fn nonneg(name: &str, v: f64) -> Result<(), String> {
+            if v.is_finite() && v >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{name} must be non-negative and finite, got {v}"))
+            }
+        }
+        match *self {
+            ArrivalModel::Periodic => Ok(()),
+            ArrivalModel::Poisson { rate_mult } => pos("rate_mult", rate_mult),
+            ArrivalModel::Bursty {
+                on_mult,
+                off_mult,
+                on_s,
+                off_s,
+            } => {
+                pos("on_mult", on_mult)?;
+                nonneg("off_mult", off_mult)?;
+                pos("on_s", on_s)?;
+                pos("off_s", off_s)
+            }
+            ArrivalModel::Diurnal {
+                low_mult,
+                peak_mult,
+                day_s,
+            } => {
+                nonneg("low_mult", low_mult)?;
+                pos("peak_mult", peak_mult)?;
+                if peak_mult < low_mult {
+                    return Err(format!(
+                        "peak_mult {peak_mult} must be >= low_mult {low_mult}"
+                    ));
+                }
+                pos("day_s", day_s)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_interval_matches_rate() {
+        let m = ArrivalModel::Poisson { rate_mult: 2.0 };
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| m.next_interval(0.1, 0.0, &mut rng))
+            .sum::<f64>()
+            / n as f64;
+        // base rate 10 Hz x 2.0 => mean interval 0.05 s
+        assert!((mean - 0.05).abs() < 0.002, "mean {mean}");
+    }
+
+    #[test]
+    fn bursty_rate_is_higher_in_the_on_phase() {
+        let m = ArrivalModel::Bursty {
+            on_mult: 4.0,
+            off_mult: 0.25,
+            on_s: 0.2,
+            off_s: 0.8,
+        };
+        assert_eq!(m.mult_at(0.1), 4.0);
+        assert_eq!(m.mult_at(0.5), 0.25);
+        assert_eq!(m.mult_at(1.1), 4.0); // wraps
+        // thinning draws stay finite and positive
+        let mut rng = Rng::new(5);
+        for _ in 0..1000 {
+            let dt = m.next_interval(0.1, 0.33, &mut rng);
+            assert!(dt.is_finite() && dt > 0.0);
+        }
+    }
+
+    #[test]
+    fn diurnal_curve_peaks_mid_cycle() {
+        let m = ArrivalModel::Diurnal {
+            low_mult: 0.5,
+            peak_mult: 2.0,
+            day_s: 1.0,
+        };
+        assert!((m.mult_at(0.0) - 0.5).abs() < 1e-12);
+        assert!((m.mult_at(0.5) - 2.0).abs() < 1e-12);
+        assert!(m.mult_at(0.25) > 0.5 && m.mult_at(0.25) < 2.0);
+    }
+
+    #[test]
+    fn thinning_tracks_the_modulated_rate() {
+        // over many draws the on-phase must produce far more events
+        let m = ArrivalModel::Bursty {
+            on_mult: 5.0,
+            off_mult: 0.2,
+            on_s: 0.5,
+            off_s: 0.5,
+        };
+        let mut rng = Rng::new(9);
+        let (mut t, mut on, mut off) = (0.0f64, 0u32, 0u32);
+        while t < 200.0 {
+            t += m.next_interval(0.1, t, &mut rng);
+            if t.rem_euclid(1.0) < 0.5 {
+                on += 1;
+            } else {
+                off += 1;
+            }
+        }
+        assert!(
+            on as f64 > 5.0 * off as f64,
+            "on {on} vs off {off}: bursts must dominate"
+        );
+    }
+
+    #[test]
+    fn zero_rate_never_fires() {
+        let m = ArrivalModel::Poisson { rate_mult: 0.0 };
+        let mut rng = Rng::new(1);
+        assert!(m.next_interval(0.1, 0.0, &mut rng).is_infinite());
+    }
+
+    #[test]
+    fn validation_names_the_offending_field() {
+        let bad = ArrivalModel::Bursty {
+            on_mult: -1.0,
+            off_mult: 0.0,
+            on_s: 1.0,
+            off_s: 1.0,
+        };
+        let msg = bad.validate().unwrap_err();
+        assert!(msg.contains("on_mult"), "{msg}");
+        assert!(ArrivalModel::Periodic.validate().is_ok());
+        assert!(ArrivalModel::Diurnal {
+            low_mult: 2.0,
+            peak_mult: 1.0,
+            day_s: 1.0
+        }
+        .validate()
+        .is_err());
+    }
+}

@@ -43,6 +43,22 @@ impl FrameRecord {
     }
 }
 
+/// One device leave/failure applied mid-run (scenario churn): what it
+/// disrupted, for the per-event cost accounting of a `ScenarioReport`.
+#[derive(Debug, Clone)]
+pub struct LeaveRecord {
+    pub t: f64,
+    pub device: NodeId,
+    /// `false` = graceful drain, `true` = failure (in-flight work killed)
+    pub failure: bool,
+    /// incomplete frames originating on the device, censored at the leave
+    pub frames_abandoned: u64,
+    /// in-flight tasks of surviving frames re-mapped through the scheduler
+    pub tasks_remapped: u64,
+    /// in-flight tasks whose input data died with the device
+    pub tasks_dropped: u64,
+}
+
 /// Aggregated run metrics.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
@@ -63,6 +79,8 @@ pub struct RunMetrics {
     pub dropped: u64,
     /// task placement counts: (task kind, pu class, on-server?) -> count
     pub placements: BTreeMap<(String, String, bool), u64>,
+    /// device leaves/failures applied during the run, in time order
+    pub leaves: Vec<LeaveRecord>,
 }
 
 impl RunMetrics {
@@ -142,6 +160,36 @@ impl RunMetrics {
         }
     }
 
+    /// Frames censored by device leaves across the whole run.
+    pub fn frames_abandoned(&self) -> u64 {
+        self.leaves.iter().map(|l| l.frames_abandoned).sum()
+    }
+
+    /// Goodput timeline: `(bucket start, completed frames, QoS-meeting
+    /// frames)` per `bucket_s` of the horizon, bucketed by completion time
+    /// — the view a `ScenarioReport` plots to show disruption and recovery.
+    pub fn goodput_timeline(&self, bucket_s: f64, horizon_s: f64) -> Vec<(f64, u64, u64)> {
+        let sane =
+            bucket_s.is_finite() && bucket_s > 0.0 && horizon_s.is_finite() && horizon_s > 0.0;
+        if !sane {
+            return Vec::new();
+        }
+        let n = (horizon_s / bucket_s).ceil().max(1.0) as usize;
+        let mut buckets = vec![(0u64, 0u64); n];
+        for f in &self.frames {
+            let i = ((f.finish_t / bucket_s) as usize).min(n - 1);
+            buckets[i].0 += 1;
+            if f.qos_ok() {
+                buckets[i].1 += 1;
+            }
+        }
+        buckets
+            .into_iter()
+            .enumerate()
+            .map(|(i, (c, g))| (i as f64 * bucket_s, c, g))
+            .collect()
+    }
+
     /// Edge-vs-server balance (Fig. 11a: "average latency difference
     /// between edges and servers per frame").
     pub fn edge_server_imbalance(&self) -> f64 {
@@ -206,5 +254,30 @@ mod tests {
         assert_eq!(m.qos_failure_rate(), 0.0);
         assert_eq!(m.overhead_ratio(), 0.0);
         assert_eq!(m.mean_latency_s(), 0.0);
+        assert_eq!(m.frames_abandoned(), 0);
+        assert!(m.goodput_timeline(0.1, 1.0).iter().all(|&(_, c, _)| c == 0));
+        assert!(m.goodput_timeline(0.0, 1.0).is_empty());
+    }
+
+    #[test]
+    fn goodput_timeline_buckets_by_finish_time() {
+        let mut m = RunMetrics::default();
+        let mut early = frame(0.03, 0.05); // qos ok
+        early.finish_t = 0.05;
+        let mut late = frame(0.08, 0.05); // qos miss
+        late.finish_t = 0.35;
+        m.frames.push(early);
+        m.frames.push(late);
+        let tl = m.goodput_timeline(0.1, 0.4);
+        assert_eq!(tl.len(), 4);
+        assert_eq!(tl[0], (0.0, 1, 1));
+        assert_eq!(tl[3].1, 1);
+        assert_eq!(tl[3].2, 0); // the miss completes but is not goodput
+        // completions past the horizon clamp into the last bucket
+        let mut over = frame(0.5, 1.0);
+        over.finish_t = 9.0;
+        m.frames.push(over);
+        let tl = m.goodput_timeline(0.1, 0.4);
+        assert_eq!(tl[3].1, 2);
     }
 }

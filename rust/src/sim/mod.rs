@@ -10,16 +10,25 @@
 //! from a modeling mismatch.
 //!
 //! Dynamic events (§5.4) are first-class: link bandwidths change mid-run
-//! (Fig. 12a/b) and new edge devices join, extending the HW-Graph and the
-//! ORC hierarchy in place (Fig. 12c).
+//! (Fig. 12a/b), new edge devices join, extending the HW-Graph and the
+//! ORC hierarchy in place (Fig. 12c), and devices *leave or fail* mid-run
+//! ([`LeaveEvent`]): the engine deactivates the device, censors the frames
+//! it originated, re-maps other frames' in-flight tasks through the
+//! scheduler, shrinks the scheduler-visible [`Loads`], and records the
+//! disruption in [`metrics::LeaveRecord`]s. Sources release frames through
+//! pluggable open-loop [`ArrivalModel`]s (Poisson, bursty, diurnal), each
+//! drawing from its own deterministic RNG stream so churn on one source
+//! never perturbs another's draws.
 
+pub mod arrivals;
 pub mod metrics;
 pub mod scheduler;
 
-pub use metrics::{FrameRecord, RunMetrics};
+pub use arrivals::ArrivalModel;
+pub use metrics::{FrameRecord, LeaveRecord, RunMetrics};
 pub use scheduler::{best_effort, HeyeScheduler, Scheduler};
 
-use std::collections::{BTreeMap, BinaryHeap};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use crate::hwgraph::presets::Decs;
 use crate::hwgraph::{EdgeId, NodeId};
@@ -29,7 +38,7 @@ use crate::perfmodel::{PerfModel, ProfileModel, Unit};
 use crate::slowdown::{CachedSlowdown, Placed};
 use crate::task::{workloads, Cfg, TaskId, TaskKind};
 use crate::traverser::{ActiveTask, Traverser};
-use crate::util::rng::Rng;
+use crate::util::rng::{mix64, Rng};
 
 // ---------------------------------------------------------------------------
 // workload sources
@@ -50,6 +59,9 @@ pub struct FrameSource {
     pub start_t: f64,
     /// how many frames to release (None = until horizon)
     pub count: Option<u64>,
+    /// release process relative to `period_s` (open-loop models draw from
+    /// the source's own deterministic RNG stream)
+    pub arrival: ArrivalModel,
 }
 
 impl FrameSource {
@@ -70,6 +82,7 @@ impl FrameSource {
             make_cfg: Box::new(move |r| workloads::vr_cfg(fps, r, None)),
             start_t: 0.0,
             count: None,
+            arrival: ArrivalModel::Periodic,
         }
     }
 
@@ -82,6 +95,7 @@ impl FrameSource {
             make_cfg: Box::new(|_| workloads::mining_cfg(1.0)),
             start_t: 0.0,
             count: None,
+            arrival: ArrivalModel::Periodic,
         }
     }
 }
@@ -95,6 +109,35 @@ impl Workload {
     /// One VR source per edge device at its model's target FPS.
     pub fn vr(decs: &Decs) -> Workload {
         Self::vr_rate(decs, 1.0)
+    }
+
+    /// Open-loop VR: one source per edge device at its model's target FPS,
+    /// the release process modulated by `arrival` and the base rate scaled
+    /// by the client-population multiplier (`clients` headsets' worth of
+    /// traffic per edge). The QoS budget stays anchored to the device's
+    /// native FPS, so the sweep measures what overload does to it.
+    pub fn vr_open(decs: &Decs, arrival: ArrivalModel, clients: f64) -> Workload {
+        let mut w = Self::vr_rate(decs, clients);
+        for s in &mut w.sources {
+            s.arrival = arrival;
+        }
+        w
+    }
+
+    /// Open-loop mining: `total_sensors` sensors at `hz * clients` windows
+    /// per second each, released through `arrival`.
+    pub fn mining_open(
+        decs: &Decs,
+        total_sensors: usize,
+        hz: f64,
+        arrival: ArrivalModel,
+        clients: f64,
+    ) -> Workload {
+        let mut w = Self::mining(decs, total_sensors, hz * clients);
+        for s in &mut w.sources {
+            s.arrival = arrival;
+        }
+        w
     }
 
     pub fn vr_rate(decs: &Decs, rate_mult: f64) -> Workload {
@@ -184,6 +227,57 @@ pub struct JoinEvent {
     pub uplink_gbps: f64,
     /// attach a VR source to the newcomer at its model's target FPS
     pub vr_source: bool,
+}
+
+/// An edge device leaves (graceful) or fails mid-run: its sources stop,
+/// its incomplete frames are censored, and — on failure — in-flight tasks
+/// of other frames are re-mapped through the scheduler or dropped if their
+/// input data died with the device. `edge_index` indexes `edge_devices` in
+/// join order, so devices that joined before `t` are addressable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LeaveEvent {
+    pub t: f64,
+    pub edge_index: usize,
+    /// `false` = graceful drain (running tasks finish, nothing new lands),
+    /// `true` = failure (in-flight work on the device is killed)
+    pub failure: bool,
+}
+
+impl LeaveEvent {
+    /// Validate against the run horizon and the device population at `t`
+    /// (`edges_at(t)` = base edges + joins applied by then). Both the
+    /// facade session and the scenario loader funnel through here so the
+    /// two entry points cannot drift. Returns a message naming the
+    /// problem; callers prefix the entry index.
+    pub fn check(&self, horizon_s: f64, edges_at: impl Fn(f64) -> usize) -> Result<(), String> {
+        if !self.t.is_finite() || self.t < 0.0 {
+            return Err(format!("time {} must be finite and non-negative", self.t));
+        }
+        if self.t >= horizon_s {
+            return Err(format!(
+                "t={} is at or past the horizon ({horizon_s} s) and would be silently \
+                 ignored",
+                self.t
+            ));
+        }
+        let available = edges_at(self.t);
+        if self.edge_index >= available {
+            return Err(format!(
+                "edge_index {} out of range ({available} edge devices exist at t={})",
+                self.edge_index, self.t
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One scripted dynamic event of a scenario run — the union the engine
+/// executes via [`Simulation::run_scripted`].
+#[derive(Debug, Clone)]
+pub enum ScriptedEvent {
+    Net(NetEvent),
+    Join(JoinEvent),
+    Leave(LeaveEvent),
 }
 
 // ---------------------------------------------------------------------------
@@ -279,9 +373,26 @@ struct Frame {
     release_t: f64,
     budget_s: f64,
     resolution: f64,
+    /// stable key for per-(frame, node) noise draws: mixes the source's
+    /// stream key with the frame's per-source sequence number, so churn
+    /// elsewhere never shifts this frame's execution noise
+    noise_key: u64,
+    /// censored by a device leave: the origin is gone, nothing downstream
+    /// runs and no record is emitted
+    abandoned: bool,
     state: Vec<NodeState>,
     /// device the node's input data currently lives on
     data_dev: Vec<NodeId>,
+    /// device that *produced* the node's input (its last predecessor's
+    /// host; the origin for roots) — where a re-map restarts the transfer
+    data_src: Vec<NodeId>,
+    /// assignment generation per node: bumped when a leave cancels an
+    /// in-flight transfer, so the stale TransferDone is ignored
+    gen: Vec<u32>,
+    /// input-transfer seconds charged to `comm_s` by the node's current
+    /// assignment — backed out if a failure cancels the transfer mid-flight
+    /// (the replacement assignment charges its own)
+    xfer_comm: Vec<f64>,
     /// when each node became ready (deps resolved)
     ready_t: Vec<f64>,
     /// PU chosen for each node at assignment time
@@ -325,11 +436,29 @@ struct Running {
 }
 
 enum EvKind {
-    Release { source: usize },
-    Ready { frame: usize, node: usize },
-    TransferDone { frame: usize, node: usize, route: Route },
-    Finish { uid: u64, epoch: u64 },
-    NetSet { link: EdgeId, gbps: Option<f64> },
+    Release {
+        source: usize,
+    },
+    Ready {
+        frame: usize,
+        node: usize,
+    },
+    TransferDone {
+        frame: usize,
+        node: usize,
+        route: Route,
+        /// matched against `Frame::gen` — a leave-cancelled transfer still
+        /// closes its flow but never starts the task
+        gen: u32,
+    },
+    Finish {
+        uid: u64,
+        epoch: u64,
+    },
+    NetSet {
+        link: EdgeId,
+        gbps: Option<f64>,
+    },
     /// drop the scheduler's adaptive session state (SimConfig::reset_times)
     SchedReset,
 }
@@ -378,10 +507,19 @@ struct SimState {
     tenants: BTreeMap<NodeId, usize>,
     loads: Loads,
     metrics: RunMetrics,
-    rng: Rng,
     next_uid: u64,
     sources: Vec<FrameSource>,
     released_count: Vec<u64>,
+    /// deactivated sources stop releasing (their origin left)
+    src_active: Vec<bool>,
+    /// per-source arrival RNG streams (see [`add_source`])
+    src_rng: Vec<Rng>,
+    /// stable per-source key: mixes origin id and per-origin index
+    src_key: Vec<u64>,
+    /// devices lost to *failure* (data on them is gone). A graceful leave
+    /// deactivates a device without entering it here: its data stays
+    /// readable while it drains.
+    failed: BTreeSet<NodeId>,
 }
 
 impl SimState {
@@ -390,6 +528,25 @@ impl SimState {
         self.seq += 1;
         self.heap.push(Ev { t, seq, kind });
     }
+}
+
+/// Register a source with its own deterministic RNG stream, derived from
+/// the run seed plus a stable `(origin, per-origin index)` key — adding or
+/// removing sources under churn never perturbs other sources' arrival or
+/// noise draws (asserted by `tests/scenario_churn.rs`).
+fn add_source(st: &mut SimState, cfg: &SimConfig, src: FrameSource) -> usize {
+    let k = st
+        .sources
+        .iter()
+        .filter(|s| s.origin == src.origin)
+        .count() as u64;
+    let key = mix64(src.origin.0 as u64, k);
+    st.src_key.push(key);
+    st.src_rng.push(Rng::new(mix64(cfg.seed, key)));
+    st.src_active.push(true);
+    st.released_count.push(0);
+    st.sources.push(src);
+    st.sources.len() - 1
 }
 
 // ---------------------------------------------------------------------------
@@ -419,7 +576,24 @@ impl Simulation {
         sched: &mut dyn Scheduler,
         workload: Workload,
         net_events: Vec<NetEvent>,
-        mut join_events: Vec<JoinEvent>,
+        join_events: Vec<JoinEvent>,
+        cfg: &SimConfig,
+    ) -> RunMetrics {
+        let mut events: Vec<ScriptedEvent> =
+            net_events.into_iter().map(ScriptedEvent::Net).collect();
+        events.extend(join_events.into_iter().map(ScriptedEvent::Join));
+        self.run_scripted(sched, workload, events, cfg)
+    }
+
+    /// Run `workload` under the full scripted event stream — the scenario
+    /// engine's entry point: network changes ride the event heap, while
+    /// joins and leaves are structural (they mutate the system between
+    /// event-loop segments).
+    pub fn run_scripted(
+        &mut self,
+        sched: &mut dyn Scheduler,
+        workload: Workload,
+        events: Vec<ScriptedEvent>,
         cfg: &SimConfig,
     ) -> RunMetrics {
         let mut st = SimState {
@@ -435,48 +609,53 @@ impl Simulation {
             tenants: BTreeMap::new(),
             loads: Loads::default(),
             metrics: RunMetrics::default(),
-            rng: Rng::new(cfg.seed),
             next_uid: 1,
-            sources: workload.sources,
+            sources: Vec::new(),
             released_count: Vec::new(),
+            src_active: Vec::new(),
+            src_rng: Vec::new(),
+            src_key: Vec::new(),
+            failed: BTreeSet::new(),
         };
         sched.set_parallelism(cfg.parallelism);
-        st.released_count = vec![0; st.sources.len()];
-        for i in 0..st.sources.len() {
-            let t = st.sources[i].start_t;
-            st.push(t, EvKind::Release { source: i });
+        for src in workload.sources {
+            let idx = add_source(&mut st, cfg, src);
+            let t = st.sources[idx].start_t;
+            st.push(t, EvKind::Release { source: idx });
         }
-        for e in net_events {
-            st.push(
-                e.t,
-                EvKind::NetSet {
-                    link: e.link,
-                    gbps: e.gbps,
-                },
-            );
+        let mut structural: Vec<(f64, ScriptedEvent)> = Vec::new();
+        for e in events {
+            match e {
+                ScriptedEvent::Net(ev) => st.push(
+                    ev.t,
+                    EvKind::NetSet {
+                        link: ev.link,
+                        gbps: ev.gbps,
+                    },
+                ),
+                ScriptedEvent::Join(j) => structural.push((j.t, ScriptedEvent::Join(j))),
+                ScriptedEvent::Leave(l) => structural.push((l.t, ScriptedEvent::Leave(l))),
+            }
         }
         for &t in &cfg.reset_times {
             st.push(t, EvKind::SchedReset);
         }
-        join_events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        // stable sort: same-instant structural events apply in script order
+        structural.sort_by(|a, b| a.0.total_cmp(&b.0));
 
-        for j in join_events {
-            let until = j.t.min(cfg.horizon_s);
+        for (t, ev) in structural {
+            let until = t.min(cfg.horizon_s);
             {
                 let slow = CachedSlowdown::new(&self.decs.graph);
                 run_until(&self.decs, &mut self.net, &self.perf, &slow, sched, &mut st, cfg, until);
             }
-            if j.t >= cfg.horizon_s {
+            if t >= cfg.horizon_s {
                 continue;
             }
-            let dev = self.decs.join_edge(&j.model, j.uplink_gbps);
-            sched.on_device_join(&self.decs.graph, dev);
-            if j.vr_source {
-                let src = FrameSource::vr(dev, &j.model);
-                st.sources.push(src);
-                st.released_count.push(0);
-                let idx = st.sources.len() - 1;
-                st.push(j.t, EvKind::Release { source: idx });
+            match ev {
+                ScriptedEvent::Join(j) => apply_join(&mut self.decs, sched, &mut st, cfg, &j, t),
+                ScriptedEvent::Leave(l) => apply_leave(&mut self.decs, sched, &mut st, l, t),
+                ScriptedEvent::Net(_) => unreachable!("net events ride the event heap"),
             }
         }
         {
@@ -494,13 +673,137 @@ impl Simulation {
         }
 
         // account frames that never completed and are past their budget
+        // (frames censored by a device leave are excluded — their origin is
+        // gone, not late)
         for f in &st.frames {
-            if !f.done && cfg.horizon_s - f.release_t > f.budget_s {
+            if !f.done && !f.abandoned && cfg.horizon_s - f.release_t > f.budget_s {
                 st.metrics.dropped += 1;
             }
         }
         st.metrics
     }
+}
+
+/// Attach a joining device: extend the DECS, notify the scheduler, and —
+/// if requested — start a VR source on the newcomer.
+fn apply_join(
+    decs: &mut Decs,
+    sched: &mut dyn Scheduler,
+    st: &mut SimState,
+    cfg: &SimConfig,
+    j: &JoinEvent,
+    now: f64,
+) {
+    let dev = decs.join_edge(&j.model, j.uplink_gbps);
+    sched.on_device_join(&decs.graph, dev);
+    if j.vr_source {
+        let mut src = FrameSource::vr(dev, &j.model);
+        // anchor the source (and any modulated arrival's phase) at the
+        // join instant, not at simulation start
+        src.start_t = now;
+        let idx = add_source(st, cfg, src);
+        st.push(now, EvKind::Release { source: idx });
+    }
+}
+
+/// Apply a device leave/failure: deactivate the device, stop its sources,
+/// censor the frames it originated, and — on failure — kill the in-flight
+/// work on it, re-mapping tasks of surviving frames through the scheduler
+/// (the `Ready` re-entry path) or dropping them when their input data died
+/// with the device. Graceful leaves drain: running tasks finish, but
+/// nothing new lands (the engine rejects placements on inactive devices).
+fn apply_leave(
+    decs: &mut Decs,
+    sched: &mut dyn Scheduler,
+    st: &mut SimState,
+    ev: LeaveEvent,
+    now: f64,
+) {
+    let dev = match decs.edge_devices.get(ev.edge_index) {
+        Some(&d) if decs.is_active(d) => d,
+        _ => return, // unknown or already gone: nothing to do
+    };
+    decs.deactivate(dev);
+    for (i, s) in st.sources.iter().enumerate() {
+        if s.origin == dev {
+            st.src_active[i] = false;
+        }
+    }
+    sched.on_device_leave(&decs.graph, dev);
+    let mut rec = LeaveRecord {
+        t: now,
+        device: dev,
+        failure: ev.failure,
+        frames_abandoned: 0,
+        tasks_remapped: 0,
+        tasks_dropped: 0,
+    };
+    // censor the departed origin's incomplete frames: their in-flight
+    // remote tasks drain as ghost work (cancellation lag), but nothing
+    // downstream runs and no record is emitted
+    for f in &mut st.frames {
+        if f.origin == dev && !f.done && !f.abandoned {
+            f.abandoned = true;
+            rec.frames_abandoned += 1;
+        }
+    }
+    if ev.failure {
+        // kill the in-flight work hosted on the failed device
+        st.failed.insert(dev);
+        let mut victims: Vec<(usize, usize)> = Vec::new();
+        if let Some(uids) = st.by_dev.remove(&dev) {
+            for uid in uids {
+                let r = st.running.remove(&uid).expect("running task tracked");
+                victims.push((r.frame, r.node));
+            }
+        }
+        if let Some(uids) = st.queued_by_dev.remove(&dev) {
+            for uid in uids {
+                let r = st.running.remove(&uid).expect("queued task tracked");
+                victims.push((r.frame, r.node));
+            }
+        }
+        if let Some(pend) = st.pending_by_dev.remove(&dev) {
+            for (key, _) in pend {
+                victims.push(((key >> 20) as usize, (key & 0xfffff) as usize));
+            }
+        }
+        for pu in decs.graph.pus_in(dev) {
+            st.tenants.remove(&pu);
+            st.pu_queue.remove(&pu);
+        }
+        st.loads.clear_device(dev);
+        for (fidx, node) in victims {
+            let f = &mut st.frames[fidx];
+            // cancel any in-flight TransferDone for this node; back out the
+            // transfer's comm charge — it never delivered, and a re-map
+            // charges its own (completed transfers keep theirs)
+            f.gen[node] += 1;
+            if matches!(f.state[node], NodeState::Transferring) {
+                f.comm_s -= f.xfer_comm[node];
+                f.xfer_comm[node] = 0.0;
+            }
+            if f.abandoned {
+                continue;
+            }
+            let src = f.data_src[node];
+            if src == dev || st.failed.contains(&src) {
+                // the input data died with the device: the node is lost
+                f.degraded = true;
+                f.state[node] = NodeState::Pending { missing: usize::MAX };
+                rec.tasks_dropped += 1;
+            } else {
+                // re-map through the scheduler from where the data still
+                // lives (the producing device)
+                f.state[node] = NodeState::Pending { missing: 0 };
+                f.data_dev[node] = src;
+                f.pu_choice[node] = None;
+                rec.tasks_remapped += 1;
+                st.push(now, EvKind::Ready { frame: fidx, node });
+            }
+        }
+    }
+    st.metrics.leaves.push(rec);
 }
 
 // ---------------------------------------------------------------------------
@@ -532,9 +835,37 @@ fn run_until(
             EvKind::Ready { frame, node } => {
                 assign_batch(decs, net, perf, slow, sched, st, cfg, &[(frame, node)], now)
             }
-            EvKind::TransferDone { frame, node, route } => {
+            EvKind::TransferDone {
+                frame,
+                node,
+                route,
+                gen,
+            } => {
                 net.close_flow(&route);
-                start_task(decs, perf, slow, st, cfg, frame, node, now);
+                let (current, abandoned) = {
+                    let f = &st.frames[frame];
+                    (f.gen[node] == gen, f.abandoned)
+                };
+                if current && !abandoned {
+                    start_task(decs, perf, slow, st, cfg, frame, node, now);
+                } else if current {
+                    // an abandoned frame's transfer landed: drop the
+                    // commitment the schedulers could still see (re-mapped
+                    // nodes — gen mismatch — were already cleaned up at the
+                    // leave, and may have a fresh entry under the same key)
+                    let key = ((frame as u64) << 20) | node as u64;
+                    let target = st.frames[frame].pu_choice[node]
+                        .and_then(|pu| decs.graph.device_of(pu));
+                    if let Some(dev) = target {
+                        if let Some(v) = st.pending_by_dev.get_mut(&dev) {
+                            v.retain(|(k, _)| *k != key);
+                            if v.is_empty() {
+                                st.pending_by_dev.remove(&dev);
+                            }
+                            sync_loads_device(st, dev);
+                        }
+                    }
+                }
             }
             EvKind::Finish { uid, epoch } => {
                 let valid = st
@@ -568,10 +899,13 @@ fn on_release(
     source: usize,
     now: f64,
 ) {
+    if !st.src_active[source] {
+        return; // the origin left: the source is dead
+    }
     let resolution = sched.frame_resolution(st.sources[source].origin, &decs.graph, net);
-    let (origin, budget, period, count) = {
+    let (origin, budget, period, count, start_t, arrival) = {
         let s = &st.sources[source];
-        (s.origin, s.budget_s, s.period_s, s.count)
+        (s.origin, s.budget_s, s.period_s, s.count, s.start_t, s.arrival)
     };
     let frame_cfg = (st.sources[source].make_cfg)(resolution);
     let n = frame_cfg.len();
@@ -601,8 +935,13 @@ fn on_release(
         release_t: now,
         budget_s: budget,
         resolution,
+        noise_key: mix64(st.src_key[source], st.released_count[source]),
+        abandoned: false,
         state,
         data_dev: vec![origin; n],
+        data_src: vec![origin; n],
+        gen: vec![0; n],
+        xfer_comm: vec![0.0; n],
         ready_t: vec![now; n],
         pu_choice: vec![None; n],
         pred: vec![0.0; n],
@@ -621,10 +960,14 @@ fn on_release(
     *st.metrics.released.entry(origin).or_insert(0) += 1;
     st.released_count[source] += 1;
 
-    // schedule the next release; events past the horizon are never popped
+    // schedule the next release from this source's arrival process (its
+    // own RNG stream); events past the horizon are never popped
     let more = count.map(|c| st.released_count[source] < c).unwrap_or(true);
     if more {
-        st.push(now + period, EvKind::Release { source });
+        let dt = arrival.next_interval(period, now - start_t, &mut st.src_rng[source]);
+        if dt.is_finite() {
+            st.push(now + dt, EvKind::Release { source });
+        }
     }
 
     // roots are ready immediately
@@ -657,6 +1000,18 @@ fn assign_batch(
     let grouped = cfg.grouped && batch.len() > 1;
     let mut first_comm: f64 = 0.0;
     for (bi, &(fidx, node)) in batch.iter().enumerate() {
+        if st.frames[fidx].abandoned {
+            continue; // origin left: censored, nothing else to place
+        }
+        if st.failed.contains(&st.frames[fidx].data_dev[node]) {
+            // the input data's host failed before this task could start
+            // (a gracefully-leaving host still serves its data while it
+            // drains, so only *failures* lose nodes here)
+            let f = &mut st.frames[fidx];
+            f.degraded = true;
+            f.state[node] = NodeState::Pending { missing: usize::MAX };
+            continue;
+        }
         let mut spec = st.frames[fidx].cfg.nodes[node].spec.clone();
         // the scheduler sees the *remaining* budget anchored to the frame
         // release: late predecessors shrink a stage's slack, early finishes
@@ -685,15 +1040,24 @@ fn assign_batch(
                 r.overhead.hops += 2;
             }
         }
-        let (pu, degraded) = match r.pu {
+        // a placement on a deactivated device is a miss: a scheduler's
+        // membership view may lag a leave (baselines track their own lists)
+        let placed = r.pu.filter(|&pu| {
+            decs.graph
+                .device_of(pu)
+                .map(|d| decs.is_active(d))
+                .unwrap_or(false)
+        });
+        let (pu, degraded) = match placed {
             Some(pu) => (pu, false),
             None => {
                 // best-effort fallback so the run measures the miss;
-                // candidates limited to the data device + servers — a
-                // full-system scan per miss is O(devices) and dominates
+                // candidates limited to the data device + active servers —
+                // a full-system scan per miss is O(devices) and dominates
                 // wall-clock once a large run starts failing
                 let all: Vec<NodeId> = std::iter::once(data_dev)
                     .chain(decs.servers.iter().copied())
+                    .filter(|&d| decs.is_active(d))
                     .collect();
                 let be = {
                     let tr = Traverser::new(slow, perf, &*net);
@@ -791,6 +1155,7 @@ fn assign_batch(
         {
             let f = &mut st.frames[fidx];
             f.comm_s += delay;
+            f.xfer_comm[node] = delay;
             f.state[node] = NodeState::Transferring;
             f.data_dev[node] = dev; // data will live on the target
             // remember the mapping through the Running entry created later
@@ -829,12 +1194,14 @@ fn assign_batch(
         } else {
             0.0
         };
+        let gen = st.frames[fidx].gen[node];
         st.push(
             t_start,
             EvKind::TransferDone {
                 frame: fidx,
                 node,
                 route,
+                gen,
             },
         );
     }
@@ -873,7 +1240,16 @@ fn start_task(
         .predict(&spec, model, class, Unit::Seconds)
         .unwrap_or(0.001);
     let noise = if cfg.noise_frac > 0.0 {
-        (cfg.noise_frac * st.rng.gauss()).exp()
+        // one-shot per-(source, frame, node) stream: the draw depends only
+        // on stable identity, never on global event interleaving, so churn
+        // elsewhere does not perturb this task's noise — and a re-mapped
+        // task re-draws the same factor (the work is a property of the
+        // task, not of where it lands)
+        let mut nrng = Rng::new(mix64(
+            cfg.seed ^ st.frames[fidx].noise_key,
+            node as u64,
+        ));
+        (cfg.noise_frac * nrng.gauss()).exp()
     } else {
         1.0
     };
@@ -1012,15 +1388,25 @@ fn on_finish(
         f.remaining -= 1;
     }
 
+    if st.frames[r.frame].abandoned {
+        // censored frame (its origin left): the work is accounted, but
+        // nothing downstream runs and no record is emitted
+        return;
+    }
+
     // dependency resolution
     let succs = st.frames[r.frame].cfg.nodes[r.node].succs.clone();
     let mut newly_ready = Vec::new();
     for s in succs {
         let f = &mut st.frames[r.frame];
         if let NodeState::Pending { missing } = f.state[s] {
+            if missing == usize::MAX {
+                continue; // node already lost to a device failure
+            }
             let m = missing - 1;
             f.state[s] = NodeState::Pending { missing: m };
             f.data_dev[s] = r.dev;
+            f.data_src[s] = r.dev;
             if m == 0 {
                 f.ready_t[s] = now;
                 newly_ready.push((r.frame, s));
@@ -1325,6 +1711,98 @@ mod tests {
             grp.sched_comm_s,
             solo.sched_comm_s
         );
+    }
+
+    #[test]
+    fn failure_leave_censors_frames_and_keeps_the_run_alive() {
+        // paper testbed, VR: fail one edge mid-run. Its frames stop, the
+        // survivors keep completing, and the disruption is recorded.
+        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+        let mut sched = heye(&sim.decs);
+        let wl = Workload::vr(&sim.decs);
+        let cfg = SimConfig::default().horizon(0.6).seed(21);
+        let leave = LeaveEvent {
+            t: 0.3,
+            edge_index: 1,
+            failure: true,
+        };
+        let m = sim.run_scripted(
+            &mut sched,
+            wl,
+            vec![ScriptedEvent::Leave(leave)],
+            &cfg,
+        );
+        assert_eq!(m.leaves.len(), 1);
+        let dead = sim.decs.edge_devices[1];
+        assert!(!sim.decs.is_active(dead));
+        // the dead origin's source stopped at t=0.3: far fewer releases
+        // than the 25 fps it would emit over the full 0.6 s horizon
+        let released = m.released.get(&dead).copied().unwrap_or(0);
+        assert!(released > 0 && released <= 9, "released {released}");
+        // no frames from the dead origin complete after the failure
+        assert!(m
+            .frames
+            .iter()
+            .all(|f| f.origin != dead || f.finish_t <= 0.3 + 1e-9));
+        // survivors still complete frames in the second half of the run
+        assert!(
+            m.frames
+                .iter()
+                .any(|f| f.origin != dead && f.finish_t > 0.4),
+            "survivors must keep being served"
+        );
+    }
+
+    #[test]
+    fn graceful_leave_records_no_killed_work() {
+        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+        let mut sched = heye(&sim.decs);
+        let wl = Workload::vr(&sim.decs);
+        let cfg = SimConfig::default().horizon(0.5).seed(22);
+        let leave = LeaveEvent {
+            t: 0.25,
+            edge_index: 0,
+            failure: false,
+        };
+        let m = sim.run_scripted(
+            &mut sched,
+            wl,
+            vec![ScriptedEvent::Leave(leave)],
+            &cfg,
+        );
+        assert_eq!(m.leaves.len(), 1);
+        assert_eq!(m.leaves[0].tasks_remapped, 0);
+        assert_eq!(m.leaves[0].tasks_dropped, 0);
+        assert!(!m.leaves[0].failure);
+    }
+
+    #[test]
+    fn open_loop_poisson_releases_differ_from_periodic() {
+        let run = |arrival: ArrivalModel| {
+            let mut sim = Simulation::new(Decs::build(&DecsSpec::validation_pair()));
+            let mut sched = heye(&sim.decs);
+            let wl = Workload::vr_open(&sim.decs, arrival, 1.0);
+            let cfg = SimConfig::default().horizon(0.5).seed(23).noise(0.0);
+            sim.run(&mut sched, wl, vec![], vec![], &cfg)
+        };
+        let periodic = run(ArrivalModel::Periodic);
+        let poisson = run(ArrivalModel::Poisson { rate_mult: 1.0 });
+        assert!(!periodic.frames.is_empty() && !poisson.frames.is_empty());
+        // a Poisson stream at the same mean rate releases at different
+        // (random) instants than the fixed-period stream
+        assert_ne!(
+            periodic
+                .frames
+                .iter()
+                .map(|f| (f.release_t * 1e9) as u64)
+                .collect::<Vec<_>>(),
+            poisson
+                .frames
+                .iter()
+                .map(|f| (f.release_t * 1e9) as u64)
+                .collect::<Vec<_>>()
+        );
+        let _ = rel(&periodic);
     }
 
     #[test]

@@ -42,6 +42,13 @@ pub trait Scheduler {
     /// Notification that a device joined (Fig. 12c).
     fn on_device_join(&mut self, _g: &HwGraph, _dev: NodeId) {}
 
+    /// Notification that a device left or failed (scenario churn). The
+    /// scheduler must forget the device — it may not appear in future
+    /// placements (the engine also rejects placements on inactive devices
+    /// and falls back best-effort, so a stale view degrades rather than
+    /// crashes).
+    fn on_device_leave(&mut self, _g: &HwGraph, _dev: NodeId) {}
+
     /// Candidate-evaluation worker threads (`0` = auto-detect, `1` =
     /// serial). The engine forwards `SimConfig::parallelism` here before a
     /// run; schedulers without a parallel hot path ignore the knob.
@@ -94,7 +101,11 @@ impl Scheduler for HeyeScheduler {
     }
 
     fn on_device_join(&mut self, g: &HwGraph, dev: NodeId) {
-        self.orc.hierarchy.join_device(g, dev);
+        self.orc.on_device_join(g, dev);
+    }
+
+    fn on_device_leave(&mut self, g: &HwGraph, dev: NodeId) {
+        self.orc.on_device_leave(g, dev);
     }
 
     fn set_parallelism(&mut self, threads: usize) {

@@ -7,6 +7,7 @@ use crate::hwgraph::NodeId;
 use crate::platform::{Platform, PlatformError, RunReport, WorkloadSpec};
 use crate::sim::{RunMetrics, SimConfig};
 use crate::util::json::Json;
+use crate::util::stats::Summary;
 
 /// Per-device latency breakdown (the Fig. 1 / Fig. 11a view): computation,
 /// slowdown, communication and scheduling seconds averaged per frame.
@@ -127,6 +128,20 @@ pub fn compare(
     Ok(reports)
 }
 
+/// Serialize a latency [`Summary`] (seconds) — the percentile block every
+/// scenario report embeds.
+pub fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("n", Json::Num(s.n as f64)),
+        ("mean_s", Json::Num(s.mean)),
+        ("p50_s", Json::Num(s.p50)),
+        ("p95_s", Json::Num(s.p95)),
+        ("p99_s", Json::Num(s.p99)),
+        ("min_s", Json::Num(s.min)),
+        ("max_s", Json::Num(s.max)),
+    ])
+}
+
 /// Serialize a run to JSON (for external plotting / EXPERIMENTS.md capture).
 pub fn to_json(name: &str, m: &RunMetrics) -> Json {
     let frames: Vec<Json> = m
@@ -148,9 +163,24 @@ pub fn to_json(name: &str, m: &RunMetrics) -> Json {
             ])
         })
         .collect();
+    let leaves: Vec<Json> = m
+        .leaves
+        .iter()
+        .map(|l| {
+            Json::obj(vec![
+                ("t", Json::Num(l.t)),
+                ("device", Json::Num(l.device.0 as f64)),
+                ("failure", Json::Bool(l.failure)),
+                ("frames_abandoned", Json::Num(l.frames_abandoned as f64)),
+                ("tasks_remapped", Json::Num(l.tasks_remapped as f64)),
+                ("tasks_dropped", Json::Num(l.tasks_dropped as f64)),
+            ])
+        })
+        .collect();
     Json::obj(vec![
         ("scheduler", Json::Str(name.to_string())),
         ("frames", Json::Arr(frames)),
+        ("leaves", Json::Arr(leaves)),
         ("dropped", Json::Num(m.dropped as f64)),
         ("qos_failure_rate", Json::Num(m.qos_failure_rate())),
         ("mean_latency_s", Json::Num(m.mean_latency_s())),
@@ -190,6 +220,22 @@ mod tests {
             assert!(r.compute_s > 0.0);
             assert!(["edge", "server"].contains(&r.bottleneck()));
         }
+    }
+
+    #[test]
+    fn summary_json_carries_the_percentiles() {
+        let s = Summary {
+            n: 3,
+            mean: 0.02,
+            p50: 0.015,
+            p95: 0.03,
+            p99: 0.04,
+            min: 0.01,
+            max: 0.05,
+        };
+        let j = summary_json(&s);
+        assert_eq!(j.get("p95_s").and_then(|v| v.as_f64()), Some(0.03));
+        assert_eq!(j.get("n").and_then(|v| v.as_u64()), Some(3));
     }
 
     #[test]

@@ -24,6 +24,15 @@ impl SplitMix64 {
     }
 }
 
+/// One-shot SplitMix64 mix of two words into a well-distributed 64-bit
+/// value. Used to derive independent, *stable* per-source RNG streams from
+/// a run seed plus structural identifiers (origin id, per-origin index),
+/// so adding or removing one stream never perturbs the others.
+pub fn mix64(a: u64, b: u64) -> u64 {
+    let mut sm = SplitMix64::new(a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    sm.next_u64()
+}
+
 /// Xoshiro256** — the workhorse generator.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -196,6 +205,18 @@ mod tests {
         let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
         let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
         assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn mix64_is_stable_and_spreads() {
+        // stable: pure function of its inputs
+        assert_eq!(mix64(42, 7), mix64(42, 7));
+        // spreads: nearby keys land far apart
+        let vals: Vec<u64> = (0..32).map(|k| mix64(42, k)).collect();
+        let mut uniq = vals.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), vals.len());
     }
 
     #[test]

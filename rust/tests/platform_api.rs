@@ -142,6 +142,14 @@ fn session_rejects_invalid_configuration() {
         .throttle_uplink(7, 0.0, Some(1.0))
         .run();
     assert!(matches!(r, Err(PlatformError::InvalidSession(_))));
+
+    // leave pointing at a non-existent edge (validation pair has one)
+    let r = platform.session(WorkloadSpec::Vr).leave(0.1, 7, true).run();
+    assert!(matches!(r, Err(PlatformError::InvalidSession(_))));
+
+    // leave at a negative time
+    let r = platform.session(WorkloadSpec::Vr).leave(-0.5, 0, false).run();
+    assert!(matches!(r, Err(PlatformError::InvalidSession(_))));
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,233 @@
+//! Scenario-engine integration tests: device leave/failure semantics,
+//! determinism under churn at any parallelism, and per-source RNG seed
+//! stability (churn on one source never perturbs another's draws).
+
+use std::fmt::Write as _;
+
+use heye::platform::{Platform, RunReport, WorkloadSpec};
+use heye::scenario::Scenario;
+use heye::sim::{ArrivalModel, JoinEvent, SimConfig};
+
+/// Deterministic fingerprint of a scenario run: every virtual-time
+/// quantity, in order, at full f64 round-trip precision. Measured
+/// wall-clock fields (`sched_s`, `sched_compute_s`) are excluded — they
+/// are host noise by design and stay off the virtual timeline.
+fn fingerprint(report: &RunReport) -> String {
+    let m = &report.metrics;
+    let mut s = String::new();
+    for f in &m.frames {
+        writeln!(
+            s,
+            "frame o={} rel={:?} fin={:?} lat={:?} comp={:?} slow={:?} comm={:?} deg={}",
+            f.origin.0,
+            f.release_t,
+            f.finish_t,
+            f.latency_s,
+            f.compute_s,
+            f.slowdown_s,
+            f.comm_s,
+            f.degraded
+        )
+        .unwrap();
+    }
+    for l in &m.leaves {
+        writeln!(
+            s,
+            "leave t={:?} dev={} fail={} ab={} re={} dr={}",
+            l.t, l.device.0, l.failure, l.frames_abandoned, l.tasks_remapped, l.tasks_dropped
+        )
+        .unwrap();
+    }
+    for (dev, n) in &m.released {
+        writeln!(s, "released {}={n}", dev.0).unwrap();
+    }
+    writeln!(
+        s,
+        "dropped={} edge={} server={} comm={:?} hops={}",
+        m.dropped, m.tasks_on_edge, m.tasks_on_server, m.sched_comm_s, m.sched_hops
+    )
+    .unwrap();
+    s
+}
+
+#[test]
+fn churn_scenario_is_parallelism_invariant() {
+    // 12 edges put the sibling tier past the worker pool's threshold, and
+    // the script exercises every churn path: failure, join, graceful leave
+    let platform = Platform::builder().mixed(12, 3).build().unwrap();
+    let run = |threads: usize| {
+        platform
+            .session(WorkloadSpec::VrOpen {
+                arrival: ArrivalModel::Poisson { rate_mult: 1.0 },
+                clients: 1.0,
+            })
+            .scheduler("heye")
+            .config(SimConfig::default().horizon(0.25).seed(31).parallelism(threads))
+            .leave(0.08, 1, true)
+            .join(JoinEvent {
+                t: 0.12,
+                model: "xavier_nx".into(),
+                uplink_gbps: 10.0,
+                vr_source: true,
+            })
+            .leave(0.18, 0, false)
+            .run()
+            .expect("churn run")
+    };
+    let serial = run(1);
+    let auto = run(0);
+    assert!(!serial.metrics.frames.is_empty(), "frames must complete");
+    assert_eq!(serial.metrics.leaves.len(), 2, "both leaves applied");
+    assert_eq!(
+        fingerprint(&serial),
+        fingerprint(&auto),
+        "churn run diverges between parallelism 1 and 0 (auto)"
+    );
+}
+
+#[test]
+fn failure_remaps_in_flight_tasks_of_surviving_frames() {
+    // two Orin Nanos, no servers: a 60-window burst on edge 0 overflows
+    // its tenant caps, so windows spill to the sibling edge. Failing the
+    // sibling mid-burst must re-map (or drop) that in-flight work — the
+    // burst's frames originate on edge 0 and survive.
+    let platform = Platform::builder()
+        .topology(heye::hwgraph::presets::DecsSpec {
+            edges: vec![("orin_nano".into(), 2)],
+            servers: vec![],
+            edge_uplink_gbps: 10.0,
+            wan_gbps: 10.0,
+        })
+        .build()
+        .unwrap();
+    let report = platform
+        .session(WorkloadSpec::MiningBurst { origin: 0, n: 60 })
+        .scheduler("heye")
+        .config(SimConfig::default().horizon(1.0).seed(5).noise(0.0))
+        .leave(0.03, 1, true)
+        .run()
+        .expect("burst under failure");
+    let m = &report.metrics;
+    assert_eq!(m.leaves.len(), 1);
+    let rec = &m.leaves[0];
+    assert!(rec.failure);
+    assert_eq!(
+        rec.frames_abandoned, 0,
+        "the burst originates on the surviving edge"
+    );
+    assert!(
+        rec.tasks_remapped + rec.tasks_dropped > 0,
+        "spilled in-flight work must be re-mapped or dropped (remapped={} dropped={})",
+        rec.tasks_remapped,
+        rec.tasks_dropped
+    );
+    // the run still completes frames after the failure, on the survivor
+    assert!(!m.frames.is_empty());
+    let dead = report.decs.edge_devices[1];
+    assert!(!report.decs.is_active(dead));
+    assert!(m.frames.iter().all(|f| f.origin != dead));
+}
+
+#[test]
+fn per_source_rng_streams_are_seed_stable_under_churn() {
+    // open-loop Poisson VR: each source draws arrivals from its own
+    // stream, so adding a source (join) or removing one (failure) must
+    // not change how many frames the *other* sources release
+    let platform = Platform::paper_vr();
+    let base_cfg = || SimConfig::default().horizon(0.4).seed(77);
+    let wl = || WorkloadSpec::VrOpen {
+        arrival: ArrivalModel::Poisson { rate_mult: 1.0 },
+        clients: 1.0,
+    };
+    let plain = platform
+        .session(wl())
+        .scheduler("heye")
+        .config(base_cfg())
+        .run()
+        .unwrap();
+    let with_join = platform
+        .session(wl())
+        .scheduler("heye")
+        .config(base_cfg())
+        .join(JoinEvent {
+            t: 0.2,
+            model: "xavier_nx".into(),
+            uplink_gbps: 10.0,
+            vr_source: true,
+        })
+        .run()
+        .unwrap();
+    let with_leave = platform
+        .session(wl())
+        .scheduler("heye")
+        .config(base_cfg())
+        .leave(0.2, 0, true)
+        .run()
+        .unwrap();
+    let originals = &plain.decs.edge_devices;
+    assert_eq!(originals.len(), 5);
+    for &dev in originals {
+        let a = plain.metrics.released.get(&dev).copied().unwrap_or(0);
+        let b = with_join.metrics.released.get(&dev).copied().unwrap_or(0);
+        assert_eq!(a, b, "join perturbed source on device {}", dev.0);
+        assert!(a > 0, "source on device {} released nothing", dev.0);
+    }
+    // the failed device stops releasing; everyone else is untouched
+    for &dev in originals.iter().skip(1) {
+        let a = plain.metrics.released.get(&dev).copied().unwrap_or(0);
+        let c = with_leave.metrics.released.get(&dev).copied().unwrap_or(0);
+        assert_eq!(a, c, "leave perturbed source on device {}", dev.0);
+    }
+    let failed = originals[0];
+    assert!(
+        with_leave.metrics.released.get(&failed).copied().unwrap_or(0)
+            < plain.metrics.released.get(&failed).copied().unwrap_or(0),
+        "the failed device must stop releasing"
+    );
+}
+
+#[test]
+fn example_churn_scenario_runs_end_to_end() {
+    // the shipped exemplar: parses, validates, and completes a run with a
+    // mid-run failure whose in-flight work is re-mapped, reporting
+    // p50/p95/p99, QoS-miss rate, and a goodput timeline
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_churn.json");
+    let sc = Scenario::load(path).expect("exemplar parses and validates");
+    assert_eq!(sc.name, "churn");
+    assert_eq!(sc.leave_events.len(), 2);
+    let report = sc.run().expect("exemplar runs");
+    let m = &report.run.metrics;
+    assert_eq!(m.leaves.len(), 2, "failure + graceful leave both applied");
+    assert!(m.leaves[0].failure);
+    assert!(!m.leaves[1].failure, "second leave is graceful");
+    // the failed device is out of the system; the run keeps serving
+    let failed = report.run.decs.edge_devices[1];
+    assert!(!report.run.decs.is_active(failed));
+    assert!(m
+        .frames
+        .iter()
+        .all(|f| f.origin != failed || f.finish_t <= m.leaves[0].t + 1e-9));
+    assert!(report.run.frames() > 0, "survivors keep completing frames");
+    assert!(report.latency.p50 > 0.0);
+    assert!(report.latency.p95 >= report.latency.p50);
+    assert!(report.latency.p99 >= report.latency.p95);
+    assert!((0.0..=1.0).contains(&report.qos_miss_rate));
+    assert!(!report.goodput.is_empty());
+    assert_eq!(report.disruptions.len(), 2);
+    assert!(report.disruptions[0].failure);
+}
+
+#[test]
+fn scenario_report_is_deterministic_for_the_same_seed() {
+    let mut sc = Scenario::preset("churn").unwrap();
+    sc.cfg.sim.horizon_s = 0.8;
+    // keep the preset's events inside the shortened horizon
+    sc.leave_events.retain(|l| l.t <= 0.8);
+    sc.cfg.join_events.retain(|(t, _, _)| *t <= 0.8);
+    sc.validate().expect("shortened churn preset is valid");
+    let a = sc.run().unwrap();
+    let b = sc.run().unwrap();
+    assert_eq!(fingerprint(&a.run), fingerprint(&b.run));
+    assert_eq!(a.qos_miss_rate, b.qos_miss_rate);
+    assert_eq!(a.latency.p99, b.latency.p99);
+}
