@@ -102,7 +102,8 @@ fn main() {
     let perf = ProfileModel::new();
     let net = Network::new();
     let slow = CachedSlowdown::new(&decs.graph);
-    let tr = Traverser::new(&slow, &perf, &net);
+    let routes = heye::netsim::RouteTable::new(&decs.graph);
+    let tr = Traverser::new(&decs.graph, &slow, &perf, &net).with_routes(&routes);
     let loads = fleet_loads(decs);
 
     // the expensive search: a render must escalate past every edge ORC

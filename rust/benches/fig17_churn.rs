@@ -9,15 +9,24 @@
 //! latency, completed frames, and the disruption counts (frames censored,
 //! in-flight tasks re-mapped) from the engine's leave records.
 //!
+//! Each cell also reports the modeling-layer cost counters: Dijkstra
+//! (SSSP) runs and from-scratch `CachedSlowdown` constructions during the
+//! cell. With the structure-versioned caches, churn cells must stay at ONE
+//! oracle construction per run (asserted) — join/leave events delta-update
+//! the tables in place — and the SSSP count stays flat instead of scaling
+//! with the number of transfers.
+//!
 //! Flags:
 //!   --smoke         short horizon for CI (0.4 s instead of 1.5 s)
 //!   --horizon S     override the horizon
 //!   --seed N        run seed (default 42)
 //!   --json PATH     write the sweep as BENCH_churn.json (CI artifact)
 
+use heye::hwgraph::sssp_invocations;
 use heye::platform::{Platform, WorkloadSpec};
 use heye::scenario::ScenarioReport;
 use heye::sim::{ArrivalModel, JoinEvent, SimConfig};
+use heye::slowdown::rebuild_count;
 use heye::util::bench::FigureTable;
 use heye::util::cli::Args;
 use heye::util::json::Json;
@@ -86,13 +95,32 @@ fn main() {
     let platform = Platform::paper_vr();
     let mut table = FigureTable::new(
         "QoS under churn x burstiness (per scheduler)",
-        &["qos_miss_%", "p95_ms", "frames", "abandoned", "remapped"],
+        &[
+            "qos_miss_%",
+            "p95_ms",
+            "frames",
+            "abandoned",
+            "remapped",
+            "dijkstra",
+            "rebuilds",
+        ],
     );
     let mut cases: Vec<(String, Json)> = Vec::new();
     for (aname, arrival) in arrivals {
         for (ci, cname) in CHURN_LEVELS.iter().enumerate() {
             for sched in SCHEDS {
+                let sssp0 = sssp_invocations();
+                let rebuilds0 = rebuild_count();
                 let rep = run_cell(&platform, sched, arrival, ci, horizon, seed);
+                let dijkstra = sssp_invocations() - sssp0;
+                let rebuilds = rebuild_count() - rebuilds0;
+                // the structural invariant this harness guards: churn
+                // events delta-update the slowdown oracle in place — one
+                // eager construction per run, no matter how many events
+                assert_eq!(
+                    rebuilds, 1,
+                    "{sched}/{aname}/{cname}: churn must not reconstruct CachedSlowdown"
+                );
                 let m = &rep.run.metrics;
                 let remapped: u64 = m.leaves.iter().map(|l| l.tasks_remapped).sum();
                 let label = format!("{sched}/{aname}/{cname}");
@@ -104,6 +132,8 @@ fn main() {
                         rep.run.frames() as f64,
                         m.frames_abandoned() as f64,
                         remapped as f64,
+                        dijkstra as f64,
+                        rebuilds as f64,
                     ],
                 );
                 cases.push((
@@ -116,6 +146,8 @@ fn main() {
                         ("abandoned", Json::Num(m.frames_abandoned() as f64)),
                         ("remapped", Json::Num(remapped as f64)),
                         ("dropped_frames", Json::Num(m.dropped as f64)),
+                        ("dijkstra", Json::Num(dijkstra as f64)),
+                        ("slowdown_rebuilds", Json::Num(rebuilds as f64)),
                     ]),
                 ));
             }

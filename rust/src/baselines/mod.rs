@@ -24,7 +24,7 @@ use std::collections::BTreeMap;
 
 use crate::hwgraph::presets::Decs;
 use crate::hwgraph::{HwGraph, NodeId, PuClass};
-use crate::netsim::Network;
+use crate::netsim::{Network, RouteTable};
 use crate::orchestrator::hierarchy::{CLUSTER_HOP_S, DEVICE_HOP_S};
 use crate::orchestrator::{Loads, MapResult, Overhead};
 use crate::sim::Scheduler;
@@ -39,19 +39,22 @@ const REMOTE_ONE_WAY_S: f64 = DEVICE_HOP_S + CLUSTER_HOP_S + CLUSTER_HOP_S + DEV
 
 /// Contention-blind evaluation of one task on one PU: standalone latency
 /// plus the input transfer if remote. This is the entirety of what the
-/// baselines "see" — no slowdown model.
+/// baselines "see" — no slowdown model. Routes resolve through the
+/// Traverser's structure-versioned cache when present (no per-candidate
+/// Dijkstra).
 fn blind_eval(tr: &Traverser, task: &TaskSpec, data_dev: NodeId, pu: NodeId) -> Option<(f64, f64)> {
-    let g = tr.slow.graph();
+    let g = tr.graph();
     let mut cfg = Cfg::new();
     cfg.add(task.clone());
     let standalone = tr.standalone(&cfg, 0, pu)?;
     let dev = g.device_of(pu)?;
-    let comm = if dev == data_dev || task.input_bytes <= 0.0 {
-        0.0
-    } else {
-        let route = tr.net.route(g, data_dev, dev)?;
-        tr.net.transfer_time_s(g, &route, task.input_bytes)
-    };
+    // zero-byte remote inputs still pay route latency — exactly what the
+    // engine charges, so baseline predictions stay aligned with execution
+    // (transfer_delay_s handles both the same-device and zero-byte cases)
+    let comm = tr.transfer_delay_s(data_dev, dev, task.input_bytes.max(0.0));
+    if !comm.is_finite() {
+        return None; // unreachable: never a candidate
+    }
     Some((standalone + comm, comm))
 }
 
@@ -135,7 +138,7 @@ impl AceScheduler {
         origin: NodeId,
         data_dev: NodeId,
     ) -> Option<(NodeId, PuClass)> {
-        let g = tr.slow.graph();
+        let g = tr.graph();
         // blind per-device scoring: the device's best deadline-satisfying
         // candidate (planned count is constant per device) and its best
         // fallback, reduced across devices in visit order below
@@ -229,7 +232,7 @@ impl Scheduler for AceScheduler {
                 p
             }
         };
-        let g = tr.slow.graph();
+        let g = tr.graph();
         // round-robin by visible queue length within the planned class
         let pu = candidate_pus(g, dev, task)
             .into_iter()
@@ -313,7 +316,7 @@ impl LatsScheduler {
         dev: NodeId,
         loads: &Loads,
     ) -> Option<(NodeId, f64, usize)> {
-        let g = tr.slow.graph();
+        let g = tr.graph();
         // availability monitor: rank by visible queue length, then by
         // blind standalone latency (still no contention *model*)
         let mut best: Option<(NodeId, f64, usize)> = None;
@@ -457,7 +460,16 @@ impl CloudVrScheduler {
 
     /// Blind render-segment latency at resolution `r`: best server's render
     /// standalone plus the rendered-frame transfer back over the uplink.
-    fn render_segment_s(&self, g: &HwGraph, net: &Network, origin: NodeId, r: f64) -> f64 {
+    /// Resolves routes through the engine's cache when present — this runs
+    /// per frame release, so per-call Dijkstra is measurable at scale.
+    fn render_segment_s(
+        &self,
+        g: &HwGraph,
+        net: &Network,
+        routes: Option<&RouteTable>,
+        origin: NodeId,
+        r: f64,
+    ) -> f64 {
         let mut best = f64::INFINITY;
         for &s in &self.servers {
             let model = match g.node(s).model.as_deref() {
@@ -468,10 +480,12 @@ impl CloudVrScheduler {
                 crate::perfmodel::calibration::standalone_s(model, PuClass::Gpu, TaskKind::Render)
                     .map(|t| t * r)
                     .unwrap_or(f64::INFINITY);
-            let comm = match net.route(g, s, origin) {
-                Some(route) => net.transfer_time_s(g, &route, workloads::RAW_FRAME_BYTES * r),
-                None => f64::INFINITY,
-            };
+            let bytes = workloads::RAW_FRAME_BYTES * r;
+            let comm = net
+                .with_route(g, routes, s, origin, |route| {
+                    net.transfer_time_s(g, route, bytes)
+                })
+                .unwrap_or(f64::INFINITY);
             best = best.min(render + comm);
         }
         best
@@ -492,7 +506,7 @@ impl Scheduler for CloudVrScheduler {
         _now: f64,
         loads: &Loads,
     ) -> MapResult {
-        let g = tr.slow.graph();
+        let g = tr.graph();
         if task.kind == TaskKind::Render {
             // best server by blind compute + transfer, lightly
             // load-balanced; per-server scoring fans out over the worker
@@ -557,14 +571,20 @@ impl Scheduler for CloudVrScheduler {
         }
     }
 
-    fn frame_resolution(&mut self, origin: NodeId, g: &HwGraph, net: &Network) -> f64 {
+    fn frame_resolution(
+        &mut self,
+        origin: NodeId,
+        g: &HwGraph,
+        net: &Network,
+        routes: Option<&RouteTable>,
+    ) -> f64 {
         let model = g.node(origin).model.clone().unwrap_or_default();
         let fps = workloads::target_fps(&model);
         // the render stage's share of the 2-period frame budget — the
         // pipeline segment CloudVR's resolution knob controls
         let budget = 0.45 * 2.0 / fps;
         for &r in &self.steps {
-            if self.render_segment_s(g, net, origin, r) <= budget {
+            if self.render_segment_s(g, net, routes, origin, r) <= budget {
                 self.last_resolution.insert(origin, r);
                 return r;
             }
@@ -624,7 +644,7 @@ mod tests {
     fn ace_plan_is_static_across_calls() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let mut ace = AceScheduler::new(&ctx.decs);
         let render = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone();
         let origin = ctx.decs.edge_devices[0];
@@ -643,7 +663,7 @@ mod tests {
         // time beats the VIC — the contention trap
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let mut lats = LatsScheduler::new(&ctx.decs);
         let reproject = workloads::vr_cfg(30.0, 1.0, None).nodes[5].spec.clone();
         let origin = ctx.decs.edge_devices[0];
@@ -660,7 +680,7 @@ mod tests {
     fn lats_offloads_render() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let mut lats = LatsScheduler::new(&ctx.decs);
         let render = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone();
         let origin = ctx.decs.edge_devices[0];
@@ -674,7 +694,7 @@ mod tests {
     fn cloudvr_renders_remotely_and_keeps_rest_local() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let mut cv = CloudVrScheduler::new(&ctx.decs);
         let cfg = workloads::vr_cfg(30.0, 1.0, None);
         let origin = ctx.decs.edge_devices[0];
@@ -691,12 +711,17 @@ mod tests {
         let mut ctx = Ctx::new();
         let origin = ctx.decs.edge_devices[0];
         let mut cv = CloudVrScheduler::new(&ctx.decs);
-        let full = cv.frame_resolution(origin, &ctx.decs.graph, &ctx.net);
+        let table = RouteTable::new(&ctx.decs.graph);
+        let full = cv.frame_resolution(origin, &ctx.decs.graph, &ctx.net, None);
         assert_eq!(full, 1.0, "10 Gb/s sustains full resolution");
         let uplink = ctx.decs.uplink_of(origin).unwrap();
         ctx.net.set_bandwidth(uplink, Some(0.05));
-        let throttled = cv.frame_resolution(origin, &ctx.decs.graph, &ctx.net);
+        let throttled = cv.frame_resolution(origin, &ctx.decs.graph, &ctx.net, None);
         assert!(throttled < 1.0, "0.05 Gb/s must shrink resolution");
+        // the cached-route path sees the same (bandwidth-overridden) world
+        let via_table =
+            cv.frame_resolution(origin, &ctx.decs.graph, &ctx.net, Some(&table));
+        assert_eq!(via_table, throttled);
     }
 
     #[test]
@@ -715,7 +740,7 @@ mod tests {
         // loaded the target is
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let mut ace = AceScheduler::new(&ctx.decs);
         let svm = workloads::mining_cfg(1.0).nodes[1].spec.clone();
         let origin = ctx.decs.edge_devices[0];

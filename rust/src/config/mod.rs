@@ -118,6 +118,9 @@ impl ExpConfig {
         if let Some(v) = j.get("parallelism").and_then(|v| v.as_u64()) {
             c.sim.parallelism = v as usize;
         }
+        if let Some(v) = j.get("route_cache").and_then(|v| v.as_bool()) {
+            c.sim.route_cache = v;
+        }
         if let Some(v) = j.get("sensors").and_then(|v| v.as_u64()) {
             c.sensors = v as usize;
         }

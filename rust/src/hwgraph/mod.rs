@@ -19,6 +19,7 @@ mod path;
 pub mod presets;
 
 pub use build::GraphBuilder;
+pub use path::sssp_invocations;
 
 use std::collections::BTreeMap;
 
@@ -167,6 +168,12 @@ pub struct HwGraph {
     pub(crate) children: Vec<Vec<NodeId>>,
     /// name -> id (names are unique; enforced on insert)
     pub(crate) by_name: BTreeMap<String, NodeId>,
+    /// structural epoch: bumped by every topology mutation (`add_node`,
+    /// `add_edge`, `attach`), so derived caches ([`crate::netsim::RouteTable`],
+    /// [`crate::slowdown::CachedSlowdown`]) can validate themselves with a
+    /// single integer compare instead of re-deriving anything. Monotonic —
+    /// never reset, survives `Clone`.
+    pub(crate) epoch: u64,
 }
 
 impl HwGraph {
@@ -208,6 +215,13 @@ impl HwGraph {
         &self.adj[id.0 as usize]
     }
 
+    /// The structural epoch: strictly increases with every topology
+    /// mutation. Two graphs (or a graph and a cache built from it) with the
+    /// same epoch along one mutation history have identical structure.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
     pub fn children(&self, id: NodeId) -> &[NodeId] {
         &self.children[id.0 as usize]
     }
@@ -225,6 +239,7 @@ impl HwGraph {
             !self.by_name.contains_key(name),
             "duplicate node name `{name}`"
         );
+        self.epoch += 1;
         let id = NodeId(self.nodes.len() as u32);
         self.nodes.push(Node {
             id,
@@ -252,6 +267,7 @@ impl HwGraph {
         bandwidth_gbps: f64,
         latency_s: f64,
     ) -> EdgeId {
+        self.epoch += 1;
         let id = EdgeId(self.edges.len() as u32);
         self.edges.push(Edge {
             id,
@@ -277,6 +293,7 @@ impl HwGraph {
     /// Re-parent `child` under `group` (dynamic adaptability: a new edge
     /// device joining an edge cluster, §5.4.2).
     pub fn attach(&mut self, child: NodeId, group: NodeId) {
+        self.epoch += 1;
         if let Some(old) = self.nodes[child.0 as usize].parent {
             self.children[old.0 as usize].retain(|&c| c != child);
         }

@@ -3,8 +3,27 @@
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 
 use super::{HwGraph, NodeId, NodeKind, ResourceKind};
+
+/// Process-wide count of *whole-graph* Dijkstra (SSSP) runs, across all
+/// graphs and threads — the cost of route resolution (`Network::route`,
+/// `path_between`, the `RouteTable` build). Device-local filtered SSSPs
+/// (compute-path discovery inside one SoC) are not counted: they are tiny,
+/// and both cached and uncached runs pay them identically at oracle
+/// construction. The route cache exists to keep this counter flat in the
+/// simulation hot path; `perf_hotpath`/`fig17_churn` report deltas of it,
+/// and the cache-coherence tests assert on it. Diagnostic only — relaxed
+/// ordering, never reset.
+static SSSP_RUNS: AtomicU64 = AtomicU64::new(0);
+
+/// Total whole-graph Dijkstra invocations so far in this process — route
+/// resolution cost only; device-local compute-path SSSPs are not counted.
+/// Diagnostic: relaxed ordering, never reset.
+pub fn sssp_invocations() -> u64 {
+    SSSP_RUNS.load(AtomicOrdering::Relaxed)
+}
 
 #[derive(PartialEq)]
 struct HeapItem {
@@ -35,6 +54,7 @@ impl HwGraph {
     /// Single-source shortest path (by link latency, ties by hops) from
     /// `src` to every reachable node. Returns `(dist, prev)` arrays.
     pub fn sssp(&self, src: NodeId) -> (Vec<f64>, Vec<Option<NodeId>>) {
+        SSSP_RUNS.fetch_add(1, AtomicOrdering::Relaxed);
         self.sssp_filtered(src, |_| true)
     }
 
@@ -82,6 +102,21 @@ impl HwGraph {
     /// if unreachable.
     pub fn path_between(&self, src: NodeId, dst: NodeId) -> Option<Vec<NodeId>> {
         let (dist, prev) = self.sssp(src);
+        self.path_from_sssp(&dist, &prev, src, dst)
+    }
+
+    /// Reconstruct the `src`→`dst` path from one `sssp(src)` result — so a
+    /// caller resolving many destinations from the same source (e.g. the
+    /// [`crate::netsim::RouteTable`] build) pays one Dijkstra, not one per
+    /// destination, and still gets exactly the paths [`HwGraph::path_between`]
+    /// would return.
+    pub fn path_from_sssp(
+        &self,
+        dist: &[f64],
+        prev: &[Option<NodeId>],
+        src: NodeId,
+        dst: NodeId,
+    ) -> Option<Vec<NodeId>> {
         if dist[dst.0 as usize].is_infinite() {
             return None;
         }

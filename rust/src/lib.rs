@@ -44,6 +44,37 @@
 //! id-indexed [`orchestrator::Loads`] slots) keep that hot path
 //! allocation-free.
 //!
+//! ## Structure-versioned caches: the epoch invariant
+//!
+//! Modeling must stay O(delta) under structural change, not O(system).
+//! [`hwgraph::HwGraph`] carries a monotonically increasing **structural
+//! epoch** ([`hwgraph::HwGraph::epoch`]), bumped by every topology
+//! mutation (`add_node` / `add_edge` / `attach` — so a `Decs::join_edge`
+//! moves it; a deactivation does *not*, because leaves keep node ids
+//! stable). Two derived caches key off it:
+//!
+//! * [`netsim::RouteTable`] — every device-pair route, precomputed with
+//!   one Dijkstra per device and validated by a single epoch compare
+//!   ([`netsim::RouteTable::refresh`] rebuilds only when the epoch moved).
+//!   The simulator, the Traverser, and every candidate-evaluation worker
+//!   resolve transfers with an O(1) lookup instead of per-call Dijkstra;
+//!   routes are byte-identical either way because the table is built from
+//!   the same SSSP (`tests/route_cache.rs` asserts bit-equal metrics with
+//!   the cache on vs off, serial and parallel, across churn).
+//! * [`slowdown::CachedSlowdown`] — owns its tables and is delta-updated
+//!   across churn: `on_device_join` inserts one device's PU rows and
+//!   same-device pairs, `on_device_leave` removes them. A scripted run
+//!   constructs the oracle exactly once ([`slowdown::rebuild_count`]
+//!   counts constructions; `fig17_churn` asserts one per cell).
+//!
+//! Invariants: caches are plain `Sync` data between updates (no interior
+//! mutability); the engine refreshes them between event-loop segments,
+//! never mid-segment; and cached vs uncached resolution must agree
+//! bit-for-bit — `SimConfig::route_cache(false)` exists to assert that,
+//! not to be used. [`hwgraph::sssp_invocations`] counts whole-graph
+//! Dijkstra runs so benches can track the win (`perf_hotpath` requires
+//! ≥10x fewer at fleet scale).
+//!
 //! ## The `fleet` preset and `fig16_fleet`
 //!
 //! `DecsSpec::fleet()` / `PlatformBuilder::fleet()` (also `heye run

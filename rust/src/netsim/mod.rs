@@ -6,10 +6,18 @@
 //! *effective* bandwidth, where each link's bandwidth is divided by the
 //! number of concurrent flows crossing it (fair share — the contention the
 //! paper attributes >90% of scheduling overhead to is also routed here).
+//!
+//! Route *selection* depends only on the graph structure (static link
+//! latencies), never on flow counts or bandwidth overrides — so routes are
+//! cacheable across an entire structural segment of a run. [`RouteTable`]
+//! precomputes every device-pair route with one Dijkstra per device,
+//! validates itself against [`HwGraph::epoch`], and is plain `Sync` data:
+//! the simulator and every parallel candidate-evaluation worker resolve
+//! routes with an O(1) id-indexed lookup instead of a per-call Dijkstra.
 
 use std::collections::BTreeMap;
 
-use crate::hwgraph::{EdgeId, HwGraph, LinkKind, NodeId};
+use crate::hwgraph::{EdgeId, GroupRole, HwGraph, LinkKind, NodeId};
 
 /// Tracks concurrent flows per link and dynamic bandwidth overrides.
 #[derive(Debug, Clone, Default)]
@@ -21,10 +29,44 @@ pub struct Network {
 }
 
 /// A computed route between two devices.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Route {
     pub links: Vec<EdgeId>,
     pub latency_s: f64,
+}
+
+impl Route {
+    /// The zero-cost local route (same device, or a placeholder).
+    pub fn local() -> Route {
+        Route {
+            links: Vec::new(),
+            latency_s: 0.0,
+        }
+    }
+}
+
+/// Collect the network links along a node path into a [`Route`]. Shared by
+/// the on-demand [`Network::route`] and the [`RouteTable`] build so the two
+/// resolution paths can never diverge.
+fn route_on_path(g: &HwGraph, path: &[NodeId]) -> Option<Route> {
+    let mut links = Vec::new();
+    let mut latency = 0.0;
+    for w in path.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        let eid = g
+            .neighbors(a)
+            .iter()
+            .find(|(n, _)| *n == b)
+            .map(|(_, e)| *e)?;
+        if Network::is_net_link(g, eid) {
+            links.push(eid);
+            latency += g.edge(eid).latency_s;
+        }
+    }
+    Some(Route {
+        links,
+        latency_s: latency,
+    })
 }
 
 impl Network {
@@ -60,33 +102,36 @@ impl Network {
         )
     }
 
-    /// Shortest route between two *devices* over network links only.
+    /// Shortest route between two *devices* over network links only,
+    /// computed on demand (one Dijkstra per call). The hot paths resolve
+    /// routes through a [`RouteTable`] instead; this stays as the uncached
+    /// reference the table is validated against.
     pub fn route(&self, g: &HwGraph, from_dev: NodeId, to_dev: NodeId) -> Option<Route> {
         if from_dev == to_dev {
-            return Some(Route {
-                links: Vec::new(),
-                latency_s: 0.0,
-            });
+            return Some(Route::local());
         }
         let path = g.path_between(from_dev, to_dev)?;
-        let mut links = Vec::new();
-        let mut latency = 0.0;
-        for w in path.windows(2) {
-            let (a, b) = (w[0], w[1]);
-            let eid = g
-                .neighbors(a)
-                .iter()
-                .find(|(n, _)| *n == b)
-                .map(|(_, e)| *e)?;
-            if Self::is_net_link(g, eid) {
-                links.push(eid);
-                latency += g.edge(eid).latency_s;
-            }
+        route_on_path(g, &path)
+    }
+
+    /// Resolve `from_dev` → `to_dev` through the structure-versioned
+    /// `routes` table when present (O(1) lookup) or per-call Dijkstra
+    /// otherwise, and apply `f` to the route. This is the single seam both
+    /// resolution modes flow through — the simulator, the Traverser, and
+    /// the baselines all route here, so cached and uncached resolution
+    /// cannot drift apart. `None` = unreachable over network links.
+    pub fn with_route<R>(
+        &self,
+        g: &HwGraph,
+        routes: Option<&RouteTable>,
+        from_dev: NodeId,
+        to_dev: NodeId,
+        f: impl FnOnce(&Route) -> R,
+    ) -> Option<R> {
+        match routes {
+            Some(table) => table.route(from_dev, to_dev).map(f),
+            None => self.route(g, from_dev, to_dev).as_ref().map(f),
         }
-        Some(Route {
-            links,
-            latency_s: latency,
-        })
     }
 
     /// Effective bottleneck bandwidth of a route given current flow counts,
@@ -135,6 +180,105 @@ impl Network {
 
     pub fn active_flows(&self, link: EdgeId) -> usize {
         self.flows.get(&link).copied().unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the structure-versioned route cache
+// ---------------------------------------------------------------------------
+
+/// Precomputed device-pair → [`Route`] cache, versioned by the graph's
+/// structural epoch.
+///
+/// Construction runs **one** Dijkstra per device and derives every
+/// destination's route from that single SSSP result — exactly the paths
+/// [`Network::route`] would compute per call, so cached and uncached
+/// resolution are byte-identical (asserted by the coherence tests). After
+/// construction the table is plain read-only data (`Sync`): the simulator
+/// shares one instance with all [`crate::util::par`] candidate-evaluation
+/// workers.
+///
+/// Staleness is a single integer compare: [`RouteTable::refresh`] rebuilds
+/// iff [`HwGraph::epoch`] moved (a device join); deactivations never mutate
+/// the graph, so leaves cost nothing here.
+#[derive(Debug, Clone, Default)]
+pub struct RouteTable {
+    /// the graph epoch the table was built at
+    epoch: u64,
+    /// node id -> dense device index (`u32::MAX` = not a device)
+    dev_index: Vec<u32>,
+    /// all device group nodes, ascending id
+    devices: Vec<NodeId>,
+    /// row-major `[from][to]`; `None` = unreachable over network links
+    routes: Vec<Option<Route>>,
+}
+
+impl RouteTable {
+    /// Build the full table for `g` (one SSSP per device).
+    pub fn new(g: &HwGraph) -> RouteTable {
+        let mut t = RouteTable::default();
+        t.rebuild(g);
+        t
+    }
+
+    fn rebuild(&mut self, g: &HwGraph) {
+        self.epoch = g.epoch();
+        self.devices = g.groups(GroupRole::Device);
+        self.dev_index = vec![u32::MAX; g.node_count()];
+        for (i, &d) in self.devices.iter().enumerate() {
+            self.dev_index[d.0 as usize] = i as u32;
+        }
+        let n = self.devices.len();
+        self.routes = Vec::with_capacity(n * n);
+        for &from in &self.devices {
+            let (dist, prev) = g.sssp(from);
+            for &to in &self.devices {
+                let r = if from == to {
+                    Some(Route::local())
+                } else {
+                    g.path_from_sssp(&dist, &prev, from, to)
+                        .and_then(|path| route_on_path(g, &path))
+                };
+                self.routes.push(r);
+            }
+        }
+    }
+
+    /// The graph epoch this table reflects.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Is the table current for `g`?
+    pub fn is_current(&self, g: &HwGraph) -> bool {
+        self.epoch == g.epoch()
+    }
+
+    /// Rebuild iff the graph's structure moved since the last build.
+    /// Returns whether a rebuild happened.
+    pub fn refresh(&mut self, g: &HwGraph) -> bool {
+        if self.is_current(g) {
+            false
+        } else {
+            self.rebuild(g);
+            true
+        }
+    }
+
+    /// The cached route between two devices: `None` when either id is not a
+    /// known device or the pair is unreachable over network links. O(1).
+    pub fn route(&self, from_dev: NodeId, to_dev: NodeId) -> Option<&Route> {
+        let i = *self.dev_index.get(from_dev.0 as usize)?;
+        let j = *self.dev_index.get(to_dev.0 as usize)?;
+        if i == u32::MAX || j == u32::MAX {
+            return None;
+        }
+        self.routes[i as usize * self.devices.len() + j as usize].as_ref()
+    }
+
+    /// Number of devices the table covers.
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
     }
 }
 
@@ -262,6 +406,55 @@ mod tests {
             .route(&d.graph, d.edge_devices[0], d.edge_devices[1])
             .unwrap();
         assert_eq!(r.links.len(), 2); // edge->router->edge, no WAN hop
+    }
+
+    /// The table must agree with per-call Dijkstra for every device pair —
+    /// byte-identical links and latency, unreachable pairs included.
+    #[test]
+    fn route_table_matches_on_demand_dijkstra() {
+        let d = Decs::build(&DecsSpec::mixed(6, 2));
+        let net = Network::new();
+        let table = RouteTable::new(&d.graph);
+        assert!(table.is_current(&d.graph));
+        let all: Vec<_> = d
+            .edge_devices
+            .iter()
+            .chain(d.servers.iter())
+            .copied()
+            .collect();
+        assert_eq!(table.device_count(), all.len());
+        for &from in &all {
+            for &to in &all {
+                let cached = table.route(from, to).cloned();
+                let fresh = net.route(&d.graph, from, to);
+                assert_eq!(cached, fresh, "route {from:?} -> {to:?} diverges");
+            }
+        }
+        // non-device nodes miss the table instead of panicking
+        assert!(table.route(d.router, all[0]).is_none());
+    }
+
+    /// A join bumps the epoch; refresh rebuilds once and then covers the
+    /// newcomer. A second refresh with no structural change is a no-op.
+    #[test]
+    fn route_table_refresh_tracks_joins() {
+        let mut d = Decs::build(&DecsSpec::validation_pair());
+        let net = Network::new();
+        let mut table = RouteTable::new(&d.graph);
+        let epoch0 = table.epoch();
+        assert!(!table.refresh(&d.graph), "no mutation: no rebuild");
+        let newcomer = d.join_edge(crate::hwgraph::presets::XAVIER_NX, 10.0);
+        assert!(!table.is_current(&d.graph));
+        assert!(table.route(newcomer, d.servers[0]).is_none());
+        assert!(table.refresh(&d.graph), "join must trigger a rebuild");
+        assert!(table.epoch() > epoch0);
+        let cached = table.route(newcomer, d.servers[0]).cloned();
+        assert_eq!(cached, net.route(&d.graph, newcomer, d.servers[0]));
+        assert!(cached.unwrap().latency_s > 0.0);
+        // deactivation does not mutate the graph: the table stays current
+        let gone = d.edge_devices[0];
+        d.deactivate(gone);
+        assert!(!table.refresh(&d.graph));
     }
 
     #[test]

@@ -66,6 +66,20 @@ impl Default for Hierarchy {
 pub const DEVICE_HOP_S: f64 = 5.0e-5;
 pub const CLUSTER_HOP_S: f64 = 1.25e-4;
 
+/// Granularity every ORC hop latency is an exact multiple of
+/// ([`DEVICE_HOP_S`] = 2 quanta, [`CLUSTER_HOP_S`] = 5). Tier grouping in
+/// `MapTask` keys on [`hop_quanta`] instead of raw float sums: two devices
+/// at the same tier whose `orc_distance_s` accumulations differ only by
+/// float rounding land on the same integer, so they share one broadcast
+/// round trip instead of splitting into artificial sub-tiers.
+pub const HOP_QUANTUM_S: f64 = 2.5e-5;
+
+/// Quantize an ORC distance to its integer hop-quantum count (the tier
+/// key). Exact for any sum of [`DEVICE_HOP_S`]/[`CLUSTER_HOP_S`] hops.
+pub fn hop_quanta(distance_s: f64) -> u64 {
+    (distance_s / HOP_QUANTUM_S).round() as u64
+}
+
 /// Maximum ORC fan-out before virtual sub-cluster ORCs are inserted
 /// (§3.5 Scalability: "if a virtual cluster gets too large, logarithmic
 /// complexity could be maintained by inserting virtual nodes and

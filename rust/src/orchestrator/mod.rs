@@ -138,6 +138,13 @@ fn kind_tag(k: TaskKind) -> u8 {
     k as u8
 }
 
+/// `HEYE_TRACE_TRYDEV` presence, resolved once per process — an env-map
+/// lookup per candidate evaluation is measurable at fleet scale.
+fn trace_trydev() -> bool {
+    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ON.get_or_init(|| std::env::var("HEYE_TRACE_TRYDEV").is_ok())
+}
+
 impl Orchestrator {
     pub fn new(hierarchy: Hierarchy, policy: Policy) -> Self {
         Self {
@@ -206,19 +213,26 @@ impl Orchestrator {
         // the *best* satisfying node among its children's answers (Alg. 1
         // line 7, "BestNode <- select best node"); the search stops at the
         // first tier that produces any satisfying node.
-        let mut tiers: Vec<(f64, Vec<NodeId>)> = Vec::new();
+        //
+        // Tiers are keyed by the *quantized* hop count, not the raw float
+        // distance: same-tier siblings whose `orc_distance_s` sums differ
+        // only by rounding must share one broadcast, not pay a round trip
+        // each. The charged hop latency is re-derived from the quantum so
+        // it is identical for every member regardless of summation order.
+        let mut tiers: Vec<(u64, Vec<NodeId>)> = Vec::new();
         for dev in candidates {
-            let hop = self.hierarchy.orc_distance_s(origin_dev, dev);
-            match tiers.iter_mut().find(|(h, _)| (*h - hop).abs() < 1e-12) {
+            let q = hierarchy::hop_quanta(self.hierarchy.orc_distance_s(origin_dev, dev));
+            match tiers.iter_mut().find(|(tq, _)| *tq == q) {
                 Some((_, v)) => v.push(dev),
-                None => tiers.push((hop, vec![dev])),
+                None => tiers.push((q, vec![dev])),
             }
         }
         // single-task probe CFG shared by every candidate evaluation
         let mut probe = Cfg::new();
         probe.add(task.clone());
-        for (hop, devs) in tiers {
-            if hop > 0.0 {
+        for (quanta, devs) in tiers {
+            let hop = quanta as f64 * hierarchy::HOP_QUANTUM_S;
+            if quanta > 0 {
                 overhead.comm_s += 2.0 * hop; // one broadcast round trip
                 overhead.hops += 2 * devs.len() as u32;
             }
@@ -279,7 +293,7 @@ impl Orchestrator {
         loads: &Loads,
     ) -> (Option<(NodeId, f64)>, Overhead) {
         let t0 = Instant::now();
-        let g = tr.slow.graph();
+        let g = tr.graph();
         let active = loads.device(dev);
         // a device with a deep backlog is saturated — the ORC rejects
         // without simulating hundreds of co-tenants (sub-linear scaling,
@@ -319,7 +333,7 @@ impl Orchestrator {
             hops: 0,
             traverser_calls: calls,
         };
-        if best.is_none() && std::env::var("HEYE_TRACE_TRYDEV").is_ok() && now < 0.1 {
+        if best.is_none() && trace_trydev() && now < 0.1 {
             eprintln!(
                 "TRYDEV-FAIL t={now:.4} task={} dev={} deadline={:.2}ms active={:?}",
                 task.kind.name(),
@@ -344,7 +358,12 @@ impl Orchestrator {
     /// (e.g. the decoder) prefer the origin side, where their consumers
     /// live. This is how the Orchestrator finds the minimum-volume wire
     /// crossing of a pipeline without global CFG lookahead.
-    fn search_order(&mut self, origin_dev: NodeId, data_dev: NodeId, task: &TaskSpec) -> Vec<NodeId> {
+    fn search_order(
+        &mut self,
+        origin_dev: NodeId,
+        data_dev: NodeId,
+        task: &TaskSpec,
+    ) -> Vec<NodeId> {
         let shrinks = task.output_bytes < task.input_bytes && data_dev != origin_dev;
         let mut order = if shrinks {
             vec![data_dev, origin_dev]
@@ -467,7 +486,7 @@ mod tests {
     fn render_goes_to_a_server() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let h = Hierarchy::from_decs(&ctx.decs);
         let mut orc = Orchestrator::new(h, Policy::Hierarchical);
         let cfg = workloads::vr_cfg(30.0, 1.0, None);
@@ -489,7 +508,7 @@ mod tests {
     fn light_task_stays_local_with_zero_comm() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let h = Hierarchy::from_decs(&ctx.decs);
         let mut orc = Orchestrator::new(h, Policy::Hierarchical);
         let cfg = workloads::vr_cfg(30.0, 1.0, None);
@@ -506,7 +525,7 @@ mod tests {
     fn impossible_constraints_are_rejected_after_full_search() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let h = Hierarchy::from_decs(&ctx.decs);
         let mut orc = Orchestrator::new(h, Policy::Hierarchical);
         let t = TaskSpec::new(TaskKind::Knn).deadline(1e-9);
@@ -521,7 +540,7 @@ mod tests {
     fn existing_task_constraints_veto_colocation() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let h = Hierarchy::from_decs(&ctx.decs);
         let mut orc = Orchestrator::new(h, Policy::Hierarchical);
         // saturate server0's GPU with a task whose deadline just barely holds
@@ -540,7 +559,8 @@ mod tests {
             }],
         );
         let t = TaskSpec::new(TaskKind::Render).deadline(0.05);
-        let r = orc.map_task(&tr, &t, ctx.decs.edge_devices[0], ctx.decs.edge_devices[0], 0.0, &loads);
+        let e0 = ctx.decs.edge_devices[0];
+        let r = orc.map_task(&tr, &t, e0, e0, 0.0, &loads);
         // must not land on server0.gpu — that would break the active task
         assert_ne!(r.pu, Some(s0_gpu));
     }
@@ -553,7 +573,7 @@ mod tests {
         let perf = ProfileModel::new();
         let net = Network::new();
         let slow = CachedSlowdown::new(&decs.graph);
-        let tr = Traverser::new(&slow, &perf, &net);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
         let cfg = workloads::vr_cfg(30.0, 1.0, None);
         let origin = decs.edge_devices[0];
         // pose stays local, render escalates to the servers — both search
@@ -574,11 +594,60 @@ mod tests {
         }
     }
 
+    /// Float-rounding regression: siblings at the same hierarchy tier whose
+    /// `orc_distance_s` sums differ by more than the old 1e-12 tolerance
+    /// (different summation orders accumulate differently) must still share
+    /// ONE broadcast round trip — not serialize into per-device tiers that
+    /// double-charge `comm_s`.
+    #[test]
+    fn equal_tier_siblings_share_one_broadcast_despite_float_noise() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
+        let origin = ctx.decs.edge_devices[0];
+        let cfg = workloads::vr_cfg(30.0, 1.0, None);
+        let render = cfg.nodes[2].spec.clone();
+
+        let clean = Hierarchy::from_decs(&ctx.decs);
+        // perturb the uplink latencies of two server ORCs by amounts a
+        // different summation order could produce (well past 1e-12 but far
+        // under half a hop quantum)
+        let mut noisy = Hierarchy::from_decs(&ctx.decs);
+        for (k, &srv) in ctx.decs.servers.iter().enumerate().take(2) {
+            let orc = noisy.orc_of_device(srv).expect("server orc");
+            noisy.orcs[orc.0 as usize].uplink_s += (k as f64 + 1.0) * 3e-11;
+        }
+        // the perturbed distances genuinely differ beyond the old tolerance
+        let d0 = noisy.orc_distance_s(origin, ctx.decs.servers[0]);
+        let d1 = noisy.orc_distance_s(origin, ctx.decs.servers[1]);
+        assert!((d0 - d1).abs() > 1e-12);
+        assert_eq!(
+            hierarchy::hop_quanta(d0),
+            hierarchy::hop_quanta(d1),
+            "quantization must agree on the tier"
+        );
+
+        let mut a = Orchestrator::new(clean, Policy::Hierarchical);
+        let mut b = Orchestrator::new(noisy, Policy::Hierarchical);
+        let ra = a.map_task(&tr, &render, origin, origin, 0.0, &Loads::default());
+        let rb = b.map_task(&tr, &render, origin, origin, 0.0, &Loads::default());
+        // identical broadcast accounting: one round trip for the server
+        // tier, every member asked in the same message wave
+        assert_eq!(ra.overhead.hops, rb.overhead.hops);
+        assert!(
+            (ra.overhead.comm_s - rb.overhead.comm_s).abs() < 1e-15,
+            "comm {} vs {}",
+            ra.overhead.comm_s,
+            rb.overhead.comm_s
+        );
+        assert_eq!(ra.pu, rb.pu);
+    }
+
     #[test]
     fn direct_policy_skips_edge_siblings() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let h = Hierarchy::from_decs(&ctx.decs);
         let mut direct = Orchestrator::new(h, Policy::DirectToServer);
         let cfg = workloads::vr_cfg(30.0, 1.0, None);
@@ -597,7 +666,7 @@ mod tests {
     fn sticky_policy_reuses_previous_server() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let h = Hierarchy::from_decs(&ctx.decs);
         let mut orc = Orchestrator::new(h, Policy::StickyServer);
         let cfg = workloads::vr_cfg(30.0, 1.0, None);

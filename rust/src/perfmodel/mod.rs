@@ -326,7 +326,7 @@ mod roofline_tests {
         let slow = CachedSlowdown::new(&decs.graph);
         let net = Network::new();
         let roof = RooflineModel;
-        let tr = Traverser::new(&slow, &roof, &net);
+        let tr = Traverser::new(&decs.graph, &slow, &roof, &net);
         let cfg = workloads::mining_cfg(1.0);
         let pus = [
             decs.graph.by_name("edge0.cpu0").unwrap(),

@@ -32,7 +32,7 @@ use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use crate::hwgraph::presets::Decs;
 use crate::hwgraph::{EdgeId, NodeId};
-use crate::netsim::{Network, Route};
+use crate::netsim::{Network, Route, RouteTable};
 use crate::orchestrator::Loads;
 use crate::perfmodel::{PerfModel, ProfileModel, Unit};
 use crate::slowdown::{CachedSlowdown, Placed};
@@ -303,6 +303,12 @@ pub struct SimConfig {
     /// dynamic-adaptation knob, reachable through
     /// `Session::reset_sticky_at`
     pub reset_times: Vec<f64>,
+    /// resolve cross-device routes through the structure-versioned
+    /// [`RouteTable`] (default) instead of per-transfer Dijkstra. Routes,
+    /// placements, and metrics are byte-identical either way (asserted by
+    /// `tests/route_cache.rs`); the knob exists for that assertion and for
+    /// measuring the cache's win.
+    pub route_cache: bool,
 }
 
 impl Default for SimConfig {
@@ -314,6 +320,7 @@ impl Default for SimConfig {
             grouped: false,
             parallelism: 1,
             reset_times: Vec::new(),
+            route_cache: true,
         }
     }
 }
@@ -351,6 +358,27 @@ impl SimConfig {
         self.reset_times.push(t);
         self
     }
+
+    /// Enable/disable the device-pair route cache (on by default; results
+    /// are identical either way).
+    pub fn route_cache(mut self, on: bool) -> Self {
+        self.route_cache = on;
+        self
+    }
+}
+
+/// `HEYE_TRACE_ASSIGN` presence, resolved once per process.
+fn trace_assign() -> bool {
+    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ON.get_or_init(|| std::env::var("HEYE_TRACE_ASSIGN").is_ok())
+}
+
+/// `HEYE_TRACE_XFER` presence, resolved once per process — this sat on the
+/// per-transfer hot path, where an env-map lookup per call is measurable
+/// at fleet scale.
+fn trace_xfer() -> bool {
+    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ON.get_or_init(|| std::env::var("HEYE_TRACE_XFER").is_ok())
 }
 
 // ---------------------------------------------------------------------------
@@ -643,34 +671,68 @@ impl Simulation {
         // stable sort: same-instant structural events apply in script order
         structural.sort_by(|a, b| a.0.total_cmp(&b.0));
 
+        // the structure-versioned oracles live across the whole run:
+        // structural events update them in place (O(delta)) between event-
+        // loop segments instead of reconstructing them per event
+        let mut slow = CachedSlowdown::new(&self.decs.graph);
+        let mut routes = if cfg.route_cache {
+            Some(RouteTable::new(&self.decs.graph))
+        } else {
+            None
+        };
         for (t, ev) in structural {
-            let until = t.min(cfg.horizon_s);
-            {
-                let slow = CachedSlowdown::new(&self.decs.graph);
-                run_until(&self.decs, &mut self.net, &self.perf, &slow, sched, &mut st, cfg, until);
-            }
             if t >= cfg.horizon_s {
-                continue;
+                // sorted ascending: this and everything after it is post-
+                // horizon — never applied, and not worth re-entering the
+                // event loop for
+                break;
             }
-            match ev {
-                ScriptedEvent::Join(j) => apply_join(&mut self.decs, sched, &mut st, cfg, &j, t),
-                ScriptedEvent::Leave(l) => apply_leave(&mut self.decs, sched, &mut st, l, t),
-                ScriptedEvent::Net(_) => unreachable!("net events ride the event heap"),
-            }
-        }
-        {
-            let slow = CachedSlowdown::new(&self.decs.graph);
             run_until(
                 &self.decs,
                 &mut self.net,
                 &self.perf,
                 &slow,
+                routes.as_ref(),
                 sched,
                 &mut st,
                 cfg,
-                cfg.horizon_s,
+                t,
             );
+            match ev {
+                ScriptedEvent::Join(j) => {
+                    let dev = apply_join(&mut self.decs, sched, &mut st, cfg, &j, t);
+                    slow.on_device_join(&self.decs.graph, dev);
+                    if let Some(table) = routes.as_mut() {
+                        table.refresh(&self.decs.graph);
+                    }
+                }
+                ScriptedEvent::Leave(l) => {
+                    let left = apply_leave(&mut self.decs, sched, &mut st, l, t);
+                    if let Some(dev) = left {
+                        // the graph is unchanged (ids stay stable), so the
+                        // route table stays current. Prune the oracle only
+                        // on *failure* — a graceful leave keeps draining
+                        // its in-flight tasks, whose slowdown factors are
+                        // still queried until they finish.
+                        if l.failure {
+                            slow.on_device_leave(&self.decs.graph, dev);
+                        }
+                    }
+                }
+                ScriptedEvent::Net(_) => unreachable!("net events ride the event heap"),
+            }
         }
+        run_until(
+            &self.decs,
+            &mut self.net,
+            &self.perf,
+            &slow,
+            routes.as_ref(),
+            sched,
+            &mut st,
+            cfg,
+            cfg.horizon_s,
+        );
 
         // account frames that never completed and are past their budget
         // (frames censored by a device leave are excluded — their origin is
@@ -685,7 +747,8 @@ impl Simulation {
 }
 
 /// Attach a joining device: extend the DECS, notify the scheduler, and —
-/// if requested — start a VR source on the newcomer.
+/// if requested — start a VR source on the newcomer. Returns the new
+/// device so the caller can delta-update its structure caches.
 fn apply_join(
     decs: &mut Decs,
     sched: &mut dyn Scheduler,
@@ -693,7 +756,7 @@ fn apply_join(
     cfg: &SimConfig,
     j: &JoinEvent,
     now: f64,
-) {
+) -> NodeId {
     let dev = decs.join_edge(&j.model, j.uplink_gbps);
     sched.on_device_join(&decs.graph, dev);
     if j.vr_source {
@@ -704,6 +767,7 @@ fn apply_join(
         let idx = add_source(st, cfg, src);
         st.push(now, EvKind::Release { source: idx });
     }
+    dev
 }
 
 /// Apply a device leave/failure: deactivate the device, stop its sources,
@@ -718,10 +782,10 @@ fn apply_leave(
     st: &mut SimState,
     ev: LeaveEvent,
     now: f64,
-) {
+) -> Option<NodeId> {
     let dev = match decs.edge_devices.get(ev.edge_index) {
         Some(&d) if decs.is_active(d) => d,
-        _ => return, // unknown or already gone: nothing to do
+        _ => return None, // unknown or already gone: nothing to do
     };
     decs.deactivate(dev);
     for (i, s) in st.sources.iter().enumerate() {
@@ -804,6 +868,7 @@ fn apply_leave(
         }
     }
     st.metrics.leaves.push(rec);
+    Some(dev)
 }
 
 // ---------------------------------------------------------------------------
@@ -816,11 +881,16 @@ fn run_until(
     net: &mut Network,
     perf: &ProfileModel,
     slow: &CachedSlowdown,
+    routes: Option<&RouteTable>,
     sched: &mut dyn Scheduler,
     st: &mut SimState,
     cfg: &SimConfig,
     until: f64,
 ) {
+    debug_assert!(
+        routes.map(|r| r.is_current(&decs.graph)).unwrap_or(true),
+        "route table must be refreshed before re-entering the event loop"
+    );
     while let Some(ev) = st.heap.peek() {
         if ev.t > until {
             break;
@@ -830,11 +900,20 @@ fn run_until(
         let now = st.now;
         match ev.kind {
             EvKind::Release { source } => {
-                on_release(decs, net, perf, slow, sched, st, cfg, source, now)
+                on_release(decs, net, perf, slow, routes, sched, st, cfg, source, now)
             }
-            EvKind::Ready { frame, node } => {
-                assign_batch(decs, net, perf, slow, sched, st, cfg, &[(frame, node)], now)
-            }
+            EvKind::Ready { frame, node } => assign_batch(
+                decs,
+                net,
+                perf,
+                slow,
+                routes,
+                sched,
+                st,
+                cfg,
+                &[(frame, node)],
+                now,
+            ),
             EvKind::TransferDone {
                 frame,
                 node,
@@ -874,7 +953,7 @@ fn run_until(
                     .map(|r| r.epoch == epoch)
                     .unwrap_or(false);
                 if valid {
-                    on_finish(decs, net, perf, slow, sched, st, cfg, uid, now);
+                    on_finish(decs, net, perf, slow, routes, sched, st, cfg, uid, now);
                 }
             }
             EvKind::NetSet { link, gbps } => {
@@ -893,6 +972,7 @@ fn on_release(
     net: &mut Network,
     perf: &ProfileModel,
     slow: &CachedSlowdown,
+    routes: Option<&RouteTable>,
     sched: &mut dyn Scheduler,
     st: &mut SimState,
     cfg: &SimConfig,
@@ -902,7 +982,8 @@ fn on_release(
     if !st.src_active[source] {
         return; // the origin left: the source is dead
     }
-    let resolution = sched.frame_resolution(st.sources[source].origin, &decs.graph, net);
+    let resolution =
+        sched.frame_resolution(st.sources[source].origin, &decs.graph, net, routes);
     let (origin, budget, period, count, start_t, arrival) = {
         let s = &st.sources[source];
         (s.origin, s.budget_s, s.period_s, s.count, s.start_t, s.arrival)
@@ -973,7 +1054,7 @@ fn on_release(
     // roots are ready immediately
     let ready: Vec<(usize, usize)> = roots.into_iter().map(|r| (fidx, r)).collect();
     if cfg.grouped && ready.len() > 1 {
-        assign_batch(decs, net, perf, slow, sched, st, cfg, &ready, now);
+        assign_batch(decs, net, perf, slow, routes, sched, st, cfg, &ready, now);
     } else {
         for (f, r) in ready {
             st.push(now, EvKind::Ready { frame: f, node: r });
@@ -991,6 +1072,7 @@ fn assign_batch(
     net: &mut Network,
     perf: &ProfileModel,
     slow: &CachedSlowdown,
+    routes: Option<&RouteTable>,
     sched: &mut dyn Scheduler,
     st: &mut SimState,
     cfg: &SimConfig,
@@ -1023,7 +1105,8 @@ fn assign_batch(
         let origin = st.frames[fidx].origin;
         let data_dev = st.frames[fidx].data_dev[node];
         let mut r = {
-            let tr = Traverser::new(slow, perf, &*net);
+            let mut tr = Traverser::new(&decs.graph, slow, perf, &*net);
+            tr.routes = routes;
             sched.assign(&tr, &spec, origin, data_dev, now, &st.loads)
         };
         if grouped {
@@ -1060,7 +1143,8 @@ fn assign_batch(
                     .filter(|&d| decs.is_active(d))
                     .collect();
                 let be = {
-                    let tr = Traverser::new(slow, perf, &*net);
+                    let mut tr = Traverser::new(&decs.graph, slow, perf, &*net);
+                    tr.routes = routes;
                     best_effort(&tr, &spec, origin, data_dev, &all, now, &st.loads)
                 };
                 r.overhead.add(&be.overhead);
@@ -1088,7 +1172,7 @@ fn assign_batch(
         st.metrics.traverser_calls += oh.traverser_calls as u64;
 
         let dev = decs.graph.device_of(pu).unwrap_or(origin);
-        if std::env::var("HEYE_TRACE_ASSIGN").is_ok() && now < 0.2 {
+        if trace_assign() && now < 0.2 {
             eprintln!(
                 "ASSIGN t={:.3} origin={} {} -> {} (pred {:.1}ms, deadline {:.1}ms, degraded={})",
                 now,
@@ -1113,34 +1197,27 @@ fn assign_batch(
                 .or_insert(0) += 1;
         }
 
-        // input transfer from where the data lives
+        // input transfer from where the data lives. Zero-byte payloads
+        // still pay the route's propagation latency when crossing devices
+        // — the hand-off message is not free just because it is empty.
+        // Route resolution is a table lookup under `route_cache` (the
+        // default); the Dijkstra fallback stays byte-identical.
         let from_dev = data_dev;
-        let bytes = spec.input_bytes;
-        let (delay, route) = if from_dev == dev || bytes <= 0.0 {
-            (
-                0.0,
-                Route {
-                    links: Vec::new(),
-                    latency_s: 0.0,
-                },
-            )
+        let bytes = spec.input_bytes.max(0.0);
+        let (delay, route) = if from_dev == dev {
+            (0.0, Route::local())
         } else {
-            match net.route(&decs.graph, from_dev, dev) {
-                Some(route) => (net.transfer_time_s(&decs.graph, &route, bytes), route),
-                None => (
-                    f64::INFINITY,
-                    Route {
-                        links: Vec::new(),
-                        latency_s: 0.0,
-                    },
-                ),
-            }
+            let netr = &*net;
+            netr.with_route(&decs.graph, routes, from_dev, dev, |route| {
+                (netr.transfer_time_s(&decs.graph, route, bytes), route.clone())
+            })
+            .unwrap_or((f64::INFINITY, Route::local()))
         };
         if !delay.is_finite() {
             st.frames[fidx].degraded = true;
             continue;
         }
-        if std::env::var("HEYE_TRACE_XFER").is_ok() && delay > 0.02 {
+        if trace_xfer() && delay > 0.02 {
             eprintln!(
                 "XFER t={:.3} {} {}B from={} to={} delay={:.1}ms",
                 now,
@@ -1276,7 +1353,7 @@ fn start_task(
             deadline_abs,
         },
     );
-    admit_or_queue(slow, st, uid, now);
+    admit_or_queue(decs, slow, st, uid, now);
 }
 
 /// Maximum concurrently *admitted* tenants per PU class; beyond this,
@@ -1294,12 +1371,12 @@ fn tenant_cap(class: crate::hwgraph::PuClass) -> usize {
 }
 
 /// Admit `uid` onto its PU if below the tenant cap, else queue it.
-fn admit_or_queue(slow: &CachedSlowdown, st: &mut SimState, uid: u64, now: f64) {
+fn admit_or_queue(decs: &Decs, slow: &CachedSlowdown, st: &mut SimState, uid: u64, now: f64) {
     let (pu, dev) = {
         let r = &st.running[&uid];
         (r.pu, r.dev)
     };
-    let class = slow.graph().pu_class(pu).expect("is a pu");
+    let class = decs.graph.pu_class(pu).expect("is a pu");
     let cur = st.tenants.get(&pu).copied().unwrap_or(0);
     if cur >= tenant_cap(class) {
         st.pu_queue.entry(pu).or_default().push(uid);
@@ -1323,6 +1400,7 @@ fn on_finish(
     net: &mut Network,
     perf: &ProfileModel,
     slow: &CachedSlowdown,
+    routes: Option<&RouteTable>,
     sched: &mut dyn Scheduler,
     st: &mut SimState,
     cfg: &SimConfig,
@@ -1369,7 +1447,7 @@ fn on_finish(
                 st.queued_by_dev.remove(&d);
             }
         }
-        admit_or_queue(slow, st, next_uid, now);
+        admit_or_queue(decs, slow, st, next_uid, now);
     }
 
     let elapsed = now - r.start_t;
@@ -1414,7 +1492,7 @@ fn on_finish(
         }
     }
     if cfg.grouped && newly_ready.len() > 1 {
-        assign_batch(decs, net, perf, slow, sched, st, cfg, &newly_ready, now);
+        assign_batch(decs, net, perf, slow, routes, sched, st, cfg, &newly_ready, now);
     } else {
         for (f, n) in newly_ready {
             st.push(now, EvKind::Ready { frame: f, node: n });
@@ -1671,6 +1749,58 @@ mod tests {
         assert!(served > 0, "newcomer frames must be served");
     }
 
+    /// A zero-output producer feeding a remote consumer: the consumer's
+    /// input transfer carries zero bytes, but crossing devices still pays
+    /// the route's propagation latency (it used to be silently free).
+    #[test]
+    fn zero_byte_remote_handoff_pays_route_latency() {
+        use crate::task::TaskSpec;
+        let decs = Decs::build(&DecsSpec::validation_pair());
+        let origin = decs.edge_devices[0];
+        let server = decs.servers[0];
+        let mut sim = Simulation::new(decs);
+        let expected = sim
+            .net
+            .route(&sim.decs.graph, origin, server)
+            .expect("reachable")
+            .latency_s;
+        assert!(expected > 0.0);
+        let mut sched = heye(&sim.decs);
+        let src = FrameSource {
+            origin,
+            period_s: 1.0,
+            budget_s: 1.0,
+            // capture (pinned to the origin) produces nothing; the render
+            // is GPU-bound with a deadline the Orin Nano cannot meet, so
+            // it must land on the server — with a zero-byte input
+            make_cfg: Box::new(|_| {
+                let mut cfg = Cfg::new();
+                let cap = cfg.add(
+                    TaskSpec::new(TaskKind::Capture).io(0.0, 0.0).deadline(0.5),
+                );
+                let render =
+                    cfg.add(TaskSpec::new(TaskKind::Render).io(0.0, 1e6).deadline(0.02));
+                cfg.dep(cap, render);
+                cfg
+            }),
+            start_t: 0.0,
+            count: Some(1),
+            arrival: ArrivalModel::Periodic,
+        };
+        let wl = Workload { sources: vec![src] };
+        let cfg = SimConfig::default().horizon(0.9).seed(11).noise(0.0);
+        let m = sim.run(&mut sched, wl, vec![], vec![], &cfg);
+        assert_eq!(m.frames.len(), 1);
+        let f = &m.frames[0];
+        let placed_remote = m.tasks_on_server > 0;
+        assert!(placed_remote, "render must escalate off the Orin Nano");
+        assert!(
+            f.comm_s >= expected - 1e-15,
+            "zero-byte hand-off must pay {expected}s of latency, charged {}",
+            f.comm_s
+        );
+    }
+
     #[test]
     fn deterministic_given_seed() {
         let run = || {
@@ -1802,7 +1932,6 @@ mod tests {
                 .map(|f| (f.release_t * 1e9) as u64)
                 .collect::<Vec<_>>()
         );
-        let _ = rel(&periodic);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! line.
 
 use crate::hwgraph::{HwGraph, NodeId};
-use crate::netsim::Network;
+use crate::netsim::{Network, RouteTable};
 use crate::orchestrator::{Loads, MapResult, Orchestrator, Overhead};
 use crate::task::TaskSpec;
 use crate::traverser::Traverser;
@@ -32,7 +32,16 @@ pub trait Scheduler {
 
     /// Frame resolution in (0, 1] for the next frame of `origin` — CloudVR
     /// shrinks this under bandwidth pressure; everyone else stays at 1.0.
-    fn frame_resolution(&mut self, _origin: NodeId, _g: &HwGraph, _net: &Network) -> f64 {
+    /// `routes` is the engine's structure-versioned route cache (None when
+    /// disabled); implementations that price transfers should prefer it
+    /// over per-call `Network::route`.
+    fn frame_resolution(
+        &mut self,
+        _origin: NodeId,
+        _g: &HwGraph,
+        _net: &Network,
+        _routes: Option<&RouteTable>,
+    ) -> f64 {
         1.0
     }
 
@@ -130,7 +139,7 @@ pub fn best_effort(
     now: f64,
     loads: &Loads,
 ) -> MapResult {
-    let g = tr.slow.graph();
+    let g = tr.graph();
     let mut cfg = crate::task::Cfg::new();
     cfg.add(task.clone());
     // two tiers of degradation: prefer placements that only sacrifice the

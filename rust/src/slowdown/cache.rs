@@ -9,20 +9,40 @@
 //! evaluates exactly the same math as the `SlowdownStack` default models
 //! (a unit test asserts equivalence).
 //!
-//! The eager tables make the oracle plain read-only data: no interior
-//! mutability, so `CachedSlowdown` is `Sync` and one instance serves every
-//! worker of the parallel candidate-evaluation pool concurrently.
-//! Construction stays cheap on fleet-scale graphs because the per-pair
-//! discovery uses device-local compute paths
-//! ([`crate::hwgraph::HwGraph::compute_path_local`]) instead of
-//! whole-graph SSSP.
+//! The oracle **owns** its tables (no graph borrow), so a simulation keeps
+//! one instance alive across structural churn: a device join inserts the
+//! newcomer's PU rows and same-device pairs via
+//! [`CachedSlowdown::on_device_join`], a leave removes them via
+//! [`CachedSlowdown::on_device_leave`] — O(one device's PUs²), not
+//! O(system). Construction-from-scratch is counted by a process-wide
+//! [`rebuild_count`] so harnesses and tests can assert that churn no longer
+//! triggers full reconstructions. The tables are plain read-only data
+//! between updates: no interior mutability, so `CachedSlowdown` is `Sync`
+//! and one instance serves every worker of the parallel
+//! candidate-evaluation pool concurrently. Per-pair discovery uses
+//! device-local compute paths
+//! ([`crate::hwgraph::HwGraph::compute_path_local`]) instead of whole-graph
+//! SSSP, which keeps both the eager build and the per-join delta cheap on
+//! fleet-scale graphs.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::hwgraph::{HwGraph, NodeId, PuClass, ResourceKind};
 use crate::perfmodel::calibration;
 
 use super::{specificity, Placed};
+
+/// Process-wide count of from-scratch [`CachedSlowdown`] constructions.
+/// Delta updates do not count — so a scripted churn run that stays at one
+/// construction proves the oracle was updated in place. Diagnostic only
+/// (relaxed ordering, never reset).
+static REBUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Total eager oracle constructions so far in this process.
+pub fn rebuild_count() -> u64 {
+    REBUILDS.load(Ordering::Relaxed)
+}
 
 #[derive(Debug, Clone, Copy)]
 struct PuInfo {
@@ -33,10 +53,11 @@ struct PuInfo {
     device: NodeId,
 }
 
-/// Precomputed slowdown oracle bound to one graph. Plain data after
-/// construction — shareable across scheduler worker threads.
-pub struct CachedSlowdown<'g> {
-    g: &'g HwGraph,
+/// Precomputed slowdown oracle for one graph lineage. Owns its tables —
+/// shareable across scheduler worker threads, delta-updatable on churn.
+pub struct CachedSlowdown {
+    /// the graph epoch the tables reflect
+    epoch: u64,
     /// per-node PU info, indexed by `NodeId` (None for non-PU nodes)
     pu_info: Vec<Option<PuInfo>>,
     /// nearest shared resource kind per same-device PU pair, keyed by
@@ -47,62 +68,106 @@ pub struct CachedSlowdown<'g> {
     models: Vec<String>,
 }
 
-impl<'g> CachedSlowdown<'g> {
-    pub fn new(g: &'g HwGraph) -> Self {
-        let mut pu_info: Vec<Option<PuInfo>> = vec![None; g.node_count()];
-        let mut models: Vec<String> = Vec::new();
-        let mut device_pus: BTreeMap<NodeId, Vec<NodeId>> = BTreeMap::new();
+impl CachedSlowdown {
+    pub fn new(g: &HwGraph) -> Self {
+        REBUILDS.fetch_add(1, Ordering::Relaxed);
+        let mut slow = Self {
+            epoch: g.epoch(),
+            pu_info: vec![None; g.node_count()],
+            pair_kind: BTreeMap::new(),
+            device_pus: BTreeMap::new(),
+            models: Vec::new(),
+        };
+        let mut devices = std::collections::BTreeSet::new();
         for node in g.nodes() {
-            let class = match g.pu_class(node.id) {
-                Some(c) => c,
-                None => continue,
-            };
-            let device = g.device_of(node.id).unwrap_or(node.id);
-            let model = g.device_model_of(node.id).unwrap_or("").to_string();
-            let model_idx = match models.iter().position(|m| *m == model) {
+            if g.pu_class(node.id).is_some() {
+                devices.insert(g.device_of(node.id).unwrap_or(node.id));
+            }
+        }
+        for dev in devices {
+            slow.insert_device(g, dev);
+        }
+        slow
+    }
+
+    /// Insert one device's PU rows and same-device pairs (shared by the
+    /// eager build and the join delta).
+    fn insert_device(&mut self, g: &HwGraph, dev: NodeId) {
+        if self.pu_info.len() < g.node_count() {
+            self.pu_info.resize(g.node_count(), None);
+        }
+        let pus = g.pus_in(dev);
+        if pus.is_empty() {
+            return;
+        }
+        for &pu in &pus {
+            let class = g.pu_class(pu).expect("pus_in returns PUs");
+            let model = g.device_model_of(pu).unwrap_or("").to_string();
+            let model_idx = match self.models.iter().position(|m| *m == model) {
                 Some(i) => i as u32,
                 None => {
-                    models.push(model);
-                    (models.len() - 1) as u32
+                    self.models.push(model);
+                    (self.models.len() - 1) as u32
                 }
             };
-            pu_info[node.id.0 as usize] = Some(PuInfo {
+            self.pu_info[pu.0 as usize] = Some(PuInfo {
                 class,
                 model_idx,
-                device,
+                device: dev,
             });
-            device_pus.entry(device).or_default().push(node.id);
         }
         // same-device pairwise nearest-shared-resource discovery from
         // device-local compute paths (one tiny Dijkstra per PU, not one
         // whole-graph SSSP per pair)
-        let mut pair_kind = BTreeMap::new();
-        for pus in device_pus.values() {
-            let paths: Vec<Vec<NodeId>> =
-                pus.iter().map(|&pu| g.compute_path_local(pu)).collect();
-            for (i, &a) in pus.iter().enumerate() {
-                for (j, &b) in pus.iter().enumerate().skip(i + 1) {
-                    let kind = paths[i]
-                        .iter()
-                        .filter(|n| paths[j].contains(n))
-                        .filter_map(|&n| g.resource_kind(n))
-                        .min_by_key(|k| specificity(*k));
-                    let key = if a.0 <= b.0 { (a.0, b.0) } else { (b.0, a.0) };
-                    pair_kind.insert(key, kind);
-                }
+        let paths: Vec<Vec<NodeId>> = pus.iter().map(|&pu| g.compute_path_local(pu)).collect();
+        for (i, &a) in pus.iter().enumerate() {
+            for (j, &b) in pus.iter().enumerate().skip(i + 1) {
+                let kind = paths[i]
+                    .iter()
+                    .filter(|n| paths[j].contains(n))
+                    .filter_map(|&n| g.resource_kind(n))
+                    .min_by_key(|k| specificity(*k));
+                let key = if a.0 <= b.0 { (a.0, b.0) } else { (b.0, a.0) };
+                self.pair_kind.insert(key, kind);
             }
         }
-        Self {
-            g,
-            pu_info,
-            pair_kind,
-            device_pus,
-            models,
-        }
+        self.device_pus.insert(dev, pus);
     }
 
-    pub fn graph(&self) -> &'g HwGraph {
-        self.g
+    /// Delta update for a device that joined at runtime: insert its PU rows
+    /// and same-device pairs, and catch the table up to the graph's new
+    /// structural epoch. O(the newcomer's PUs²) — never a full rebuild.
+    pub fn on_device_join(&mut self, g: &HwGraph, dev: NodeId) {
+        self.insert_device(g, dev);
+        self.epoch = g.epoch();
+    }
+
+    /// Delta update for a device that left or failed: drop its PU rows and
+    /// pairs. A deactivation never mutates the graph (node ids stay
+    /// stable), so the epoch is unchanged — this only prunes state nothing
+    /// will query again (the engine rejects placements on inactive
+    /// devices).
+    pub fn on_device_leave(&mut self, g: &HwGraph, dev: NodeId) {
+        let pus = match self.device_pus.remove(&dev) {
+            Some(p) => p,
+            None => return,
+        };
+        for &pu in &pus {
+            self.pu_info[pu.0 as usize] = None;
+        }
+        for (i, &a) in pus.iter().enumerate() {
+            for &b in pus.iter().skip(i + 1) {
+                let key = if a.0 <= b.0 { (a.0, b.0) } else { (b.0, a.0) };
+                self.pair_kind.remove(&key);
+            }
+        }
+        self.epoch = g.epoch();
+    }
+
+    /// The graph epoch the tables reflect (delta updates keep this
+    /// current).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// The PUs of `dev`, ascending id — same contents and order as
@@ -119,7 +184,7 @@ impl<'g> CachedSlowdown<'g> {
             .get(pu.0 as usize)
             .copied()
             .flatten()
-            .unwrap_or_else(|| panic!("{} is not a PU", self.g.node(pu).name))
+            .unwrap_or_else(|| panic!("node {} is not a (known) PU", pu.0))
     }
 
     /// Total slowdown multiplier (>= 1): multi-tenancy x memory contention.
@@ -166,10 +231,46 @@ impl<'g> CachedSlowdown<'g> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hwgraph::presets::{Decs, DecsSpec};
+    use crate::hwgraph::presets::{Decs, DecsSpec, ORIN_NANO, XAVIER_NX};
     use crate::slowdown::SlowdownStack;
     use crate::task::TaskKind;
     use crate::util::rng::Rng;
+
+    const KINDS: [TaskKind; 7] = [
+        TaskKind::Render,
+        TaskKind::Encode,
+        TaskKind::Reproject,
+        TaskKind::Svm,
+        TaskKind::Knn,
+        TaskKind::MatMul,
+        TaskKind::Display,
+    ];
+
+    /// Random-placement factor equality between two oracles over the
+    /// *active* devices of `decs`.
+    fn assert_factors_match(decs: &Decs, a: &CachedSlowdown, b: &CachedSlowdown, seed: u64) {
+        let g = &decs.graph;
+        let mut pus: Vec<crate::hwgraph::NodeId> = Vec::new();
+        for &d in decs.edge_devices.iter().chain(decs.servers.iter()) {
+            if decs.is_active(d) {
+                pus.extend(g.pus_in(d));
+            }
+        }
+        let mut rng = Rng::new(seed);
+        for _ in 0..200 {
+            let target = Placed::new(*rng.choice(&KINDS), *rng.choice(&pus));
+            let n_co = rng.below(5);
+            let co: Vec<Placed> = (0..n_co)
+                .map(|_| Placed::new(*rng.choice(&KINDS), *rng.choice(&pus)))
+                .collect();
+            let fa = a.factor(&target, &co);
+            let fb = b.factor(&target, &co);
+            assert!(
+                (fa - fb).abs() < 1e-12,
+                "mismatch: {fa} vs {fb} target={target:?} co={co:?}"
+            );
+        }
+    }
 
     #[test]
     fn cached_matches_uncached_on_random_placements() {
@@ -177,25 +278,16 @@ mod tests {
         let g = &decs.graph;
         let cached = CachedSlowdown::new(g);
         let stack = SlowdownStack::new();
-        let kinds = [
-            TaskKind::Render,
-            TaskKind::Encode,
-            TaskKind::Reproject,
-            TaskKind::Svm,
-            TaskKind::Knn,
-            TaskKind::MatMul,
-            TaskKind::Display,
-        ];
-        let mut pus: Vec<NodeId> = Vec::new();
+        let mut pus: Vec<crate::hwgraph::NodeId> = Vec::new();
         for &d in decs.edge_devices.iter().chain(decs.servers.iter()) {
             pus.extend(g.pus_in(d));
         }
         let mut rng = Rng::new(99);
         for _ in 0..200 {
-            let target = Placed::new(*rng.choice(&kinds), *rng.choice(&pus));
+            let target = Placed::new(*rng.choice(&KINDS), *rng.choice(&pus));
             let n_co = rng.below(5);
             let co: Vec<Placed> = (0..n_co)
-                .map(|_| Placed::new(*rng.choice(&kinds), *rng.choice(&pus)))
+                .map(|_| Placed::new(*rng.choice(&KINDS), *rng.choice(&pus)))
                 .collect();
             let a = cached.factor(&target, &co);
             let b = stack.factor(g, &target, &co);
@@ -234,5 +326,56 @@ mod tests {
         }
         // unknown node: empty, not a panic
         assert!(cached.pus_of(decs.root).is_empty());
+    }
+
+    /// The core coherence property: a scripted join+leave+join sequence
+    /// applied as delta updates must leave the oracle equivalent to a
+    /// from-scratch rebuild, at the table level and in every factor it can
+    /// be asked for on active devices — and the deltas must not count as
+    /// rebuilds.
+    #[test]
+    fn delta_updates_match_from_scratch_rebuild() {
+        let mut decs = Decs::build(&DecsSpec::paper_vr());
+        let mut slow = CachedSlowdown::new(&decs.graph);
+
+        // join
+        let joined = decs.join_edge(XAVIER_NX, 10.0);
+        slow.on_device_join(&decs.graph, joined);
+        assert_eq!(slow.epoch(), decs.graph.epoch());
+        let fresh = CachedSlowdown::new(&decs.graph);
+        assert_eq!(slow.pair_kind, fresh.pair_kind);
+        assert_eq!(slow.device_pus, fresh.device_pus);
+        assert_factors_match(&decs, &slow, &fresh, 7);
+
+        // leave (failure): the graph keeps the node, the oracle prunes it
+        let gone = decs.edge_devices[1];
+        decs.deactivate(gone);
+        slow.on_device_leave(&decs.graph, gone);
+        assert!(slow.pus_of(gone).is_empty());
+        let gone_pus = decs.graph.pus_in(gone);
+        assert!(slow
+            .pair_kind
+            .keys()
+            .all(|&(a, b)| !gone_pus.iter().any(|p| p.0 == a || p.0 == b)));
+        // a rebuild still sees the (deactivated) device in the graph; the
+        // factor equivalence is over active devices, where both agree
+        let fresh = CachedSlowdown::new(&decs.graph);
+        assert_factors_match(&decs, &slow, &fresh, 8);
+
+        // second join after the leave
+        let joined2 = decs.join_edge(ORIN_NANO, 10.0);
+        slow.on_device_join(&decs.graph, joined2);
+        assert_eq!(slow.epoch(), decs.graph.epoch());
+        let fresh = CachedSlowdown::new(&decs.graph);
+        assert_factors_match(&decs, &slow, &fresh, 9);
+        assert_eq!(slow.pus_of(joined2), decs.graph.pus_in(joined2).as_slice());
+
+        // double leave is a no-op
+        slow.on_device_leave(&decs.graph, gone);
+
+        // That the deltas perform no eager reconstruction is asserted on
+        // the process-wide rebuild counter where it can be measured without
+        // racing parallel tests: `tests/route_cache.rs` (behind its counter
+        // lock) and the per-cell assert in `benches/fig17_churn.rs`.
     }
 }

@@ -9,7 +9,7 @@
 
 pub mod cache;
 
-pub use cache::CachedSlowdown;
+pub use cache::{rebuild_count, CachedSlowdown};
 
 use crate::hwgraph::{HwGraph, NodeId, ResourceKind};
 use crate::perfmodel::calibration;

@@ -9,8 +9,8 @@
 //! begins and rates are re-evaluated. The Traverser performs NO scheduling —
 //! it evaluates the mapping the Orchestrator proposes.
 
-use crate::hwgraph::NodeId;
-use crate::netsim::Network;
+use crate::hwgraph::{HwGraph, NodeId};
+use crate::netsim::{Network, RouteTable};
 use crate::perfmodel::{PerfModel, Unit};
 use crate::slowdown::{CachedSlowdown, Placed};
 use crate::task::{Cfg, TaskId, TaskKind};
@@ -56,14 +56,22 @@ impl Prediction {
 
 /// The Traverser: borrows the system's models; cheap to construct.
 ///
-/// All three borrowed models are plain read-only data (`PerfModel` is
-/// `Send + Sync` by trait bound; [`CachedSlowdown`] precomputes its tables
-/// eagerly), so a `&Traverser` crosses the candidate-evaluation worker
-/// threads of [`crate::util::par`] freely.
+/// All borrowed models are plain read-only data (`PerfModel` is
+/// `Send + Sync` by trait bound; [`CachedSlowdown`] and [`RouteTable`]
+/// precompute their tables eagerly), so a `&Traverser` crosses the
+/// candidate-evaluation worker threads of [`crate::util::par`] freely.
+///
+/// `routes` is the structure-versioned route cache: when present (the
+/// simulator hot path), cross-device transfer times resolve with an O(1)
+/// table lookup; when absent, route resolution falls back to per-call
+/// Dijkstra through [`Network::route`] — both produce byte-identical
+/// routes (the table is built from the same SSSP).
 pub struct Traverser<'a> {
-    pub slow: &'a CachedSlowdown<'a>,
+    pub g: &'a HwGraph,
+    pub slow: &'a CachedSlowdown,
     pub perf: &'a dyn PerfModel,
     pub net: &'a Network,
+    pub routes: Option<&'a RouteTable>,
 }
 
 /// Reusable buffers for one worker's [`Traverser::predict_with`] calls:
@@ -105,14 +113,56 @@ struct Ent {
 }
 
 impl<'a> Traverser<'a> {
-    pub fn new(slow: &'a CachedSlowdown<'a>, perf: &'a dyn PerfModel, net: &'a Network) -> Self {
-        Self { slow, perf, net }
+    pub fn new(
+        g: &'a HwGraph,
+        slow: &'a CachedSlowdown,
+        perf: &'a dyn PerfModel,
+        net: &'a Network,
+    ) -> Self {
+        Self {
+            g,
+            slow,
+            perf,
+            net,
+            routes: None,
+        }
+    }
+
+    /// Resolve cross-device routes through `routes` instead of per-call
+    /// Dijkstra (the simulator hot path). The table must be current for
+    /// this Traverser's graph.
+    pub fn with_routes(mut self, routes: &'a RouteTable) -> Self {
+        debug_assert!(routes.is_current(self.g), "stale route table");
+        self.routes = Some(routes);
+        self
+    }
+
+    /// The hardware graph every prediction runs over.
+    pub fn graph(&self) -> &'a HwGraph {
+        self.g
+    }
+
+    /// Transfer seconds for `bytes` of input moving `from_dev` → `to_dev`
+    /// under current network contention: route latency plus volume over
+    /// the bottleneck share. Zero for same-device; also charged for
+    /// zero-byte payloads when remote — a cross-device hand-off always
+    /// pays link propagation, even when the message is empty. Infinite
+    /// when unreachable.
+    pub fn transfer_delay_s(&self, from_dev: NodeId, to_dev: NodeId, bytes: f64) -> f64 {
+        if from_dev == to_dev {
+            return 0.0;
+        }
+        self.net
+            .with_route(self.g, self.routes, from_dev, to_dev, |route| {
+                self.net.transfer_time_s(self.g, route, bytes)
+            })
+            .unwrap_or(f64::INFINITY)
     }
 
     /// Standalone seconds of `cfg` node `i` on `pu`, or None if that PU
     /// class cannot run it.
     pub fn standalone(&self, cfg: &Cfg, i: usize, pu: NodeId) -> Option<f64> {
-        let g = self.slow.graph();
+        let g = self.g;
         let class = g.pu_class(pu)?;
         let model = g.device_model_of(pu)?;
         self.perf
@@ -148,7 +198,7 @@ impl<'a> Traverser<'a> {
         t0: f64,
     ) -> Option<Prediction> {
         assert_eq!(mapping.len(), cfg.len(), "mapping arity");
-        let g = self.slow.graph();
+        let g = self.g;
         let n = cfg.len();
 
         let Scratch {
@@ -362,14 +412,9 @@ impl<'a> Traverser<'a> {
     ) {
         let to_dev = g.device_of(e.pu).unwrap_or(from_dev);
         let bytes = cfg.nodes[i].spec.input_bytes;
-        let delay = if to_dev == from_dev || bytes <= 0.0 {
-            0.0
-        } else {
-            match self.net.route(g, from_dev, to_dev) {
-                Some(route) => self.net.transfer_time_s(g, &route, bytes),
-                None => f64::INFINITY,
-            }
-        };
+        // zero-byte remote hand-offs still pay route latency (the engine
+        // charges it too, so prediction and execution stay aligned)
+        let delay = self.transfer_delay_s(from_dev, to_dev, bytes.max(0.0));
         e.comm_s = delay;
         if delay <= 0.0 {
             e.state = St::Running;
@@ -412,7 +457,7 @@ mod tests {
     fn parallel_region_beats_serial_sum_despite_contention() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let cfg = workloads::mining_cfg(1.0);
         let e0 = ctx.decs.edge_devices[0];
         let mapping = vec![
@@ -435,7 +480,7 @@ mod tests {
     fn remote_mapping_pays_communication() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let mut cfg = Cfg::new();
         cfg.add(TaskSpec::new(TaskKind::Svm).io(8.0e6, 64.0).deadline(1.0));
         let e0 = ctx.decs.edge_devices[0];
@@ -454,7 +499,7 @@ mod tests {
     fn active_tasks_slow_the_cfg_and_vice_versa() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let mut cfg = Cfg::new();
         cfg.add(TaskSpec::new(TaskKind::DnnInfer).deadline(10.0));
         let e0 = ctx.decs.edge_devices[0];
@@ -479,7 +524,7 @@ mod tests {
     fn deadline_violations_are_detected() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let mut cfg = Cfg::new();
         cfg.add(TaskSpec::new(TaskKind::Knn).deadline(1e-6)); // impossible
         let e0 = ctx.decs.edge_devices[0];
@@ -506,7 +551,7 @@ mod tests {
     fn infeasible_mapping_returns_none() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let mut cfg = Cfg::new();
         cfg.add(TaskSpec::new(TaskKind::Render)); // GPU-only
         let e0 = ctx.decs.edge_devices[0];
@@ -519,7 +564,7 @@ mod tests {
     fn vr_pipeline_is_time_ordered_and_misses_local_render() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let cfg = workloads::vr_cfg(30.0, 1.0, None);
         let e0 = ctx.decs.edge_devices[0];
         let m = |n: &str| pu(&ctx.decs, n);
@@ -540,11 +585,62 @@ mod tests {
         assert!(!p.cfg_deadlines_ok);
     }
 
+    /// A zero-byte input placed remotely still pays the route's propagation
+    /// latency — only the bandwidth term vanishes.
+    #[test]
+    fn zero_byte_remote_transfer_pays_route_latency() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
+        let e0 = ctx.decs.edge_devices[0];
+        let s0 = ctx.decs.servers[0];
+        let expected = ctx
+            .net
+            .route(&ctx.decs.graph, e0, s0)
+            .expect("reachable")
+            .latency_s;
+        assert!(expected > 0.0);
+        let d = tr.transfer_delay_s(e0, s0, 0.0);
+        assert!((d - expected).abs() < 1e-15, "{d} vs {expected}");
+        assert_eq!(tr.transfer_delay_s(e0, e0, 0.0), 0.0);
+        // and through a prediction: a zero-input task mapped remotely
+        // starts only after the propagation delay
+        let mut cfg = Cfg::new();
+        cfg.add(TaskSpec::new(TaskKind::Svm).io(0.0, 64.0).deadline(1.0));
+        let p = tr
+            .predict(&cfg, &[pu(&ctx.decs, "server0.gpu")], e0, &[], 0.0)
+            .unwrap();
+        assert!((p.comm_s[0] - expected).abs() < 1e-15);
+        assert!(p.start[0] >= expected - 1e-15);
+    }
+
+    /// Predictions with the route table attached are byte-identical to
+    /// per-call Dijkstra resolution.
+    #[test]
+    fn route_table_predictions_match_dijkstra() {
+        let ctx = Ctx::new();
+        let slow = CachedSlowdown::new(&ctx.decs.graph);
+        let table = crate::netsim::RouteTable::new(&ctx.decs.graph);
+        let plain = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
+        let cached = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net)
+            .with_routes(&table);
+        let mut cfg = Cfg::new();
+        cfg.add(TaskSpec::new(TaskKind::Svm).io(8.0e6, 64.0).deadline(1.0));
+        let e0 = ctx.decs.edge_devices[0];
+        for target in ["edge0.gpu", "edge1.gpu", "server0.gpu", "server2.gpu"] {
+            let mapping = vec![pu(&ctx.decs, target)];
+            let a = plain.predict(&cfg, &mapping, e0, &[], 0.0).unwrap();
+            let b = cached.predict(&cfg, &mapping, e0, &[], 0.0).unwrap();
+            assert_eq!(a.comm_s[0].to_bits(), b.comm_s[0].to_bits(), "{target}");
+            assert_eq!(a.finish[0].to_bits(), b.finish[0].to_bits(), "{target}");
+        }
+    }
+
     #[test]
     fn makespan_monotone_in_active_load() {
         let ctx = Ctx::new();
         let slow = CachedSlowdown::new(&ctx.decs.graph);
-        let tr = Traverser::new(&slow, &ctx.perf, &ctx.net);
+        let tr = Traverser::new(&ctx.decs.graph, &slow, &ctx.perf, &ctx.net);
         let cfg = workloads::mining_cfg(1.0);
         let e0 = ctx.decs.edge_devices[0];
         let m = |n: &str| pu(&ctx.decs, n);

@@ -83,6 +83,12 @@ impl Welford {
 }
 
 /// Sample collector with exact percentiles (sorts on query).
+///
+/// NaN samples are dropped at insertion: one poisoned latency must yield a
+/// finite summary over the remaining samples, not abort the whole run (the
+/// sort previously `unwrap`ped `partial_cmp` and panicked on NaN) or smear
+/// NaN through the mean and the top percentiles. Infinities are kept —
+/// they order fine and legitimately represent unreachable placements.
 #[derive(Debug, Clone, Default)]
 pub struct Samples {
     xs: Vec<f64>,
@@ -95,13 +101,17 @@ impl Samples {
     }
 
     pub fn push(&mut self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
         self.xs.push(x);
         self.sorted = false;
     }
 
     pub fn extend(&mut self, xs: &[f64]) {
-        self.xs.extend_from_slice(xs);
-        self.sorted = false;
+        for &x in xs {
+            self.push(x);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -122,7 +132,9 @@ impl Samples {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: never panics — NaN is filtered at push, but a
+            // total order keeps the sort safe under any future float
+            self.xs.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }
@@ -251,6 +263,27 @@ mod tests {
         assert!((sum.mean - 50.5).abs() < 1e-12);
         assert!((sum.p50 - 50.5).abs() < 1.0);
         assert!(sum.p95 > 94.0 && sum.p95 < 97.0);
+    }
+
+    /// Regression: a NaN latency sample used to abort the whole run via
+    /// `partial_cmp(...).unwrap()` in the percentile sort. It must instead
+    /// yield a finite summary over the valid samples.
+    #[test]
+    fn nan_sample_yields_finite_summary_not_panic() {
+        let mut s = Samples::new();
+        s.extend(&[0.010, f64::NAN, 0.030, 0.020]);
+        let sum = s.summary();
+        assert_eq!(sum.n, 3, "the NaN sample is dropped");
+        assert!(sum.mean.is_finite() && (sum.mean - 0.020).abs() < 1e-12);
+        assert!(sum.p50.is_finite() && (sum.p50 - 0.020).abs() < 1e-12);
+        assert!(sum.p95.is_finite() && sum.max.is_finite());
+        assert_eq!(sum.max, 0.030);
+        // all-NaN degenerates to the empty summary, still finite
+        let mut all_nan = Samples::new();
+        all_nan.push(f64::NAN);
+        let sum = all_nan.summary();
+        assert_eq!(sum.n, 0);
+        assert!(sum.mean.is_finite() && sum.p99.is_finite());
     }
 
     #[test]

@@ -147,7 +147,7 @@ fn placement_respects_candidate_sets_and_routing() {
         let perf = ProfileModel::new();
         let net = Network::new();
         let slow = CachedSlowdown::new(&decs.graph);
-        let tr = Traverser::new(&slow, &perf, &net);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
         let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
         let origin = *rng.choice(&decs.edge_devices);
         let task = random_task(rng);
@@ -182,7 +182,7 @@ fn accepted_placements_preserve_all_constraints() {
         let perf = ProfileModel::new();
         let net = Network::new();
         let slow = CachedSlowdown::new(&decs.graph);
-        let tr = Traverser::new(&slow, &perf, &net);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
         let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
         let origin = *rng.choice(&decs.edge_devices);
         let task = random_task(rng);
@@ -215,7 +215,7 @@ fn pinned_tasks_stay_on_origin() {
         let perf = ProfileModel::new();
         let net = Network::new();
         let slow = CachedSlowdown::new(&decs.graph);
-        let tr = Traverser::new(&slow, &perf, &net);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
         let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
         let origin = *rng.choice(&decs.edge_devices);
         let kind = *rng.choice(&[TaskKind::Capture, TaskKind::Display, TaskKind::SensorRead]);
@@ -244,7 +244,7 @@ fn overhead_accounting_is_consistent() {
         let perf = ProfileModel::new();
         let net = Network::new();
         let slow = CachedSlowdown::new(&decs.graph);
-        let tr = Traverser::new(&slow, &perf, &net);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
         let mut orc = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
         let origin = *rng.choice(&decs.edge_devices);
         let task = random_task(rng);
@@ -278,7 +278,7 @@ fn policies_agree_on_feasibility() {
         let perf = ProfileModel::new();
         let net = Network::new();
         let slow = CachedSlowdown::new(&decs.graph);
-        let tr = Traverser::new(&slow, &perf, &net);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
         let origin = *rng.choice(&decs.edge_devices);
         let task = random_task(rng);
         let loads = random_loads(rng, &decs, 0.0);
@@ -305,7 +305,7 @@ fn traverser_monotone_in_active_load() {
         let perf = ProfileModel::new();
         let net = Network::new();
         let slow = CachedSlowdown::new(&decs.graph);
-        let tr = Traverser::new(&slow, &perf, &net);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
         let origin = *rng.choice(&decs.edge_devices);
         let pus = decs.graph.pus_in(origin);
         let task = random_task(rng);

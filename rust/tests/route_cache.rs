@@ -1,0 +1,176 @@
+//! Cache-coherence tests for the structure-versioned caching layer
+//! (`netsim::RouteTable` + the owned, delta-updated
+//! `slowdown::CachedSlowdown`): placements and metrics must be
+//! byte-identical with the caches enabled vs disabled — across churn and
+//! at any parallelism — and the caches must actually eliminate the
+//! per-transfer Dijkstra and per-churn oracle rebuilds they exist to
+//! eliminate.
+//!
+//! The Dijkstra/rebuild counters are process-wide atomics, so every test
+//! in this binary serializes on one lock to keep the deltas attributable.
+
+use std::sync::Mutex;
+
+use heye::hwgraph::sssp_invocations;
+use heye::platform::{Platform, WorkloadSpec};
+use heye::scenario::Scenario;
+use heye::sim::{RunMetrics, SimConfig};
+use heye::slowdown::rebuild_count;
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Bit-level equality of everything deterministic in a run's metrics.
+/// (`sched_compute_s` and the per-frame `sched_s` fold in *measured* host
+/// wall-clock for the constraint checks by design, so those two are the
+/// only fields legitimately allowed to differ between runs.)
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.frames.len(), b.frames.len(), "{what}: frame count");
+    for (i, (x, y)) in a.frames.iter().zip(b.frames.iter()).enumerate() {
+        assert_eq!(x.origin, y.origin, "{what}: frame {i} origin");
+        assert_eq!(
+            x.release_t.to_bits(),
+            y.release_t.to_bits(),
+            "{what}: frame {i} release"
+        );
+        assert_eq!(
+            x.finish_t.to_bits(),
+            y.finish_t.to_bits(),
+            "{what}: frame {i} finish"
+        );
+        assert_eq!(
+            x.latency_s.to_bits(),
+            y.latency_s.to_bits(),
+            "{what}: frame {i} latency"
+        );
+        assert_eq!(
+            x.compute_s.to_bits(),
+            y.compute_s.to_bits(),
+            "{what}: frame {i} compute"
+        );
+        assert_eq!(
+            x.slowdown_s.to_bits(),
+            y.slowdown_s.to_bits(),
+            "{what}: frame {i} slowdown"
+        );
+        assert_eq!(
+            x.comm_s.to_bits(),
+            y.comm_s.to_bits(),
+            "{what}: frame {i} comm"
+        );
+        assert_eq!(x.degraded, y.degraded, "{what}: frame {i} degraded");
+        assert_eq!(
+            x.resolution.to_bits(),
+            y.resolution.to_bits(),
+            "{what}: frame {i} resolution"
+        );
+        assert_eq!(
+            x.predicted_s.to_bits(),
+            y.predicted_s.to_bits(),
+            "{what}: frame {i} prediction"
+        );
+    }
+    assert_eq!(a.placements, b.placements, "{what}: placement counts");
+    assert_eq!(a.tasks_on_edge, b.tasks_on_edge, "{what}: edge tasks");
+    assert_eq!(a.tasks_on_server, b.tasks_on_server, "{what}: server tasks");
+    assert_eq!(a.dropped, b.dropped, "{what}: dropped");
+    assert_eq!(a.released, b.released, "{what}: released");
+    assert_eq!(a.sched_hops, b.sched_hops, "{what}: hops");
+    assert_eq!(
+        a.sched_comm_s.to_bits(),
+        b.sched_comm_s.to_bits(),
+        "{what}: sched comm"
+    );
+    assert_eq!(a.traverser_calls, b.traverser_calls, "{what}: traverser calls");
+    assert_eq!(a.busy_by_device, b.busy_by_device, "{what}: busy accounting");
+    assert_eq!(a.leaves.len(), b.leaves.len(), "{what}: leave records");
+    for (x, y) in a.leaves.iter().zip(b.leaves.iter()) {
+        assert_eq!(x.device, y.device, "{what}: leave device");
+        assert_eq!(x.failure, y.failure, "{what}: leave kind");
+        assert_eq!(x.frames_abandoned, y.frames_abandoned, "{what}: abandoned");
+        assert_eq!(x.tasks_remapped, y.tasks_remapped, "{what}: remapped");
+        assert_eq!(x.tasks_dropped, y.tasks_dropped, "{what}: task drops");
+    }
+}
+
+/// The churn preset (failure + join + graceful leave over Poisson
+/// arrivals), shortened to keep the test quick but with every event inside
+/// the horizon.
+fn churn_scenario(sched: &str, route_cache: bool, parallelism: usize) -> RunMetrics {
+    let mut sc = Scenario::preset("churn").expect("churn preset");
+    sc.cfg.sched = sched.to_string();
+    sc.cfg.sim.horizon_s = 1.5;
+    sc.cfg.sim.route_cache = route_cache;
+    sc.cfg.sim.parallelism = parallelism;
+    let report = sc.run().expect("churn run");
+    report.run.metrics
+}
+
+/// Placements and metrics are byte-identical with the route cache enabled
+/// vs disabled, on the churn scenario preset, serial and parallel — for
+/// H-EYE and for CloudVR (whose resolution controller prices routes per
+/// frame release through the cache).
+#[test]
+fn route_cache_on_off_metrics_byte_identical_under_churn() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    for sched in ["heye", "cloudvr"] {
+        for parallelism in [1usize, 4] {
+            let off = churn_scenario(sched, false, parallelism);
+            let on = churn_scenario(sched, true, parallelism);
+            assert!(!on.frames.is_empty(), "{sched}: churn run produced no frames");
+            assert!(!on.leaves.is_empty(), "{sched}: churn must record leaves");
+            assert_metrics_identical(
+                &off,
+                &on,
+                &format!("{sched}/parallelism={parallelism}"),
+            );
+        }
+    }
+}
+
+/// The route cache eliminates per-transfer/per-candidate Dijkstra: the
+/// same run resolves routes with several-fold fewer SSSP invocations.
+/// (The bench `perf_hotpath` asserts the ≥10x figure at fleet scale; this
+/// guards the mechanism at test-sized scale.)
+#[test]
+fn route_cache_eliminates_per_transfer_dijkstra() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let platform = Platform::builder()
+        .mixed(24, 6)
+        .build()
+        .expect("mixed topology");
+    let run = |cache: bool| -> (RunMetrics, u64) {
+        let before = sssp_invocations();
+        let r = platform
+            .session(WorkloadSpec::Mining {
+                sensors: 60,
+                hz: 10.0,
+            })
+            .scheduler("heye")
+            .config(SimConfig::default().horizon(0.3).seed(5).route_cache(cache))
+            .run()
+            .expect("mining run");
+        (r.metrics, sssp_invocations() - before)
+    };
+    let (m_off, dijkstra_off) = run(false);
+    let (m_on, dijkstra_on) = run(true);
+    assert_metrics_identical(&m_off, &m_on, "mining 24e/6s");
+    assert!(
+        dijkstra_off >= 5 * dijkstra_on.max(1),
+        "route cache saved too little: {dijkstra_off} uncached vs {dijkstra_on} cached"
+    );
+}
+
+/// Churn events delta-update the slowdown oracle in place: a scripted
+/// failure + join + graceful leave run constructs the oracle exactly once.
+#[test]
+fn churn_does_not_reconstruct_the_slowdown_oracle() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let before = rebuild_count();
+    let m = churn_scenario("heye", true, 1);
+    assert!(!m.leaves.is_empty(), "churn must apply its leave events");
+    assert_eq!(
+        rebuild_count() - before,
+        1,
+        "join/leave events must update CachedSlowdown in place, not rebuild it"
+    );
+}
