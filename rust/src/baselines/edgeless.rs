@@ -1,0 +1,366 @@
+//! EDGELESS-style node-selection strategies: `weighted-random` and
+//! `round-robin`.
+//!
+//! The EDGELESS ε-ORC ships two contention-blind selection strategies
+//! (its `Random` weighs each node by the product of advertised CPUs ×
+//! cores per CPU × core frequency; `RoundRobin` tracks the last node used
+//! and assigns the next with wrap-around among those eligible). They are
+//! reproduced here on H-EYE's device model — the advertised capability
+//! aggregate is the device's PU count, the same headroom figure a
+//! [`crate::domain::DomainSummary`] advertises — as cross-domain sanity
+//! baselines for `fig18_domains`: any summary-guided placement should beat
+//! both.
+
+use super::{blind_eval, candidate_pus, pu_load, remote_overhead};
+use crate::hwgraph::presets::Decs;
+use crate::hwgraph::{HwGraph, NodeId};
+use crate::orchestrator::{Loads, MapResult, Overhead};
+use crate::sim::Scheduler;
+use crate::task::TaskSpec;
+use crate::traverser::Traverser;
+use crate::util::rng::Rng;
+
+/// Fixed stream seed: selection must be reproducible run-to-run, so the
+/// RNG is part of the scheduler, not the host environment.
+const WEIGHTED_RANDOM_SEED: u64 = 0xED6E_1E55;
+
+/// Devices (origin first) eligible for `task`: at least one PU of an
+/// allowed class. Pinned stages never leave the origin.
+fn eligible(
+    g: &HwGraph,
+    devices: &[NodeId],
+    task: &TaskSpec,
+    origin: NodeId,
+) -> Vec<NodeId> {
+    let mut out = Vec::new();
+    for &dev in std::iter::once(&origin).chain(devices.iter().filter(|&&d| d != origin)) {
+        if !candidate_pus(g, dev, task).is_empty() {
+            out.push(dev);
+        }
+        if task.kind.pinned_to_origin() {
+            break;
+        }
+    }
+    out
+}
+
+/// Place on `dev`: least-loaded allowed PU, blind prediction, remote
+/// round-trip overhead if off-origin.
+fn place_on(
+    tr: &Traverser,
+    task: &TaskSpec,
+    origin: NodeId,
+    data_dev: NodeId,
+    dev: NodeId,
+    loads: &Loads,
+) -> MapResult {
+    let g = tr.graph();
+    let pu = candidate_pus(g, dev, task)
+        .into_iter()
+        .min_by_key(|&pu| pu_load(loads, dev, pu));
+    let pu = match pu {
+        Some(pu) => pu,
+        None => {
+            return MapResult {
+                pu: None,
+                predicted_latency_s: f64::INFINITY,
+                overhead: Overhead::default(),
+            }
+        }
+    };
+    let predicted = blind_eval(tr, task, data_dev, pu)
+        .map(|(l, _)| l)
+        .unwrap_or(f64::INFINITY);
+    let mut overhead = remote_overhead(origin, dev);
+    overhead.traverser_calls += 1;
+    MapResult {
+        pu: Some(pu),
+        predicted_latency_s: predicted,
+        overhead,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// weighted-random
+// ---------------------------------------------------------------------------
+
+/// EDGELESS `Random`: weighted uniform selection over eligible devices,
+/// weight = advertised compute capability (PU count here). Contention- and
+/// latency-blind by design.
+pub struct WeightedRandomScheduler {
+    devices: Vec<NodeId>,
+    rng: Rng,
+}
+
+impl WeightedRandomScheduler {
+    pub fn new(decs: &Decs) -> Self {
+        WeightedRandomScheduler {
+            devices: decs
+                .edge_devices
+                .iter()
+                .chain(decs.servers.iter())
+                .copied()
+                .collect(),
+            rng: Rng::new(WEIGHTED_RANDOM_SEED),
+        }
+    }
+}
+
+impl Scheduler for WeightedRandomScheduler {
+    fn name(&self) -> String {
+        "weighted-random".to_string()
+    }
+
+    fn assign(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin: NodeId,
+        data_dev: NodeId,
+        _now: f64,
+        loads: &Loads,
+    ) -> MapResult {
+        let g = tr.graph();
+        let cands = eligible(g, &self.devices, task, origin);
+        if cands.is_empty() {
+            return MapResult {
+                pu: None,
+                predicted_latency_s: f64::INFINITY,
+                overhead: Overhead::default(),
+            };
+        }
+        let weights: Vec<usize> = cands.iter().map(|&d| g.pus_in(d).len().max(1)).collect();
+        let total: usize = weights.iter().sum();
+        let mut draw = self.rng.below(total);
+        let mut pick = cands[0];
+        for (i, &w) in weights.iter().enumerate() {
+            if draw < w {
+                pick = cands[i];
+                break;
+            }
+            draw -= w;
+        }
+        place_on(tr, task, origin, data_dev, pick, loads)
+    }
+
+    fn on_device_join(&mut self, _g: &HwGraph, dev: NodeId) {
+        self.devices.push(dev);
+    }
+
+    fn on_device_leave(&mut self, _g: &HwGraph, dev: NodeId) {
+        self.devices.retain(|&d| d != dev);
+    }
+
+    fn reset(&mut self) {
+        // a session restart restarts the selection stream
+        self.rng = Rng::new(WEIGHTED_RANDOM_SEED);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// round-robin
+// ---------------------------------------------------------------------------
+
+/// EDGELESS `RoundRobin`: remembers the last device used and assigns the
+/// next eligible one with wrap-around.
+pub struct RoundRobinScheduler {
+    devices: Vec<NodeId>,
+    /// index (into `devices`) the next scan starts at
+    cursor: usize,
+}
+
+impl RoundRobinScheduler {
+    pub fn new(decs: &Decs) -> Self {
+        RoundRobinScheduler {
+            devices: decs
+                .edge_devices
+                .iter()
+                .chain(decs.servers.iter())
+                .copied()
+                .collect(),
+            cursor: 0,
+        }
+    }
+}
+
+impl Scheduler for RoundRobinScheduler {
+    fn name(&self) -> String {
+        "round-robin".to_string()
+    }
+
+    fn assign(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin: NodeId,
+        data_dev: NodeId,
+        _now: f64,
+        loads: &Loads,
+    ) -> MapResult {
+        let g = tr.graph();
+        if task.kind.pinned_to_origin() {
+            // the rotation only governs free stages
+            if candidate_pus(g, origin, task).is_empty() {
+                return MapResult {
+                    pu: None,
+                    predicted_latency_s: f64::INFINITY,
+                    overhead: Overhead::default(),
+                };
+            }
+            return place_on(tr, task, origin, data_dev, origin, loads);
+        }
+        let n = self.devices.len();
+        for k in 0..n {
+            let i = (self.cursor + k) % n;
+            let dev = self.devices[i];
+            if candidate_pus(g, dev, task).is_empty() {
+                continue;
+            }
+            self.cursor = (i + 1) % n;
+            return place_on(tr, task, origin, data_dev, dev, loads);
+        }
+        MapResult {
+            pu: None,
+            predicted_latency_s: f64::INFINITY,
+            overhead: Overhead::default(),
+        }
+    }
+
+    fn on_device_join(&mut self, _g: &HwGraph, dev: NodeId) {
+        self.devices.push(dev);
+    }
+
+    fn on_device_leave(&mut self, _g: &HwGraph, dev: NodeId) {
+        if let Some(pos) = self.devices.iter().position(|&d| d == dev) {
+            self.devices.remove(pos);
+            // keep the rotation pointing at the same successor
+            if pos < self.cursor {
+                self.cursor -= 1;
+            }
+            if self.devices.is_empty() {
+                self.cursor = 0;
+            } else {
+                self.cursor %= self.devices.len();
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::DecsSpec;
+    use crate::netsim::Network;
+    use crate::perfmodel::ProfileModel;
+    use crate::slowdown::CachedSlowdown;
+    use crate::task::workloads;
+
+    fn ctx() -> (Decs, ProfileModel, Network) {
+        (
+            Decs::build(&DecsSpec::paper_vr()),
+            ProfileModel::new(),
+            Network::new(),
+        )
+    }
+
+    #[test]
+    fn round_robin_rotates_with_wraparound() {
+        let (decs, perf, net) = ctx();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
+        let mut rr = RoundRobinScheduler::new(&decs);
+        let render = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone();
+        let origin = decs.edge_devices[0];
+        let n = decs.edge_devices.len() + decs.servers.len();
+        let mut seen = Vec::new();
+        for _ in 0..n {
+            let r = rr.assign(&tr, &render, origin, origin, 0.0, &Loads::default());
+            seen.push(decs.graph.device_of(r.pu.unwrap()).unwrap());
+        }
+        // every device eligible for render is visited exactly once per lap
+        let mut uniq = seen.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seen.len(), "one visit per device per lap");
+        // next lap starts over in the same order
+        let r = rr.assign(&tr, &render, origin, origin, 0.0, &Loads::default());
+        assert_eq!(decs.graph.device_of(r.pu.unwrap()).unwrap(), seen[0]);
+    }
+
+    #[test]
+    fn round_robin_survives_departure_of_cursor_device() {
+        let (mut decs, perf, net) = ctx();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let render = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone();
+        let origin = decs.edge_devices[0];
+        let mut rr = RoundRobinScheduler::new(&decs);
+        {
+            let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
+            rr.assign(&tr, &render, origin, origin, 0.0, &Loads::default());
+        }
+        let gone = decs.edge_devices[1];
+        decs.deactivate(gone);
+        rr.on_device_leave(&decs.graph, gone);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
+        for _ in 0..8 {
+            let r = rr.assign(&tr, &render, origin, origin, 0.0, &Loads::default());
+            let dev = decs.graph.device_of(r.pu.unwrap()).unwrap();
+            assert_ne!(dev, gone, "departed device must not be picked");
+        }
+    }
+
+    #[test]
+    fn weighted_random_is_deterministic_and_weighted() {
+        let (decs, perf, net) = ctx();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
+        let render = workloads::vr_cfg(30.0, 1.0, None).nodes[2].spec.clone();
+        let origin = decs.edge_devices[0];
+        let run = |n: usize| -> Vec<NodeId> {
+            let mut wr = WeightedRandomScheduler::new(&decs);
+            (0..n)
+                .map(|_| {
+                    let r = wr.assign(&tr, &render, origin, origin, 0.0, &Loads::default());
+                    decs.graph.device_of(r.pu.unwrap()).unwrap()
+                })
+                .collect()
+        };
+        assert_eq!(run(64), run(64), "fixed seed => reproducible stream");
+        // weighting: over many draws every eligible device appears
+        let picks = run(256);
+        let mut uniq = picks.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert!(uniq.len() > 1, "must spread load across devices");
+    }
+
+    #[test]
+    fn pinned_tasks_stay_on_origin() {
+        let (decs, perf, net) = ctx();
+        let slow = CachedSlowdown::new(&decs.graph);
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
+        let cfg = workloads::vr_cfg(30.0, 1.0, None);
+        let pinned = cfg
+            .nodes
+            .iter()
+            .map(|n| n.spec.clone())
+            .find(|s| s.kind.pinned_to_origin())
+            .expect("vr has pinned stages");
+        let origin = decs.edge_devices[0];
+        for _ in 0..8 {
+            let mut wr = WeightedRandomScheduler::new(&decs);
+            let mut rr = RoundRobinScheduler::new(&decs);
+            for s in [
+                wr.assign(&tr, &pinned, origin, origin, 0.0, &Loads::default()),
+                rr.assign(&tr, &pinned, origin, origin, 0.0, &Loads::default()),
+            ] {
+                let dev = decs.graph.device_of(s.pu.unwrap()).unwrap();
+                assert_eq!(dev, origin);
+            }
+        }
+    }
+}

@@ -20,6 +20,10 @@
 //!   the *frame resolution* to keep the pipeline inside the QoS budget
 //!   instead of re-balancing other tasks (Fig. 12a).
 
+mod edgeless;
+
+pub use edgeless::{RoundRobinScheduler, WeightedRandomScheduler};
+
 use std::collections::BTreeMap;
 
 use crate::hwgraph::presets::Decs;
@@ -615,6 +619,11 @@ impl Scheduler for CloudVrScheduler {
 /// self-registers next to the H-EYE policies (the old `by_name` string
 /// match is gone).
 pub const ALL_BASELINES: [&str; 3] = ["ace", "lats", "cloudvr"];
+
+/// Registry names of the EDGELESS-style node-selection strategies
+/// ([`edgeless`]) — the cross-domain sanity baselines `fig18_domains`
+/// sweeps next to H-EYE.
+pub const EDGELESS_BASELINES: [&str; 2] = ["weighted-random", "round-robin"];
 
 #[cfg(test)]
 mod tests {

@@ -121,6 +121,17 @@ impl ExpConfig {
         if let Some(v) = j.get("route_cache").and_then(|v| v.as_bool()) {
             c.sim.route_cache = v;
         }
+        if let Some(v) = j.get("domains") {
+            // number of orchestration domains, or "auto" to derive the
+            // partition from the hierarchy's virtual sub-clusters
+            if let Some(n) = v.as_u64() {
+                c.sim.domains = n as usize;
+            } else if v.as_str() == Some("auto") {
+                c.sim.domains = crate::domain::DOMAINS_AUTO;
+            } else {
+                bail!("domains must be a number or \"auto\"");
+            }
+        }
         if let Some(v) = j.get("sensors").and_then(|v| v.as_u64()) {
             c.sensors = v as usize;
         }
@@ -302,6 +313,16 @@ mod tests {
         assert_eq!(net.len(), 1);
         assert_eq!(joins.len(), 1);
         assert!(joins[0].vr_source);
+    }
+
+    #[test]
+    fn parses_domains_knob() {
+        let c = ExpConfig::parse(r#"{ "domains": 3 }"#).unwrap();
+        assert_eq!(c.sim.domains, 3);
+        let c = ExpConfig::parse(r#"{ "domains": "auto" }"#).unwrap();
+        assert_eq!(c.sim.domains, crate::domain::DOMAINS_AUTO);
+        assert_eq!(ExpConfig::parse("{}").unwrap().sim.domains, 0);
+        assert!(ExpConfig::parse(r#"{ "domains": true }"#).is_err());
     }
 
     #[test]

@@ -1,0 +1,111 @@
+//! ε-CON: the continuum orchestrator.
+//!
+//! This module deliberately lives *next to* [`super::member`] rather than
+//! inside it: `Domain`'s fields are private to `member.rs`, so nothing in
+//! this file can reach a domain's member list, slowdown slice, route slice,
+//! or sub-scheduler. The only thing the continuum tier ever sees is the
+//! [`DomainSummary`] each domain publishes — the module-visibility wall *is*
+//! the ε-CON / ε-ORC abstraction boundary, enforced by the compiler instead
+//! of by convention.
+
+/// Capability aggregate a domain advertises upward to the ε-CON. Refreshed
+/// incrementally by [`super::DomainScheduler`]: only the domain an event
+/// touches recomputes its summary; the others keep theirs byte-for-byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DomainSummary {
+    /// index of the domain inside the [`super::DomainScheduler`]
+    pub id: usize,
+    /// active member devices (graceful leavers and failures excluded)
+    pub devices: usize,
+    /// active edge-tier members
+    pub edges: usize,
+    /// active server-tier members
+    pub servers: usize,
+    /// total PUs across active members — the "advertised compute
+    /// capability" aggregate the ε-CON ranks escalation targets by
+    pub headroom_pus: usize,
+    /// cheapest one-way modeled route latency from any active member to any
+    /// device *outside* the domain (structural, from the domain's route
+    /// slice; `INFINITY` when the domain covers the whole continuum and
+    /// there is nothing outside it)
+    pub min_cross_route_s: f64,
+    /// [`crate::hwgraph::HwGraph::epoch`] the summary was computed at
+    pub epoch: u64,
+}
+
+/// The thin top tier: given the per-domain summaries — and nothing else —
+/// decide which domains a workload should be offered to, in order.
+#[derive(Debug, Default, Clone)]
+pub struct ContinuumOrchestrator;
+
+impl ContinuumOrchestrator {
+    /// Domain visit order for a frame originating in `home`: the home
+    /// domain first (its sub-ORC sees the origin's own state), then every
+    /// other live domain ranked by advertised headroom, breaking ties by
+    /// cheaper cross-domain reach and finally by id so the order is total
+    /// and deterministic.
+    pub fn choose(&self, home: usize, summaries: &[DomainSummary]) -> Vec<usize> {
+        let mut order = Vec::with_capacity(summaries.len());
+        if home < summaries.len() {
+            order.push(home);
+        }
+        let mut rest: Vec<&DomainSummary> = summaries
+            .iter()
+            .filter(|s| s.id != home && s.devices > 0)
+            .collect();
+        rest.sort_by(|a, b| {
+            b.headroom_pus
+                .cmp(&a.headroom_pus)
+                .then(a.min_cross_route_s.total_cmp(&b.min_cross_route_s))
+                .then(a.id.cmp(&b.id))
+        });
+        order.extend(rest.into_iter().map(|s| s.id));
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(id: usize, devices: usize, pus: usize, cross: f64) -> DomainSummary {
+        DomainSummary {
+            id,
+            devices,
+            edges: devices,
+            servers: 0,
+            headroom_pus: pus,
+            min_cross_route_s: cross,
+            epoch: 0,
+        }
+    }
+
+    #[test]
+    fn home_first_then_by_headroom() {
+        let s = vec![
+            summary(0, 2, 10, 1e-3),
+            summary(1, 3, 40, 2e-3),
+            summary(2, 3, 40, 1e-3),
+            summary(3, 1, 90, 5e-3),
+        ];
+        let order = ContinuumOrchestrator.choose(0, &s);
+        // 3 has the most headroom; 1 vs 2 tie on headroom, 2 is closer
+        assert_eq!(order, vec![0, 3, 2, 1]);
+    }
+
+    #[test]
+    fn drained_domains_are_skipped() {
+        let s = vec![summary(0, 2, 10, 1e-3), summary(1, 0, 0, 1e-3)];
+        assert_eq!(ContinuumOrchestrator.choose(0, &s), vec![0]);
+        // even a drained *home* is still visited first: its sub-ORC is the
+        // one that knows the origin, and the engine falls back best-effort
+        // if it truly has nothing left
+        assert_eq!(ContinuumOrchestrator.choose(1, &s), vec![1, 0]);
+    }
+
+    #[test]
+    fn single_domain_is_trivial() {
+        let s = vec![summary(0, 5, 20, f64::INFINITY)];
+        assert_eq!(ContinuumOrchestrator.choose(0, &s), vec![0]);
+    }
+}

@@ -1,0 +1,230 @@
+//! ε-ORC side of the split: one [`Domain`] = one member set + one
+//! sub-scheduler + domain-local cache slices.
+//!
+//! Every field of [`Domain`] is private to this file. The sibling
+//! [`super::con`] module (the ε-CON) therefore *cannot* read per-device
+//! state across the domain boundary — it compiles against
+//! [`DomainSummary`](super::DomainSummary) and nothing else. Methods the
+//! [`super::DomainScheduler`] driver needs are `pub(super)`; the few
+//! read-only accessors exposed to the CLI and tests never leak mutable or
+//! per-PU state.
+
+use std::collections::BTreeSet;
+
+use crate::hwgraph::{HwGraph, NodeId};
+use crate::netsim::RouteTable;
+use crate::orchestrator::{Loads, MapResult};
+use crate::sim::Scheduler;
+use crate::slowdown::CachedSlowdown;
+use crate::task::TaskSpec;
+use crate::traverser::Traverser;
+
+use super::DomainSummary;
+
+/// One orchestration domain: a member partition with its own sub-scheduler
+/// instance (sticky state, order cache and all) and its own
+/// [`CachedSlowdown`] / [`RouteTable`] slices covering exactly the members.
+/// Structural events inside the domain delta-update these slices; events in
+/// *other* domains cost this one nothing beyond an epoch note.
+pub struct Domain {
+    id: usize,
+    /// members in insertion order (drives slice layouts; never reordered)
+    members: Vec<NodeId>,
+    member_set: BTreeSet<NodeId>,
+    /// members on the server tier (fixed at partition time; joins are edges)
+    servers: BTreeSet<NodeId>,
+    /// members not currently departed/failed
+    active: BTreeSet<NodeId>,
+    /// the domain's ε-ORC: a full scheduler instance scoped to the members
+    sub: Box<dyn Scheduler>,
+    /// slowdown slice: only member devices' PU tables
+    slow: CachedSlowdown,
+    /// route slice: member rows × all-device columns
+    routes: RouteTable,
+}
+
+impl Domain {
+    pub(super) fn new(
+        id: usize,
+        g: &HwGraph,
+        members: Vec<NodeId>,
+        server_set: &BTreeSet<NodeId>,
+        sub: Box<dyn Scheduler>,
+    ) -> Self {
+        let member_set: BTreeSet<NodeId> = members.iter().copied().collect();
+        let servers = member_set.intersection(server_set).copied().collect();
+        let slow = CachedSlowdown::for_devices(g, &members);
+        let routes = RouteTable::for_sources(g, &members);
+        Domain {
+            id,
+            active: member_set.clone(),
+            member_set,
+            servers,
+            members,
+            sub,
+            slow,
+            routes,
+        }
+    }
+
+    pub(super) fn id(&self) -> usize {
+        self.id
+    }
+
+    pub(super) fn is_member(&self, dev: NodeId) -> bool {
+        self.member_set.contains(&dev)
+    }
+
+    pub(super) fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Member devices in insertion order (read-only; used by the CLI
+    /// listing and by tests — never by the ε-CON).
+    pub fn members(&self) -> &[NodeId] {
+        &self.members
+    }
+
+    /// The sub-scheduler's registry name.
+    pub fn sub_name(&self) -> String {
+        self.sub.name()
+    }
+
+    /// The capability aggregate this domain advertises to the ε-CON.
+    pub(super) fn summary(&self, g: &HwGraph) -> DomainSummary {
+        let mut headroom = 0usize;
+        let mut servers = 0usize;
+        for &m in &self.active {
+            headroom += self.slow.pus_of(m).len();
+            if self.servers.contains(&m) {
+                servers += 1;
+            }
+        }
+        DomainSummary {
+            id: self.id,
+            devices: self.active.len(),
+            edges: self.active.len() - servers,
+            servers,
+            headroom_pus: headroom,
+            min_cross_route_s: self.min_cross_route_s(),
+            epoch: g.epoch(),
+        }
+    }
+
+    /// Cheapest one-way route from any active member to any non-member,
+    /// straight out of the domain's route slice — zero SSSPs. Structural
+    /// (does not track liveness of the far end): good enough for ranking
+    /// escalation targets, and `INFINITY` when this domain covers the whole
+    /// continuum, which is what makes the single-domain case charge no
+    /// cross-domain overhead at all.
+    fn min_cross_route_s(&self) -> f64 {
+        let mut best = f64::INFINITY;
+        for &from in &self.active {
+            for &to in self.routes.destinations() {
+                if self.member_set.contains(&to) {
+                    continue;
+                }
+                if let Some(r) = self.routes.route(from, to) {
+                    best = best.min(r.latency_s);
+                }
+            }
+        }
+        best
+    }
+
+    /// Run the sub-ORC on its own slices. The sub-scheduler sees a
+    /// [`Traverser`] whose slowdown tables cover only this domain's members
+    /// and whose route cache rows start at members — so by construction it
+    /// cannot price (or pick) state the domain does not own.
+    pub(super) fn assign(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin: NodeId,
+        data_dev: NodeId,
+        now: f64,
+        loads: &Loads,
+    ) -> MapResult {
+        let mut dtr = Traverser::new(tr.g, &self.slow, tr.perf, tr.net);
+        // the slice only has rows for members: when the input data lives on
+        // a foreign device (cross-domain transfer), or a newcomer joined
+        // elsewhere since the slice was built, fall back to the engine's
+        // full table — a slice miss means "unreachable", not "recompute"
+        dtr.routes = match tr.routes {
+            Some(_) if self.member_set.contains(&data_dev) && self.routes.is_current(tr.g) => {
+                Some(&self.routes)
+            }
+            other => other,
+        };
+        self.sub.assign(&dtr, task, origin, data_dev, now, loads)
+    }
+
+    /// Frame-resolution hook, forwarded with the same slice-or-engine route
+    /// choice as [`Domain::assign`] (resolution scans member uplinks, and
+    /// origins are always members of their home domain).
+    pub(super) fn frame_resolution(
+        &mut self,
+        origin: NodeId,
+        g: &HwGraph,
+        net: &crate::netsim::Network,
+        routes: Option<&RouteTable>,
+    ) -> f64 {
+        let routes = match routes {
+            Some(_) if self.member_set.contains(&origin) && self.routes.is_current(g) => {
+                Some(&self.routes)
+            }
+            other => other,
+        };
+        self.sub.frame_resolution(origin, g, net, routes)
+    }
+
+    /// A device joined *this* domain: delta-update the slowdown slice,
+    /// rebuild the route slice over the (still member-only) source rows,
+    /// and tell the sub-ORC. O(domain), never O(continuum).
+    pub(super) fn on_join(&mut self, g: &HwGraph, dev: NodeId) {
+        self.members.push(dev);
+        self.member_set.insert(dev);
+        self.active.insert(dev);
+        self.sub.on_device_join(g, dev);
+        self.slow.on_device_join(g, dev);
+        self.routes = RouteTable::for_sources(g, &self.members);
+    }
+
+    /// Structure changed in *another* domain. Joins there are leaf devices
+    /// hanging off existing uplinks, which cannot shorten any of this
+    /// domain's existing routes — so the slice stays valid and only its
+    /// epoch moves ([`RouteTable::note_epoch`]). The newcomer itself is
+    /// simply absent from the slice columns; [`Domain::assign`] falls back
+    /// to the engine table if data ever arrives from it.
+    pub(super) fn note_foreign_structure(&mut self, g: &HwGraph) {
+        self.routes.note_epoch(g);
+    }
+
+    /// Graceful departure of a member: the device drains, so its slowdown
+    /// rows stay (in-flight co-task pricing still needs them), mirroring
+    /// the engine's own `CachedSlowdown` handling. It just stops being a
+    /// candidate.
+    pub(super) fn on_leave(&mut self, g: &HwGraph, dev: NodeId) {
+        self.active.remove(&dev);
+        self.sub.on_device_leave(g, dev);
+    }
+
+    /// Unplanned failure of a member: prune the slowdown slice too.
+    pub(super) fn on_fail(&mut self, g: &HwGraph, dev: NodeId) {
+        self.active.remove(&dev);
+        self.sub.on_device_fail(g, dev);
+        self.slow.on_device_leave(g, dev);
+    }
+
+    pub(super) fn on_network_change(&mut self, g: &HwGraph, net: &crate::netsim::Network) {
+        self.sub.on_network_change(g, net);
+    }
+
+    pub(super) fn set_parallelism(&mut self, threads: usize) {
+        self.sub.set_parallelism(threads);
+    }
+
+    pub(super) fn reset(&mut self) {
+        self.sub.reset();
+    }
+}

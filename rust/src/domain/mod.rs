@@ -1,0 +1,406 @@
+//! Two-level orchestration domains: the ε-CON / ε-ORC split (§4.4).
+//!
+//! H-EYE's hierarchy is a *modeling* construct — one global orchestrator
+//! still owns every device, every slowdown table and every route row. This
+//! module makes the split operational. The topology is partitioned into
+//! first-class [`Domain`]s, each owning
+//!
+//! * its member devices,
+//! * its own sub-scheduler instance (sticky state, order cache, plans —
+//!   whatever the wrapped policy keeps),
+//! * a [`CachedSlowdown`](crate::slowdown::CachedSlowdown) slice and a
+//!   [`RouteTable`](crate::netsim::RouteTable) slice covering exactly the
+//!   members, epoch-versioned against
+//!   [`HwGraph::epoch`](crate::hwgraph::HwGraph::epoch) and delta-updated
+//!   on join / leave / fail.
+//!
+//! Above the domains sits a thin [`ContinuumOrchestrator`] (the ε-CON)
+//! that sees one [`DomainSummary`] per domain — capability aggregates,
+//! refreshed incrementally — and **never raw member state**: `Domain`'s
+//! fields are private to `member.rs`, so the ε-CON in `con.rs` cannot
+//! reach them even from inside the crate. It maps each frame to a domain;
+//! the domain's sub-ORC places it on a device; cross-domain transfers
+//! route through the engine's [`Network::with_route`]
+//! (crate::netsim::Network::with_route) seam like any other transfer.
+//!
+//! Invariants:
+//!
+//! * **Determinism** — with one domain, placements and metrics are
+//!   byte-identical to the global orchestrator (`tests/domains.rs` asserts
+//!   this on the VR, fleet and churn presets, serial and parallel).
+//! * **Isolation** — churn inside domain A triggers zero cache work in
+//!   domain B: B's route slice takes an epoch note
+//!   ([`RouteTable::note_epoch`](crate::netsim::RouteTable::note_epoch)),
+//!   its slowdown slice and summary are untouched (asserted via the
+//!   [`sssp_invocations`](crate::hwgraph::sssp_invocations) and
+//!   [`rebuild_count`](crate::slowdown::rebuild_count) process counters).
+//! * **Summary-only escalation** — the ε-CON ranks foreign domains purely
+//!   by their advertised summaries and charges the modeled cross-domain
+//!   round trip before a foreign sub-ORC is consulted.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::hwgraph::presets::Decs;
+use crate::hwgraph::{GroupRole, HwGraph, NodeId};
+use crate::netsim::{Network, RouteTable};
+use crate::orchestrator::hierarchy::Hierarchy;
+use crate::orchestrator::{Loads, MapResult, Overhead};
+use crate::sim::Scheduler;
+use crate::task::TaskSpec;
+use crate::traverser::Traverser;
+
+mod con;
+mod member;
+
+pub use con::{ContinuumOrchestrator, DomainSummary};
+pub use member::Domain;
+
+/// Sentinel for [`crate::sim::SimConfig::domains`]: derive the partition
+/// from the hierarchy's virtual ORC sub-clusters instead of a fixed count.
+pub const DOMAINS_AUTO: usize = usize::MAX;
+
+/// Deterministic fixed-count partition: edges are split into `n` contiguous
+/// chunks (preserving `Decs` insertion order), servers are dealt round-robin
+/// so every domain gets server capacity where possible. Empty parts (more
+/// domains than devices) are dropped.
+pub fn partition(decs: &Decs, n: usize) -> Vec<Vec<NodeId>> {
+    let n = n.max(1);
+    let mut parts: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    let edges = &decs.edge_devices;
+    if !edges.is_empty() {
+        let per = edges.len().div_ceil(n);
+        for (i, &e) in edges.iter().enumerate() {
+            parts[(i / per).min(n - 1)].push(e);
+        }
+    }
+    for (i, &s) in decs.servers.iter().enumerate() {
+        parts[i % n].push(s);
+    }
+    parts.retain(|p| !p.is_empty());
+    parts
+}
+
+/// The hierarchy-derived partition: one domain per leaf device group — the
+/// virtual sub-cluster ORCs the fleet preset already creates once a cluster
+/// outgrows [`MAX_FANOUT`](crate::orchestrator::hierarchy::MAX_FANOUT).
+pub fn auto_partition(decs: &Decs) -> Vec<Vec<NodeId>> {
+    Hierarchy::from_decs(decs).leaf_groups()
+}
+
+/// Resolve a [`crate::sim::SimConfig::domains`] knob (>= 1) to a partition.
+pub fn resolve_partition(decs: &Decs, domains: usize) -> Vec<Vec<NodeId>> {
+    if domains == DOMAINS_AUTO {
+        auto_partition(decs)
+    } else {
+        partition(decs, domains)
+    }
+}
+
+/// The two-level orchestrator, packaged as a [`Scheduler`] so the engine,
+/// the platform layer and every figure harness drive it unchanged. Owns the
+/// domains (each a sub-scheduler plus cache slices) and the ε-CON with its
+/// per-domain summaries.
+pub struct DomainScheduler {
+    domains: Vec<Domain>,
+    domain_of: BTreeMap<NodeId, usize>,
+    summaries: Vec<DomainSummary>,
+    con: ContinuumOrchestrator,
+}
+
+impl DomainScheduler {
+    /// Build one domain per part. `factory` produces a fresh sub-scheduler
+    /// per domain (the same closure the registry's `build` uses); each
+    /// instance is then narrowed to its members by replaying
+    /// `on_device_leave` for every foreign device — the same notification
+    /// it would have received had those devices departed.
+    pub fn new(
+        decs: &Decs,
+        parts: Vec<Vec<NodeId>>,
+        factory: &dyn Fn(&Decs) -> Box<dyn Scheduler>,
+    ) -> Self {
+        let g = &decs.graph;
+        assert!(!parts.is_empty(), "domain partition must be non-empty");
+        let all: Vec<NodeId> = g.groups(GroupRole::Device);
+        let all_set: BTreeSet<NodeId> = all.iter().copied().collect();
+        let mut covered: BTreeSet<NodeId> = BTreeSet::new();
+        for part in &parts {
+            assert!(!part.is_empty(), "every domain needs at least one member");
+            for &d in part {
+                assert!(covered.insert(d), "device {d:?} assigned to two domains");
+            }
+        }
+        assert_eq!(covered, all_set, "partition must cover every device");
+
+        let server_set: BTreeSet<NodeId> = decs.servers.iter().copied().collect();
+        let mut domains = Vec::with_capacity(parts.len());
+        let mut domain_of = BTreeMap::new();
+        for (id, part) in parts.into_iter().enumerate() {
+            let members: BTreeSet<NodeId> = part.iter().copied().collect();
+            let mut sub = factory(decs);
+            for &d in &all {
+                if !members.contains(&d) {
+                    sub.on_device_leave(g, d);
+                }
+            }
+            for &d in &part {
+                domain_of.insert(d, id);
+            }
+            domains.push(Domain::new(id, g, part, &server_set, sub));
+        }
+        let summaries = domains.iter().map(|d| d.summary(g)).collect();
+        DomainScheduler {
+            domains,
+            domain_of,
+            summaries,
+            con: ContinuumOrchestrator,
+        }
+    }
+
+    /// Convenience over [`resolve_partition`] for a `SimConfig::domains`
+    /// knob value (>= 1, or [`DOMAINS_AUTO`]).
+    pub fn with_domains(
+        decs: &Decs,
+        domains: usize,
+        factory: &dyn Fn(&Decs) -> Box<dyn Scheduler>,
+    ) -> Self {
+        Self::new(decs, resolve_partition(decs, domains), factory)
+    }
+
+    pub fn domain_count(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// The current per-domain summaries — exactly what the ε-CON sees.
+    pub fn summaries(&self) -> &[DomainSummary] {
+        &self.summaries
+    }
+
+    /// Which domain owns `dev` (joined devices included).
+    pub fn domain_of(&self, dev: NodeId) -> Option<usize> {
+        self.domain_of.get(&dev).copied()
+    }
+
+    /// Member devices of domain `id`, in insertion order.
+    pub fn members_of(&self, id: usize) -> &[NodeId] {
+        self.domains[id].members()
+    }
+
+    fn home_of(&self, origin: NodeId) -> usize {
+        self.domain_of.get(&origin).copied().unwrap_or(0)
+    }
+}
+
+impl Scheduler for DomainScheduler {
+    /// Reports the wrapped policy's name: domains are an engine/topology
+    /// knob (recorded in `SimConfig::domains`), not a different policy.
+    fn name(&self) -> String {
+        self.domains[0].sub_name()
+    }
+
+    fn assign(
+        &mut self,
+        tr: &Traverser,
+        task: &TaskSpec,
+        origin: NodeId,
+        data_dev: NodeId,
+        now: f64,
+        loads: &Loads,
+    ) -> MapResult {
+        let home = self.home_of(origin);
+        let order = self.con.choose(home, &self.summaries);
+        let mut overhead = Overhead::default();
+        for (k, &d) in order.iter().enumerate() {
+            if k > 0 {
+                // escalation: one modeled round trip to the foreign domain,
+                // priced from its advertised summary — the ε-CON never
+                // inspects the domain to find a cheaper door
+                let cross = self.summaries[d].min_cross_route_s;
+                if cross.is_finite() {
+                    overhead.comm_s += 2.0 * cross;
+                }
+                overhead.hops += 2;
+            }
+            let r = self.domains[d].assign(tr, task, origin, data_dev, now, loads);
+            overhead.add(&r.overhead);
+            if r.pu.is_some() {
+                return MapResult {
+                    pu: r.pu,
+                    predicted_latency_s: r.predicted_latency_s,
+                    overhead,
+                };
+            }
+            if task.kind.pinned_to_origin() {
+                // pinned stages can only ever run at the origin — foreign
+                // domains have nothing to offer
+                break;
+            }
+        }
+        MapResult {
+            pu: None,
+            predicted_latency_s: f64::INFINITY,
+            overhead,
+        }
+    }
+
+    fn frame_resolution(
+        &mut self,
+        origin: NodeId,
+        g: &HwGraph,
+        net: &Network,
+        routes: Option<&RouteTable>,
+    ) -> f64 {
+        let home = self.home_of(origin);
+        self.domains[home].frame_resolution(origin, g, net, routes)
+    }
+
+    fn on_network_change(&mut self, g: &HwGraph, net: &Network) {
+        for d in &mut self.domains {
+            d.on_network_change(g, net);
+        }
+    }
+
+    /// A join lands in the smallest domain (by active members, ties to the
+    /// lowest id): its slices delta-update and its summary refreshes; every
+    /// other domain takes an epoch note and keeps summary, slowdown slice
+    /// and route rows byte-for-byte.
+    fn on_device_join(&mut self, g: &HwGraph, dev: NodeId) {
+        let target = (0..self.domains.len())
+            .min_by_key(|&i| (self.domains[i].active_count(), i))
+            .expect("at least one domain");
+        for (i, d) in self.domains.iter_mut().enumerate() {
+            if i == target {
+                d.on_join(g, dev);
+            } else {
+                d.note_foreign_structure(g);
+            }
+        }
+        self.domain_of.insert(dev, target);
+        self.summaries[target] = self.domains[target].summary(g);
+    }
+
+    fn on_device_leave(&mut self, g: &HwGraph, dev: NodeId) {
+        if let Some(&id) = self.domain_of.get(&dev) {
+            self.domains[id].on_leave(g, dev);
+            self.summaries[id] = self.domains[id].summary(g);
+        }
+    }
+
+    fn on_device_fail(&mut self, g: &HwGraph, dev: NodeId) {
+        if let Some(&id) = self.domain_of.get(&dev) {
+            self.domains[id].on_fail(g, dev);
+            self.summaries[id] = self.domains[id].summary(g);
+        }
+    }
+
+    fn set_parallelism(&mut self, threads: usize) {
+        for d in &mut self.domains {
+            d.set_parallelism(threads);
+        }
+    }
+
+    fn reset(&mut self) {
+        for d in &mut self.domains {
+            d.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::DecsSpec;
+    use crate::platform::SchedulerRegistry;
+
+    fn heye_factory() -> impl Fn(&Decs) -> Box<dyn Scheduler> {
+        |d: &Decs| SchedulerRegistry::create("heye", d).unwrap()
+    }
+
+    #[test]
+    fn partition_covers_and_never_overlaps() {
+        let decs = Decs::build(&DecsSpec::mixed(13, 3));
+        for n in [1, 2, 3, 5, 50] {
+            let parts = partition(&decs, n);
+            let mut seen = BTreeSet::new();
+            for p in &parts {
+                assert!(!p.is_empty());
+                for &d in p {
+                    assert!(seen.insert(d), "overlap at n={n}");
+                }
+            }
+            let all: BTreeSet<NodeId> =
+                decs.graph.groups(GroupRole::Device).into_iter().collect();
+            assert_eq!(seen, all, "coverage at n={n}");
+            assert!(parts.len() <= n);
+        }
+    }
+
+    #[test]
+    fn servers_are_dealt_round_robin() {
+        let decs = Decs::build(&DecsSpec::mixed(8, 3));
+        let parts = partition(&decs, 3);
+        assert_eq!(parts.len(), 3);
+        for (i, p) in parts.iter().enumerate() {
+            let servers = p.iter().filter(|d| decs.servers.contains(d)).count();
+            assert_eq!(servers, 1, "domain {i} should hold one server");
+        }
+    }
+
+    #[test]
+    fn auto_partition_matches_hierarchy_groups() {
+        // fleet-scale: virtual sub-clusters exist, so auto > 1 domain
+        let decs = Decs::build(&DecsSpec::mixed(40, 4));
+        let parts = auto_partition(&decs);
+        assert!(parts.len() > 1, "40 edges must split under MAX_FANOUT");
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, decs.graph.groups(GroupRole::Device).len());
+    }
+
+    #[test]
+    fn summaries_aggregate_capability() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let ds = DomainScheduler::new(&decs, partition(&decs, 2), &heye_factory());
+        assert_eq!(ds.domain_count(), 2);
+        let g = &decs.graph;
+        let total_pus: usize = ds
+            .summaries()
+            .iter()
+            .map(|s| s.headroom_pus)
+            .sum();
+        let expect: usize = g
+            .groups(GroupRole::Device)
+            .iter()
+            .map(|&d| g.pus_in(d).len())
+            .sum();
+        assert_eq!(total_pus, expect, "summaries must cover every PU once");
+        for s in ds.summaries() {
+            assert_eq!(s.devices, s.edges + s.servers);
+            assert!(s.min_cross_route_s.is_finite(), "two domains => cross routes exist");
+            assert_eq!(s.epoch, g.epoch());
+        }
+    }
+
+    #[test]
+    fn single_domain_summary_has_no_outside() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let ds = DomainScheduler::new(&decs, partition(&decs, 1), &heye_factory());
+        assert_eq!(ds.domain_count(), 1);
+        assert!(ds.summaries()[0].min_cross_route_s.is_infinite());
+    }
+
+    #[test]
+    fn join_lands_in_smallest_domain_and_touches_only_it() {
+        let mut decs = Decs::build(&DecsSpec::mixed(6, 2));
+        let mut ds = DomainScheduler::new(&decs, partition(&decs, 2), &heye_factory());
+        let before: Vec<DomainSummary> = ds.summaries().to_vec();
+        // shrink domain 1 so the join target is unambiguous
+        let victim = *ds.members_of(1).first().unwrap();
+        decs.deactivate(victim);
+        ds.on_device_fail(&decs.graph, victim);
+        let dev = decs.join_edge(crate::hwgraph::presets::XAVIER_NX, 10.0);
+        ds.on_device_join(&decs.graph, dev);
+        assert_eq!(ds.domain_of(dev), Some(1));
+        // domain 0's summary is the untouched original
+        assert_eq!(ds.summaries()[0], before[0]);
+        assert_ne!(ds.summaries()[1], before[1]);
+    }
+}

@@ -98,6 +98,31 @@
 //! commit the result (cases missing from the baseline are ignored by the
 //! gate, so adding a bench case never breaks CI first).
 //!
+//! ## Orchestration domains: [`domain`] — the ε-CON / ε-ORC split
+//!
+//! [`domain`] makes the paper's two-level orchestration operational. The
+//! topology is partitioned into first-class [`domain::Domain`]s — each
+//! owning its members, its own sub-scheduler instance, and its own
+//! [`slowdown::CachedSlowdown`] / [`netsim::RouteTable`] *slices*,
+//! epoch-versioned and delta-updated on join / leave / fail. A thin
+//! [`domain::ContinuumOrchestrator`] (ε-CON) above them sees only one
+//! [`domain::DomainSummary`] per domain (tier counts, PU headroom,
+//! cheapest cross-domain route) — module visibility prevents it from
+//! reading raw member state. Frames go ε-CON → home domain → device;
+//! escalation to a foreign domain charges the modeled cross-domain round
+//! trip priced from the target's summary. The knob surfaces as
+//! [`platform::PlatformBuilder::domains`] / `Session::domains`,
+//! [`sim::SimConfig::domains`], `"domains": n | "auto"` in config/scenario
+//! JSON, and `heye domains list` on the CLI; `"auto"`
+//! ([`domain::DOMAINS_AUTO`]) derives the partition from the hierarchy's
+//! virtual sub-clusters. Invariants: **one domain is byte-identical** to
+//! the global orchestrator (`tests/domains.rs`), and churn inside one
+//! domain triggers **zero cache work** in the others (asserted via the
+//! [`hwgraph::sssp_invocations`] / [`slowdown::rebuild_count`] counters).
+//! `cargo bench --bench fig18_domains` sweeps the domain count at fleet
+//! scale against the `weighted-random` / `round-robin` EDGELESS-style
+//! baselines.
+//!
 //! ## Scenarios: [`scenario`] — declarative dynamics
 //!
 //! Dynamic experiments are data files, not per-figure glue. A
@@ -162,6 +187,9 @@
 //! * [`sim`] — the discrete-event DECS simulator driving every experiment.
 //! * [`baselines`] — ACE, LaTS (Hetero-Edge) and Multi-tier CloudVR,
 //!   registered alongside H-EYE in the scheduler registry.
+//! * [`domain`] — two-level orchestration domains (ε-CON / ε-ORC split):
+//!   member partitions with per-domain cache slices and sub-schedulers
+//!   under a summary-only continuum tier.
 //! * [`config`] — JSON experiment configurations (`heye run --config`).
 //! * [`scenario`] — declarative dynamic scenarios: open-loop arrivals +
 //!   churn timelines compiled onto the facade (`heye scenario run`).
@@ -174,6 +202,7 @@
 
 pub mod baselines;
 pub mod config;
+pub mod domain;
 pub mod hwgraph;
 pub mod netsim;
 pub mod orchestrator;

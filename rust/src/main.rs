@@ -25,10 +25,12 @@ USAGE:
   heye artifacts [--reps N]
   heye run     [--app vr|mining] [--sched NAME] [--edges N] [--servers M]
                [--fleet] [--sensors K] [--horizon S] [--seed N] [--noise F]
-               [--parallelism T] [--json] [--report-json PATH]
-               [--config FILE] [--placements]
+               [--parallelism T] [--domains N|auto] [--json]
+               [--report-json PATH] [--config FILE] [--placements]
   heye compare [--app vr|mining] [--edges N] [--servers M] [--fleet]
                [--sensors K] [--horizon S] [--seed N] [--parallelism T]
+  heye domains list [--edges N] [--servers M] [--fleet] [--domains N|auto]
+               [--sched NAME]
   heye scenario list
   heye scenario run (--file FILE | --preset NAME) [--sched NAME] [--seed N]
                [--horizon S] [--parallelism T] [--report-json PATH]
@@ -36,6 +38,9 @@ USAGE:
 SCHEDULERS: resolved through the registry — run `heye schedulers` to list
 PARALLELISM: scheduler candidate-evaluation worker threads
              (1 = serial, 0 = auto-detect cores; results are identical)
+DOMAINS: orchestration domains under a summary-only continuum tier
+         (0 = global orchestrator; 1 is byte-identical to global;
+          \"auto\" derives the split from the hierarchy's sub-clusters)
 FLEET: the continuum-scale preset (hundreds of edges; see fig16_fleet)
 SCENARIOS: declarative dynamic runs (open-loop arrivals + churn); see
            `heye scenario list` for presets and rust/examples/ for schema";
@@ -54,12 +59,22 @@ fn platform_from(args: &Args) -> Result<Platform> {
     Ok(builder.build()?)
 }
 
+/// `--domains N|auto` (0 = global orchestrator, the default).
+fn domains_arg(args: &Args) -> usize {
+    match args.get("domains") {
+        Some("auto") => heye::domain::DOMAINS_AUTO,
+        Some(v) => v.parse().unwrap_or(0),
+        None => 0,
+    }
+}
+
 fn sim_config(args: &Args) -> SimConfig {
     SimConfig::default()
         .horizon(args.get_f64("horizon", 1.0))
         .seed(args.get_u64("seed", 42))
         .noise(args.get_f64("noise", 0.02))
         .parallelism(args.get_usize("parallelism", 1))
+        .domains(domains_arg(args))
 }
 
 fn workload_from(args: &Args) -> WorkloadSpec {
@@ -235,6 +250,59 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     }
 }
 
+fn cmd_domains(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") => {
+            let platform = platform_from(args)?;
+            let decs = platform.decs();
+            let domains = match domains_arg(args) {
+                0 => heye::domain::DOMAINS_AUTO, // listing defaults to auto
+                n => n,
+            };
+            let entry = SchedulerRegistry::lookup(&args.get_or("sched", "heye"))?;
+            let ds = heye::domain::DomainScheduler::with_domains(decs, domains, &|d| {
+                entry.build(d)
+            });
+            println!(
+                "{} orchestration domains over {} edges + {} servers (sub-scheduler: {})\n",
+                ds.domain_count(),
+                decs.edge_devices.len(),
+                decs.servers.len(),
+                entry.name
+            );
+            println!(
+                "{:<4} {:>7} {:>6} {:>8} {:>9} {:>15}",
+                "id", "devices", "edges", "servers", "PUs", "min-cross (ms)"
+            );
+            for s in ds.summaries() {
+                let cross = if s.min_cross_route_s.is_finite() {
+                    format!("{:.3}", s.min_cross_route_s * 1e3)
+                } else {
+                    "-".to_string()
+                };
+                println!(
+                    "{:<4} {:>7} {:>6} {:>8} {:>9} {:>15}",
+                    s.id, s.devices, s.edges, s.servers, s.headroom_pus, cross
+                );
+            }
+            println!("\nmembers:");
+            for s in ds.summaries() {
+                let names: Vec<String> = ds
+                    .members_of(s.id)
+                    .iter()
+                    .map(|&d| decs.graph.node(d).name.clone())
+                    .collect();
+                println!("  domain {}: {}", s.id, names.join(", "));
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
 fn cmd_compare(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     println!(
@@ -265,6 +333,7 @@ fn main() -> Result<()> {
         "artifacts" => cmd_artifacts(&args),
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),
+        "domains" => cmd_domains(&args),
         "scenario" => cmd_scenario(&args),
         _ => {
             println!("{USAGE}");

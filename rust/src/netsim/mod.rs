@@ -205,10 +205,16 @@ impl Network {
 pub struct RouteTable {
     /// the graph epoch the table was built at
     epoch: u64,
-    /// node id -> dense device index (`u32::MAX` = not a device)
+    /// node id -> dense destination-column index (`u32::MAX` = not a device)
     dev_index: Vec<u32>,
-    /// all device group nodes, ascending id
+    /// all device group nodes, ascending id (destination columns)
     devices: Vec<NodeId>,
+    /// node id -> dense source-row index (`u32::MAX` = not a source)
+    src_index: Vec<u32>,
+    /// source rows; equals `devices` for a full table
+    sources: Vec<NodeId>,
+    /// was this table built over an explicit source subset?
+    restricted: bool,
     /// row-major `[from][to]`; `None` = unreachable over network links
     routes: Vec<Option<Route>>,
 }
@@ -221,16 +227,49 @@ impl RouteTable {
         t
     }
 
+    /// Build a *slice*: one SSSP per listed source, with every device as a
+    /// destination column. Domains use this so each domain pays only for its
+    /// own members' rows — routing *from* a non-source misses the table (the
+    /// caller falls back to the engine's full table for foreign origins).
+    pub fn for_sources(g: &HwGraph, sources: &[NodeId]) -> RouteTable {
+        let mut t = RouteTable::default();
+        t.rebuild_with(g, Some(sources));
+        t
+    }
+
     fn rebuild(&mut self, g: &HwGraph) {
+        if self.restricted {
+            let sources = std::mem::take(&mut self.sources);
+            self.rebuild_with(g, Some(&sources));
+        } else {
+            self.rebuild_with(g, None);
+        }
+    }
+
+    fn rebuild_with(&mut self, g: &HwGraph, sources: Option<&[NodeId]>) {
         self.epoch = g.epoch();
         self.devices = g.groups(GroupRole::Device);
         self.dev_index = vec![u32::MAX; g.node_count()];
         for (i, &d) in self.devices.iter().enumerate() {
             self.dev_index[d.0 as usize] = i as u32;
         }
+        match sources {
+            Some(s) => {
+                self.restricted = true;
+                self.sources = s.to_vec();
+            }
+            None => {
+                self.restricted = false;
+                self.sources = self.devices.clone();
+            }
+        }
+        self.src_index = vec![u32::MAX; g.node_count()];
+        for (i, &d) in self.sources.iter().enumerate() {
+            self.src_index[d.0 as usize] = i as u32;
+        }
         let n = self.devices.len();
-        self.routes = Vec::with_capacity(n * n);
-        for &from in &self.devices {
+        self.routes = Vec::with_capacity(self.sources.len() * n);
+        for &from in &self.sources {
             let (dist, prev) = g.sssp(from);
             for &to in &self.devices {
                 let r = if from == to {
@@ -255,7 +294,8 @@ impl RouteTable {
     }
 
     /// Rebuild iff the graph's structure moved since the last build.
-    /// Returns whether a rebuild happened.
+    /// Returns whether a rebuild happened. Sliced tables rebuild over their
+    /// recorded source subset.
     pub fn refresh(&mut self, g: &HwGraph) -> bool {
         if self.is_current(g) {
             false
@@ -265,10 +305,22 @@ impl RouteTable {
         }
     }
 
-    /// The cached route between two devices: `None` when either id is not a
-    /// known device or the pair is unreachable over network links. O(1).
+    /// Adopt the graph's current epoch *without* rebuilding. Sound only when
+    /// the structural change provably left every cached route intact — the
+    /// one case today is a leaf-device join in a *foreign* domain: a leaf
+    /// with a single uplink can never shorten a path between existing
+    /// devices, and the newcomer simply misses this slice (falling back to
+    /// the engine's full table). This is what makes domain-local churn free
+    /// for every other domain.
+    pub fn note_epoch(&mut self, g: &HwGraph) {
+        self.epoch = g.epoch();
+    }
+
+    /// The cached route between two devices: `None` when `from_dev` is not a
+    /// source row, `to_dev` is not a known device, or the pair is
+    /// unreachable over network links. O(1).
     pub fn route(&self, from_dev: NodeId, to_dev: NodeId) -> Option<&Route> {
-        let i = *self.dev_index.get(from_dev.0 as usize)?;
+        let i = *self.src_index.get(from_dev.0 as usize)?;
         let j = *self.dev_index.get(to_dev.0 as usize)?;
         if i == u32::MAX || j == u32::MAX {
             return None;
@@ -276,9 +328,19 @@ impl RouteTable {
         self.routes[i as usize * self.devices.len() + j as usize].as_ref()
     }
 
-    /// Number of devices the table covers.
+    /// Number of destination devices the table covers.
     pub fn device_count(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Number of source rows (== `device_count` for a full table).
+    pub fn source_count(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// The destination devices (columns), ascending id.
+    pub fn destinations(&self) -> &[NodeId] {
+        &self.devices
     }
 }
 
@@ -432,6 +494,55 @@ mod tests {
         }
         // non-device nodes miss the table instead of panicking
         assert!(table.route(d.router, all[0]).is_none());
+    }
+
+    /// A source-restricted slice agrees with the full table on its rows,
+    /// misses every foreign row, `note_epoch` adopts a foreign join without
+    /// recomputing anything, and `refresh` rebuilds over the same subset.
+    #[test]
+    fn sliced_table_matches_full_on_its_rows() {
+        let mut d = Decs::build(&DecsSpec::mixed(6, 2));
+        let full = RouteTable::new(&d.graph);
+        let members: Vec<NodeId> = d.edge_devices[..3].to_vec();
+        let mut slice = RouteTable::for_sources(&d.graph, &members);
+        assert_eq!(slice.source_count(), 3);
+        assert_eq!(slice.device_count(), full.device_count());
+        let all: Vec<_> = d
+            .edge_devices
+            .iter()
+            .chain(d.servers.iter())
+            .copied()
+            .collect();
+        for &from in &all {
+            for &to in &all {
+                if members.contains(&from) {
+                    assert_eq!(slice.route(from, to), full.route(from, to));
+                } else {
+                    assert!(slice.route(from, to).is_none());
+                }
+            }
+        }
+        // a foreign leaf join: note_epoch keeps the slice current with zero
+        // route work, and the member rows are byte-untouched
+        let before: Vec<_> = members
+            .iter()
+            .map(|&m| slice.route(m, d.servers[0]).cloned())
+            .collect();
+        d.join_edge(crate::hwgraph::presets::XAVIER_NX, 10.0);
+        assert!(!slice.is_current(&d.graph));
+        slice.note_epoch(&d.graph);
+        assert!(slice.is_current(&d.graph));
+        for (i, &m) in members.iter().enumerate() {
+            assert_eq!(slice.route(m, d.servers[0]).cloned(), before[i]);
+        }
+        // refresh after a second join rebuilds over the same source subset,
+        // now with the newcomers as destination columns
+        let newcomer = d.join_edge(crate::hwgraph::presets::XAVIER_NX, 10.0);
+        assert!(slice.refresh(&d.graph));
+        assert_eq!(slice.source_count(), 3);
+        assert_eq!(slice.device_count(), full.device_count() + 2);
+        assert!(slice.route(members[0], newcomer).is_some());
+        assert!(slice.route(newcomer, members[0]).is_none());
     }
 
     /// A join bumps the epoch; refresh rebuilds once and then covers the

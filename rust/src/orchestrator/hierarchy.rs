@@ -7,6 +7,7 @@
 //! one-way communication cost between two devices' ORCs through the tree
 //! (up to the lowest common ancestor and down again).
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 
 use crate::hwgraph::presets::Decs;
@@ -46,6 +47,15 @@ pub struct Hierarchy {
     pub max_fanout: usize,
     /// number of virtual ORCs inserted for scalability
     pub virtual_orcs: usize,
+    /// per-origin memo of [`Hierarchy::orc_distance_s`] results. MapTask
+    /// asks for the same (origin, candidate) distances on every call; the
+    /// LCA walk is pure tree traversal, so each pair is computed once and
+    /// invalidated per-device on [`Hierarchy::join_device`] /
+    /// [`Hierarchy::leave_device`] instead of re-walked per call. Interior
+    /// mutability keeps `orc_distance_s` a `&self` read; the memo is only
+    /// touched from the orchestrating thread (candidate-evaluation workers
+    /// never see the hierarchy).
+    dist_memo: RefCell<BTreeMap<NodeId, BTreeMap<NodeId, f64>>>,
 }
 
 impl Default for Hierarchy {
@@ -57,6 +67,7 @@ impl Default for Hierarchy {
             root: OrcId(0),
             max_fanout: MAX_FANOUT,
             virtual_orcs: 0,
+            dist_memo: RefCell::new(BTreeMap::new()),
         }
     }
 }
@@ -178,6 +189,10 @@ impl Hierarchy {
             .min_by_key(|o| o.children.len())
             .map(|o| o.id)
             .expect("cluster ORC exists");
+        // per-origin invalidation: only pairs involving the newcomer could
+        // be stale (a rejoin may reuse a node id at a different attachment
+        // point); every other memoized distance walks an unchanged chain
+        self.invalidate_device_distances(dev);
         self.add_device(g, dev, cluster)
     }
 
@@ -197,7 +212,28 @@ impl Hierarchy {
                 .retain(|c| !matches!(c, OrcChild::Orc(o) if *o == orc));
         }
         self.devices.retain(|&d| d != dev);
+        self.invalidate_device_distances(dev);
         true
+    }
+
+    /// Drop every memoized distance involving `dev`: its own per-origin
+    /// map, and its column in every other origin's map. Distances between
+    /// surviving pairs stay valid — a join/leave never moves an existing
+    /// ORC chain.
+    fn invalidate_device_distances(&self, dev: NodeId) {
+        let mut memo = self.dist_memo.borrow_mut();
+        memo.remove(&dev);
+        for m in memo.values_mut() {
+            m.remove(&dev);
+        }
+    }
+
+    /// Forget every memoized ORC distance. Only needed after mutating the
+    /// public ORC arena directly (e.g. perturbing `uplink_s` in tests) —
+    /// [`Hierarchy::join_device`] / [`Hierarchy::leave_device`] invalidate
+    /// precisely on their own.
+    pub fn clear_distance_memo(&self) {
+        self.dist_memo.borrow_mut().clear();
     }
 
     /// All devices ordered by ORC distance from `origin` (ascending), the
@@ -278,12 +314,23 @@ impl Hierarchy {
     /// One-way modeled message latency between two devices' ORCs: the sum
     /// of uplink latencies along the tree path through their lowest common
     /// ancestor. Zero for the same device.
+    ///
+    /// Memoized per origin (the LCA walk is pure; MapTask re-asks the same
+    /// pairs every call). Structural changes through
+    /// [`Hierarchy::join_device`] / [`Hierarchy::leave_device`] invalidate
+    /// exactly the pairs involving the changed device; direct edits to the
+    /// public `orcs` arena must call [`Hierarchy::clear_distance_memo`].
     pub fn orc_distance_s(&self, a: NodeId, b: NodeId) -> f64 {
         if a == b {
             return 0.0;
         }
+        if let Some(&d) = self.dist_memo.borrow().get(&a).and_then(|m| m.get(&b)) {
+            return d;
+        }
         let (oa, ob) = match (self.orc_of_device(a), self.orc_of_device(b)) {
             (Some(x), Some(y)) => (x, y),
+            // unknown devices are not memoized: a later join must not be
+            // shadowed by a cached zero
             _ => return 0.0,
         };
         // ancestor chains with cumulative cost
@@ -299,16 +346,45 @@ impl Hierarchy {
         };
         let ca = chain(oa);
         let cb = chain(ob);
+        let mut dist = 0.0;
         for &(anc, cost_a) in &ca {
             if let Some(&(_, cost_b)) = cb.iter().find(|(o, _)| *o == anc) {
-                return cost_a + cost_b;
+                dist = cost_a + cost_b;
+                break;
             }
         }
-        0.0
+        self.dist_memo
+            .borrow_mut()
+            .entry(a)
+            .or_default()
+            .insert(b, dist);
+        dist
     }
 
     pub fn device_count(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Devices grouped by their direct parent ORC, in first-seen device
+    /// order. On a flat cluster this yields one group per cluster ORC; on a
+    /// fleet-scale cluster it yields one group per virtual sub-cluster —
+    /// the natural partition [`crate::domain`]'s auto mode turns into
+    /// orchestration domains.
+    pub fn leaf_groups(&self) -> Vec<Vec<NodeId>> {
+        let mut order: Vec<OrcId> = Vec::new();
+        let mut groups: BTreeMap<OrcId, Vec<NodeId>> = BTreeMap::new();
+        for &dev in &self.devices {
+            if let Some(parent) = self.cluster_of(dev) {
+                if !groups.contains_key(&parent) {
+                    order.push(parent);
+                }
+                groups.entry(parent).or_default().push(dev);
+            }
+        }
+        order
+            .into_iter()
+            .map(|p| groups.remove(&p).expect("group recorded"))
+            .collect()
     }
 }
 
@@ -381,6 +457,46 @@ mod tests {
         let order = h.devices_by_distance(decs.edge_devices[0]);
         assert!(!order.contains(&gone));
         assert_eq!(order.len(), 6);
+    }
+
+    #[test]
+    fn distance_memo_survives_churn() {
+        let mut decs = Decs::build(&DecsSpec::paper_vr());
+        let mut h = Hierarchy::from_decs(&decs);
+        let e0 = decs.edge_devices[0];
+        // prime the memo over the full fleet
+        let before: Vec<f64> = h
+            .devices
+            .clone()
+            .iter()
+            .map(|&d| h.orc_distance_s(e0, d))
+            .collect();
+        // memoized reads are identical to the first walk
+        let again: Vec<f64> = h
+            .devices
+            .clone()
+            .iter()
+            .map(|&d| h.orc_distance_s(e0, d))
+            .collect();
+        assert_eq!(before, again);
+        // a leave invalidates exactly the departed device's pairs; a fresh
+        // hierarchy agrees on every surviving distance
+        let gone = decs.edge_devices[2];
+        assert!(h.leave_device(gone));
+        assert_eq!(h.orc_distance_s(e0, gone), 0.0, "unknown device is zero");
+        let newcomer = decs.join_edge(XAVIER_NX, 10.0);
+        h.join_device(&decs.graph, newcomer);
+        // a fresh hierarchy (the newcomer is already in the graph) agrees
+        // on every pair the memoized one serves
+        let mut fresh = Hierarchy::from_decs(&decs);
+        fresh.leave_device(gone);
+        for &d in &h.devices.clone() {
+            assert_eq!(
+                h.orc_distance_s(e0, d),
+                fresh.orc_distance_s(e0, d),
+                "memoized distance to {d:?} diverges from an unmemoized walk"
+            );
+        }
     }
 
     #[test]

@@ -434,24 +434,43 @@ impl Orchestrator {
         self.sticky.clear();
     }
 
-    /// Register a device that joined at runtime and invalidate the
-    /// memoized escalation orders (the cached lists must offer the
-    /// newcomer).
+    /// Register a device that joined at runtime and splice it into the
+    /// memoized escalation orders: one ranked insert per cached origin
+    /// (O(origins x log) instead of throwing every order away and
+    /// re-sorting the fleet). The newcomer lands *after* every device at
+    /// the same distance — exactly where the stable sort over the
+    /// hierarchy's insertion order (joins append last) would put it, so a
+    /// delta-updated order is byte-identical to a fresh one.
     pub fn on_device_join(&mut self, g: &crate::hwgraph::HwGraph, dev: NodeId) {
         self.hierarchy.join_device(g, dev);
-        self.order_cache.clear();
+        let hierarchy = &self.hierarchy;
+        for (&origin, order) in self.order_cache.iter_mut() {
+            if origin == dev {
+                continue; // an order never offers its own origin
+            }
+            let d = hierarchy.orc_distance_s(origin, dev);
+            let v = std::rc::Rc::make_mut(order);
+            let pos = v.partition_point(|&x| hierarchy.orc_distance_s(origin, x) <= d);
+            v.insert(pos, dev);
+        }
         self.cache_devices = self.hierarchy.device_count();
     }
 
     /// Detach a departed device: drop its ORC from the hierarchy, purge
-    /// sticky placements involving it, and invalidate the escalation-order
-    /// cache — a join after a leave restores the old device *count*, so
-    /// the count heuristic alone would serve stale orders.
+    /// sticky placements involving it, and splice it out of the memoized
+    /// escalation orders (its own order goes away; every other origin's
+    /// order just loses one entry — relative distances between survivors
+    /// are untouched by a leave).
     pub fn on_device_leave(&mut self, _g: &crate::hwgraph::HwGraph, dev: NodeId) {
         self.hierarchy.leave_device(dev);
         self.sticky
             .retain(|&(origin, _), &mut target| origin != dev && target != dev);
-        self.order_cache.clear();
+        self.order_cache.remove(&dev);
+        for order in self.order_cache.values_mut() {
+            if order.contains(&dev) {
+                std::rc::Rc::make_mut(order).retain(|&d| d != dev);
+            }
+        }
         self.cache_devices = self.hierarchy.device_count();
     }
 }
@@ -641,6 +660,54 @@ mod tests {
             rb.overhead.comm_s
         );
         assert_eq!(ra.pu, rb.pu);
+    }
+
+    /// The delta-updated escalation orders must behave exactly like
+    /// freshly-sorted ones after a leave + join: same placements, same
+    /// overhead accounting, from every origin.
+    #[test]
+    fn order_cache_delta_matches_fresh_after_churn() {
+        // 12 edges + 1 joiner stays under MAX_FANOUT, so the fresh
+        // hierarchy keeps the same flat shape as the churned one
+        let mut decs = Decs::build(&DecsSpec::mixed(12, 3));
+        let perf = ProfileModel::new();
+        let net = Network::new();
+        let mut slow = CachedSlowdown::new(&decs.graph);
+        let cfg = workloads::vr_cfg(30.0, 1.0, None);
+        let render = cfg.nodes[2].spec.clone();
+        let origins: Vec<NodeId> = decs.edge_devices.iter().copied().take(6).collect();
+
+        let mut primed = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
+        {
+            // prime the order cache for every origin before any churn
+            let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
+            for &o in &origins {
+                primed.map_task(&tr, &render, o, o, 0.0, &Loads::default());
+            }
+        }
+        let gone = decs.edge_devices[9];
+        primed.on_device_leave(&decs.graph, gone);
+        let newcomer = decs.join_edge(crate::hwgraph::presets::XAVIER_NX, 10.0);
+        slow.on_device_join(&decs.graph, newcomer);
+        primed.on_device_join(&decs.graph, newcomer);
+        primed.reset_sticky();
+
+        // a cold orchestrator over the same churned membership
+        let mut fresh = Orchestrator::new(Hierarchy::from_decs(&decs), Policy::Hierarchical);
+        fresh.on_device_leave(&decs.graph, gone);
+
+        let tr = Traverser::new(&decs.graph, &slow, &perf, &net);
+        for &o in &origins {
+            primed.reset_sticky();
+            fresh.reset_sticky();
+            let a = primed.map_task(&tr, &render, o, o, 0.0, &Loads::default());
+            let b = fresh.map_task(&tr, &render, o, o, 0.0, &Loads::default());
+            assert_eq!(a.pu, b.pu, "placement diverges from origin {o:?}");
+            assert_eq!(a.predicted_latency_s, b.predicted_latency_s);
+            assert_eq!(a.overhead.comm_s, b.overhead.comm_s);
+            assert_eq!(a.overhead.hops, b.overhead.hops);
+            assert_eq!(a.overhead.traverser_calls, b.overhead.traverser_calls);
+        }
     }
 
     #[test]

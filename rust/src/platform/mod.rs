@@ -92,6 +92,7 @@ impl From<PlatformError> for crate::util::error::Error {
 pub struct PlatformBuilder {
     spec: DecsSpec,
     parallelism: usize,
+    domains: usize,
 }
 
 impl Default for PlatformBuilder {
@@ -99,6 +100,7 @@ impl Default for PlatformBuilder {
         PlatformBuilder {
             spec: DecsSpec::paper_vr(),
             parallelism: 1,
+            domains: 0,
         }
     }
 }
@@ -135,6 +137,23 @@ impl PlatformBuilder {
     /// changes how fast the mapping search runs on the host.
     pub fn parallelism(mut self, threads: usize) -> Self {
         self.parallelism = threads;
+        self
+    }
+
+    /// Default orchestration-domain count for sessions on this platform:
+    /// `0` (the default) keeps the global orchestrator, `n >= 1` partitions
+    /// the topology into `n` [`crate::domain::Domain`]s under a summary-only
+    /// ε-CON. One domain is byte-identical to the global orchestrator.
+    pub fn domains(mut self, n: usize) -> Self {
+        self.domains = n;
+        self
+    }
+
+    /// Derive the domain partition from the hierarchy's virtual ORC
+    /// sub-clusters (one domain per leaf device group — the fleet preset's
+    /// natural split).
+    pub fn domains_auto(mut self) -> Self {
+        self.domains = crate::domain::DOMAINS_AUTO;
         self
     }
 
@@ -195,6 +214,7 @@ impl PlatformBuilder {
             spec: self.spec,
             decs,
             parallelism: self.parallelism,
+            domains: self.domains,
         })
     }
 }
@@ -210,6 +230,9 @@ pub struct Platform {
     /// default scheduler worker threads for sessions (see
     /// [`PlatformBuilder::parallelism`])
     parallelism: usize,
+    /// default orchestration-domain count for sessions (see
+    /// [`PlatformBuilder::domains`]; `0` = global orchestrator)
+    domains: usize,
 }
 
 impl Platform {
@@ -245,7 +268,9 @@ impl Platform {
             platform: self,
             workload,
             scheduler: "heye".to_string(),
-            cfg: SimConfig::default().parallelism(self.parallelism),
+            cfg: SimConfig::default()
+                .parallelism(self.parallelism)
+                .domains(self.domains),
             net_events: Vec::new(),
             join_events: Vec::new(),
             leave_events: Vec::new(),
@@ -420,9 +445,10 @@ impl Session<'_> {
     }
 
     /// Replace the whole engine configuration. This overwrites every
-    /// knob, including the platform's default `parallelism` — re-apply it
-    /// with [`Session::parallelism`] (or set it on the [`SimConfig`]) if
-    /// you replace the config and still want a parallel mapping search.
+    /// knob, including the platform's default `parallelism` and `domains`
+    /// — re-apply them with [`Session::parallelism`] /
+    /// [`Session::domains`] (or set them on the [`SimConfig`]) if you
+    /// replace the config and still want them.
     pub fn config(mut self, cfg: SimConfig) -> Self {
         self.cfg = cfg;
         self
@@ -453,6 +479,14 @@ impl Session<'_> {
     /// identical at any setting.
     pub fn parallelism(mut self, threads: usize) -> Self {
         self.cfg.parallelism = threads;
+        self
+    }
+
+    /// Orchestration-domain count for this run (`0` = global orchestrator,
+    /// `n >= 1` = that many domains, [`crate::domain::DOMAINS_AUTO`] =
+    /// derive from the hierarchy). Overrides the platform default.
+    pub fn domains(mut self, n: usize) -> Self {
+        self.cfg.domains = n;
         self
     }
 
@@ -559,7 +593,18 @@ impl Session<'_> {
                 }
             })
             .collect::<Result<Vec<_>, PlatformError>>()?;
-        let mut sched = entry.build(&decs);
+        // domains >= 1 wraps the resolved scheduler in the two-level
+        // ε-CON / ε-ORC split: one sub-instance per domain, each scoped to
+        // its members, under a summary-only continuum tier
+        let mut sched: Box<dyn crate::sim::Scheduler> = if cfg.domains >= 1 {
+            Box::new(crate::domain::DomainScheduler::with_domains(
+                &decs,
+                cfg.domains,
+                &|d| entry.build(d),
+            ))
+        } else {
+            entry.build(&decs)
+        };
         let mut sim = Simulation::new(decs);
         let mut events: Vec<ScriptedEvent> =
             net_events.into_iter().map(ScriptedEvent::Net).collect();

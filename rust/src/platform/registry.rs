@@ -12,7 +12,9 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::baselines::{AceScheduler, CloudVrScheduler, LatsScheduler};
+use crate::baselines::{
+    AceScheduler, CloudVrScheduler, LatsScheduler, RoundRobinScheduler, WeightedRandomScheduler,
+};
 use crate::hwgraph::presets::Decs;
 use crate::orchestrator::{Hierarchy, Orchestrator, Policy};
 use crate::sim::{HeyeScheduler, Scheduler, SimConfig};
@@ -109,6 +111,18 @@ fn builtin_entries() -> BTreeMap<String, SchedulerEntry> {
         None,
         Arc::new(|decs: &Decs| Box::new(CloudVrScheduler::new(decs)) as Box<dyn Scheduler>),
     );
+    add(
+        "weighted-random",
+        "EDGELESS-style strategy: weighted uniform random over eligible devices (weight = PU count)",
+        None,
+        Arc::new(|decs: &Decs| Box::new(WeightedRandomScheduler::new(decs)) as Box<dyn Scheduler>),
+    );
+    add(
+        "round-robin",
+        "EDGELESS-style strategy: next eligible device with wrap-around",
+        None,
+        Arc::new(|decs: &Decs| Box::new(RoundRobinScheduler::new(decs)) as Box<dyn Scheduler>),
+    );
     reg
 }
 
@@ -118,7 +132,7 @@ fn registry() -> &'static Mutex<BTreeMap<String, SchedulerEntry>> {
 }
 
 /// Registry keys of every built-in scheduler.
-pub const BUILTIN_SCHEDULERS: [&str; 7] = [
+pub const BUILTIN_SCHEDULERS: [&str; 9] = [
     "heye",
     "heye-direct",
     "heye-sticky",
@@ -126,6 +140,8 @@ pub const BUILTIN_SCHEDULERS: [&str; 7] = [
     "ace",
     "lats",
     "cloudvr",
+    "weighted-random",
+    "round-robin",
 ];
 
 /// Namespace for the global registry operations.

@@ -309,6 +309,13 @@ pub struct SimConfig {
     /// `tests/route_cache.rs`); the knob exists for that assertion and for
     /// measuring the cache's win.
     pub route_cache: bool,
+    /// orchestration domains (ε-CON / ε-ORC split, [`crate::domain`]):
+    /// `0` = the single global orchestrator (today's behavior), `n >= 1` =
+    /// partition the topology into `n` domains, each with its own sub-ORC
+    /// and cache slices, under a continuum orchestrator that sees only
+    /// per-domain summaries. With `1` domain, placements and metrics are
+    /// byte-identical to `0` (asserted by `tests/domains.rs`).
+    pub domains: usize,
 }
 
 impl Default for SimConfig {
@@ -321,6 +328,7 @@ impl Default for SimConfig {
             parallelism: 1,
             reset_times: Vec::new(),
             route_cache: true,
+            domains: 0,
         }
     }
 }
@@ -363,6 +371,13 @@ impl SimConfig {
     /// are identical either way).
     pub fn route_cache(mut self, on: bool) -> Self {
         self.route_cache = on;
+        self
+    }
+
+    /// Partition the topology into `n` orchestration domains (0 = one
+    /// global orchestrator, the default).
+    pub fn domains(mut self, n: usize) -> Self {
+        self.domains = n;
         self
     }
 }
@@ -793,7 +808,11 @@ fn apply_leave(
             st.src_active[i] = false;
         }
     }
-    sched.on_device_leave(&decs.graph, dev);
+    if ev.failure {
+        sched.on_device_fail(&decs.graph, dev);
+    } else {
+        sched.on_device_leave(&decs.graph, dev);
+    }
     let mut rec = LeaveRecord {
         t: now,
         device: dev,

@@ -58,6 +58,15 @@ pub trait Scheduler {
     /// crashes).
     fn on_device_leave(&mut self, _g: &HwGraph, _dev: NodeId) {}
 
+    /// Notification that a device *failed* (unplanned churn). Defaults to
+    /// [`Scheduler::on_device_leave`]; implementations that keep separate
+    /// state for graceful departures vs failures (domains prune their
+    /// slowdown slice only on failure, mirroring the engine's
+    /// `CachedSlowdown` handling) override this.
+    fn on_device_fail(&mut self, g: &HwGraph, dev: NodeId) {
+        self.on_device_leave(g, dev);
+    }
+
     /// Candidate-evaluation worker threads (`0` = auto-detect, `1` =
     /// serial). The engine forwards `SimConfig::parallelism` here before a
     /// run; schedulers without a parallel hot path ignore the knob.

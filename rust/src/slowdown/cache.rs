@@ -90,6 +90,28 @@ impl CachedSlowdown {
         slow
     }
 
+    /// Build a *slice* covering only the listed devices (one eager
+    /// construction on the rebuild counter, sized by those devices alone).
+    /// Domains use this so each domain's oracle holds just its members' PU
+    /// rows and pairs: co-located tasks on foreign PUs are skipped exactly
+    /// as cross-device tasks are in the full oracle (different devices
+    /// share no memory system), so member-targeted factors are identical
+    /// to the full table's.
+    pub fn for_devices(g: &HwGraph, devs: &[NodeId]) -> Self {
+        REBUILDS.fetch_add(1, Ordering::Relaxed);
+        let mut slow = Self {
+            epoch: g.epoch(),
+            pu_info: vec![None; g.node_count()],
+            pair_kind: BTreeMap::new(),
+            device_pus: BTreeMap::new(),
+            models: Vec::new(),
+        };
+        for &dev in devs {
+            slow.insert_device(g, dev);
+        }
+        slow
+    }
+
     /// Insert one device's PU rows and same-device pairs (shared by the
     /// eager build and the join delta).
     fn insert_device(&mut self, g: &HwGraph, dev: NodeId) {
@@ -326,6 +348,49 @@ mod tests {
         }
         // unknown node: empty, not a panic
         assert!(cached.pus_of(decs.root).is_empty());
+    }
+
+    /// A device slice holds only its members' rows and agrees with the
+    /// full oracle on every member-targeted factor, even when co-located
+    /// lists mention foreign PUs (those contribute nothing either way:
+    /// different devices share no memory system).
+    #[test]
+    fn device_slice_matches_full_for_member_targets() {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let g = &decs.graph;
+        let full = CachedSlowdown::new(g);
+        let members: Vec<crate::hwgraph::NodeId> = decs.edge_devices[..2]
+            .iter()
+            .copied()
+            .chain([decs.servers[0]])
+            .collect();
+        let slice = CachedSlowdown::for_devices(g, &members);
+        for &d in decs.edge_devices.iter().chain(decs.servers.iter()) {
+            if members.contains(&d) {
+                assert_eq!(slice.pus_of(d), g.pus_in(d).as_slice());
+            } else {
+                assert!(slice.pus_of(d).is_empty());
+            }
+        }
+        let member_pus: Vec<crate::hwgraph::NodeId> =
+            members.iter().flat_map(|&d| g.pus_in(d)).collect();
+        let all_pus: Vec<crate::hwgraph::NodeId> = decs
+            .edge_devices
+            .iter()
+            .chain(decs.servers.iter())
+            .flat_map(|&d| g.pus_in(d))
+            .collect();
+        let mut rng = Rng::new(17);
+        for _ in 0..200 {
+            let target = Placed::new(*rng.choice(&KINDS), *rng.choice(&member_pus));
+            let n_co = rng.below(5);
+            let co: Vec<Placed> = (0..n_co)
+                .map(|_| Placed::new(*rng.choice(&KINDS), *rng.choice(&all_pus)))
+                .collect();
+            let fa = slice.factor(&target, &co);
+            let fb = full.factor(&target, &co);
+            assert!((fa - fb).abs() < 1e-12, "mismatch: slice={fa} full={fb}");
+        }
     }
 
     /// The core coherence property: a scripted join+leave+join sequence

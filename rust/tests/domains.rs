@@ -1,0 +1,261 @@
+//! Contract tests for `heye::domain` — the two-level ε-CON / ε-ORC split.
+//!
+//! Two invariants are non-negotiable:
+//!
+//! 1. **Determinism**: with one domain, placements and metrics are
+//!    byte-identical to the global orchestrator — on the paper VR testbed,
+//!    the fleet preset and the churn scenario preset, serial and parallel.
+//! 2. **Isolation**: churn inside one domain triggers zero cache work in
+//!    the others — asserted with the process-wide SSSP / oracle-rebuild
+//!    counters and summary equality, exactly like the route-cache tests.
+//!
+//! The counters are process-wide atomics, so counter-sensitive tests
+//! serialize on one lock to keep the deltas attributable.
+
+use std::sync::Mutex;
+
+use heye::domain::{partition, DomainScheduler};
+use heye::hwgraph::presets::{Decs, DecsSpec, XAVIER_NX};
+use heye::hwgraph::sssp_invocations;
+use heye::platform::{Platform, SchedulerRegistry, WorkloadSpec};
+use heye::scenario::Scenario;
+use heye::sim::{RunMetrics, Scheduler, SimConfig};
+use heye::slowdown::rebuild_count;
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Bit-level equality of everything deterministic in a run's metrics
+/// (`sched_compute_s` / per-frame `sched_s` fold in measured wall-clock by
+/// design, so they are the only fields allowed to differ).
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.frames.len(), b.frames.len(), "{what}: frame count");
+    for (i, (x, y)) in a.frames.iter().zip(b.frames.iter()).enumerate() {
+        assert_eq!(x.origin, y.origin, "{what}: frame {i} origin");
+        assert_eq!(
+            x.release_t.to_bits(),
+            y.release_t.to_bits(),
+            "{what}: frame {i} release"
+        );
+        assert_eq!(
+            x.finish_t.to_bits(),
+            y.finish_t.to_bits(),
+            "{what}: frame {i} finish"
+        );
+        assert_eq!(
+            x.latency_s.to_bits(),
+            y.latency_s.to_bits(),
+            "{what}: frame {i} latency"
+        );
+        assert_eq!(
+            x.comm_s.to_bits(),
+            y.comm_s.to_bits(),
+            "{what}: frame {i} comm"
+        );
+        assert_eq!(x.degraded, y.degraded, "{what}: frame {i} degraded");
+        assert_eq!(
+            x.resolution.to_bits(),
+            y.resolution.to_bits(),
+            "{what}: frame {i} resolution"
+        );
+        assert_eq!(
+            x.predicted_s.to_bits(),
+            y.predicted_s.to_bits(),
+            "{what}: frame {i} prediction"
+        );
+    }
+    assert_eq!(a.placements, b.placements, "{what}: placement counts");
+    assert_eq!(a.tasks_on_edge, b.tasks_on_edge, "{what}: edge tasks");
+    assert_eq!(a.tasks_on_server, b.tasks_on_server, "{what}: server tasks");
+    assert_eq!(a.dropped, b.dropped, "{what}: dropped");
+    assert_eq!(a.released, b.released, "{what}: released");
+    assert_eq!(a.sched_hops, b.sched_hops, "{what}: hops");
+    assert_eq!(
+        a.sched_comm_s.to_bits(),
+        b.sched_comm_s.to_bits(),
+        "{what}: sched comm"
+    );
+    assert_eq!(a.traverser_calls, b.traverser_calls, "{what}: traverser calls");
+    assert_eq!(a.busy_by_device, b.busy_by_device, "{what}: busy accounting");
+    assert_eq!(a.leaves.len(), b.leaves.len(), "{what}: leave records");
+}
+
+fn run_once(
+    platform: &Platform,
+    wl: WorkloadSpec,
+    sched: &str,
+    domains: usize,
+    parallelism: usize,
+    horizon: f64,
+) -> RunMetrics {
+    platform
+        .session(wl)
+        .scheduler(sched)
+        .config(
+            SimConfig::default()
+                .horizon(horizon)
+                .seed(11)
+                .domains(domains)
+                .parallelism(parallelism),
+        )
+        .run()
+        .expect("run")
+        .metrics
+}
+
+/// One domain == global orchestrator, byte for byte, on the paper VR
+/// testbed — for H-EYE and for CloudVR (whose resolution controller routes
+/// through the domain's slice), serial and parallel.
+#[test]
+fn vr_one_domain_is_byte_identical_to_global() {
+    let platform = Platform::builder().paper_vr().build().unwrap();
+    for sched in ["heye", "cloudvr"] {
+        for parallelism in [1usize, 4] {
+            let global = run_once(&platform, WorkloadSpec::Vr, sched, 0, parallelism, 0.5);
+            let domains = run_once(&platform, WorkloadSpec::Vr, sched, 1, parallelism, 0.5);
+            assert!(!global.frames.is_empty(), "{sched}: no frames");
+            assert_metrics_identical(
+                &global,
+                &domains,
+                &format!("vr/{sched}/parallelism={parallelism}"),
+            );
+        }
+    }
+}
+
+/// Same at fleet scale (192 edges + 12 servers, virtual sub-clusters): the
+/// single-domain wrapper charges no cross-domain overhead and reproduces
+/// the global search exactly.
+#[test]
+fn fleet_one_domain_is_byte_identical_to_global() {
+    let platform = Platform::builder().fleet().build().unwrap();
+    let wl = WorkloadSpec::Mining {
+        sensors: 48,
+        hz: 10.0,
+    };
+    for parallelism in [1usize, 4] {
+        let global = run_once(&platform, wl.clone(), "heye", 0, parallelism, 0.15);
+        let domains = run_once(&platform, wl.clone(), "heye", 1, parallelism, 0.15);
+        assert!(global.released > 0, "fleet run released nothing");
+        assert_metrics_identical(
+            &global,
+            &domains,
+            &format!("fleet/parallelism={parallelism}"),
+        );
+    }
+}
+
+fn churn_metrics(domains: usize, parallelism: usize) -> RunMetrics {
+    let mut sc = Scenario::preset("churn").expect("churn preset");
+    sc.cfg.sim.horizon_s = 1.5;
+    sc.cfg.sim.domains = domains;
+    sc.cfg.sim.parallelism = parallelism;
+    sc.run().expect("churn run").run.metrics
+}
+
+/// One domain == global through the full churn preset (failure + join +
+/// graceful leave), serial and parallel — every structural-event path in
+/// the engine dispatches identically through the domain wrapper.
+#[test]
+fn churn_one_domain_is_byte_identical_to_global() {
+    for parallelism in [1usize, 4] {
+        let global = churn_metrics(0, parallelism);
+        let domains = churn_metrics(1, parallelism);
+        assert!(!global.leaves.is_empty(), "churn must record leaves");
+        assert_metrics_identical(
+            &global,
+            &domains,
+            &format!("churn/parallelism={parallelism}"),
+        );
+    }
+}
+
+/// Multi-domain runs are parallelism-invariant under churn: the ε-CON's
+/// visit order and every sub-ORC reduce deterministically.
+#[test]
+fn churn_parallel_equals_serial_with_three_domains() {
+    let serial = churn_metrics(3, 1);
+    let parallel = churn_metrics(3, 4);
+    assert!(!serial.frames.is_empty());
+    assert_metrics_identical(&serial, &parallel, "churn/domains=3");
+}
+
+fn heye_factory() -> impl Fn(&Decs) -> Box<dyn Scheduler> {
+    |d: &Decs| SchedulerRegistry::create("heye", d).unwrap()
+}
+
+/// A failure in domain A costs domain B nothing: zero SSSPs, zero oracle
+/// rebuilds, and B's summary (what the ε-CON sees) stays byte-identical.
+#[test]
+fn failure_in_one_domain_leaves_others_untouched() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let mut decs = Decs::build(&DecsSpec::mixed(9, 3));
+    let mut ds = DomainScheduler::new(&decs, partition(&decs, 3), &heye_factory());
+    let before_summaries = ds.summaries().to_vec();
+    let victim = *ds.members_of(0).first().unwrap();
+    let sssp_before = sssp_invocations();
+    let rebuilds_before = rebuild_count();
+    decs.deactivate(victim);
+    ds.on_device_fail(&decs.graph, victim);
+    assert_eq!(
+        sssp_invocations() - sssp_before,
+        0,
+        "a failure must not recompute any routes"
+    );
+    assert_eq!(
+        rebuild_count() - rebuilds_before,
+        0,
+        "a failure must not reconstruct any slowdown slice"
+    );
+    assert_ne!(ds.summaries()[0], before_summaries[0], "A's summary moved");
+    assert_eq!(ds.summaries()[1], before_summaries[1], "B's summary intact");
+    assert_eq!(ds.summaries()[2], before_summaries[2], "C's summary intact");
+}
+
+/// A join is O(target domain): the target's route slice rebuilds over its
+/// own members only (k+1 SSSPs), no slowdown slice is reconstructed, and
+/// foreign summaries stay byte-identical.
+#[test]
+fn join_touches_only_the_target_domain() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let mut decs = Decs::build(&DecsSpec::mixed(9, 3));
+    let mut ds = DomainScheduler::new(&decs, partition(&decs, 3), &heye_factory());
+    let before_summaries = ds.summaries().to_vec();
+    // all domains are equal-sized, so the smallest-domain rule picks id 0
+    let target_members = ds.members_of(0).len();
+    let dev = decs.join_edge(XAVIER_NX, 10.0);
+    let sssp_before = sssp_invocations();
+    let rebuilds_before = rebuild_count();
+    ds.on_device_join(&decs.graph, dev);
+    assert_eq!(ds.domain_of(dev), Some(0));
+    assert_eq!(
+        sssp_invocations() - sssp_before,
+        (target_members + 1) as u64,
+        "join must rebuild only the target domain's route slice"
+    );
+    assert_eq!(
+        rebuild_count() - rebuilds_before,
+        0,
+        "join must delta-update the slowdown slice, not reconstruct it"
+    );
+    assert_eq!(ds.summaries()[1], before_summaries[1], "B's summary intact");
+    assert_eq!(ds.summaries()[2], before_summaries[2], "C's summary intact");
+    assert_ne!(ds.summaries()[0], before_summaries[0], "target summary moved");
+}
+
+/// Engine-level slice accounting: a full churn run with `n` domains
+/// constructs exactly `1 + n` slowdown tables (the engine's full oracle
+/// plus one slice per domain) — churn itself adds none.
+#[test]
+fn churn_run_builds_one_slowdown_slice_per_domain() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    for domains in [1usize, 2, 3] {
+        let before = rebuild_count();
+        let m = churn_metrics(domains, 1);
+        assert!(!m.leaves.is_empty(), "churn must apply its leave events");
+        assert_eq!(
+            rebuild_count() - before,
+            1 + domains as u64,
+            "domains={domains}: expected engine oracle + one slice per domain"
+        );
+    }
+}
