@@ -13,9 +13,16 @@
 //!   "noise": 0.02,
 //!   "sensors": 20,
 //!   "net_events": [ { "t": 1.0, "edge_index": 0, "gbps": 2.5 } ],
-//!   "join_events": [ { "t": 1.0, "model": "xavier_nx", "vr_source": true } ]
+//!   "join_events": [ { "t": 1.0, "model": "xavier_nx", "vr_source": true } ],
+//!   "membership": { "heartbeat_s": 0.02, "deadline_s": 0.05, "jitter": 0.1 },
+//!   "drain_deadline_s": 0.25
 //! }
 //! ```
+//!
+//! `membership` turns on the organic-membership registry
+//! ([`crate::membership`]): heartbeats ride the event heap and a missed
+//! refresh deadline is detected as a device failure. `drain_deadline_s`
+//! bounds graceful-leave draining (omitted = unbounded).
 
 use crate::util::error::Result;
 use crate::{bail, err};
@@ -135,6 +142,24 @@ impl ExpConfig {
         if let Some(v) = j.get("sensors").and_then(|v| v.as_u64()) {
             c.sensors = v as usize;
         }
+        if let Some(m) = j.get("membership") {
+            let hb = m
+                .get("heartbeat_s")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| err!("membership.heartbeat_s required"))?;
+            let dl = m
+                .get("deadline_s")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| err!("membership.deadline_s required"))?;
+            let mut mc = crate::membership::MembershipConfig::new(hb, dl);
+            if let Some(jit) = m.get("jitter").and_then(|v| v.as_f64()) {
+                mc = mc.jitter(jit);
+            }
+            c.sim.membership = Some(mc);
+        }
+        if let Some(v) = j.get("drain_deadline_s").and_then(|v| v.as_f64()) {
+            c.sim.drain_s = v;
+        }
         if let Some(arr) = j.get("net_events").and_then(|v| v.as_arr()) {
             for e in arr {
                 let t = e.get("t").and_then(|v| v.as_f64()).unwrap_or(0.0);
@@ -183,6 +208,17 @@ impl ExpConfig {
     pub fn validate(&self) -> Result<()> {
         let n_edges: usize = self.decs_spec.edges.iter().map(|(_, c)| c).sum();
         let h = self.sim.horizon_s;
+        // membership misconfigurations (deadline not beyond the worst-case
+        // heartbeat interval, negative jitter, ...) are parse-time errors
+        if let Some(m) = &self.sim.membership {
+            m.validate().map_err(|e| err!("{e}"))?;
+        }
+        if self.sim.drain_s.is_nan() || self.sim.drain_s <= 0.0 {
+            bail!(
+                "drain_deadline_s must be positive (omit for unbounded), got {}",
+                self.sim.drain_s
+            );
+        }
         for (i, &(t, idx, _)) in self.net_events.iter().enumerate() {
             if !t.is_finite() || t < 0.0 {
                 bail!("net_events[{i}]: time {t} must be finite and non-negative");
@@ -323,6 +359,44 @@ mod tests {
         assert_eq!(c.sim.domains, crate::domain::DOMAINS_AUTO);
         assert_eq!(ExpConfig::parse("{}").unwrap().sim.domains, 0);
         assert!(ExpConfig::parse(r#"{ "domains": true }"#).is_err());
+    }
+
+    #[test]
+    fn parses_membership_knobs() {
+        let c = ExpConfig::parse(
+            r#"{ "membership": { "heartbeat_s": 0.02, "deadline_s": 0.05, "jitter": 0.1 },
+                 "drain_deadline_s": 0.25 }"#,
+        )
+        .unwrap();
+        let m = c.sim.membership.unwrap();
+        assert_eq!(m.heartbeat_s, 0.02);
+        assert_eq!(m.deadline_s, 0.05);
+        assert_eq!(m.jitter, 0.1);
+        assert_eq!(c.sim.drain_s, 0.25);
+        // off by default: no registry, unbounded drain
+        let c = ExpConfig::parse("{}").unwrap();
+        assert!(c.sim.membership.is_none());
+        assert!(c.sim.drain_s.is_infinite());
+    }
+
+    #[test]
+    fn rejects_membership_misconfigurations() {
+        // deadline <= heartbeat period can trip detection on a healthy device
+        let e = ExpConfig::parse(
+            r#"{ "membership": { "heartbeat_s": 0.05, "deadline_s": 0.05 } }"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("membership"), "{e}");
+        // negative jitter
+        assert!(ExpConfig::parse(
+            r#"{ "membership": { "heartbeat_s": 0.02, "deadline_s": 0.05, "jitter": -0.1 } }"#
+        )
+        .is_err());
+        // missing required field
+        let e = ExpConfig::parse(r#"{ "membership": { "heartbeat_s": 0.02 } }"#).unwrap_err();
+        assert!(e.to_string().contains("deadline_s"), "{e}");
+        // non-positive drain deadline
+        assert!(ExpConfig::parse(r#"{ "drain_deadline_s": 0 }"#).is_err());
     }
 
     #[test]

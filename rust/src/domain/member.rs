@@ -9,7 +9,7 @@
 //! read-only accessors exposed to the CLI and tests never leak mutable or
 //! per-PU state.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::hwgraph::{HwGraph, NodeId};
 use crate::netsim::RouteTable;
@@ -41,6 +41,10 @@ pub struct Domain {
     slow: CachedSlowdown,
     /// route slice: member rows × all-device columns
     routes: RouteTable,
+    /// advertised capability weights in `(0, 1]` from membership
+    /// re-advertisements; absent = full capacity. Scales the summary's
+    /// headroom only — the contention model keeps pricing real hardware.
+    weights: BTreeMap<NodeId, f64>,
 }
 
 impl Domain {
@@ -64,6 +68,7 @@ impl Domain {
             sub,
             slow,
             routes,
+            weights: BTreeMap::new(),
         }
     }
 
@@ -95,7 +100,9 @@ impl Domain {
         let mut headroom = 0usize;
         let mut servers = 0usize;
         for &m in &self.active {
-            headroom += self.slow.pus_of(m).len();
+            let pus = self.slow.pus_of(m).len();
+            let w = self.weights.get(&m).copied().unwrap_or(1.0);
+            headroom += (pus as f64 * w).round() as usize;
             if self.servers.contains(&m) {
                 servers += 1;
             }
@@ -188,6 +195,27 @@ impl Domain {
         self.sub.on_device_join(g, dev);
         self.slow.on_device_join(g, dev);
         self.routes = RouteTable::for_sources(g, &self.members);
+    }
+
+    /// A previously-failed member re-registered: it is already in the
+    /// member list and the route-slice rows, its nodes and links never
+    /// went away — so re-activate, delta-insert its pruned slowdown rows
+    /// ([`CachedSlowdown::on_device_join`] re-inserts in place and adopts
+    /// the bumped epoch), and adopt the epoch on the route slice without a
+    /// rebuild. Zero SSSPs; byte-identical to a from-scratch slice.
+    pub(super) fn on_rejoin(&mut self, g: &HwGraph, dev: NodeId) {
+        debug_assert!(self.member_set.contains(&dev), "rejoin of a non-member");
+        self.active.insert(dev);
+        self.sub.on_device_join(g, dev);
+        self.slow.on_device_join(g, dev);
+        self.routes.note_epoch(g);
+    }
+
+    /// Membership capability re-advertisement for a member: record the
+    /// weight so the next summary scales this device's advertised headroom.
+    /// Slices are untouched — the hardware itself did not change shape.
+    pub(super) fn set_weight(&mut self, dev: NodeId, weight: f64) {
+        self.weights.insert(dev, weight);
     }
 
     /// Structure changed in *another* domain. Joins there are leaf devices

@@ -264,6 +264,21 @@ impl Scheduler for DomainScheduler {
     /// other domain takes an epoch note and keeps summary, slowdown slice
     /// and route rows byte-for-byte.
     fn on_device_join(&mut self, g: &HwGraph, dev: NodeId) {
+        // re-registration of a device this scheduler already knows: it
+        // stays in its original domain, which re-activates it in place
+        // (delta slowdown insert, epoch note on the route slice — zero
+        // SSSPs); every other domain takes an epoch note
+        if let Some(&id) = self.domain_of.get(&dev) {
+            for (i, d) in self.domains.iter_mut().enumerate() {
+                if i == id {
+                    d.on_rejoin(g, dev);
+                } else {
+                    d.note_foreign_structure(g);
+                }
+            }
+            self.summaries[id] = self.domains[id].summary(g);
+            return;
+        }
         let target = (0..self.domains.len())
             .min_by_key(|&i| (self.domains[i].active_count(), i))
             .expect("at least one domain");
@@ -288,6 +303,15 @@ impl Scheduler for DomainScheduler {
     fn on_device_fail(&mut self, g: &HwGraph, dev: NodeId) {
         if let Some(&id) = self.domain_of.get(&dev) {
             self.domains[id].on_fail(g, dev);
+            self.summaries[id] = self.domains[id].summary(g);
+        }
+    }
+
+    /// Capability re-advertisement: only the owning domain records the
+    /// weight and recomputes its summary; no slice is rebuilt anywhere.
+    fn on_capability(&mut self, g: &HwGraph, dev: NodeId, weight: f64) {
+        if let Some(&id) = self.domain_of.get(&dev) {
+            self.domains[id].set_weight(dev, weight);
             self.summaries[id] = self.domains[id].summary(g);
         }
     }

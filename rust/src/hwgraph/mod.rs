@@ -290,6 +290,17 @@ impl HwGraph {
         self.nodes[id.0 as usize].model = Some(model.to_string());
     }
 
+    /// Record a structural change that adds no nodes or edges: a device
+    /// re-registering after a membership failure
+    /// ([`presets::Decs::reactivate`]). Every id and link is unchanged,
+    /// but the serving membership moved, so epoch-keyed caches must
+    /// re-validate (the route tables treat a re-registration exactly like
+    /// a join: the owning domain delta-updates, foreign slices adopt the
+    /// epoch without rebuilding).
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
     /// Re-parent `child` under `group` (dynamic adaptability: a new edge
     /// device joining an edge cluster, §5.4.2).
     pub fn attach(&mut self, child: NodeId, group: NodeId) {

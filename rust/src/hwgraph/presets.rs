@@ -367,6 +367,18 @@ impl Decs {
         self.inactive.insert(dev);
     }
 
+    /// Re-activate a device whose registration came back after a
+    /// membership failure. A re-registration is a *join*: it changes the
+    /// serving membership, so the structural epoch is bumped (unlike
+    /// [`Decs::deactivate`], which leaves the epoch alone because pruned
+    /// state is never queried again) and epoch-keyed caches delta-insert
+    /// the device's rows back.
+    pub fn reactivate(&mut self, dev: NodeId) {
+        if self.inactive.remove(&dev) {
+            self.graph.bump_epoch();
+        }
+    }
+
     /// Is the device still part of the serving system?
     pub fn is_active(&self, dev: NodeId) -> bool {
         !self.inactive.contains(&dev)

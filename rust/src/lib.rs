@@ -144,10 +144,11 @@
 //!   device), with the disruption recorded per event.
 //!
 //! Event lists are validated on load (negative times, events past the
-//! horizon, out-of-range `edge_index` are errors naming the entry). Runs
-//! return a [`scenario::ScenarioReport`]: p50/p95/p99 latency, QoS-miss
-//! rate, a goodput timeline, and per-disruption costs. Five presets ship
-//! built in — `steady`, `flashcrowd`, `diurnal`, `churn`, `partition` —
+//! horizon, out-of-range `edge_index`, membership misconfigurations are
+//! errors naming the entry). Runs return a [`scenario::ScenarioReport`]:
+//! p50/p95/p99 latency, QoS-miss rate, a goodput timeline, and
+//! per-disruption costs. Six presets ship built in — `steady`,
+//! `flashcrowd`, `diurnal`, `churn`, `partition`, `flaky` —
 //! listed by `heye scenario list` and run by `heye scenario run --preset
 //! churn` (or `--file rust/examples/scenario_churn.json`); `heye run
 //! --report-json out.json` and `heye scenario run --report-json out.json`
@@ -167,6 +168,62 @@
 //! );
 //! # Ok::<(), heye::util::error::Error>(())
 //! ```
+//!
+//! ## Organic membership: [`membership`] — a missed refresh *is* a failure
+//!
+//! [`membership`] replaces scripted churn with EDGELESS-style organic
+//! registration: every edge device registers with the
+//! [`membership::Registry`] at t = 0 (joins register on arrival) and must
+//! refresh via heartbeat before its per-device deadline. The invariant is
+//! that **there is only one failure mechanism**: a missed refresh deadline
+//! *is* the failure — the registry synthesizes the exact
+//! `LeaveEvent { failure: true }` the scripted path uses, so domains prune
+//! their slices, schedulers get `on_device_fail`, and in-flight tasks
+//! re-map identically whether a failure was scripted or detected
+//! (`tests/membership.rs` asserts byte-identical `RunMetrics` between the
+//! two at equivalent times). Because each device's beat schedule is its
+//! own deterministic RNG stream (seed + device index, the per-source
+//! seeding rules), every detection and re-registration instant is a pure
+//! function of the config — the engine *pre-compiles* them onto the
+//! structural timeline and heartbeats ride the event heap as
+//! bookkeeping-only events. A re-registration after a miss is a **join**:
+//! delta-insert into [`slowdown::CachedSlowdown`], an epoch note on the
+//! [`netsim::RouteTable`] slices — zero whole-graph Dijkstra runs, zero
+//! oracle rebuilds (counter-asserted). Capability re-advertisements
+//! (`degrade` events) rescale the device's advertised headroom in its
+//! [`domain::DomainSummary`] in place. Graceful leaves drain **bounded**:
+//! `drain_deadline_s` escalates a stuck drain onto the same failure path.
+//!
+//! Scenario/config JSON:
+//!
+//! ```json
+//! "membership":       { "heartbeat_s": 0.02, "deadline_s": 0.05, "jitter": 0.1 },
+//! "drain_deadline_s": 0.25,
+//! "events": [
+//!   { "kind": "flaky",   "t": 0.3, "edge_index": 5, "until": 0.7 },
+//!   { "kind": "degrade", "t": 0.4, "edge_index": 0, "weight": 0.5 }
+//! ]
+//! ```
+//!
+//! `deadline_s` must exceed the worst-case beat gap
+//! `heartbeat_s * (1 + jitter)`, `flaky` / `degrade` events require a
+//! `membership` config, and violations are rejected at parse time naming
+//! the offending entry. The knobs surface as
+//! [`platform::PlatformBuilder::membership`], `Session::membership` /
+//! `Session::flaky` / `Session::degrade` / `Session::drain_deadline`,
+//! [`sim::SimConfig::membership`], and `heye membership run` on the CLI
+//! (the `flaky` preset and `rust/examples/scenario_membership.json` are
+//! ready-made exemplars; `cargo bench --bench fig19_membership` sweeps
+//! heartbeat period x flaky fraction against a committed baseline).
+//!
+//! Alongside the registry, [`telemetry::ProxySnapshot`] is the
+//! EDGELESS-style delegated-orchestration proxy: a read-only,
+//! JSON-exportable mirror of per-domain membership, per-device load, and
+//! heartbeat health captured after every domain or membership run
+//! ([`platform::RunReport::proxy`]). External tooling — and the admission
+//! layer planned on top — queries the snapshot instead of touching engine
+//! state; [`telemetry::ProxySnapshot::escalation_order`] reproduces the
+//! live ε-CON's domain ranking from the mirror alone.
 //!
 //! ## The mechanisms underneath
 //!
@@ -190,6 +247,10 @@
 //! * [`domain`] — two-level orchestration domains (ε-CON / ε-ORC split):
 //!   member partitions with per-domain cache slices and sub-schedulers
 //!   under a summary-only continuum tier.
+//! * [`membership`] — organic membership: registration, deterministic
+//!   heartbeats, missed-refresh failure detection, re-registration, and
+//!   capability re-advertisement (the `membership` / `flaky` / `degrade`
+//!   scenario knobs).
 //! * [`config`] — JSON experiment configurations (`heye run --config`).
 //! * [`scenario`] — declarative dynamic scenarios: open-loop arrivals +
 //!   churn timelines compiled onto the facade (`heye scenario run`).
@@ -204,6 +265,7 @@ pub mod baselines;
 pub mod config;
 pub mod domain;
 pub mod hwgraph;
+pub mod membership;
 pub mod netsim;
 pub mod orchestrator;
 pub mod perfmodel;

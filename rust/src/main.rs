@@ -34,6 +34,8 @@ USAGE:
   heye scenario list
   heye scenario run (--file FILE | --preset NAME) [--sched NAME] [--seed N]
                [--horizon S] [--parallelism T] [--report-json PATH]
+  heye membership run (--file FILE | --preset NAME) [--sched NAME] [--seed N]
+               [--horizon S] [--parallelism T] [--proxy-json PATH]
 
 SCHEDULERS: resolved through the registry — run `heye schedulers` to list
 PARALLELISM: scheduler candidate-evaluation worker threads
@@ -43,7 +45,11 @@ DOMAINS: orchestration domains under a summary-only continuum tier
           \"auto\" derives the split from the hierarchy's sub-clusters)
 FLEET: the continuum-scale preset (hundreds of edges; see fig16_fleet)
 SCENARIOS: declarative dynamic runs (open-loop arrivals + churn); see
-           `heye scenario list` for presets and rust/examples/ for schema";
+           `heye scenario list` for presets and rust/examples/ for schema
+MEMBERSHIP: organic membership runs (heartbeats, failure detection,
+            re-registration); the scenario needs a `membership` config
+            (default preset: flaky). `--proxy-json` exports the read-only
+            telemetry proxy snapshot for external tooling";
 
 fn platform_from(args: &Args) -> Result<Platform> {
     let edges = args.get_usize("edges", 0);
@@ -250,6 +256,82 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     }
 }
 
+fn cmd_membership(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => {
+            let mut sc = if let Some(path) = args.get("file") {
+                Scenario::load(path)?
+            } else {
+                let name = args.get_or("preset", "flaky");
+                Scenario::preset(&name).ok_or_else(|| {
+                    heye::err!("unknown preset `{name}` (see `heye scenario list`)")
+                })?
+            };
+            if let Some(s) = args.get("sched") {
+                sc.cfg.sched = s.to_string();
+            }
+            if args.has("seed") {
+                sc.cfg.sim.seed = args.get_u64("seed", sc.cfg.sim.seed);
+            }
+            if args.has("horizon") {
+                sc.cfg.sim.horizon_s = args.get_f64("horizon", sc.cfg.sim.horizon_s);
+            }
+            if args.has("parallelism") {
+                sc.cfg.sim.parallelism = args.get_usize("parallelism", sc.cfg.sim.parallelism);
+            }
+            if sc.cfg.sim.membership.is_none() {
+                heye::bail!(
+                    "scenario `{}` has no membership config — add a `membership` \
+                     object to the file or use `--preset flaky`",
+                    sc.name
+                );
+            }
+            let report = sc.run()?;
+            report.print(&sc.name);
+            if let Some(h) = &report.run.metrics.membership {
+                println!("\nmembership health:");
+                println!(
+                    "  devices={} beats={} misses={} detected_failures={} \
+                     reregistrations={}",
+                    h.devices, h.beats, h.misses, h.failures_detected, h.reregistrations
+                );
+                println!(
+                    "  drain_escalations={} capability_degrades={} down_at_end={}",
+                    h.escalations, h.degrades, h.down_at_end
+                );
+            }
+            if let Some(p) = &report.run.proxy {
+                if !p.domains.is_empty() {
+                    println!("\nproxy domain mirrors:");
+                    println!(
+                        "{:>4} {:>7} {:>6} {:>8} {:>9}",
+                        "id", "devices", "edges", "servers", "PUs"
+                    );
+                    for d in &p.domains {
+                        println!(
+                            "{:>4} {:>7} {:>6} {:>8} {:>9}",
+                            d.id, d.devices, d.edges, d.servers, d.headroom_pus
+                        );
+                    }
+                }
+                let down = p.down_devices();
+                if !down.is_empty() {
+                    println!("\ndown at horizon: {} device(s)", down.len());
+                }
+                if let Some(path) = args.get("proxy-json") {
+                    std::fs::write(path, p.to_json().to_string())?;
+                    println!("\nwrote proxy snapshot JSON to {path}");
+                }
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
 fn cmd_domains(args: &Args) -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("list") => {
@@ -335,6 +417,7 @@ fn main() -> Result<()> {
         "compare" => cmd_compare(&args),
         "domains" => cmd_domains(&args),
         "scenario" => cmd_scenario(&args),
+        "membership" => cmd_membership(&args),
         _ => {
             println!("{USAGE}");
             Ok(())

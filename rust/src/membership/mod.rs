@@ -1,0 +1,760 @@
+//! Organic membership: registration, heartbeats, and failure detection
+//! (ROADMAP item 3; EDGELESS `NodeRegistration` semantics).
+//!
+//! Devices *register* with the continuum and must refresh their
+//! registration by heartbeating before a per-device deadline. A missed
+//! refresh **is** a failure: there is no second failure mechanism — the
+//! engine synthesizes the exact `LeaveEvent { failure: true }` path that
+//! scripted failures take (domains prune their slices, schedulers get
+//! `on_device_fail`, in-flight tasks re-map). Re-registration after a miss
+//! is a join: delta-insert into the route/slowdown caches under a bumped
+//! structural epoch.
+//!
+//! Everything here is deterministic. Each device's heartbeat schedule is
+//! its own RNG stream keyed by `(seed, edge_index)` — the per-source
+//! seeding rule from the arrival models — so fleet churn, scheduler
+//! choice, or parallelism never perturb when a device beats. That is what
+//! makes [`compile`] possible: the *consequences* of a flaky window
+//! (detection time, re-registration time) are a pure function of the
+//! config, computable before the run. The engine merges them into the
+//! scripted structural timeline, so heartbeat-detected failures and
+//! scripted failures at the same times are literally the same code path.
+
+use std::collections::BTreeMap;
+
+use crate::hwgraph::NodeId;
+use crate::util::rng::{mix64, Rng};
+
+/// Domain-separation tag for heartbeat RNG streams, so a device's beat
+/// schedule can never collide with its arrival stream (which is keyed by
+/// `mix64(seed, mix64(origin, index))`).
+const HB_TAG: u64 = 0x4845_4152_5442_4541; // "HEARTBEA"
+
+/// Heartbeat / registration-refresh parameters (scenario JSON:
+/// `"membership": {"heartbeat_s": .., "deadline_s": .., "jitter": ..}`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MembershipConfig {
+    /// nominal interval between registration refreshes (heartbeats)
+    pub heartbeat_s: f64,
+    /// refresh deadline: a device that has not refreshed for longer than
+    /// this is declared failed (EDGELESS: the deadline *defines* failure)
+    pub deadline_s: f64,
+    /// relative jitter on each interval: the k-th interval is
+    /// `heartbeat_s * (1 + jitter * u)` with `u` uniform in `[-1, 1)`
+    pub jitter: f64,
+}
+
+impl MembershipConfig {
+    pub fn new(heartbeat_s: f64, deadline_s: f64) -> Self {
+        MembershipConfig {
+            heartbeat_s,
+            deadline_s,
+            jitter: 0.0,
+        }
+    }
+
+    pub fn jitter(mut self, jitter: f64) -> Self {
+        self.jitter = jitter;
+        self
+    }
+
+    /// Reject misconfigurations at parse time. The deadline must exceed the
+    /// *worst-case* interval `heartbeat_s * (1 + jitter)` — otherwise a
+    /// healthy device could trip detection on an unlucky draw.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.heartbeat_s.is_finite() && self.heartbeat_s > 0.0) {
+            return Err(format!(
+                "membership: heartbeat_s must be finite and > 0 (got {})",
+                self.heartbeat_s
+            ));
+        }
+        if !(0.0..1.0).contains(&self.jitter) {
+            return Err(format!(
+                "membership: jitter must be in [0, 1) (got {})",
+                self.jitter
+            ));
+        }
+        let worst = self.heartbeat_s * (1.0 + self.jitter);
+        if !(self.deadline_s.is_finite() && self.deadline_s > worst) {
+            return Err(format!(
+                "membership: deadline_s ({}) must exceed the worst-case \
+                 heartbeat interval heartbeat_s * (1 + jitter) = {}",
+                self.deadline_s, worst
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A device stops refreshing its registration in `[t, until)` (scenario
+/// JSON event `{"kind": "flaky", "t": .., "edge_index": .., "until": ..}`;
+/// omit `until` for an outage that lasts the rest of the run). The
+/// registry detects the failure one deadline after the last successful
+/// refresh; the first beat at or after `until` re-registers the device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlakyEvent {
+    pub t: f64,
+    pub edge_index: usize,
+    pub until: Option<f64>,
+}
+
+impl FlakyEvent {
+    /// Validate against the run horizon and the number of devices that
+    /// will *ever* register by `t` (base fleet + scripted joins), so an
+    /// event can never reference a device that never registers.
+    pub fn check(&self, horizon_s: f64, edges_at: usize) -> Result<(), String> {
+        if !(self.t.is_finite() && self.t >= 0.0 && self.t < horizon_s) {
+            return Err(format!(
+                "flaky event t={} outside [0, horizon {})",
+                self.t, horizon_s
+            ));
+        }
+        if self.edge_index >= edges_at {
+            return Err(format!(
+                "flaky event references edge_index {} but only {} edge \
+                 devices have registered by t={}",
+                self.edge_index, edges_at, self.t
+            ));
+        }
+        if let Some(u) = self.until {
+            if !(u.is_finite() && u > self.t) {
+                return Err(format!(
+                    "flaky event until={} must be > t={}",
+                    u, self.t
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A capability re-advertisement: the device reports a degraded (or
+/// restored) capacity `weight` in `(0, 1]`. Updates the device's slowdown
+/// rows and its domain's summary in place — no structural rebuild, no
+/// epoch change.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradeEvent {
+    pub t: f64,
+    pub edge_index: usize,
+    pub weight: f64,
+}
+
+impl DegradeEvent {
+    pub fn check(&self, horizon_s: f64, edges_at: usize) -> Result<(), String> {
+        if !(self.t.is_finite() && self.t >= 0.0 && self.t < horizon_s) {
+            return Err(format!(
+                "degrade event t={} outside [0, horizon {})",
+                self.t, horizon_s
+            ));
+        }
+        if self.edge_index >= edges_at {
+            return Err(format!(
+                "degrade event references edge_index {} but only {} edge \
+                 devices have registered by t={}",
+                self.edge_index, edges_at, self.t
+            ));
+        }
+        if !(self.weight.is_finite() && self.weight > 0.0 && self.weight <= 1.0) {
+            return Err(format!(
+                "degrade event weight={} must be in (0, 1]",
+                self.weight
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic heartbeat schedule for one device: its own RNG stream
+/// keyed by `(seed, edge_index)` only, so no other device, source, or
+/// event can shift it. Registration itself counts as the refresh at
+/// `registered_t`; the first beat follows one interval later.
+#[derive(Debug, Clone)]
+pub struct BeatIter {
+    next_t: f64,
+    heartbeat_s: f64,
+    jitter: f64,
+    rng: Rng,
+}
+
+impl BeatIter {
+    pub fn new(cfg: &MembershipConfig, seed: u64, edge_index: usize, registered_t: f64) -> Self {
+        let mut it = BeatIter {
+            next_t: registered_t,
+            heartbeat_s: cfg.heartbeat_s,
+            jitter: cfg.jitter,
+            rng: Rng::new(mix64(seed ^ HB_TAG, edge_index as u64)),
+        };
+        it.advance();
+        it
+    }
+
+    fn advance(&mut self) {
+        let u = 2.0 * self.rng.f64() - 1.0; // [-1, 1)
+        self.next_t += self.heartbeat_s * (1.0 + self.jitter * u);
+    }
+
+    /// Time of the next beat (not yet consumed).
+    pub fn peek(&self) -> f64 {
+        self.next_t
+    }
+
+    /// Consume and return the next beat time.
+    pub fn next_beat(&mut self) -> f64 {
+        let t = self.next_t;
+        self.advance();
+        t
+    }
+}
+
+/// One synthesized consequence of the heartbeat model, ready to merge into
+/// the engine's structural timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Detection {
+    /// the refresh deadline expired: the registry declares the device
+    /// failed (becomes a `LeaveEvent { failure: true }` in the engine)
+    Fail { t: f64, edge_index: usize },
+    /// first successful beat after an outage: re-registration (a join —
+    /// delta-insert into the caches under a bumped epoch)
+    ReRegister { t: f64, edge_index: usize },
+}
+
+impl Detection {
+    pub fn t(&self) -> f64 {
+        match *self {
+            Detection::Fail { t, .. } | Detection::ReRegister { t, .. } => t,
+        }
+    }
+
+    pub fn edge_index(&self) -> usize {
+        match *self {
+            Detection::Fail { edge_index, .. } | Detection::ReRegister { edge_index, .. } => {
+                edge_index
+            }
+        }
+    }
+}
+
+/// Compute every failure detection and re-registration implied by the
+/// flaky windows, as a pure function of the config — no engine state.
+/// `reg_t[i]` is the registration time of edge device `i` (0 for the base
+/// fleet, the join time for scripted joins).
+///
+/// Detection semantics: a refresh at exactly `last_refresh + deadline_s`
+/// still counts — failure requires the gap to *exceed* the deadline. An
+/// outage short enough that the device refreshes again before the deadline
+/// expires goes unnoticed (no events). A detection or re-registration at
+/// or after `horizon_s` is outside the run and dropped.
+pub fn compile(
+    cfg: &MembershipConfig,
+    seed: u64,
+    flaky: &[FlakyEvent],
+    reg_t: &[f64],
+    horizon_s: f64,
+) -> Vec<Detection> {
+    let mut per: BTreeMap<usize, Vec<(f64, f64)>> = BTreeMap::new();
+    for f in flaky {
+        per.entry(f.edge_index)
+            .or_default()
+            .push((f.t, f.until.unwrap_or(f64::INFINITY)));
+    }
+    let mut out = Vec::new();
+    for (&idx, wins) in &per {
+        let reg = reg_t.get(idx).copied().unwrap_or(0.0);
+        let suppressed = |t: f64| wins.iter().any(|&(s, u)| t >= s && t < u);
+        let mut beats = BeatIter::new(cfg, seed, idx, reg);
+        let mut last_refresh = reg;
+        loop {
+            let b = beats.next_beat();
+            if b >= horizon_s {
+                break;
+            }
+            if suppressed(b) {
+                continue;
+            }
+            let t_detect = last_refresh + cfg.deadline_s;
+            // deadline > heartbeat_s * (1 + jitter) is validated, so a gap
+            // beyond the deadline implies at least one suppressed beat
+            if b > t_detect && t_detect < horizon_s {
+                out.push(Detection::Fail {
+                    t: t_detect,
+                    edge_index: idx,
+                });
+                out.push(Detection::ReRegister {
+                    t: b,
+                    edge_index: idx,
+                });
+            }
+            last_refresh = b;
+        }
+        // tail: no successful beat between the last refresh and the
+        // horizon — if the deadline expires inside the run, the failure is
+        // detected but the device never comes back before the end
+        let t_detect = last_refresh + cfg.deadline_s;
+        if t_detect < horizon_s {
+            out.push(Detection::Fail {
+                t: t_detect,
+                edge_index: idx,
+            });
+        }
+    }
+    out.sort_by(|a, b| a.t().total_cmp(&b.t()));
+    out
+}
+
+/// Liveness state of a registered device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceState {
+    /// registered and refreshing
+    Up,
+    /// refresh deadline expired — failed until it re-registers
+    Down,
+    /// gracefully deregistered (scripted leave); heartbeats stop
+    Left,
+}
+
+impl DeviceState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceState::Up => "up",
+            DeviceState::Down => "down",
+            DeviceState::Left => "left",
+        }
+    }
+}
+
+/// Per-device registry row.
+#[derive(Debug, Clone)]
+pub struct DeviceRecord {
+    pub device: NodeId,
+    pub edge_index: usize,
+    pub registered_t: f64,
+    /// last successful refresh (registration included)
+    pub last_refresh: f64,
+    /// successful heartbeats
+    pub beats: u64,
+    /// heartbeats suppressed by a flaky window
+    pub misses: u64,
+    /// missed-refresh failures detected
+    pub failures: u64,
+    /// re-registrations after a failure
+    pub reregistrations: u64,
+    /// advertised capability weight in `(0, 1]` (1 = full capacity)
+    pub weight: f64,
+    pub state: DeviceState,
+    beat: BeatIter,
+    /// flaky windows during which this device's beats are suppressed
+    windows: Vec<(f64, f64)>,
+}
+
+/// The membership registry: who is registered, when they last refreshed,
+/// and what capability they advertise. Lives inside the engine's run
+/// state; heartbeats are ordinary simulated events on the event heap that
+/// only touch this bookkeeping — they can never perturb task state, which
+/// is why monitoring alone leaves `RunMetrics` byte-identical.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    cfg: MembershipConfig,
+    seed: u64,
+    devices: BTreeMap<NodeId, DeviceRecord>,
+    /// drain-deadline escalations applied by the engine (satellite of the
+    /// same availability model, counted here so the report is one place)
+    escalations: u64,
+    /// capability re-advertisements applied
+    degrades: u64,
+}
+
+impl Registry {
+    pub fn new(cfg: MembershipConfig, seed: u64) -> Self {
+        Registry {
+            cfg,
+            seed,
+            devices: BTreeMap::new(),
+            escalations: 0,
+            degrades: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &MembershipConfig {
+        &self.cfg
+    }
+
+    /// Register a device (base fleet at t=0, scripted joins at their join
+    /// time). `windows` are the flaky intervals during which its beats are
+    /// suppressed. Returns the time of its first heartbeat so the engine
+    /// can schedule it.
+    pub fn register(
+        &mut self,
+        device: NodeId,
+        edge_index: usize,
+        now: f64,
+        windows: Vec<(f64, f64)>,
+    ) -> f64 {
+        let beat = BeatIter::new(&self.cfg, self.seed, edge_index, now);
+        let first = beat.peek();
+        self.devices.insert(
+            device,
+            DeviceRecord {
+                device,
+                edge_index,
+                registered_t: now,
+                last_refresh: now,
+                beats: 0,
+                misses: 0,
+                failures: 0,
+                reregistrations: 0,
+                weight: 1.0,
+                state: DeviceState::Up,
+                beat,
+                windows,
+            },
+        );
+        first
+    }
+
+    /// A heartbeat event fired for `device` at `now`: record the refresh
+    /// (or the miss, if a flaky window suppresses it) and return the next
+    /// beat time to schedule — `None` once the device has gracefully left.
+    pub fn on_beat(&mut self, device: NodeId, now: f64) -> Option<f64> {
+        let rec = self.devices.get_mut(&device)?;
+        if rec.state == DeviceState::Left {
+            return None;
+        }
+        if rec.windows.iter().any(|&(s, u)| now >= s && now < u) {
+            rec.misses += 1;
+        } else {
+            rec.beats += 1;
+            rec.last_refresh = now;
+        }
+        let _ = rec.beat.next_beat();
+        Some(rec.beat.peek())
+    }
+
+    /// The engine applied a missed-refresh failure for this device.
+    pub fn mark_failed(&mut self, device: NodeId) {
+        if let Some(rec) = self.devices.get_mut(&device) {
+            rec.state = DeviceState::Down;
+            rec.failures += 1;
+        }
+    }
+
+    /// The engine applied a graceful deregistration (scripted leave).
+    pub fn mark_left(&mut self, device: NodeId) {
+        if let Some(rec) = self.devices.get_mut(&device) {
+            rec.state = DeviceState::Left;
+        }
+    }
+
+    /// The engine re-registered this device after a failure.
+    pub fn mark_reregistered(&mut self, device: NodeId, now: f64) {
+        if let Some(rec) = self.devices.get_mut(&device) {
+            rec.state = DeviceState::Up;
+            rec.reregistrations += 1;
+            rec.last_refresh = now;
+        }
+    }
+
+    /// Capability re-advertisement: the device now runs at `weight` of its
+    /// nominal capacity.
+    pub fn set_weight(&mut self, device: NodeId, weight: f64) {
+        if let Some(rec) = self.devices.get_mut(&device) {
+            rec.weight = weight;
+            self.degrades += 1;
+        }
+    }
+
+    /// The engine escalated a stuck graceful leave to the failure path.
+    pub fn note_escalation(&mut self) {
+        self.escalations += 1;
+    }
+
+    pub fn get(&self, device: NodeId) -> Option<&DeviceRecord> {
+        self.devices.get(&device)
+    }
+
+    pub fn devices(&self) -> impl Iterator<Item = &DeviceRecord> {
+        self.devices.values()
+    }
+
+    /// Aggregate health report, attached to `RunMetrics` at end of run.
+    pub fn report(&self) -> MembershipReport {
+        let mut r = MembershipReport {
+            devices: self.devices.len(),
+            ..MembershipReport::default()
+        };
+        for d in self.devices.values() {
+            r.beats += d.beats;
+            r.misses += d.misses;
+            r.failures_detected += d.failures;
+            r.reregistrations += d.reregistrations;
+            if d.state == DeviceState::Down {
+                r.down_at_end += 1;
+            }
+        }
+        r.escalations = self.escalations;
+        r.degrades = self.degrades;
+        r
+    }
+}
+
+/// End-of-run membership health summary (in `RunMetrics::membership`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MembershipReport {
+    /// devices that ever registered
+    pub devices: usize,
+    pub beats: u64,
+    pub misses: u64,
+    pub failures_detected: u64,
+    pub reregistrations: u64,
+    /// drain-deadline escalations of graceful leaves
+    pub escalations: u64,
+    /// capability re-advertisements
+    pub degrades: u64,
+    /// devices still failed at the horizon
+    pub down_at_end: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MembershipConfig {
+        MembershipConfig::new(0.1, 0.25)
+    }
+
+    #[test]
+    fn validate_rejects_misconfigurations() {
+        assert!(cfg().validate().is_ok());
+        assert!(MembershipConfig::new(0.0, 1.0).validate().is_err());
+        assert!(MembershipConfig::new(f64::NAN, 1.0).validate().is_err());
+        // deadline <= heartbeat
+        assert!(MembershipConfig::new(0.1, 0.1).validate().is_err());
+        // negative jitter
+        assert!(cfg().jitter(-0.1).validate().is_err());
+        assert!(cfg().jitter(1.0).validate().is_err());
+        // deadline inside the worst-case jittered interval
+        assert!(MembershipConfig::new(0.1, 0.12).jitter(0.5).validate().is_err());
+        assert!(MembershipConfig::new(0.1, 0.16).jitter(0.5).validate().is_ok());
+    }
+
+    #[test]
+    fn beat_schedule_is_stable_per_device() {
+        let c = cfg().jitter(0.3);
+        let take = |idx: usize| -> Vec<f64> {
+            let mut it = BeatIter::new(&c, 42, idx, 0.0);
+            (0..32).map(|_| it.next_beat()).collect()
+        };
+        // deterministic
+        assert_eq!(take(3), take(3));
+        // independent streams per device
+        assert_ne!(take(3), take(4));
+        // registration time shifts the phase, not the interval draws
+        let mut a = BeatIter::new(&c, 42, 3, 0.0);
+        let mut b = BeatIter::new(&c, 42, 3, 5.0);
+        for _ in 0..16 {
+            assert!((b.next_beat() - a.next_beat() - 5.0).abs() < 1e-12);
+        }
+        // intervals respect the jitter envelope
+        let mut it = BeatIter::new(&c, 7, 0, 0.0);
+        let mut prev = 0.0;
+        for _ in 0..64 {
+            let t = it.next_beat();
+            let dt = t - prev;
+            assert!(dt >= 0.1 * 0.7 - 1e-12 && dt <= 0.1 * 1.3 + 1e-12);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn compile_detects_outage_and_reregistration() {
+        // jitter 0: beats at 0.1, 0.2, 0.3, ... window [0.35, 0.81)
+        let f = [FlakyEvent {
+            t: 0.35,
+            edge_index: 0,
+            until: Some(0.81),
+        }];
+        let d = compile(&cfg(), 42, &f, &[0.0], 2.0);
+        assert_eq!(
+            d,
+            vec![
+                // last refresh 0.3, deadline 0.25
+                Detection::Fail {
+                    t: 0.55,
+                    edge_index: 0
+                },
+                // first beat >= 0.81
+                Detection::ReRegister {
+                    t: 0.9,
+                    edge_index: 0
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn compile_open_ended_outage_fails_once() {
+        let f = [FlakyEvent {
+            t: 0.35,
+            edge_index: 1,
+            until: None,
+        }];
+        let d = compile(&cfg(), 42, &f, &[0.0, 0.0], 2.0);
+        assert_eq!(
+            d,
+            vec![Detection::Fail {
+                t: 0.55,
+                edge_index: 1
+            }]
+        );
+    }
+
+    #[test]
+    fn compile_short_blip_goes_unnoticed() {
+        // suppresses only the 0.4 beat; 0.5 lands before 0.3 + 0.25
+        let f = [FlakyEvent {
+            t: 0.35,
+            edge_index: 0,
+            until: Some(0.45),
+        }];
+        assert!(compile(&cfg(), 42, &f, &[0.0], 2.0).is_empty());
+    }
+
+    #[test]
+    fn compile_cycles_fail_rereg_fail() {
+        let f = [
+            FlakyEvent {
+                t: 0.35,
+                edge_index: 0,
+                until: Some(0.81),
+            },
+            FlakyEvent {
+                t: 1.15,
+                edge_index: 0,
+                until: Some(1.61),
+            },
+        ];
+        let d = compile(&cfg(), 42, &f, &[0.0], 2.0);
+        assert_eq!(
+            d,
+            vec![
+                Detection::Fail {
+                    t: 0.55,
+                    edge_index: 0
+                },
+                Detection::ReRegister {
+                    t: 0.9,
+                    edge_index: 0
+                },
+                // last refresh 1.1, second window
+                Detection::Fail {
+                    t: 1.35,
+                    edge_index: 0
+                },
+                Detection::ReRegister {
+                    t: 1.7,
+                    edge_index: 0
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn compile_drops_post_horizon_consequences() {
+        let f = [FlakyEvent {
+            t: 0.35,
+            edge_index: 0,
+            until: Some(0.81),
+        }];
+        // horizon before the detection
+        assert!(compile(&cfg(), 42, &f, &[0.0], 0.5).is_empty());
+        // horizon between detection and re-registration
+        let d = compile(&cfg(), 42, &f, &[0.0], 0.7);
+        assert_eq!(
+            d,
+            vec![Detection::Fail {
+                t: 0.55,
+                edge_index: 0
+            }]
+        );
+    }
+
+    #[test]
+    fn compile_ignores_other_devices_events() {
+        // device 1's windows never move device 0's detections
+        let base = [FlakyEvent {
+            t: 0.35,
+            edge_index: 0,
+            until: Some(0.81),
+        }];
+        let noisy = [
+            base[0],
+            FlakyEvent {
+                t: 0.2,
+                edge_index: 1,
+                until: None,
+            },
+        ];
+        let a: Vec<_> = compile(&cfg(), 42, &base, &[0.0, 0.0], 2.0);
+        let b: Vec<_> = compile(&cfg(), 42, &noisy, &[0.0, 0.0], 2.0)
+            .into_iter()
+            .filter(|d| d.edge_index() == 0)
+            .collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn registry_counts_beats_misses_and_transitions() {
+        let mut reg = Registry::new(cfg(), 42);
+        let dev = NodeId(7);
+        let first = reg.register(dev, 0, 0.0, vec![(0.35, 0.81)]);
+        assert!((first - 0.1).abs() < 1e-12);
+        let mut t = first;
+        let mut ts = vec![];
+        for _ in 0..10 {
+            ts.push(t);
+            t = reg.on_beat(dev, t).unwrap();
+        }
+        let r = reg.get(dev).unwrap();
+        assert_eq!(r.beats + r.misses, 10);
+        assert_eq!(r.misses, 5); // 0.4, 0.5, 0.6, 0.7, 0.8 suppressed
+        reg.mark_failed(dev);
+        assert_eq!(reg.get(dev).unwrap().state, DeviceState::Down);
+        reg.mark_reregistered(dev, 0.9);
+        let r = reg.get(dev).unwrap();
+        assert_eq!(r.state, DeviceState::Up);
+        assert_eq!(r.reregistrations, 1);
+        reg.mark_left(dev);
+        assert_eq!(reg.on_beat(dev, 1.1), None);
+        let rep = reg.report();
+        assert_eq!(rep.devices, 1);
+        assert_eq!(rep.failures_detected, 1);
+        assert_eq!(rep.reregistrations, 1);
+    }
+
+    #[test]
+    fn event_checks_name_the_problem() {
+        let bad = FlakyEvent {
+            t: 0.5,
+            edge_index: 9,
+            until: None,
+        };
+        assert!(bad.check(1.0, 5).unwrap_err().contains("edge_index 9"));
+        let bad = FlakyEvent {
+            t: 0.5,
+            edge_index: 0,
+            until: Some(0.4),
+        };
+        assert!(bad.check(1.0, 5).unwrap_err().contains("until"));
+        let bad = DegradeEvent {
+            t: 0.5,
+            edge_index: 0,
+            weight: 1.5,
+        };
+        assert!(bad.check(1.0, 5).unwrap_err().contains("weight"));
+        let ok = DegradeEvent {
+            t: 0.5,
+            edge_index: 0,
+            weight: 0.5,
+        };
+        assert!(ok.check(1.0, 5).is_ok());
+    }
+}

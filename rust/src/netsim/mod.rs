@@ -201,7 +201,7 @@ impl Network {
 /// Staleness is a single integer compare: [`RouteTable::refresh`] rebuilds
 /// iff [`HwGraph::epoch`] moved (a device join); deactivations never mutate
 /// the graph, so leaves cost nothing here.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RouteTable {
     /// the graph epoch the table was built at
     epoch: u64,

@@ -37,12 +37,14 @@ use std::rc::Rc;
 
 use crate::hwgraph::presets::{Decs, DecsSpec, EDGE_MODELS, SERVER_MODELS};
 use crate::hwgraph::NodeId;
+use crate::membership::{DegradeEvent, FlakyEvent, MembershipConfig};
 use crate::scenario::ScenarioReport;
 use crate::sim::{
     ArrivalModel, JoinEvent, LeaveEvent, NetEvent, RunMetrics, ScriptedEvent, SimConfig,
     Simulation, Workload,
 };
 use crate::telemetry;
+use crate::telemetry::ProxySnapshot;
 use crate::util::json::Json;
 
 // ---------------------------------------------------------------------------
@@ -93,6 +95,7 @@ pub struct PlatformBuilder {
     spec: DecsSpec,
     parallelism: usize,
     domains: usize,
+    membership: Option<MembershipConfig>,
 }
 
 impl Default for PlatformBuilder {
@@ -101,6 +104,7 @@ impl Default for PlatformBuilder {
             spec: DecsSpec::paper_vr(),
             parallelism: 1,
             domains: 0,
+            membership: None,
         }
     }
 }
@@ -157,6 +161,15 @@ impl PlatformBuilder {
         self
     }
 
+    /// Default organic-membership configuration for sessions on this
+    /// platform: every device registers with the [`crate::membership::
+    /// Registry`], heartbeats ride the event heap, and a missed refresh
+    /// deadline *is* a failure (the engine's one failure path).
+    pub fn membership(mut self, m: MembershipConfig) -> Self {
+        self.membership = Some(m);
+        self
+    }
+
     /// Fully custom topology.
     pub fn topology(mut self, spec: DecsSpec) -> Self {
         self.spec = spec;
@@ -209,12 +222,16 @@ impl PlatformBuilder {
                 self.spec.wan_gbps
             )));
         }
+        if let Some(m) = &self.membership {
+            m.validate().map_err(PlatformError::InvalidTopology)?;
+        }
         let decs = Decs::build(&self.spec);
         Ok(Platform {
             spec: self.spec,
             decs,
             parallelism: self.parallelism,
             domains: self.domains,
+            membership: self.membership,
         })
     }
 }
@@ -233,6 +250,9 @@ pub struct Platform {
     /// default orchestration-domain count for sessions (see
     /// [`PlatformBuilder::domains`]; `0` = global orchestrator)
     domains: usize,
+    /// default membership configuration for sessions (see
+    /// [`PlatformBuilder::membership`]; `None` = registry off)
+    membership: Option<MembershipConfig>,
 }
 
 impl Platform {
@@ -264,16 +284,22 @@ impl Platform {
 
     /// Start configuring a run of `workload` on this platform.
     pub fn session(&self, workload: WorkloadSpec) -> Session<'_> {
+        let mut cfg = SimConfig::default()
+            .parallelism(self.parallelism)
+            .domains(self.domains);
+        if let Some(m) = self.membership {
+            cfg = cfg.membership(m);
+        }
         Session {
             platform: self,
             workload,
             scheduler: "heye".to_string(),
-            cfg: SimConfig::default()
-                .parallelism(self.parallelism)
-                .domains(self.domains),
+            cfg,
             net_events: Vec::new(),
             join_events: Vec::new(),
             leave_events: Vec::new(),
+            flaky_events: Vec::new(),
+            degrade_events: Vec::new(),
         }
     }
 }
@@ -435,6 +461,8 @@ pub struct Session<'p> {
     net_events: Vec<NetEventSpec>,
     join_events: Vec<JoinEvent>,
     leave_events: Vec<LeaveEvent>,
+    flaky_events: Vec<FlakyEvent>,
+    degrade_events: Vec<DegradeEvent>,
 }
 
 impl Session<'_> {
@@ -519,6 +547,51 @@ impl Session<'_> {
         self
     }
 
+    /// Enable organic membership for this run: devices register with the
+    /// [`crate::membership::Registry`], heartbeats ride the event heap, and
+    /// a missed refresh deadline is detected as a failure through the same
+    /// path a scripted `LeaveEvent { failure: true }` takes. Overrides the
+    /// platform default.
+    pub fn membership(mut self, m: MembershipConfig) -> Self {
+        self.cfg.membership = Some(m);
+        self
+    }
+
+    /// Bound graceful-leave draining: a device that is still draining
+    /// `drain_s` seconds after a graceful leave is escalated to the failure
+    /// path (in-flight work killed and re-mapped). Default: unbounded.
+    pub fn drain_deadline(mut self, drain_s: f64) -> Self {
+        self.cfg.drain_s = drain_s;
+        self
+    }
+
+    /// The `edge`-th edge device goes silent at `t`: heartbeats stop, the
+    /// registry detects the missed refresh deadline as a failure, and —
+    /// when `until` is `Some` — the device re-registers at its first beat
+    /// past `until` (a join: delta-insert, epoch-bumped, zero SSSPs).
+    /// Requires [`Session::membership`].
+    pub fn flaky(mut self, t: f64, edge: usize, until: Option<f64>) -> Self {
+        self.flaky_events.push(FlakyEvent {
+            t,
+            edge_index: edge,
+            until,
+        });
+        self
+    }
+
+    /// The `edge`-th edge device re-advertises its capabilities at `t`
+    /// with capacity `weight` in `(0, 1]`: its slowdown rows and its
+    /// domain's summary update in place, no structural rebuild. Requires
+    /// [`Session::membership`].
+    pub fn degrade(mut self, t: f64, edge: usize, weight: f64) -> Self {
+        self.degrade_events.push(DegradeEvent {
+            t,
+            edge_index: edge,
+            weight,
+        });
+        self
+    }
+
     /// The `edge`-th edge device leaves at `t` — gracefully (`failure =
     /// false`: running tasks drain, nothing new lands) or by failure
     /// (`failure = true`: in-flight work on it is killed and re-mapped
@@ -560,14 +633,38 @@ impl Session<'_> {
         if let Some(tune) = entry.tune {
             tune(&mut cfg);
         }
+        if let Some(m) = &cfg.membership {
+            m.validate().map_err(PlatformError::InvalidSession)?;
+        }
+        if cfg.drain_s.is_nan() || cfg.drain_s <= 0.0 {
+            return Err(PlatformError::InvalidSession(format!(
+                "drain deadline must be positive (INFINITY = unbounded), got {} s",
+                cfg.drain_s
+            )));
+        }
+        if cfg.membership.is_none()
+            && !(self.flaky_events.is_empty() && self.degrade_events.is_empty())
+        {
+            return Err(PlatformError::InvalidSession(
+                "flaky/degrade events require a membership config (Session::membership)".into(),
+            ));
+        }
         // each run gets its own copy of the deterministically assembled
         // system (joins mutate it), without re-running graph assembly
         let decs = self.platform.decs().clone();
+        let edges_at =
+            |t: f64| decs.edge_devices.len() + self.join_events.iter().filter(|j| j.t <= t).count();
         for (i, l) in self.leave_events.iter().enumerate() {
-            l.check(cfg.horizon_s, |t| {
-                decs.edge_devices.len() + self.join_events.iter().filter(|j| j.t <= t).count()
-            })
-            .map_err(|m| PlatformError::InvalidSession(format!("leave_events[{i}]: {m}")))?;
+            l.check(cfg.horizon_s, edges_at)
+                .map_err(|m| PlatformError::InvalidSession(format!("leave_events[{i}]: {m}")))?;
+        }
+        for (i, e) in self.flaky_events.iter().enumerate() {
+            e.check(cfg.horizon_s, edges_at(e.t))
+                .map_err(|m| PlatformError::InvalidSession(format!("flaky_events[{i}]: {m}")))?;
+        }
+        for (i, e) in self.degrade_events.iter().enumerate() {
+            e.check(cfg.horizon_s, edges_at(e.t))
+                .map_err(|m| PlatformError::InvalidSession(format!("degrade_events[{i}]: {m}")))?;
         }
         let workload = self.workload.build(&decs)?;
         let net_events = self
@@ -595,30 +692,66 @@ impl Session<'_> {
             .collect::<Result<Vec<_>, PlatformError>>()?;
         // domains >= 1 wraps the resolved scheduler in the two-level
         // ε-CON / ε-ORC split: one sub-instance per domain, each scoped to
-        // its members, under a summary-only continuum tier
-        let mut sched: Box<dyn crate::sim::Scheduler> = if cfg.domains >= 1 {
-            Box::new(crate::domain::DomainScheduler::with_domains(
+        // its members, under a summary-only continuum tier. The concrete
+        // type is kept (not erased) so the post-run proxy capture can read
+        // the domain summaries.
+        enum Built {
+            Flat(Box<dyn crate::sim::Scheduler>),
+            Domains(crate::domain::DomainScheduler),
+        }
+        let mut sched = if cfg.domains >= 1 {
+            Built::Domains(crate::domain::DomainScheduler::with_domains(
                 &decs,
                 cfg.domains,
                 &|d| entry.build(d),
             ))
         } else {
-            entry.build(&decs)
+            Built::Flat(entry.build(&decs))
         };
         let mut sim = Simulation::new(decs);
         let mut events: Vec<ScriptedEvent> =
             net_events.into_iter().map(ScriptedEvent::Net).collect();
         events.extend(self.join_events.iter().cloned().map(ScriptedEvent::Join));
         events.extend(self.leave_events.iter().copied().map(ScriptedEvent::Leave));
-        let metrics = sim.run_scripted(sched.as_mut(), workload, events, &cfg);
-        let scheduler_label = sched.name();
+        events.extend(self.flaky_events.iter().copied().map(ScriptedEvent::Flaky));
+        events.extend(
+            self.degrade_events
+                .iter()
+                .copied()
+                .map(ScriptedEvent::Degrade),
+        );
+        let sched_dyn: &mut dyn crate::sim::Scheduler = match &mut sched {
+            Built::Flat(b) => b.as_mut(),
+            Built::Domains(d) => d,
+        };
+        let metrics = sim.run_scripted(sched_dyn, workload, events, &cfg);
+        let scheduler_label = sched_dyn.name();
         let Simulation { decs, .. } = sim;
+        // observation seam: mirror post-run membership/domain state into a
+        // read-only snapshot whenever there is something to observe
+        let proxy = if cfg.domains >= 1 || cfg.membership.is_some() {
+            Some(match &sched {
+                Built::Domains(d) => ProxySnapshot::capture(
+                    &decs,
+                    d.summaries(),
+                    |dev| d.domain_of(dev),
+                    &metrics,
+                    cfg.horizon_s,
+                ),
+                Built::Flat(_) => {
+                    ProxySnapshot::capture(&decs, &[], |_| None, &metrics, cfg.horizon_s)
+                }
+            })
+        } else {
+            None
+        };
         Ok(RunReport {
             scheduler: self.scheduler.clone(),
             scheduler_label,
             config: cfg,
             decs,
             metrics,
+            proxy,
         })
     }
 
@@ -648,6 +781,10 @@ pub struct RunReport {
     /// the system after the run — includes devices that joined mid-run
     pub decs: Decs,
     pub metrics: RunMetrics,
+    /// read-only post-run mirror of per-domain membership, load, and
+    /// heartbeat health (`Some` when the run used domains or membership) —
+    /// what external tooling queries instead of engine state
+    pub proxy: Option<ProxySnapshot>,
 }
 
 impl RunReport {

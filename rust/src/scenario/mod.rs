@@ -10,8 +10,10 @@
 //!   bursty, diurnal) and a client-population multiplier replacing the
 //!   closed-loop fixed-period sources,
 //! * `events` — one scripted timeline mixing `throttle` / `restore`
-//!   (link bandwidth), `join`, `leave` / `fail` (device churn), and
-//!   `reset` (scheduler session-state drop),
+//!   (link bandwidth), `join`, `leave` / `fail` (device churn), `flaky` /
+//!   `degrade` (organic membership: silence windows and capability
+//!   re-advertisements, requiring a `membership` config), and `reset`
+//!   (scheduler session-state drop),
 //! * `name` / `description` — so a run is a reviewable artifact.
 //!
 //! ```text
@@ -29,19 +31,24 @@
 //!     { "kind": "fail",     "t": 0.6, "edge_index": 1 },
 //!     { "kind": "join",     "t": 1.0, "model": "xavier_nx" },
 //!     { "kind": "leave",    "t": 1.4, "edge_index": 0 },
+//!     { "kind": "flaky",    "t": 0.9, "edge_index": 2, "until": 1.3 },
+//!     { "kind": "degrade",  "t": 1.1, "edge_index": 0, "weight": 0.5 },
 //!     { "kind": "reset",    "t": 1.5 }
-//!   ]
+//!   ],
+//!   "membership": { "heartbeat_s": 0.02, "deadline_s": 0.05 }
 //! }
 //! ```
 //!
 //! Event lists are validated on load — negative times, events past the
-//! horizon, and out-of-range `edge_index` are rejected with an error
-//! naming the offending entry. Five presets ship built in (`heye scenario
-//! list`): [`Scenario::preset`] resolves `steady`, `flashcrowd`,
-//! `diurnal`, `churn`, and `partition`.
+//! horizon, out-of-range `edge_index`, and membership events without a
+//! `membership` config are rejected with an error naming the offending
+//! entry. Six presets ship built in (`heye scenario list`):
+//! [`Scenario::preset`] resolves `steady`, `flashcrowd`, `diurnal`,
+//! `churn`, `partition`, and `flaky`.
 
 use crate::config::ExpConfig;
 use crate::hwgraph::presets::EDGE_MODELS;
+use crate::membership::{DegradeEvent, FlakyEvent, MembershipConfig};
 use crate::platform::{Platform, RunReport, Session, WorkloadSpec};
 use crate::sim::{ArrivalModel, JoinEvent, LeaveEvent};
 use crate::telemetry;
@@ -68,6 +75,11 @@ pub struct Scenario {
     pub clients: f64,
     /// device leave/failure timeline
     pub leave_events: Vec<LeaveEvent>,
+    /// organic-membership silence windows (`flaky` events; require a
+    /// `membership` config — detection turns them into failures)
+    pub flaky_events: Vec<FlakyEvent>,
+    /// capability re-advertisements (`degrade` events)
+    pub degrade_events: Vec<DegradeEvent>,
 }
 
 impl Default for Scenario {
@@ -79,6 +91,8 @@ impl Default for Scenario {
             arrival: ArrivalModel::Periodic,
             clients: 1.0,
             leave_events: Vec::new(),
+            flaky_events: Vec::new(),
+            degrade_events: Vec::new(),
         }
     }
 }
@@ -187,10 +201,31 @@ impl Scenario {
                             failure,
                         });
                     }
+                    "flaky" => {
+                        let idx = req_edge_index(e, i)?;
+                        let until = e.get("until").and_then(|v| v.as_f64());
+                        sc.flaky_events.push(FlakyEvent {
+                            t,
+                            edge_index: idx,
+                            until,
+                        });
+                    }
+                    "degrade" => {
+                        let idx = req_edge_index(e, i)?;
+                        let weight = e
+                            .get("weight")
+                            .and_then(|v| v.as_f64())
+                            .ok_or_else(|| err!("events[{i}]: degrade needs `weight`"))?;
+                        sc.degrade_events.push(DegradeEvent {
+                            t,
+                            edge_index: idx,
+                            weight,
+                        });
+                    }
                     "reset" => cfg.sim.reset_times.push(t),
                     other => bail!(
                         "events[{i}]: unknown kind `{other}` \
-                         (throttle|restore|join|leave|fail|reset)"
+                         (throttle|restore|join|leave|fail|flaky|degrade|reset)"
                     ),
                 }
             }
@@ -217,16 +252,33 @@ impl Scenario {
         }
         let base: usize = self.cfg.decs_spec.edges.iter().map(|(_, c)| c).sum();
         let h = self.cfg.sim.horizon_s;
+        let edges_at = |t: f64| {
+            base + self
+                .cfg
+                .join_events
+                .iter()
+                .filter(|(jt, _, _)| *jt <= t)
+                .count()
+        };
         for (i, l) in self.leave_events.iter().enumerate() {
-            l.check(h, |t| {
-                base + self
-                    .cfg
-                    .join_events
-                    .iter()
-                    .filter(|(jt, _, _)| *jt <= t)
-                    .count()
-            })
-            .map_err(|m| err!("leave events[{i}]: {m}"))?;
+            l.check(h, edges_at)
+                .map_err(|m| err!("leave events[{i}]: {m}"))?;
+        }
+        if self.cfg.sim.membership.is_none()
+            && !(self.flaky_events.is_empty() && self.degrade_events.is_empty())
+        {
+            bail!(
+                "flaky/degrade events require a `membership` config \
+                 (heartbeats define when silence becomes failure)"
+            );
+        }
+        for (i, e) in self.flaky_events.iter().enumerate() {
+            e.check(h, edges_at(e.t))
+                .map_err(|m| err!("flaky events[{i}]: {m}"))?;
+        }
+        for (i, e) in self.degrade_events.iter().enumerate() {
+            e.check(h, edges_at(e.t))
+                .map_err(|m| err!("degrade events[{i}]: {m}"))?;
         }
         Ok(())
     }
@@ -250,6 +302,11 @@ impl Scenario {
             (
                 "partition",
                 "two edge uplinks throttled to near-zero mid-run, then healed",
+            ),
+            (
+                "flaky",
+                "organic membership: a silence window detected by heartbeat, \
+                 recovery by re-registration, plus a capability degrade",
             ),
         ]
     }
@@ -299,6 +356,21 @@ impl Scenario {
                 sc.cfg.net_events.push((0.5, 1, Some(0.05)));
                 sc.cfg.net_events.push((1.2, 0, None));
                 sc.cfg.net_events.push((1.2, 1, None));
+            }
+            "flaky" => {
+                sc.arrival = ArrivalModel::Poisson { rate_mult: 1.0 };
+                sc.cfg.sim.membership = Some(MembershipConfig::new(0.02, 0.05));
+                sc.cfg.sim.drain_s = 0.25;
+                sc.flaky_events.push(FlakyEvent {
+                    t: 0.6,
+                    edge_index: 1,
+                    until: Some(1.2),
+                });
+                sc.degrade_events.push(DegradeEvent {
+                    t: 0.9,
+                    edge_index: 0,
+                    weight: 0.5,
+                });
             }
             _ => return None,
         }
@@ -367,6 +439,12 @@ impl Scenario {
         }
         for l in &self.leave_events {
             session = session.leave(l.t, l.edge_index, l.failure);
+        }
+        for f in &self.flaky_events {
+            session = session.flaky(f.t, f.edge_index, f.until);
+        }
+        for d in &self.degrade_events {
+            session = session.degrade(d.t, d.edge_index, d.weight);
         }
         session
     }
@@ -648,6 +726,63 @@ mod tests {
         let e = Scenario::parse(r#"{ "arrival": { "kind": "poisson", "rate_mult": -1 } }"#)
             .unwrap_err();
         assert!(e.to_string().contains("rate_mult"), "{e}");
+    }
+
+    #[test]
+    fn parses_membership_event_kinds() {
+        let sc = Scenario::parse(
+            r#"{
+                "name": "m", "horizon_s": 1.0,
+                "membership": { "heartbeat_s": 0.02, "deadline_s": 0.05 },
+                "events": [
+                    { "kind": "flaky", "t": 0.3, "edge_index": 1, "until": 0.6 },
+                    { "kind": "flaky", "t": 0.7, "edge_index": 2 },
+                    { "kind": "degrade", "t": 0.4, "edge_index": 0, "weight": 0.5 }
+                ]
+            }"#,
+        )
+        .expect("valid membership scenario");
+        assert_eq!(sc.flaky_events.len(), 2);
+        assert_eq!(sc.flaky_events[0].until, Some(0.6));
+        assert_eq!(sc.flaky_events[1].until, None);
+        assert_eq!(sc.degrade_events.len(), 1);
+        assert_eq!(sc.degrade_events[0].weight, 0.5);
+    }
+
+    #[test]
+    fn membership_events_are_validated_at_parse() {
+        // flaky without a membership config: nothing defines detection
+        let e = Scenario::parse(
+            r#"{ "horizon_s": 1.0,
+                 "events": [ { "kind": "flaky", "t": 0.3, "edge_index": 0 } ] }"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("membership"), "{e}");
+        // flaky referencing a device that never registers
+        let e = Scenario::parse(
+            r#"{ "horizon_s": 1.0,
+                 "membership": { "heartbeat_s": 0.02, "deadline_s": 0.05 },
+                 "events": [ { "kind": "flaky", "t": 0.3, "edge_index": 9 } ] }"#,
+        )
+        .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("flaky events[0]"), "{msg}");
+        assert!(msg.contains("edge_index 9"), "{msg}");
+        // degrade weight outside (0, 1]
+        let e = Scenario::parse(
+            r#"{ "horizon_s": 1.0,
+                 "membership": { "heartbeat_s": 0.02, "deadline_s": 0.05 },
+                 "events": [ { "kind": "degrade", "t": 0.3, "edge_index": 0,
+                               "weight": 1.5 } ] }"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("degrade events[0]"), "{e}");
+        // deadline not beyond the worst-case heartbeat interval
+        let e = Scenario::parse(
+            r#"{ "membership": { "heartbeat_s": 0.05, "deadline_s": 0.05 } }"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("membership"), "{e}");
     }
 
     #[test]

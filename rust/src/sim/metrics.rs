@@ -81,6 +81,12 @@ pub struct RunMetrics {
     pub placements: BTreeMap<(String, String, bool), u64>,
     /// device leaves/failures applied during the run, in time order
     pub leaves: Vec<LeaveRecord>,
+    /// membership health counters (`Some` when [`crate::sim::SimConfig::
+    /// membership`] enabled the registry): beats, misses, detected
+    /// failures, re-registrations, drain escalations. Excluded from
+    /// scripted-vs-detected equivalence checks — it is observability, not
+    /// outcome.
+    pub membership: Option<crate::membership::MembershipReport>,
 }
 
 impl RunMetrics {

@@ -32,6 +32,7 @@ use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use crate::hwgraph::presets::Decs;
 use crate::hwgraph::{EdgeId, NodeId};
+use crate::membership::{self, DegradeEvent, Detection, FlakyEvent, MembershipConfig, Registry};
 use crate::netsim::{Network, Route, RouteTable};
 use crate::orchestrator::Loads;
 use crate::perfmodel::{PerfModel, ProfileModel, Unit};
@@ -278,6 +279,28 @@ pub enum ScriptedEvent {
     Net(NetEvent),
     Join(JoinEvent),
     Leave(LeaveEvent),
+    /// a device stops refreshing its registration (membership model);
+    /// ignored unless [`SimConfig::membership`] is configured
+    Flaky(FlakyEvent),
+    /// a capability re-advertisement at degraded weight
+    Degrade(DegradeEvent),
+}
+
+/// A structural change applied between event-loop segments: the scripted
+/// joins/leaves plus everything the availability model synthesizes from
+/// them (membership detections, re-registrations, drain escalations,
+/// capability re-advertisements). One list, one application point — a
+/// heartbeat-detected failure is *literally* the scripted-failure path.
+enum Structural {
+    Join(JoinEvent),
+    Leave(LeaveEvent),
+    /// drain-deadline escalation of an earlier graceful leave
+    /// ([`SimConfig::drain_s`])
+    Escalate { edge_index: usize },
+    /// membership re-registration after a detected failure
+    ReRegister { edge_index: usize },
+    /// capability re-advertisement at `weight` of nominal capacity
+    Capability { edge_index: usize, weight: f64 },
 }
 
 // ---------------------------------------------------------------------------
@@ -316,6 +339,18 @@ pub struct SimConfig {
     /// per-domain summaries. With `1` domain, placements and metrics are
     /// byte-identical to `0` (asserted by `tests/domains.rs`).
     pub domains: usize,
+    /// organic membership ([`crate::membership`]): when set, every edge
+    /// device registers with the continuum and heartbeats on the event
+    /// heap; a missed refresh *is* a failure (the engine synthesizes the
+    /// scripted `LeaveEvent { failure: true }` path), and the first beat
+    /// after an outage re-registers the device. `None` (the default)
+    /// disables monitoring — `flaky` events are then inert.
+    pub membership: Option<MembershipConfig>,
+    /// drain deadline for graceful leaves: a `failure=false` leave whose
+    /// device still holds in-flight work this many seconds later is
+    /// escalated to the failure path (kill + re-map) instead of draining
+    /// forever. `INFINITY` (the default) preserves unbounded draining.
+    pub drain_s: f64,
 }
 
 impl Default for SimConfig {
@@ -329,6 +364,8 @@ impl Default for SimConfig {
             reset_times: Vec::new(),
             route_cache: true,
             domains: 0,
+            membership: None,
+            drain_s: f64::INFINITY,
         }
     }
 }
@@ -378,6 +415,20 @@ impl SimConfig {
     /// global orchestrator, the default).
     pub fn domains(mut self, n: usize) -> Self {
         self.domains = n;
+        self
+    }
+
+    /// Enable the organic-membership model: registration, heartbeats, and
+    /// missed-refresh failure detection.
+    pub fn membership(mut self, m: MembershipConfig) -> Self {
+        self.membership = Some(m);
+        self
+    }
+
+    /// Bound graceful-leave draining: escalate to the failure path after
+    /// `s` seconds if in-flight work remains on the departed device.
+    pub fn drain_deadline(mut self, s: f64) -> Self {
+        self.drain_s = s;
         self
     }
 }
@@ -481,6 +532,10 @@ struct Running {
 enum EvKind {
     Release {
         source: usize,
+        /// matched against `SimState::src_gen` — a re-registration bumps
+        /// the generation, so a stale Release still in the heap from
+        /// before the failure cannot double-start the chain
+        gen: u32,
     },
     Ready {
         frame: usize,
@@ -504,6 +559,10 @@ enum EvKind {
     },
     /// drop the scheduler's adaptive session state (SimConfig::reset_times)
     SchedReset,
+    /// a registration refresh from `dev` ([`crate::membership`]): registry
+    /// bookkeeping only — heartbeats never touch task state, so monitoring
+    /// alone cannot perturb `RunMetrics`
+    Heartbeat { dev: NodeId },
 }
 
 struct Ev {
@@ -555,6 +614,9 @@ struct SimState {
     released_count: Vec<u64>,
     /// deactivated sources stop releasing (their origin left)
     src_active: Vec<bool>,
+    /// per-source release generation: bumped when a re-registration
+    /// restarts a source, invalidating stale pending Release events
+    src_gen: Vec<u32>,
     /// per-source arrival RNG streams (see [`add_source`])
     src_rng: Vec<Rng>,
     /// stable per-source key: mixes origin id and per-origin index
@@ -563,6 +625,13 @@ struct SimState {
     /// deactivates a device without entering it here: its data stays
     /// readable while it drains.
     failed: BTreeSet<NodeId>,
+    /// the membership registry (when [`SimConfig::membership`] is set):
+    /// liveness/health bookkeeping the heartbeat events update and the
+    /// telemetry proxy mirrors
+    membership: Option<Registry>,
+    /// the run's flaky windows, kept so devices joining mid-run register
+    /// with their own suppression windows
+    flaky: Vec<FlakyEvent>,
 }
 
 impl SimState {
@@ -587,6 +656,7 @@ fn add_source(st: &mut SimState, cfg: &SimConfig, src: FrameSource) -> usize {
     st.src_key.push(key);
     st.src_rng.push(Rng::new(mix64(cfg.seed, key)));
     st.src_active.push(true);
+    st.src_gen.push(0);
     st.released_count.push(0);
     st.sources.push(src);
     st.sources.len() - 1
@@ -658,15 +728,18 @@ impl Simulation {
             src_active: Vec::new(),
             src_rng: Vec::new(),
             src_key: Vec::new(),
+            src_gen: Vec::new(),
             failed: BTreeSet::new(),
+            membership: None,
+            flaky: Vec::new(),
         };
         sched.set_parallelism(cfg.parallelism);
         for src in workload.sources {
             let idx = add_source(&mut st, cfg, src);
             let t = st.sources[idx].start_t;
-            st.push(t, EvKind::Release { source: idx });
+            st.push(t, EvKind::Release { source: idx, gen: 0 });
         }
-        let mut structural: Vec<(f64, ScriptedEvent)> = Vec::new();
+        let mut structural: Vec<(f64, Structural)> = Vec::new();
         for e in events {
             match e {
                 ScriptedEvent::Net(ev) => st.push(
@@ -676,14 +749,80 @@ impl Simulation {
                         gbps: ev.gbps,
                     },
                 ),
-                ScriptedEvent::Join(j) => structural.push((j.t, ScriptedEvent::Join(j))),
-                ScriptedEvent::Leave(l) => structural.push((l.t, ScriptedEvent::Leave(l))),
+                ScriptedEvent::Join(j) => structural.push((j.t, Structural::Join(j))),
+                ScriptedEvent::Leave(l) => structural.push((l.t, Structural::Leave(l))),
+                // inert without a membership config: nothing monitors the
+                // missing refreshes (validated against at the facades)
+                ScriptedEvent::Flaky(f) => st.flaky.push(f),
+                ScriptedEvent::Degrade(d) => structural.push((
+                    d.t,
+                    Structural::Capability {
+                        edge_index: d.edge_index,
+                        weight: d.weight,
+                    },
+                )),
             }
         }
         for &t in &cfg.reset_times {
             st.push(t, EvKind::SchedReset);
         }
+        // membership: the consequences of every flaky window — detection
+        // time, re-registration time — are a pure function of the config
+        // (each device's beat schedule is its own RNG stream), so they are
+        // *compiled* into the structural timeline up front. A missed
+        // refresh becomes the exact `LeaveEvent { failure: true }` a
+        // scripted failure would be: one failure mechanism, and
+        // heartbeat-detected runs are byte-identical to scripted runs with
+        // failures at the same times.
+        if let Some(mcfg) = cfg.membership.as_ref() {
+            let mut reg_t: Vec<f64> = vec![0.0; self.decs.edge_devices.len()];
+            let mut join_ts: Vec<f64> = structural
+                .iter()
+                .filter(|(_, s)| matches!(s, Structural::Join(_)))
+                .map(|&(t, _)| t)
+                .collect();
+            join_ts.sort_by(|a, b| a.total_cmp(b));
+            reg_t.extend(join_ts);
+            for d in membership::compile(mcfg, cfg.seed, &st.flaky, &reg_t, cfg.horizon_s) {
+                match d {
+                    Detection::Fail { t, edge_index } => structural.push((
+                        t,
+                        Structural::Leave(LeaveEvent {
+                            t,
+                            edge_index,
+                            failure: true,
+                        }),
+                    )),
+                    Detection::ReRegister { t, edge_index } => {
+                        structural.push((t, Structural::ReRegister { edge_index }))
+                    }
+                }
+            }
+            // register the base fleet; heartbeats ride the event heap
+            let mut reg = Registry::new(*mcfg, cfg.seed);
+            for (i, &dev) in self.decs.edge_devices.iter().enumerate() {
+                let wins = flaky_windows(&st.flaky, i);
+                let first = reg.register(dev, i, 0.0, wins);
+                st.push(first, EvKind::Heartbeat { dev });
+            }
+            st.membership = Some(reg);
+        }
+        // drain deadlines: every graceful leave gets an escalation probe
+        // one deadline later; it is a no-op if the device finished draining
+        if cfg.drain_s.is_finite() {
+            let probes: Vec<(f64, usize)> = structural
+                .iter()
+                .filter_map(|(t, s)| match s {
+                    Structural::Leave(l) if !l.failure => Some((t + cfg.drain_s, l.edge_index)),
+                    _ => None,
+                })
+                .collect();
+            for (t, edge_index) in probes {
+                structural.push((t, Structural::Escalate { edge_index }));
+            }
+        }
         // stable sort: same-instant structural events apply in script order
+        // (synthesized events were appended, so they follow scripted ones)
         structural.sort_by(|a, b| a.0.total_cmp(&b.0));
 
         // the structure-versioned oracles live across the whole run:
@@ -714,14 +853,14 @@ impl Simulation {
                 t,
             );
             match ev {
-                ScriptedEvent::Join(j) => {
+                Structural::Join(j) => {
                     let dev = apply_join(&mut self.decs, sched, &mut st, cfg, &j, t);
                     slow.on_device_join(&self.decs.graph, dev);
                     if let Some(table) = routes.as_mut() {
                         table.refresh(&self.decs.graph);
                     }
                 }
-                ScriptedEvent::Leave(l) => {
+                Structural::Leave(l) => {
                     let left = apply_leave(&mut self.decs, sched, &mut st, l, t);
                     if let Some(dev) = left {
                         // the graph is unchanged (ids stay stable), so the
@@ -732,9 +871,34 @@ impl Simulation {
                         if l.failure {
                             slow.on_device_leave(&self.decs.graph, dev);
                         }
+                        if let Some(reg) = st.membership.as_mut() {
+                            if l.failure {
+                                reg.mark_failed(dev);
+                            } else {
+                                reg.mark_left(dev);
+                            }
+                        }
                     }
                 }
-                ScriptedEvent::Net(_) => unreachable!("net events ride the event heap"),
+                Structural::Escalate { edge_index } => {
+                    apply_escalate(&self.decs, sched, &mut st, &mut slow, edge_index, t);
+                }
+                Structural::ReRegister { edge_index } => {
+                    let back = apply_reregister(&mut self.decs, sched, &mut st, edge_index, t);
+                    if let Some(dev) = back {
+                        // a re-registration is a join of a device whose
+                        // nodes and links never went away: delta-insert its
+                        // slowdown rows, and adopt the bumped epoch without
+                        // rebuilding — every route is still byte-identical
+                        slow.on_device_join(&self.decs.graph, dev);
+                        if let Some(table) = routes.as_mut() {
+                            table.note_epoch(&self.decs.graph);
+                        }
+                    }
+                }
+                Structural::Capability { edge_index, weight } => {
+                    apply_capability(&self.decs, sched, &mut st, &mut slow, edge_index, weight, t);
+                }
             }
         }
         run_until(
@@ -757,8 +921,21 @@ impl Simulation {
                 st.metrics.dropped += 1;
             }
         }
+        if let Some(reg) = st.membership.as_ref() {
+            st.metrics.membership = Some(reg.report());
+        }
         st.metrics
     }
+}
+
+/// The flaky suppression windows affecting one edge device, as
+/// `(from, until)` pairs (open-ended outages run to infinity).
+fn flaky_windows(flaky: &[FlakyEvent], edge_index: usize) -> Vec<(f64, f64)> {
+    flaky
+        .iter()
+        .filter(|f| f.edge_index == edge_index)
+        .map(|f| (f.t, f.until.unwrap_or(f64::INFINITY)))
+        .collect()
 }
 
 /// Attach a joining device: extend the DECS, notify the scheduler, and —
@@ -780,7 +957,16 @@ fn apply_join(
         // join instant, not at simulation start
         src.start_t = now;
         let idx = add_source(st, cfg, src);
-        st.push(now, EvKind::Release { source: idx });
+        st.push(now, EvKind::Release { source: idx, gen: 0 });
+    }
+    // a join is a registration: the newcomer enters the registry with its
+    // own flaky windows and starts heartbeating one interval from now
+    let edge_index = decs.edge_devices.len() - 1;
+    if st.membership.is_some() {
+        let wins = flaky_windows(&st.flaky, edge_index);
+        let reg = st.membership.as_mut().expect("checked above");
+        let first = reg.register(dev, edge_index, now, wins);
+        st.push(first, EvKind::Heartbeat { dev });
     }
     dev
 }
@@ -831,63 +1017,179 @@ fn apply_leave(
         }
     }
     if ev.failure {
-        // kill the in-flight work hosted on the failed device
-        st.failed.insert(dev);
-        let mut victims: Vec<(usize, usize)> = Vec::new();
-        if let Some(uids) = st.by_dev.remove(&dev) {
-            for uid in uids {
-                let r = st.running.remove(&uid).expect("running task tracked");
-                victims.push((r.frame, r.node));
-            }
-        }
-        if let Some(uids) = st.queued_by_dev.remove(&dev) {
-            for uid in uids {
-                let r = st.running.remove(&uid).expect("queued task tracked");
-                victims.push((r.frame, r.node));
-            }
-        }
-        if let Some(pend) = st.pending_by_dev.remove(&dev) {
-            for (key, _) in pend {
-                victims.push(((key >> 20) as usize, (key & 0xfffff) as usize));
-            }
-        }
-        for pu in decs.graph.pus_in(dev) {
-            st.tenants.remove(&pu);
-            st.pu_queue.remove(&pu);
-        }
-        st.loads.clear_device(dev);
-        for (fidx, node) in victims {
-            let f = &mut st.frames[fidx];
-            // cancel any in-flight TransferDone for this node; back out the
-            // transfer's comm charge — it never delivered, and a re-map
-            // charges its own (completed transfers keep theirs)
-            f.gen[node] += 1;
-            if matches!(f.state[node], NodeState::Transferring) {
-                f.comm_s -= f.xfer_comm[node];
-                f.xfer_comm[node] = 0.0;
-            }
-            if f.abandoned {
-                continue;
-            }
-            let src = f.data_src[node];
-            if src == dev || st.failed.contains(&src) {
-                // the input data died with the device: the node is lost
-                f.degraded = true;
-                f.state[node] = NodeState::Pending { missing: usize::MAX };
-                rec.tasks_dropped += 1;
-            } else {
-                // re-map through the scheduler from where the data still
-                // lives (the producing device)
-                f.state[node] = NodeState::Pending { missing: 0 };
-                f.data_dev[node] = src;
-                f.pu_choice[node] = None;
-                rec.tasks_remapped += 1;
-                st.push(now, EvKind::Ready { frame: fidx, node });
-            }
-        }
+        kill_inflight(decs, st, dev, &mut rec, now);
     }
     st.metrics.leaves.push(rec);
     Some(dev)
+}
+
+/// Kill the in-flight work hosted on a failed device: running, queued, and
+/// pending tasks become victims; surviving frames' victims re-enter the
+/// scheduler through the `Ready` path (or drop when their input data died
+/// with the device). Shared by the failure leave and the drain-deadline
+/// escalation — there is exactly one failure mechanism.
+fn kill_inflight(
+    decs: &Decs,
+    st: &mut SimState,
+    dev: NodeId,
+    rec: &mut LeaveRecord,
+    now: f64,
+) {
+    st.failed.insert(dev);
+    let mut victims: Vec<(usize, usize)> = Vec::new();
+    if let Some(uids) = st.by_dev.remove(&dev) {
+        for uid in uids {
+            let r = st.running.remove(&uid).expect("running task tracked");
+            victims.push((r.frame, r.node));
+        }
+    }
+    if let Some(uids) = st.queued_by_dev.remove(&dev) {
+        for uid in uids {
+            let r = st.running.remove(&uid).expect("queued task tracked");
+            victims.push((r.frame, r.node));
+        }
+    }
+    if let Some(pend) = st.pending_by_dev.remove(&dev) {
+        for (key, _) in pend {
+            victims.push(((key >> 20) as usize, (key & 0xfffff) as usize));
+        }
+    }
+    for pu in decs.graph.pus_in(dev) {
+        st.tenants.remove(&pu);
+        st.pu_queue.remove(&pu);
+    }
+    st.loads.clear_device(dev);
+    for (fidx, node) in victims {
+        let f = &mut st.frames[fidx];
+        // cancel any in-flight TransferDone for this node; back out the
+        // transfer's comm charge — it never delivered, and a re-map
+        // charges its own (completed transfers keep theirs)
+        f.gen[node] += 1;
+        if matches!(f.state[node], NodeState::Transferring) {
+            f.comm_s -= f.xfer_comm[node];
+            f.xfer_comm[node] = 0.0;
+        }
+        if f.abandoned {
+            continue;
+        }
+        let src = f.data_src[node];
+        if src == dev || st.failed.contains(&src) {
+            // the input data died with the device: the node is lost
+            f.degraded = true;
+            f.state[node] = NodeState::Pending { missing: usize::MAX };
+            rec.tasks_dropped += 1;
+        } else {
+            // re-map through the scheduler from where the data still
+            // lives (the producing device)
+            f.state[node] = NodeState::Pending { missing: 0 };
+            f.data_dev[node] = src;
+            f.pu_choice[node] = None;
+            rec.tasks_remapped += 1;
+            st.push(now, EvKind::Ready { frame: fidx, node });
+        }
+    }
+}
+
+/// Drain-deadline escalation: a gracefully-leaving device that still hosts
+/// work one drain deadline after its leave has its remaining in-flight
+/// tasks killed through the single failure path (`kill_inflight`), emitting
+/// a `failure = true` leave record. A device that finished draining — or
+/// re-registered, or already failed — is left alone.
+fn apply_escalate(
+    decs: &Decs,
+    sched: &mut dyn Scheduler,
+    st: &mut SimState,
+    slow: &mut CachedSlowdown,
+    edge_index: usize,
+    now: f64,
+) {
+    let dev = match decs.edge_devices.get(edge_index) {
+        Some(&d) => d,
+        None => return,
+    };
+    if decs.is_active(dev) || st.failed.contains(&dev) {
+        return; // came back, or already on the failure path
+    }
+    let draining = st.by_dev.contains_key(&dev)
+        || st.queued_by_dev.contains_key(&dev)
+        || st.pending_by_dev.contains_key(&dev);
+    if !draining {
+        return; // drained cleanly within the deadline
+    }
+    sched.on_device_fail(&decs.graph, dev);
+    let mut rec = LeaveRecord {
+        t: now,
+        device: dev,
+        failure: true,
+        frames_abandoned: 0,
+        tasks_remapped: 0,
+        tasks_dropped: 0,
+    };
+    kill_inflight(decs, st, dev, &mut rec, now);
+    slow.on_device_leave(&decs.graph, dev);
+    if let Some(reg) = st.membership.as_mut() {
+        reg.note_escalation();
+    }
+    st.metrics.leaves.push(rec);
+}
+
+/// A device re-registering after a detected failure: reactivate it in the
+/// DECS (epoch bump, no new nodes or edges), clear its failed status,
+/// re-admit it to the scheduler through the ordinary join path, and restart
+/// its sources under a fresh release generation (stale pending `Release`
+/// events are ignored by their old generation).
+fn apply_reregister(
+    decs: &mut Decs,
+    sched: &mut dyn Scheduler,
+    st: &mut SimState,
+    edge_index: usize,
+    now: f64,
+) -> Option<NodeId> {
+    let dev = match decs.edge_devices.get(edge_index) {
+        Some(&d) if !decs.is_active(d) && st.failed.contains(&d) => d,
+        _ => return None, // never failed (or already back): nothing to do
+    };
+    decs.reactivate(dev);
+    st.failed.remove(&dev);
+    sched.on_device_join(&decs.graph, dev);
+    for i in 0..st.sources.len() {
+        if st.sources[i].origin == dev {
+            st.src_gen[i] += 1;
+            st.src_active[i] = true;
+            let gen = st.src_gen[i];
+            st.push(now, EvKind::Release { source: i, gen });
+        }
+    }
+    if let Some(reg) = st.membership.as_mut() {
+        reg.mark_reregistered(dev, now);
+    }
+    Some(dev)
+}
+
+/// A capability re-advertisement: the device stays up, but its advertised
+/// capacity weight changes. The registry records the weight, the scheduler
+/// adjusts its view (domain summaries scale their headroom), and the
+/// device's slowdown rows refresh in place — no structural rebuild, no
+/// epoch movement.
+#[allow(clippy::too_many_arguments)]
+fn apply_capability(
+    decs: &Decs,
+    sched: &mut dyn Scheduler,
+    st: &mut SimState,
+    slow: &mut CachedSlowdown,
+    edge_index: usize,
+    weight: f64,
+    _now: f64,
+) {
+    let dev = match decs.edge_devices.get(edge_index) {
+        Some(&d) if decs.is_active(d) => d,
+        _ => return, // gone: the next re-registration re-advertises anyway
+    };
+    if let Some(reg) = st.membership.as_mut() {
+        reg.set_weight(dev, weight);
+    }
+    sched.on_capability(&decs.graph, dev, weight);
+    slow.on_device_join(&decs.graph, dev);
 }
 
 // ---------------------------------------------------------------------------
@@ -918,8 +1220,8 @@ fn run_until(
         st.now = ev.t.max(st.now);
         let now = st.now;
         match ev.kind {
-            EvKind::Release { source } => {
-                on_release(decs, net, perf, slow, routes, sched, st, cfg, source, now)
+            EvKind::Release { source, gen } => {
+                on_release(decs, net, perf, slow, routes, sched, st, cfg, source, gen, now)
             }
             EvKind::Ready { frame, node } => assign_batch(
                 decs,
@@ -980,6 +1282,16 @@ fn run_until(
                 sched.on_network_change(&decs.graph, net);
             }
             EvKind::SchedReset => sched.reset(),
+            EvKind::Heartbeat { dev } => {
+                // registry bookkeeping only: the beat refreshes (or, inside
+                // a flaky window, fails to refresh) the device's deadline.
+                // Consequences were compiled into the structural timeline,
+                // so the beat itself cannot perturb task state.
+                let next = st.membership.as_mut().and_then(|reg| reg.on_beat(dev, now));
+                if let Some(next) = next {
+                    st.push(next, EvKind::Heartbeat { dev });
+                }
+            }
         }
     }
     st.now = until;
@@ -996,10 +1308,13 @@ fn on_release(
     st: &mut SimState,
     cfg: &SimConfig,
     source: usize,
+    gen: u32,
     now: f64,
 ) {
-    if !st.src_active[source] {
-        return; // the origin left: the source is dead
+    if !st.src_active[source] || gen != st.src_gen[source] {
+        // the origin left, or this release belongs to a generation that a
+        // re-registration has since superseded: either way, a dead stream
+        return;
     }
     let resolution =
         sched.frame_resolution(st.sources[source].origin, &decs.graph, net, routes);
@@ -1066,7 +1381,7 @@ fn on_release(
     if more {
         let dt = arrival.next_interval(period, now - start_t, &mut st.src_rng[source]);
         if dt.is_finite() {
-            st.push(now + dt, EvKind::Release { source });
+            st.push(now + dt, EvKind::Release { source, gen });
         }
     }
 
@@ -1951,6 +2266,121 @@ mod tests {
                 .map(|f| (f.release_t * 1e9) as u64)
                 .collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn heartbeat_monitoring_alone_cannot_perturb_metrics() {
+        // membership on (no flaky windows) vs off: heartbeats ride the
+        // event heap but only touch registry bookkeeping, so the virtual
+        // timeline stays bit-identical
+        let run = |memb: Option<MembershipConfig>| {
+            let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+            let mut sched = heye(&sim.decs);
+            let wl = Workload::vr(&sim.decs);
+            let mut cfg = SimConfig::default().horizon(0.4).seed(31);
+            cfg.membership = memb;
+            sim.run_scripted(&mut sched, wl, vec![], &cfg)
+        };
+        let off = run(None);
+        let on = run(Some(MembershipConfig::new(0.02, 0.05)));
+        assert_eq!(off.frames.len(), on.frames.len());
+        for (a, b) in off.frames.iter().zip(on.frames.iter()) {
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+            assert_eq!(a.finish_t.to_bits(), b.finish_t.to_bits());
+        }
+        let rep = on.membership.expect("registry report attached");
+        assert!(rep.beats > 0);
+        assert_eq!(rep.failures_detected, 0);
+        assert_eq!(rep.down_at_end, 0);
+        assert!(off.membership.is_none());
+    }
+
+    #[test]
+    fn flaky_window_is_detected_and_reregistration_resumes_service() {
+        // jitter 0: beats every 0.02 s. Window [0.2, 0.4): last refresh
+        // 0.18, failure detected at 0.23, first beat back at 0.40.
+        let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+        let mut sched = heye(&sim.decs);
+        let wl = Workload::vr(&sim.decs);
+        let cfg = SimConfig::default()
+            .horizon(0.6)
+            .seed(32)
+            .membership(MembershipConfig::new(0.02, 0.05));
+        let m = sim.run_scripted(
+            &mut sched,
+            wl,
+            vec![ScriptedEvent::Flaky(FlakyEvent {
+                t: 0.2,
+                edge_index: 1,
+                until: Some(0.4),
+            })],
+            &cfg,
+        );
+        let dev = sim.decs.edge_devices[1];
+        assert_eq!(m.leaves.len(), 1);
+        assert!(m.leaves[0].failure);
+        assert_eq!(m.leaves[0].device, dev);
+        assert!((m.leaves[0].t - 0.23).abs() < 1e-9, "t {}", m.leaves[0].t);
+        // re-registered at 0.40: the device is active again and its source
+        // releases (and completes) frames in the tail of the run
+        assert!(sim.decs.is_active(dev));
+        assert!(
+            m.frames.iter().any(|f| f.origin == dev && f.release_t > 0.4),
+            "re-registered device must be served again"
+        );
+        let rep = m.membership.expect("report");
+        assert_eq!(rep.failures_detected, 1);
+        assert_eq!(rep.reregistrations, 1);
+        assert!(rep.misses > 0);
+        assert_eq!(rep.down_at_end, 0);
+    }
+
+    #[test]
+    fn drain_deadline_escalates_stuck_graceful_leave() {
+        // two Orin Nanos, no servers: a 60-window burst on edge 0 spills
+        // onto the sibling, which then leaves *gracefully*. With unbounded
+        // draining the spilled work finishes in place; with a 1 ms drain
+        // deadline the leftovers are escalated through the single failure
+        // path (killed + re-mapped), recorded as a second, failure=true
+        // leave record.
+        let run = |drain: f64| {
+            let decs = Decs::build(&DecsSpec {
+                edges: vec![(ORIN_NANO.into(), 2)],
+                servers: vec![],
+                edge_uplink_gbps: 10.0,
+                wan_gbps: 10.0,
+            });
+            let origin = decs.edge_devices[0];
+            let mut sim = Simulation::new(decs);
+            let mut sched = heye(&sim.decs);
+            let wl = Workload::mining_burst(origin, 60);
+            let cfg = SimConfig::default()
+                .horizon(1.0)
+                .seed(33)
+                .noise(0.0)
+                .drain_deadline(drain);
+            sim.run_scripted(
+                &mut sched,
+                wl,
+                vec![ScriptedEvent::Leave(LeaveEvent {
+                    t: 0.03,
+                    edge_index: 1,
+                    failure: false,
+                })],
+                &cfg,
+            )
+        };
+        let unbounded = run(f64::INFINITY);
+        assert_eq!(unbounded.leaves.len(), 1);
+        assert!(!unbounded.leaves[0].failure);
+        // 60 spilled windows cannot finish within 1 ms of drain
+        let tight = run(0.001);
+        assert_eq!(tight.leaves.len(), 2, "escalation must be recorded");
+        assert!(!tight.leaves[0].failure);
+        assert!(tight.leaves[1].failure);
+        assert!((tight.leaves[1].t - 0.031).abs() < 1e-9);
+        assert!(tight.leaves[1].tasks_remapped + tight.leaves[1].tasks_dropped > 0);
+        assert_eq!(tight.leaves[1].frames_abandoned, 0);
     }
 
     #[test]

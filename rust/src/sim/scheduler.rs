@@ -67,6 +67,13 @@ pub trait Scheduler {
         self.on_device_leave(g, dev);
     }
 
+    /// Notification that a device re-advertised its capabilities at a new
+    /// capacity weight in (0, 1] ([`crate::membership`] `degrade` events).
+    /// The device stays up; schedulers that summarize capacity (domain
+    /// headroom) scale their view in place. Default: ignore — placement
+    /// quality degrades gracefully for capacity-blind schedulers.
+    fn on_capability(&mut self, _g: &HwGraph, _dev: NodeId, _weight: f64) {}
+
     /// Candidate-evaluation worker threads (`0` = auto-detect, `1` =
     /// serial). The engine forwards `SimConfig::parallelism` here before a
     /// run; schedulers without a parallel hot path ignore the knob.

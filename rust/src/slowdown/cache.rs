@@ -44,7 +44,7 @@ pub fn rebuild_count() -> u64 {
     REBUILDS.load(Ordering::Relaxed)
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 struct PuInfo {
     class: PuClass,
     /// index into the model-name interning table
@@ -55,6 +55,9 @@ struct PuInfo {
 
 /// Precomputed slowdown oracle for one graph lineage. Owns its tables —
 /// shareable across scheduler worker threads, delta-updatable on churn.
+/// `PartialEq` compares the full tables, so tests can assert a
+/// delta-updated oracle byte-identical to a from-scratch build.
+#[derive(Debug, Clone, PartialEq)]
 pub struct CachedSlowdown {
     /// the graph epoch the tables reflect
     epoch: u64,

@@ -9,6 +9,10 @@ use crate::sim::{RunMetrics, SimConfig};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
+pub mod proxy;
+
+pub use proxy::{DeviceMirror, DomainMirror, ProxySnapshot};
+
 /// Per-device latency breakdown (the Fig. 1 / Fig. 11a view): computation,
 /// slowdown, communication and scheduling seconds averaged per frame.
 #[derive(Debug, Clone)]

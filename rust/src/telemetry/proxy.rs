@@ -1,0 +1,314 @@
+//! Read-only delegated-orchestration proxy (the EDGELESS pattern): a
+//! queryable, JSON-exportable mirror of per-domain membership, load, and
+//! heartbeat health.
+//!
+//! The proxy is an *observation seam*: the [`crate::domain::
+//! ContinuumOrchestrator`] and external tooling consume a
+//! [`ProxySnapshot`] instead of reaching into engine state. Capturing one
+//! borrows the engine immutably and copies what it mirrors — nothing a
+//! consumer does with the snapshot can perturb a run, and the snapshot
+//! stays valid after the engine that produced it is gone.
+
+use crate::domain::{ContinuumOrchestrator, DomainSummary};
+use crate::hwgraph::presets::Decs;
+use crate::hwgraph::NodeId;
+use crate::membership::MembershipReport;
+use crate::sim::RunMetrics;
+use crate::util::json::Json;
+
+/// One domain's row in the proxy: a verbatim copy of the
+/// [`DomainSummary`] the domain advertised to the ε-CON.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DomainMirror {
+    pub id: usize,
+    pub devices: usize,
+    pub edges: usize,
+    pub servers: usize,
+    pub headroom_pus: usize,
+    pub min_cross_route_s: f64,
+    pub epoch: u64,
+}
+
+impl DomainMirror {
+    fn of(s: &DomainSummary) -> Self {
+        DomainMirror {
+            id: s.id,
+            devices: s.devices,
+            edges: s.edges,
+            servers: s.servers,
+            headroom_pus: s.headroom_pus,
+            min_cross_route_s: s.min_cross_route_s,
+            epoch: s.epoch,
+        }
+    }
+
+    fn to_summary(&self) -> DomainSummary {
+        DomainSummary {
+            id: self.id,
+            devices: self.devices,
+            edges: self.edges,
+            servers: self.servers,
+            headroom_pus: self.headroom_pus,
+            min_cross_route_s: self.min_cross_route_s,
+            epoch: self.epoch,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let route = if self.min_cross_route_s.is_finite() {
+            Json::Num(self.min_cross_route_s)
+        } else {
+            Json::Null
+        };
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("devices", Json::Num(self.devices as f64)),
+            ("edges", Json::Num(self.edges as f64)),
+            ("servers", Json::Num(self.servers as f64)),
+            ("headroom_pus", Json::Num(self.headroom_pus as f64)),
+            ("min_cross_route_s", route),
+            ("epoch", Json::Num(self.epoch as f64)),
+        ])
+    }
+}
+
+/// One device's row in the proxy: identity, domain assignment, liveness,
+/// and the load the run put on it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceMirror {
+    pub device: NodeId,
+    /// hardware model name from the HW-Graph (e.g. `"orin_nano"`)
+    pub model: String,
+    /// `true` for the edge tier, `false` for servers
+    pub edge: bool,
+    /// owning domain id, `None` under a non-domain scheduler
+    pub domain: Option<usize>,
+    /// active at capture time (not departed/failed)
+    pub active: bool,
+    /// frames this device released as an origin
+    pub released: u64,
+    /// task-execution seconds the run charged to this device
+    pub busy_s: f64,
+}
+
+impl DeviceMirror {
+    fn to_json(&self) -> Json {
+        let domain = match self.domain {
+            Some(d) => Json::Num(d as f64),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("device", Json::Num(self.device.0 as f64)),
+            ("model", Json::Str(self.model.to_string())),
+            ("edge", Json::Bool(self.edge)),
+            ("domain", domain),
+            ("active", Json::Bool(self.active)),
+            ("released", Json::Num(self.released as f64)),
+            ("busy_s", Json::Num(self.busy_s)),
+        ])
+    }
+}
+
+/// The proxy snapshot: everything external tooling may see. Owns copies of
+/// the mirrored rows, so it outlives the engine and cannot write back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProxySnapshot {
+    /// capture time (simulation seconds)
+    pub t: f64,
+    /// per-domain capability mirrors (empty under a non-domain scheduler)
+    pub domains: Vec<DomainMirror>,
+    /// per-device membership/load mirrors, edges then servers
+    pub devices: Vec<DeviceMirror>,
+    /// heartbeat health counters (`None` when membership was off)
+    pub health: Option<MembershipReport>,
+}
+
+impl ProxySnapshot {
+    /// Mirror the current state. `domain_of` resolves a device to its
+    /// owning domain (`crate::domain::DomainScheduler::domain_of`, or
+    /// `|_| None` under a flat scheduler); `summaries` is the advertised
+    /// per-domain view, copied verbatim.
+    pub fn capture(
+        decs: &Decs,
+        summaries: &[DomainSummary],
+        domain_of: impl Fn(NodeId) -> Option<usize>,
+        metrics: &RunMetrics,
+        t: f64,
+    ) -> Self {
+        let mut devices = Vec::new();
+        let tiers = [(&decs.edge_devices, true), (&decs.servers, false)];
+        for (devs, edge) in tiers {
+            for &dev in devs.iter() {
+                devices.push(DeviceMirror {
+                    device: dev,
+                    model: decs.device_model(dev).to_string(),
+                    edge,
+                    domain: domain_of(dev),
+                    active: decs.is_active(dev),
+                    released: metrics.released.get(&dev).copied().unwrap_or(0),
+                    busy_s: metrics.busy_by_device.get(&dev).copied().unwrap_or(0.0),
+                });
+            }
+        }
+        ProxySnapshot {
+            t,
+            domains: summaries.iter().map(DomainMirror::of).collect(),
+            devices,
+            health: metrics.membership.clone(),
+        }
+    }
+
+    /// Look up one device's mirror row.
+    pub fn device(&self, dev: NodeId) -> Option<&DeviceMirror> {
+        self.devices.iter().find(|d| d.device == dev)
+    }
+
+    /// Devices down at capture time.
+    pub fn down_devices(&self) -> Vec<NodeId> {
+        self.devices
+            .iter()
+            .filter(|d| !d.active)
+            .map(|d| d.device)
+            .collect()
+    }
+
+    /// The ε-CON's escalation order for `home`, computed *from the proxy*:
+    /// the [`ContinuumOrchestrator`] ranks the mirrored summaries exactly
+    /// as it would the live ones, which is the delegated-orchestration
+    /// claim — the continuum tier needs only this snapshot, never engine
+    /// state.
+    pub fn escalation_order(&self, home: usize) -> Vec<usize> {
+        let summaries: Vec<DomainSummary> =
+            self.domains.iter().map(DomainMirror::to_summary).collect();
+        ContinuumOrchestrator::default().choose(home, &summaries)
+    }
+
+    /// Serialize for external tooling (`heye membership --proxy-json`).
+    pub fn to_json(&self) -> Json {
+        let health = match &self.health {
+            None => Json::Null,
+            Some(h) => Json::obj(vec![
+                ("devices", Json::Num(h.devices as f64)),
+                ("beats", Json::Num(h.beats as f64)),
+                ("misses", Json::Num(h.misses as f64)),
+                ("failures_detected", Json::Num(h.failures_detected as f64)),
+                ("reregistrations", Json::Num(h.reregistrations as f64)),
+                ("escalations", Json::Num(h.escalations as f64)),
+                ("degrades", Json::Num(h.degrades as f64)),
+                ("down_at_end", Json::Num(h.down_at_end as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("t", Json::Num(self.t)),
+            (
+                "domains",
+                Json::Arr(self.domains.iter().map(DomainMirror::to_json).collect()),
+            ),
+            (
+                "devices",
+                Json::Arr(self.devices.iter().map(DeviceMirror::to_json).collect()),
+            ),
+            ("health", health),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwgraph::presets::DecsSpec;
+
+    fn snapshot() -> (Decs, ProxySnapshot) {
+        let decs = Decs::build(&DecsSpec::paper_vr());
+        let summaries = vec![
+            DomainSummary {
+                id: 0,
+                devices: 3,
+                edges: 3,
+                servers: 0,
+                headroom_pus: 6,
+                min_cross_route_s: 0.002,
+                epoch: 1,
+            },
+            DomainSummary {
+                id: 1,
+                devices: 3,
+                edges: 2,
+                servers: 1,
+                headroom_pus: 40,
+                min_cross_route_s: 0.002,
+                epoch: 1,
+            },
+        ];
+        let metrics = RunMetrics::default();
+        let half = decs.edge_devices.len() / 2;
+        let snap = ProxySnapshot::capture(
+            &decs,
+            &summaries,
+            |dev| {
+                let i = decs.edge_devices.iter().position(|&d| d == dev)?;
+                Some(usize::from(i >= half))
+            },
+            &metrics,
+            1.5,
+        );
+        (decs, snap)
+    }
+
+    #[test]
+    fn mirrors_every_device_with_domain_assignment() {
+        let (decs, snap) = snapshot();
+        assert_eq!(
+            snap.devices.len(),
+            decs.edge_devices.len() + decs.servers.len()
+        );
+        let first = snap.device(decs.edge_devices[0]).unwrap();
+        assert_eq!(first.domain, Some(0));
+        assert!(first.edge && first.active);
+        assert_eq!(first.released, 0);
+        assert!(snap.down_devices().is_empty());
+    }
+
+    #[test]
+    fn escalation_order_matches_live_continuum_orchestrator() {
+        let (_, snap) = snapshot();
+        // domain 1 has the larger headroom, so from home 0 it is the first
+        // escalation target; from home 1 the order flips
+        assert_eq!(snap.escalation_order(0), vec![0, 1]);
+        assert_eq!(snap.escalation_order(1), vec![1, 0]);
+    }
+
+    #[test]
+    fn json_roundtrips_through_the_parser() {
+        let (decs, mut snap) = snapshot();
+        snap.health = Some(MembershipReport {
+            devices: 6,
+            beats: 120,
+            misses: 3,
+            failures_detected: 1,
+            reregistrations: 1,
+            escalations: 0,
+            degrades: 0,
+            down_at_end: 0,
+        });
+        let v = Json::parse(&snap.to_json().to_string()).expect("proxy JSON parses");
+        assert_eq!(v.get("t").and_then(|t| t.as_f64()), Some(1.5));
+        let domains = v.get("domains").and_then(|d| d.as_arr()).unwrap();
+        assert_eq!(domains.len(), 2);
+        let devices = v.get("devices").and_then(|d| d.as_arr()).unwrap();
+        assert_eq!(devices.len(), decs.edge_devices.len() + decs.servers.len());
+        let health = v.get("health").unwrap();
+        assert_eq!(health.get("beats").and_then(|b| b.as_u64()), Some(120));
+    }
+
+    #[test]
+    fn infinite_cross_route_serializes_as_null() {
+        let (_, mut snap) = snapshot();
+        snap.domains[0].min_cross_route_s = f64::INFINITY;
+        let text = snap.to_json().to_string();
+        assert!(!text.contains("inf"), "no bare inf token in JSON: {text}");
+        let v = Json::parse(&text).expect("still valid JSON");
+        let d0 = v.get("domains").and_then(|d| d.as_arr()).unwrap()[0].clone();
+        assert_eq!(d0.get("min_cross_route_s"), Some(&Json::Null));
+    }
+}

@@ -1,0 +1,533 @@
+//! Organic-membership integration tests: heartbeat-detected failures vs
+//! scripted ones, cache identity across fail/re-register cycles, and the
+//! telemetry proxy.
+//!
+//! The acceptance bar from the membership design:
+//!
+//! 1. **Equivalence**: a fleet where 10% of edges go flaky reaches the
+//!    same `RunMetrics` whether the failures arrive via scripted
+//!    `LeaveEvent`s or via heartbeat-deadline detection at equivalent
+//!    times (the detection times are a pure function of the config, so
+//!    the test *predicts* them with `membership::compile` and scripts
+//!    leaves at exactly those instants).
+//! 2. **Isolation**: detection and re-registration add zero whole-graph
+//!    Dijkstra runs and zero oracle rebuilds over a churn-free run.
+//! 3. **Cache identity**: after every fail -> re-register transition the
+//!    delta-updated `RouteTable` / `CachedSlowdown` / domain summaries are
+//!    byte-identical to from-scratch builds.
+//!
+//! The SSSP / rebuild counters are process-wide atomics and every platform
+//! run below performs route builds, so — like `tests/domains.rs` — all
+//! tests in this file serialize on one lock to keep deltas attributable.
+
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+use heye::domain::{DomainScheduler, DOMAINS_AUTO};
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::hwgraph::sssp_invocations;
+use heye::membership::{compile, Detection, FlakyEvent, MembershipConfig};
+use heye::netsim::RouteTable;
+use heye::platform::{Platform, RunReport, SchedulerRegistry, WorkloadSpec};
+use heye::scenario::Scenario;
+use heye::sim::{RunMetrics, SimConfig};
+use heye::slowdown::{rebuild_count, CachedSlowdown};
+use heye::util::json::Json;
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+const HORIZON: f64 = 0.5;
+const SEED: u64 = 42;
+
+fn mining() -> WorkloadSpec {
+    WorkloadSpec::Mining {
+        sensors: 32,
+        hz: 10.0,
+    }
+}
+
+fn base_cfg(parallelism: usize) -> SimConfig {
+    SimConfig::default()
+        .horizon(HORIZON)
+        .seed(SEED)
+        .noise(0.0)
+        .domains(DOMAINS_AUTO)
+        .parallelism(parallelism)
+}
+
+fn membership_cfg() -> MembershipConfig {
+    MembershipConfig::new(0.02, 0.05)
+}
+
+/// Bit-level equality of everything deterministic in a run's metrics
+/// (`sched_compute_s` / per-frame `sched_s` fold in measured wall-clock by
+/// design; the membership health report is registry bookkeeping, compared
+/// separately where it is expected to match).
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.frames.len(), b.frames.len(), "{what}: frame count");
+    for (i, (x, y)) in a.frames.iter().zip(b.frames.iter()).enumerate() {
+        assert_eq!(x.origin, y.origin, "{what}: frame {i} origin");
+        assert_eq!(
+            x.release_t.to_bits(),
+            y.release_t.to_bits(),
+            "{what}: frame {i} release"
+        );
+        assert_eq!(
+            x.finish_t.to_bits(),
+            y.finish_t.to_bits(),
+            "{what}: frame {i} finish"
+        );
+        assert_eq!(
+            x.latency_s.to_bits(),
+            y.latency_s.to_bits(),
+            "{what}: frame {i} latency"
+        );
+        assert_eq!(
+            x.comm_s.to_bits(),
+            y.comm_s.to_bits(),
+            "{what}: frame {i} comm"
+        );
+        assert_eq!(x.degraded, y.degraded, "{what}: frame {i} degraded");
+        assert_eq!(
+            x.resolution.to_bits(),
+            y.resolution.to_bits(),
+            "{what}: frame {i} resolution"
+        );
+        assert_eq!(
+            x.predicted_s.to_bits(),
+            y.predicted_s.to_bits(),
+            "{what}: frame {i} prediction"
+        );
+    }
+    assert_eq!(a.placements, b.placements, "{what}: placement counts");
+    assert_eq!(a.tasks_on_edge, b.tasks_on_edge, "{what}: edge tasks");
+    assert_eq!(a.tasks_on_server, b.tasks_on_server, "{what}: server tasks");
+    assert_eq!(a.dropped, b.dropped, "{what}: dropped");
+    assert_eq!(a.released, b.released, "{what}: released");
+    assert_eq!(a.sched_hops, b.sched_hops, "{what}: hops");
+    assert_eq!(
+        a.sched_comm_s.to_bits(),
+        b.sched_comm_s.to_bits(),
+        "{what}: sched comm"
+    );
+    assert_eq!(a.traverser_calls, b.traverser_calls, "{what}: traverser calls");
+    assert_eq!(a.busy_by_device, b.busy_by_device, "{what}: busy accounting");
+    assert_eq!(a.leaves.len(), b.leaves.len(), "{what}: leave records");
+}
+
+/// Deterministic fingerprint of a run — every virtual-time quantity at
+/// full round-trip precision, wall-clock fields excluded.
+fn fingerprint(report: &RunReport) -> String {
+    let m = &report.metrics;
+    let mut s = String::new();
+    for f in &m.frames {
+        writeln!(
+            s,
+            "frame o={} rel={:?} fin={:?} lat={:?} comm={:?} deg={}",
+            f.origin.0, f.release_t, f.finish_t, f.latency_s, f.comm_s, f.degraded
+        )
+        .unwrap();
+    }
+    for l in &m.leaves {
+        writeln!(
+            s,
+            "leave t={:?} dev={} fail={} ab={} re={} dr={}",
+            l.t, l.device.0, l.failure, l.frames_abandoned, l.tasks_remapped, l.tasks_dropped
+        )
+        .unwrap();
+    }
+    for (dev, n) in &m.released {
+        writeln!(s, "released {}={n}", dev.0).unwrap();
+    }
+    writeln!(
+        s,
+        "dropped={} edge={} server={} comm={:?} hops={}",
+        m.dropped, m.tasks_on_edge, m.tasks_on_server, m.sched_comm_s, m.sched_hops
+    )
+    .unwrap();
+    s
+}
+
+/// The failure instants the heartbeat model will synthesize for `flaky`,
+/// predicted outside the engine (base fleet registers at t = 0).
+fn predicted_failures(n_edges: usize, flaky: &[FlakyEvent]) -> Vec<(f64, usize)> {
+    let reg_t = vec![0.0; n_edges];
+    compile(&membership_cfg(), SEED, flaky, &reg_t, HORIZON)
+        .into_iter()
+        .filter_map(|d| match d {
+            Detection::Fail { t, edge_index } => Some((t, edge_index)),
+            Detection::ReRegister { .. } => None,
+        })
+        .collect()
+}
+
+/// Acceptance: 10% of a 20-edge fleet goes flaky (silent to the end of
+/// the run). The run where the registry *detects* those silences reaches
+/// byte-identical metrics to a run where equivalent failures are scripted
+/// as `LeaveEvent { failure: true }` at the predicted detection instants.
+#[test]
+fn detected_failures_match_scripted_leaves_at_equivalent_times() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let platform = Platform::builder().mixed(20, 3).build().unwrap();
+    let flaky = [
+        FlakyEvent {
+            t: 0.15,
+            edge_index: 0,
+            until: None,
+        },
+        FlakyEvent {
+            t: 0.15,
+            edge_index: 10,
+            until: None,
+        },
+    ];
+    let fails = predicted_failures(20, &flaky);
+    assert_eq!(fails.len(), 2, "each silence window yields one detection");
+    for &(t, _) in &fails {
+        assert!(t > 0.15 && t < HORIZON, "detection inside the run: {t}");
+    }
+
+    let detected = platform
+        .session(mining())
+        .scheduler("heye")
+        .config(base_cfg(1))
+        .membership(membership_cfg())
+        .flaky(0.15, 0, None)
+        .flaky(0.15, 10, None)
+        .run()
+        .unwrap();
+    let mut scripted = platform
+        .session(mining())
+        .scheduler("heye")
+        .config(base_cfg(1))
+        .membership(membership_cfg());
+    for &(t, idx) in &fails {
+        scripted = scripted.leave(t, idx, true);
+    }
+    let scripted = scripted.run().unwrap();
+
+    assert_metrics_identical(&detected.metrics, &scripted.metrics, "scripted vs detected");
+    assert_eq!(detected.metrics.leaves.len(), 2, "both failures applied");
+    for (l, &(t, _)) in detected.metrics.leaves.iter().zip(&fails) {
+        assert!(l.failure, "detection is the failure path, not a drain");
+        assert_eq!(
+            l.t.to_bits(),
+            t.to_bits(),
+            "failure applied at the predicted detection instant"
+        );
+    }
+    let h = detected.metrics.membership.as_ref().expect("registry report");
+    assert_eq!(h.failures_detected, 2, "one detection per silence window");
+    assert_eq!(h.reregistrations, 0, "no recovery: windows never close");
+    assert_eq!(h.down_at_end, 2, "both devices still down at the horizon");
+}
+
+/// The detected run — including a mid-run recovery (re-registration) — is
+/// invariant under the worker-pool parallelism, registry health included.
+#[test]
+fn detected_run_is_parallelism_invariant() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let platform = Platform::builder().mixed(20, 3).build().unwrap();
+    let run = |threads: usize| {
+        platform
+            .session(mining())
+            .scheduler("heye")
+            .config(base_cfg(threads))
+            .membership(membership_cfg())
+            .flaky(0.15, 0, None)
+            .flaky(0.15, 10, Some(0.3))
+            .run()
+            .unwrap()
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_metrics_identical(&serial.metrics, &parallel.metrics, "serial vs parallel");
+    assert_eq!(
+        serial.metrics.membership, parallel.metrics.membership,
+        "registry health counters are parallelism-invariant"
+    );
+    let h = serial.metrics.membership.as_ref().expect("registry report");
+    assert_eq!(h.reregistrations, 1, "edge 10 recovered");
+    assert_eq!(h.down_at_end, 1, "edge 0 never did");
+}
+
+/// Isolation: detection and re-registration ride the existing delta
+/// paths — a flaky run (failure + recovery) performs exactly the same
+/// number of whole-graph Dijkstra runs and oracle constructions as a
+/// churn-free run of the same fleet.
+#[test]
+fn flaky_churn_adds_zero_sssp_and_zero_rebuilds() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let platform = Platform::builder().mixed(20, 3).build().unwrap();
+    let run = |flaky: bool| {
+        let mut session = platform
+            .session(mining())
+            .scheduler("heye")
+            .config(base_cfg(1))
+            .membership(membership_cfg());
+        if flaky {
+            session = session.flaky(0.15, 0, Some(0.3)).flaky(0.15, 10, Some(0.3));
+        }
+        session.run().unwrap()
+    };
+
+    let (sssp0, rb0) = (sssp_invocations(), rebuild_count());
+    let quiet = run(false);
+    let quiet_sssp = sssp_invocations() - sssp0;
+    let quiet_rb = rebuild_count() - rb0;
+
+    let (sssp0, rb0) = (sssp_invocations(), rebuild_count());
+    let churned = run(true);
+    let churn_sssp = sssp_invocations() - sssp0;
+    let churn_rb = rebuild_count() - rb0;
+
+    let h = churned.metrics.membership.as_ref().expect("registry report");
+    assert_eq!(h.failures_detected, 2, "both silences detected");
+    assert_eq!(h.reregistrations, 2, "both devices re-registered");
+    assert_eq!(
+        churn_sssp, quiet_sssp,
+        "detection + re-registration must add zero whole-graph Dijkstra runs"
+    );
+    assert_eq!(
+        churn_rb, quiet_rb,
+        "detection + re-registration must add zero oracle constructions"
+    );
+    assert_metrics_identical(&quiet.metrics, &run(false).metrics, "quiet rerun");
+}
+
+/// Cache identity across repeated fail -> re-register transitions: after
+/// every transition, the delta-updated oracle and route table are
+/// byte-identical to from-scratch builds over the same graph state.
+#[test]
+fn fail_reregister_cycles_keep_caches_identical_to_scratch() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let mut decs = Decs::build(&DecsSpec::mixed(12, 3));
+    let dev = decs.edge_devices[3];
+    let mut slow = CachedSlowdown::new(&decs.graph);
+    let mut routes = RouteTable::new(&decs.graph);
+    for cycle in 0..3 {
+        // missed refresh deadline: the failure path prunes in place
+        decs.deactivate(dev);
+        slow.on_device_leave(&decs.graph, dev);
+        let mut scratch = CachedSlowdown::new(&decs.graph);
+        scratch.on_device_leave(&decs.graph, dev);
+        assert_eq!(slow, scratch, "cycle {cycle}: oracle after failure");
+        assert_eq!(
+            routes,
+            RouteTable::new(&decs.graph),
+            "cycle {cycle}: routes after failure (epoch untouched)"
+        );
+        // re-registration: a join — delta insert under a bumped epoch
+        decs.reactivate(dev);
+        let sssp0 = sssp_invocations();
+        slow.on_device_join(&decs.graph, dev);
+        routes.note_epoch(&decs.graph);
+        assert_eq!(
+            sssp_invocations() - sssp0,
+            0,
+            "cycle {cycle}: the delta path must run no Dijkstra"
+        );
+        assert_eq!(
+            slow,
+            CachedSlowdown::new(&decs.graph),
+            "cycle {cycle}: oracle after re-registration"
+        );
+        assert_eq!(
+            routes,
+            RouteTable::new(&decs.graph),
+            "cycle {cycle}: routes after re-registration"
+        );
+    }
+}
+
+/// The same cycles through the two-level scheduler: after three
+/// fail/re-register rounds the affected domain's summary (what the ε-CON
+/// sees) is byte-identical to a freshly partitioned scheduler's, and the
+/// foreign summaries never moved at all (their `epoch` field only
+/// advances when *their* summary is recomputed, by design).
+#[test]
+fn fail_reregister_cycles_keep_domain_summaries_identical_to_fresh() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let factory = |d: &Decs| SchedulerRegistry::create("heye", d).unwrap();
+    let mut decs = Decs::build(&DecsSpec::mixed(12, 3));
+    let mut ds = DomainScheduler::with_domains(&decs, 3, &factory);
+    let dev = decs.edge_devices[5];
+    let home = ds.domain_of(dev).expect("member of a domain");
+    let before = ds.summaries().to_vec();
+    for _ in 0..3 {
+        decs.deactivate(dev);
+        ds.on_device_fail(&decs.graph, dev);
+        decs.reactivate(dev);
+        ds.on_device_join(&decs.graph, dev);
+    }
+    let fresh = DomainScheduler::with_domains(&decs, 3, &factory);
+    assert_eq!(
+        ds.domain_of(dev),
+        fresh.domain_of(dev),
+        "re-registration keeps the device in its original domain"
+    );
+    assert_eq!(
+        ds.summaries()[home],
+        fresh.summaries()[home],
+        "the cycled domain's summary equals a from-scratch partition's"
+    );
+    for (i, s) in ds.summaries().iter().enumerate() {
+        if i != home {
+            assert_eq!(*s, before[i], "foreign summary {i} never moved");
+        }
+    }
+}
+
+/// Heartbeat schedules follow the per-source seeding rules: each device's
+/// beat stream is its own RNG stream, so making one device flaky never
+/// moves another's detection times (jitter on, so the streams are live).
+#[test]
+fn heartbeat_schedules_are_per_device_rng_stable() {
+    let cfg = MembershipConfig::new(0.02, 0.05).jitter(0.1);
+    let on_ten = FlakyEvent {
+        t: 0.15,
+        edge_index: 10,
+        until: Some(0.3),
+    };
+    let on_zero = FlakyEvent {
+        t: 0.1,
+        edge_index: 0,
+        until: None,
+    };
+    let reg_t = vec![0.0; 20];
+    let solo = compile(&cfg, SEED, &[on_ten], &reg_t, HORIZON);
+    let both = compile(&cfg, SEED, &[on_zero, on_ten], &reg_t, HORIZON);
+    let of_ten = |ds: &[Detection]| -> Vec<Detection> {
+        ds.iter()
+            .filter(|d| {
+                matches!(
+                    d,
+                    Detection::Fail { edge_index: 10, .. }
+                        | Detection::ReRegister { edge_index: 10, .. }
+                )
+            })
+            .copied()
+            .collect()
+    };
+    assert!(!of_ten(&solo).is_empty(), "the window must be detected");
+    assert_eq!(
+        of_ten(&solo),
+        of_ten(&both),
+        "edge 0 going flaky must not move edge 10's beat schedule"
+    );
+    // and the whole compilation is rerun-deterministic
+    assert_eq!(both, compile(&cfg, SEED, &[on_zero, on_ten], &reg_t, HORIZON));
+}
+
+/// Rerun determinism end to end: two identical membership runs produce
+/// identical fingerprints and identical registry health reports.
+#[test]
+fn membership_runs_are_rerun_deterministic() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let platform = Platform::builder().mixed(12, 3).build().unwrap();
+    let run = || {
+        platform
+            .session(mining())
+            .scheduler("heye")
+            .config(base_cfg(2))
+            .membership(MembershipConfig::new(0.02, 0.05).jitter(0.1))
+            .flaky(0.1, 2, Some(0.25))
+            .degrade(0.2, 4, 0.5)
+            .run()
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(fingerprint(&a), fingerprint(&b), "virtual timeline moved");
+    assert_eq!(a.metrics.membership, b.metrics.membership, "health moved");
+    let h = a.metrics.membership.as_ref().expect("registry report");
+    assert_eq!(h.degrades, 1, "the capability re-advertisement was applied");
+}
+
+/// The telemetry proxy: absent on a plain run, present on a membership
+/// run, mirroring every device and the registry health, and reproducing
+/// the live ε-CON's escalation order from the snapshot alone.
+#[test]
+fn proxy_snapshot_mirrors_membership_runs() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let platform = Platform::builder().mixed(8, 2).build().unwrap();
+    let plain = platform
+        .session(mining())
+        .scheduler("heye")
+        .config(SimConfig::default().horizon(0.25).seed(SEED).noise(0.0))
+        .run()
+        .unwrap();
+    assert!(
+        plain.proxy.is_none(),
+        "no domains, no membership: nothing to mirror"
+    );
+
+    let run = platform
+        .session(mining())
+        .scheduler("heye")
+        .config(
+            SimConfig::default()
+                .horizon(0.25)
+                .seed(SEED)
+                .noise(0.0)
+                .domains(DOMAINS_AUTO)
+                .parallelism(1),
+        )
+        .membership(membership_cfg())
+        .flaky(0.05, 1, Some(0.12))
+        .run()
+        .unwrap();
+    let proxy = run.proxy.as_ref().expect("membership run carries a proxy");
+    let n_devices = platform.decs().edge_devices.len() + platform.decs().servers.len();
+    assert_eq!(proxy.devices.len(), n_devices, "every device mirrored");
+    assert!(!proxy.domains.is_empty(), "domain summaries mirrored");
+    assert_eq!(
+        proxy.health.as_ref(),
+        run.metrics.membership.as_ref(),
+        "health mirror equals the engine's report"
+    );
+    let h = proxy.health.as_ref().expect("health mirror");
+    assert_eq!(h.failures_detected, 1);
+    assert_eq!(h.reregistrations, 1);
+    assert!(
+        proxy.down_devices().is_empty(),
+        "the flaky device recovered before the horizon"
+    );
+    let order = proxy.escalation_order(0);
+    assert_eq!(order.len(), proxy.domains.len(), "every domain ranked");
+    assert_eq!(order[0], 0, "home domain first");
+    // the snapshot survives a JSON round trip
+    let json = proxy.to_json().to_string();
+    Json::parse(&json).expect("proxy JSON parses back");
+}
+
+/// The committed exemplar runs end to end: silences detected, recovery
+/// re-registered, capability degrade applied, graceful leave recorded,
+/// and the proxy exported.
+#[test]
+fn example_membership_scenario_runs_end_to_end() {
+    let _guard = COUNTER_LOCK.lock().unwrap();
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_membership.json");
+    let sc = Scenario::load(path).unwrap();
+    assert_eq!(sc.name, "membership");
+    assert_eq!(sc.flaky_events.len(), 2, "two silence windows scripted");
+    assert_eq!(sc.degrade_events.len(), 1, "one capability degrade");
+    assert_eq!(sc.leave_events.len(), 1, "one graceful leave");
+    let report = sc.run().unwrap();
+    let m = &report.run.metrics;
+    let h = m.membership.as_ref().expect("membership scenario reports health");
+    assert!(
+        h.failures_detected >= 2,
+        "both silence windows detected, got {}",
+        h.failures_detected
+    );
+    assert_eq!(h.reregistrations, 1, "the closing window re-registered");
+    assert_eq!(h.degrades, 1, "the degrade was applied");
+    assert!(
+        !m.leaves.is_empty(),
+        "detections and the scripted leave are recorded"
+    );
+    let proxy = report.run.proxy.as_ref().expect("scenario run carries a proxy");
+    assert!(!proxy.domains.is_empty(), "domain mirrors present");
+    Json::parse(&proxy.to_json().to_string()).expect("proxy JSON parses back");
+}
