@@ -123,21 +123,25 @@ impl ExpConfig {
             c.sim.grouped = v;
         }
         if let Some(v) = j.get("parallelism").and_then(|v| v.as_u64()) {
-            c.sim.parallelism = v as usize;
+            c.sim.exec.parallelism = v as usize;
         }
         if let Some(v) = j.get("route_cache").and_then(|v| v.as_bool()) {
-            c.sim.route_cache = v;
+            c.sim.exec.route_cache = v;
         }
         if let Some(v) = j.get("domains") {
             // number of orchestration domains, or "auto" to derive the
             // partition from the hierarchy's virtual sub-clusters
             if let Some(n) = v.as_u64() {
-                c.sim.domains = n as usize;
+                c.sim.exec.domains = n as usize;
             } else if v.as_str() == Some("auto") {
-                c.sim.domains = crate::domain::DOMAINS_AUTO;
+                c.sim.exec.domains = crate::domain::DOMAINS_AUTO;
             } else {
                 bail!("domains must be a number or \"auto\"");
             }
+        }
+        if let Some(v) = j.get("workers").and_then(|v| v.as_u64()) {
+            // shard-driving threads for the sharded engine (0 = monolithic)
+            c.sim.exec.workers = v as usize;
         }
         if let Some(v) = j.get("sensors").and_then(|v| v.as_u64()) {
             c.sensors = v as usize;
@@ -155,10 +159,10 @@ impl ExpConfig {
             if let Some(jit) = m.get("jitter").and_then(|v| v.as_f64()) {
                 mc = mc.jitter(jit);
             }
-            c.sim.membership = Some(mc);
+            c.sim.exec.membership = Some(mc);
         }
         if let Some(v) = j.get("drain_deadline_s").and_then(|v| v.as_f64()) {
-            c.sim.drain_s = v;
+            c.sim.exec.drain_s = v;
         }
         if let Some(arr) = j.get("net_events").and_then(|v| v.as_arr()) {
             for e in arr {
@@ -208,17 +212,10 @@ impl ExpConfig {
     pub fn validate(&self) -> Result<()> {
         let n_edges: usize = self.decs_spec.edges.iter().map(|(_, c)| c).sum();
         let h = self.sim.horizon_s;
-        // membership misconfigurations (deadline not beyond the worst-case
-        // heartbeat interval, negative jitter, ...) are parse-time errors
-        if let Some(m) = &self.sim.membership {
-            m.validate().map_err(|e| err!("{e}"))?;
-        }
-        if self.sim.drain_s.is_nan() || self.sim.drain_s <= 0.0 {
-            bail!(
-                "drain_deadline_s must be positive (omit for unbounded), got {}",
-                self.sim.drain_s
-            );
-        }
+        // execution-knob misconfigurations (membership deadlines, drain
+        // deadline, workers without domains) are parse-time errors — one
+        // validation point, shared with the facade session
+        self.sim.exec.validate().map_err(|e| err!("{e}"))?;
         for (i, &(t, idx, _)) in self.net_events.iter().enumerate() {
             if !t.is_finite() || t < 0.0 {
                 bail!("net_events[{i}]: time {t} must be finite and non-negative");
@@ -354,11 +351,22 @@ mod tests {
     #[test]
     fn parses_domains_knob() {
         let c = ExpConfig::parse(r#"{ "domains": 3 }"#).unwrap();
-        assert_eq!(c.sim.domains, 3);
+        assert_eq!(c.sim.exec.domains, 3);
         let c = ExpConfig::parse(r#"{ "domains": "auto" }"#).unwrap();
-        assert_eq!(c.sim.domains, crate::domain::DOMAINS_AUTO);
-        assert_eq!(ExpConfig::parse("{}").unwrap().sim.domains, 0);
+        assert_eq!(c.sim.exec.domains, crate::domain::DOMAINS_AUTO);
+        assert_eq!(ExpConfig::parse("{}").unwrap().sim.exec.domains, 0);
         assert!(ExpConfig::parse(r#"{ "domains": true }"#).is_err());
+    }
+
+    #[test]
+    fn parses_workers_knob_and_couples_it_to_domains() {
+        let c = ExpConfig::parse(r#"{ "domains": 3, "workers": 2 }"#).unwrap();
+        assert_eq!(c.sim.exec.workers, 2);
+        assert_eq!(ExpConfig::parse("{}").unwrap().sim.exec.workers, 0);
+        // the single ExecOpts validation point rejects workers without
+        // domains at parse time
+        let e = ExpConfig::parse(r#"{ "workers": 2 }"#).unwrap_err();
+        assert!(e.to_string().contains("domains"), "{e}");
     }
 
     #[test]
@@ -368,15 +376,15 @@ mod tests {
                  "drain_deadline_s": 0.25 }"#,
         )
         .unwrap();
-        let m = c.sim.membership.unwrap();
+        let m = c.sim.exec.membership.unwrap();
         assert_eq!(m.heartbeat_s, 0.02);
         assert_eq!(m.deadline_s, 0.05);
         assert_eq!(m.jitter, 0.1);
-        assert_eq!(c.sim.drain_s, 0.25);
+        assert_eq!(c.sim.exec.drain_s, 0.25);
         // off by default: no registry, unbounded drain
         let c = ExpConfig::parse("{}").unwrap();
-        assert!(c.sim.membership.is_none());
-        assert!(c.sim.drain_s.is_infinite());
+        assert!(c.sim.exec.membership.is_none());
+        assert!(c.sim.exec.drain_s.is_infinite());
     }
 
     #[test]
@@ -423,7 +431,13 @@ mod tests {
         let mut sim = crate::sim::Simulation::new(decs);
         let mut sched =
             crate::platform::SchedulerRegistry::create(&c.sched, &sim.decs).expect("registry");
-        let m = sim.run(sched.as_mut(), wl, net, joins, &c.sim);
+        let plan = crate::sim::RunPlan::scripted(
+            net.into_iter()
+                .map(crate::sim::ScriptedEvent::Net)
+                .chain(joins.into_iter().map(crate::sim::ScriptedEvent::Join))
+                .collect(),
+        );
+        let m = sim.run(sched.as_mut(), wl, &plan, &c.sim);
         assert!(!m.frames.is_empty());
     }
 

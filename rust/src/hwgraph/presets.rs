@@ -249,6 +249,15 @@ impl DecsSpec {
         Self::mixed(192, 12)
     }
 
+    /// Metro-scale continuum: ten thousand edge devices plus a server
+    /// block — the topology the `fig20_shards` harness drives through the
+    /// sharded engine ("Sharded execution" in the crate docs). Far beyond
+    /// what one event heap (or one full route table) handles comfortably;
+    /// partitioned into domains, each shard's state stays fleet-sized.
+    pub fn metro() -> Self {
+        Self::mixed(10_000, 240)
+    }
+
     /// Uniform mix of the four edge models and three server models
     /// (the §5.5 scaling experiments use 20-of-each / 8-of-each blocks).
     pub fn mixed(n_edges: usize, n_servers: usize) -> Self {

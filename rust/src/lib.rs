@@ -225,6 +225,65 @@
 //! state; [`telemetry::ProxySnapshot::escalation_order`] reproduces the
 //! live ε-CON's domain ranking from the mirror alone.
 //!
+//! ## Sharded execution: one event loop per domain
+//!
+//! At metro scale ([`hwgraph::presets::DecsSpec::metro`]: ten thousand
+//! edges; `PlatformBuilder::metro()` / `heye run --metro`) one event heap
+//! — and one full-width route table — stops being tractable. The sharded
+//! engine ([`sim::Simulation::run_sharded`], `sim::shard`) gives every
+//! orchestration domain its own **shard**: a private event heap, `Loads`,
+//! network clone, scheduler instance (narrowed to the domain's members,
+//! exactly as [`domain::DomainScheduler`] narrows its sub-ORCs), and
+//! *slices* of the structure oracles — a [`slowdown::CachedSlowdown`]
+//! over its members and a [`netsim::RouteTable`] whose columns are its
+//! members plus one representative per foreign domain. The knob is
+//! `workers`: `0` (the default) keeps the monolithic engine; `n >= 1`
+//! drives the shards on `n` OS threads ([`sim::SimConfig::workers`],
+//! `PlatformBuilder::workers` / `Session::workers`, `"workers"` in
+//! config/scenario JSON, `heye run --workers N`; requires `domains >= 1`,
+//! enforced by one `ExecOpts::validate` at every facade).
+//!
+//! **Conservative synchronization.** Shards advance in windows bounded by
+//! the *lookahead* — the cheapest `min_cross_route_s` any domain
+//! advertises (every cross-domain message pays at least one such latency,
+//! so nothing sent inside a window can demand delivery inside it; the
+//! classical argument). A zero-latency cross-domain route floors the
+//! window at 0.1% of the horizon, and deliveries that would land inside a
+//! closed window clamp forward to its barrier — coarser in time, never
+//! divergent. Cross-domain work moves as **typed messages** drained at
+//! barriers in (domain id, emission order): a sub-ORC miss becomes a
+//! `Handoff` (the continuum's summary-ranked escalation, priced at the
+//! same modeled round trip the monolithic ε-CON charges), executes as a
+//! single-node stub frame at the target's ingress representative, and
+//! returns as a `Done` folding the cost breakdown into the waiting home
+//! frame. Structural events — joins, leaves, heartbeat detections, drain
+//! escalations, capability changes — stay on one global timeline applied
+//! at barriers through the exact monolithic appliers.
+//!
+//! Invariant: **`RunMetrics` are byte-identical for every worker count
+//! `>= 1`** at a fixed domain count — including under churn, membership
+//! detection, and flaky presets (`tests/sharded.rs`; the merge sorts
+//! frames by (finish, release, origin) so the report order is
+//! partition-independent too). Domain isolation is also the *network*
+//! semantics: in-domain flows contend normally on the shard's network
+//! clone, cross-domain transfers are latency-only. `cargo bench --bench
+//! fig20_shards` sweeps domain count x worker count on the metro topology
+//! against a committed baseline (`BENCH_shards.json`).
+//!
+//! **Migration notes** (for code written against the pre-shard API):
+//! `Session::run` / `Session::run_scenario` and `Simulation::run` are
+//! unchanged — `run(&RunPlan)` already absorbed the old
+//! `run`/`run_scripted` pair, and `workers` defaults to the monolithic
+//! engine. New code opts in per run (`.domains(4).workers(4)`) or
+//! per platform (`PlatformBuilder::workers`). [`platform::RunReport`]
+//! now reports uniformly for both engines: `to_json()` always nests
+//! engine knobs under `"config" -> "exec"` (parallelism, domains,
+//! workers, route_cache, drain, membership) and carries the scheduler
+//! label plus an optional proxy snapshot; sharded runs capture the proxy
+//! from the engine's own final summaries, so
+//! [`telemetry::ProxySnapshot::escalation_order`] works identically
+//! against either engine.
+//!
 //! ## The mechanisms underneath
 //!
 //! The low-level modules stay public for by-hand composition — the
@@ -241,7 +300,8 @@
 //! * [`traverser`] — contention-interval performance prediction (§3.4/Fig. 6).
 //! * [`orchestrator`] — the decentralized hierarchical mapper (§3.5/Alg. 1).
 //! * [`netsim`] — fair-share network flows with dynamic bandwidth.
-//! * [`sim`] — the discrete-event DECS simulator driving every experiment.
+//! * [`sim`] — the discrete-event DECS simulator driving every experiment,
+//!   monolithic or sharded (one event loop per domain, `workers >= 1`).
 //! * [`baselines`] — ACE, LaTS (Hetero-Edge) and Multi-tier CloudVR,
 //!   registered alongside H-EYE in the scheduler registry.
 //! * [`domain`] — two-level orchestration domains (ε-CON / ε-ORC split):

@@ -24,9 +24,9 @@ USAGE:
   heye schedulers
   heye artifacts [--reps N]
   heye run     [--app vr|mining] [--sched NAME] [--edges N] [--servers M]
-               [--fleet] [--sensors K] [--horizon S] [--seed N] [--noise F]
-               [--parallelism T] [--domains N|auto] [--json]
-               [--report-json PATH] [--config FILE] [--placements]
+               [--fleet] [--metro] [--sensors K] [--horizon S] [--seed N]
+               [--noise F] [--parallelism T] [--domains N|auto] [--workers W]
+               [--json] [--report-json PATH] [--config FILE] [--placements]
   heye compare [--app vr|mining] [--edges N] [--servers M] [--fleet]
                [--sensors K] [--horizon S] [--seed N] [--parallelism T]
   heye domains list [--edges N] [--servers M] [--fleet] [--domains N|auto]
@@ -43,7 +43,12 @@ PARALLELISM: scheduler candidate-evaluation worker threads
 DOMAINS: orchestration domains under a summary-only continuum tier
          (0 = global orchestrator; 1 is byte-identical to global;
           \"auto\" derives the split from the hierarchy's sub-clusters)
+WORKERS: shard-driving worker threads for the sharded engine
+         (0 = the monolithic event loop, the default; >= 1 runs one event
+          heap per orchestration domain and requires --domains)
 FLEET: the continuum-scale preset (hundreds of edges; see fig16_fleet)
+METRO: the metro-scale preset (ten thousand edges; the fig20_shards
+       topology — pair with --domains auto --workers 0|N)
 SCENARIOS: declarative dynamic runs (open-loop arrivals + churn); see
            `heye scenario list` for presets and rust/examples/ for schema
 MEMBERSHIP: organic membership runs (heartbeats, failure detection,
@@ -55,7 +60,9 @@ fn platform_from(args: &Args) -> Result<Platform> {
     let edges = args.get_usize("edges", 0);
     let servers = args.get_usize("servers", 0);
     let builder = Platform::builder().parallelism(args.get_usize("parallelism", 1));
-    let builder = if args.has("fleet") {
+    let builder = if args.has("metro") {
+        builder.metro()
+    } else if args.has("fleet") {
         builder.fleet()
     } else if edges == 0 && servers == 0 {
         builder.paper_vr()
@@ -81,6 +88,7 @@ fn sim_config(args: &Args) -> SimConfig {
         .noise(args.get_f64("noise", 0.02))
         .parallelism(args.get_usize("parallelism", 1))
         .domains(domains_arg(args))
+        .workers(args.get_usize("workers", 0))
 }
 
 fn workload_from(args: &Args) -> WorkloadSpec {
@@ -239,7 +247,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 sc.cfg.sim.horizon_s = args.get_f64("horizon", sc.cfg.sim.horizon_s);
             }
             if args.has("parallelism") {
-                sc.cfg.sim.parallelism = args.get_usize("parallelism", sc.cfg.sim.parallelism);
+                sc.cfg.sim.exec.parallelism = args.get_usize("parallelism", sc.cfg.sim.exec.parallelism);
             }
             let report = sc.run()?;
             report.print(&sc.name);
@@ -277,9 +285,9 @@ fn cmd_membership(args: &Args) -> Result<()> {
                 sc.cfg.sim.horizon_s = args.get_f64("horizon", sc.cfg.sim.horizon_s);
             }
             if args.has("parallelism") {
-                sc.cfg.sim.parallelism = args.get_usize("parallelism", sc.cfg.sim.parallelism);
+                sc.cfg.sim.exec.parallelism = args.get_usize("parallelism", sc.cfg.sim.exec.parallelism);
             }
-            if sc.cfg.sim.membership.is_none() {
+            if sc.cfg.sim.exec.membership.is_none() {
                 heye::bail!(
                     "scenario `{}` has no membership config — add a `membership` \
                      object to the file or use `--preset flaky`",

@@ -215,6 +215,10 @@ pub struct RouteTable {
     sources: Vec<NodeId>,
     /// was this table built over an explicit source subset?
     restricted: bool,
+    /// explicit destination subset ([`RouteTable::for_pairs`]); `None` =
+    /// every device is a column. Remembered so `refresh` rebuilds over the
+    /// same footprint.
+    dest_subset: Option<Vec<NodeId>>,
     /// row-major `[from][to]`; `None` = unreachable over network links
     routes: Vec<Option<Route>>,
 }
@@ -233,22 +237,41 @@ impl RouteTable {
     /// caller falls back to the engine's full table for foreign origins).
     pub fn for_sources(g: &HwGraph, sources: &[NodeId]) -> RouteTable {
         let mut t = RouteTable::default();
-        t.rebuild_with(g, Some(sources));
+        t.rebuild_with(g, Some(sources), None);
+        t
+    }
+
+    /// Build a slice restricted in **both** dimensions: one SSSP per listed
+    /// source, with only `dests` as destination columns. This is what makes
+    /// per-shard route slices affordable at 10k-edge scale — a shard's
+    /// members rarely need routes to *every* device, only to their own
+    /// members, the servers, and each foreign domain's representative. Any
+    /// pair outside the footprint misses the table, same as a foreign
+    /// source row in [`RouteTable::for_sources`].
+    pub fn for_pairs(g: &HwGraph, sources: &[NodeId], dests: &[NodeId]) -> RouteTable {
+        let mut t = RouteTable::default();
+        t.rebuild_with(g, Some(sources), Some(dests));
         t
     }
 
     fn rebuild(&mut self, g: &HwGraph) {
-        if self.restricted {
-            let sources = std::mem::take(&mut self.sources);
-            self.rebuild_with(g, Some(&sources));
-        } else {
-            self.rebuild_with(g, None);
-        }
+        let sources = self.restricted.then(|| std::mem::take(&mut self.sources));
+        let dests = self.dest_subset.take();
+        self.rebuild_with(g, sources.as_deref(), dests.as_deref());
     }
 
-    fn rebuild_with(&mut self, g: &HwGraph, sources: Option<&[NodeId]>) {
+    fn rebuild_with(&mut self, g: &HwGraph, sources: Option<&[NodeId]>, dests: Option<&[NodeId]>) {
         self.epoch = g.epoch();
-        self.devices = g.groups(GroupRole::Device);
+        match dests {
+            Some(d) => {
+                self.dest_subset = Some(d.to_vec());
+                self.devices = d.to_vec();
+            }
+            None => {
+                self.dest_subset = None;
+                self.devices = g.groups(GroupRole::Device);
+            }
+        }
         self.dev_index = vec![u32::MAX; g.node_count()];
         for (i, &d) in self.devices.iter().enumerate() {
             self.dev_index[d.0 as usize] = i as u32;
@@ -543,6 +566,46 @@ mod tests {
         assert_eq!(slice.device_count(), full.device_count() + 2);
         assert!(slice.route(members[0], newcomer).is_some());
         assert!(slice.route(newcomer, members[0]).is_none());
+    }
+
+    /// A pair-restricted slice agrees with the full table on its footprint,
+    /// misses everything outside it, and `refresh` rebuilds over the same
+    /// source *and* destination subsets.
+    #[test]
+    fn pair_restricted_slice_matches_full_on_footprint() {
+        let mut d = Decs::build(&DecsSpec::mixed(6, 2));
+        let full = RouteTable::new(&d.graph);
+        let sources: Vec<NodeId> = d.edge_devices[..2].to_vec();
+        let dests: Vec<NodeId> = vec![d.edge_devices[0], d.edge_devices[1], d.servers[0]];
+        let mut slice = RouteTable::for_pairs(&d.graph, &sources, &dests);
+        assert_eq!(slice.source_count(), 2);
+        assert_eq!(slice.device_count(), 3);
+        let all: Vec<_> = d
+            .edge_devices
+            .iter()
+            .chain(d.servers.iter())
+            .copied()
+            .collect();
+        for &from in &all {
+            for &to in &all {
+                if sources.contains(&from) && dests.contains(&to) {
+                    assert_eq!(slice.route(from, to), full.route(from, to));
+                } else {
+                    assert!(slice.route(from, to).is_none());
+                }
+            }
+        }
+        // refresh after a join rebuilds over the same footprint: the
+        // newcomer is neither a row nor a column
+        let newcomer = d.join_edge(crate::hwgraph::presets::XAVIER_NX, 10.0);
+        assert!(slice.refresh(&d.graph));
+        assert_eq!(slice.source_count(), 2);
+        assert_eq!(slice.device_count(), 3);
+        assert!(slice.route(sources[0], newcomer).is_none());
+        assert_eq!(
+            slice.route(sources[0], d.servers[0]),
+            Network::new().route(&d.graph, sources[0], d.servers[0]).as_ref()
+        );
     }
 
     /// A join bumps the epoch; refresh rebuilds once and then covers the

@@ -40,8 +40,8 @@ use crate::hwgraph::NodeId;
 use crate::membership::{DegradeEvent, FlakyEvent, MembershipConfig};
 use crate::scenario::ScenarioReport;
 use crate::sim::{
-    ArrivalModel, JoinEvent, LeaveEvent, NetEvent, RunMetrics, ScriptedEvent, SimConfig,
-    Simulation, Workload,
+    ArrivalModel, ExecOpts, JoinEvent, LeaveEvent, NetEvent, RunMetrics, RunPlan, ScriptedEvent,
+    SimConfig, Simulation, Workload,
 };
 use crate::telemetry;
 use crate::telemetry::ProxySnapshot;
@@ -93,18 +93,15 @@ impl From<PlatformError> for crate::util::error::Error {
 #[derive(Debug, Clone)]
 pub struct PlatformBuilder {
     spec: DecsSpec,
-    parallelism: usize,
-    domains: usize,
-    membership: Option<MembershipConfig>,
+    /// default execution knobs for sessions on this platform
+    exec: ExecOpts,
 }
 
 impl Default for PlatformBuilder {
     fn default() -> Self {
         PlatformBuilder {
             spec: DecsSpec::paper_vr(),
-            parallelism: 1,
-            domains: 0,
-            membership: None,
+            exec: ExecOpts::default(),
         }
     }
 }
@@ -135,12 +132,21 @@ impl PlatformBuilder {
         self
     }
 
+    /// Metro-scale continuum: ten thousand edges plus a server block (the
+    /// `fig20_shards` topology — pair it with [`PlatformBuilder::domains`]
+    /// and [`PlatformBuilder::workers`], the sharded engine is what makes
+    /// this scale tractable).
+    pub fn metro(mut self) -> Self {
+        self.spec = DecsSpec::metro();
+        self
+    }
+
     /// Default candidate-evaluation worker threads for sessions on this
     /// platform (`1` = serial, `0` = auto-detect available cores).
     /// Placements and metrics are identical at any setting — the knob only
     /// changes how fast the mapping search runs on the host.
     pub fn parallelism(mut self, threads: usize) -> Self {
-        self.parallelism = threads;
+        self.exec.parallelism = threads;
         self
     }
 
@@ -149,7 +155,7 @@ impl PlatformBuilder {
     /// the topology into `n` [`crate::domain::Domain`]s under a summary-only
     /// ε-CON. One domain is byte-identical to the global orchestrator.
     pub fn domains(mut self, n: usize) -> Self {
-        self.domains = n;
+        self.exec.domains = n;
         self
     }
 
@@ -157,7 +163,22 @@ impl PlatformBuilder {
     /// sub-clusters (one domain per leaf device group — the fleet preset's
     /// natural split).
     pub fn domains_auto(mut self) -> Self {
-        self.domains = crate::domain::DOMAINS_AUTO;
+        self.exec.domains = crate::domain::DOMAINS_AUTO;
+        self
+    }
+
+    /// Default shard-worker count for sessions on this platform: `0` (the
+    /// default) runs the monolithic engine, `n >= 1` runs one event loop
+    /// per domain on `n` threads (requires `domains >= 1`). Metrics are
+    /// byte-identical at any `n >= 1`.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.exec.workers = n;
+        self
+    }
+
+    /// Replace every execution knob at once (see [`ExecOpts`]).
+    pub fn exec_opts(mut self, exec: ExecOpts) -> Self {
+        self.exec = exec;
         self
     }
 
@@ -166,7 +187,7 @@ impl PlatformBuilder {
     /// Registry`], heartbeats ride the event heap, and a missed refresh
     /// deadline *is* a failure (the engine's one failure path).
     pub fn membership(mut self, m: MembershipConfig) -> Self {
-        self.membership = Some(m);
+        self.exec.membership = Some(m);
         self
     }
 
@@ -222,16 +243,14 @@ impl PlatformBuilder {
                 self.spec.wan_gbps
             )));
         }
-        if let Some(m) = &self.membership {
-            m.validate().map_err(PlatformError::InvalidTopology)?;
-        }
+        self.exec
+            .validate()
+            .map_err(PlatformError::InvalidTopology)?;
         let decs = Decs::build(&self.spec);
         Ok(Platform {
             spec: self.spec,
             decs,
-            parallelism: self.parallelism,
-            domains: self.domains,
-            membership: self.membership,
+            exec: self.exec,
         })
     }
 }
@@ -244,15 +263,9 @@ impl PlatformBuilder {
 pub struct Platform {
     spec: DecsSpec,
     decs: Decs,
-    /// default scheduler worker threads for sessions (see
-    /// [`PlatformBuilder::parallelism`])
-    parallelism: usize,
-    /// default orchestration-domain count for sessions (see
-    /// [`PlatformBuilder::domains`]; `0` = global orchestrator)
-    domains: usize,
-    /// default membership configuration for sessions (see
-    /// [`PlatformBuilder::membership`]; `None` = registry off)
-    membership: Option<MembershipConfig>,
+    /// default execution knobs for sessions (see [`ExecOpts`]; every
+    /// `PlatformBuilder` knob lands here)
+    exec: ExecOpts,
 }
 
 impl Platform {
@@ -284,12 +297,7 @@ impl Platform {
 
     /// Start configuring a run of `workload` on this platform.
     pub fn session(&self, workload: WorkloadSpec) -> Session<'_> {
-        let mut cfg = SimConfig::default()
-            .parallelism(self.parallelism)
-            .domains(self.domains);
-        if let Some(m) = self.membership {
-            cfg = cfg.membership(m);
-        }
+        let cfg = SimConfig::default().exec_opts(self.exec.clone());
         Session {
             platform: self,
             workload,
@@ -506,7 +514,7 @@ impl Session<'_> {
     /// `0` = auto-detect). Overrides the platform default; results are
     /// identical at any setting.
     pub fn parallelism(mut self, threads: usize) -> Self {
-        self.cfg.parallelism = threads;
+        self.cfg.exec.parallelism = threads;
         self
     }
 
@@ -514,7 +522,17 @@ impl Session<'_> {
     /// `n >= 1` = that many domains, [`crate::domain::DOMAINS_AUTO`] =
     /// derive from the hierarchy). Overrides the platform default.
     pub fn domains(mut self, n: usize) -> Self {
-        self.cfg.domains = n;
+        self.cfg.exec.domains = n;
+        self
+    }
+
+    /// Shard-worker count for this run: `0` = the monolithic engine (the
+    /// default), `n >= 1` = one event loop per domain on `n` OS threads
+    /// (`1` is the serial sharded baseline; requires domains). Overrides
+    /// the platform default. `RunMetrics` are byte-identical at any
+    /// `n >= 1`.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.exec.workers = n;
         self
     }
 
@@ -553,7 +571,7 @@ impl Session<'_> {
     /// path a scripted `LeaveEvent { failure: true }` takes. Overrides the
     /// platform default.
     pub fn membership(mut self, m: MembershipConfig) -> Self {
-        self.cfg.membership = Some(m);
+        self.cfg.exec.membership = Some(m);
         self
     }
 
@@ -561,7 +579,7 @@ impl Session<'_> {
     /// `drain_s` seconds after a graceful leave is escalated to the failure
     /// path (in-flight work killed and re-mapped). Default: unbounded.
     pub fn drain_deadline(mut self, drain_s: f64) -> Self {
-        self.cfg.drain_s = drain_s;
+        self.cfg.exec.drain_s = drain_s;
         self
     }
 
@@ -633,16 +651,8 @@ impl Session<'_> {
         if let Some(tune) = entry.tune {
             tune(&mut cfg);
         }
-        if let Some(m) = &cfg.membership {
-            m.validate().map_err(PlatformError::InvalidSession)?;
-        }
-        if cfg.drain_s.is_nan() || cfg.drain_s <= 0.0 {
-            return Err(PlatformError::InvalidSession(format!(
-                "drain deadline must be positive (INFINITY = unbounded), got {} s",
-                cfg.drain_s
-            )));
-        }
-        if cfg.membership.is_none()
+        cfg.exec.validate().map_err(PlatformError::InvalidSession)?;
+        if cfg.exec.membership.is_none()
             && !(self.flaky_events.is_empty() && self.degrade_events.is_empty())
         {
             return Err(PlatformError::InvalidSession(
@@ -690,25 +700,6 @@ impl Session<'_> {
                 }
             })
             .collect::<Result<Vec<_>, PlatformError>>()?;
-        // domains >= 1 wraps the resolved scheduler in the two-level
-        // ε-CON / ε-ORC split: one sub-instance per domain, each scoped to
-        // its members, under a summary-only continuum tier. The concrete
-        // type is kept (not erased) so the post-run proxy capture can read
-        // the domain summaries.
-        enum Built {
-            Flat(Box<dyn crate::sim::Scheduler>),
-            Domains(crate::domain::DomainScheduler),
-        }
-        let mut sched = if cfg.domains >= 1 {
-            Built::Domains(crate::domain::DomainScheduler::with_domains(
-                &decs,
-                cfg.domains,
-                &|d| entry.build(d),
-            ))
-        } else {
-            Built::Flat(entry.build(&decs))
-        };
-        let mut sim = Simulation::new(decs);
         let mut events: Vec<ScriptedEvent> =
             net_events.into_iter().map(ScriptedEvent::Net).collect();
         events.extend(self.join_events.iter().cloned().map(ScriptedEvent::Join));
@@ -720,16 +711,61 @@ impl Session<'_> {
                 .copied()
                 .map(ScriptedEvent::Degrade),
         );
+        let plan = RunPlan::scripted(events);
+        // workers >= 1 selects the sharded engine ("Sharded execution" in
+        // the crate docs): one event loop per orchestration domain, each
+        // with its own scheduler instance built from this entry and
+        // narrowed to the domain's members — the engine does the narrowing,
+        // so the DomainScheduler wrapper is not used here.
+        if cfg.exec.sharded() {
+            let mut sim = Simulation::new(decs);
+            let outcome = sim.run_sharded(&|d| entry.build(d), workload, &plan, &cfg);
+            let Simulation { decs, .. } = sim;
+            let proxy = Some(ProxySnapshot::capture(
+                &decs,
+                &outcome.summaries,
+                |dev| outcome.domain_of.get(&dev).copied(),
+                &outcome.metrics,
+                cfg.horizon_s,
+            ));
+            return Ok(RunReport {
+                scheduler: self.scheduler.clone(),
+                scheduler_label: outcome.scheduler_label,
+                config: cfg,
+                decs,
+                metrics: outcome.metrics,
+                proxy,
+            });
+        }
+        // domains >= 1 wraps the resolved scheduler in the two-level
+        // ε-CON / ε-ORC split: one sub-instance per domain, each scoped to
+        // its members, under a summary-only continuum tier. The concrete
+        // type is kept (not erased) so the post-run proxy capture can read
+        // the domain summaries.
+        enum Built {
+            Flat(Box<dyn crate::sim::Scheduler>),
+            Domains(crate::domain::DomainScheduler),
+        }
+        let mut sched = if cfg.exec.domains >= 1 {
+            Built::Domains(crate::domain::DomainScheduler::with_domains(
+                &decs,
+                cfg.exec.domains,
+                &|d| entry.build(d),
+            ))
+        } else {
+            Built::Flat(entry.build(&decs))
+        };
+        let mut sim = Simulation::new(decs);
         let sched_dyn: &mut dyn crate::sim::Scheduler = match &mut sched {
             Built::Flat(b) => b.as_mut(),
             Built::Domains(d) => d,
         };
-        let metrics = sim.run_scripted(sched_dyn, workload, events, &cfg);
+        let metrics = sim.run(sched_dyn, workload, &plan, &cfg);
         let scheduler_label = sched_dyn.name();
         let Simulation { decs, .. } = sim;
         // observation seam: mirror post-run membership/domain state into a
         // read-only snapshot whenever there is something to observe
-        let proxy = if cfg.domains >= 1 || cfg.membership.is_some() {
+        let proxy = if cfg.exec.domains >= 1 || cfg.exec.membership.is_some() {
             Some(match &sched {
                 Built::Domains(d) => ProxySnapshot::capture(
                     &decs,
@@ -839,8 +875,63 @@ impl RunReport {
         telemetry::print_breakdown(title, &self.per_device());
     }
 
-    /// Serialize the run for external plotting.
+    /// Serialize the run for external plotting: one unified shape for
+    /// every engine — `{scheduler, scheduler_label, config (including the
+    /// exec block that actually ran), metrics, proxy?}`. The `metrics`
+    /// value is exactly the legacy `telemetry::to_json` payload, so
+    /// existing consumers move by reading one level deeper.
     pub fn to_json(&self) -> Json {
-        telemetry::to_json(&self.scheduler, &self.metrics)
+        let exec = &self.config.exec;
+        let domains = if exec.domains == crate::domain::DOMAINS_AUTO {
+            Json::Str("auto".to_string())
+        } else {
+            Json::Num(exec.domains as f64)
+        };
+        let membership = match &exec.membership {
+            Some(m) => Json::obj(vec![
+                ("heartbeat_s", Json::Num(m.heartbeat_s)),
+                ("deadline_s", Json::Num(m.deadline_s)),
+                ("jitter", Json::Num(m.jitter)),
+            ]),
+            None => Json::Null,
+        };
+        let config = Json::obj(vec![
+            ("horizon_s", Json::Num(self.config.horizon_s)),
+            ("seed", Json::Num(self.config.seed as f64)),
+            ("noise_frac", Json::Num(self.config.noise_frac)),
+            ("grouped", Json::Bool(self.config.grouped)),
+            (
+                "exec",
+                Json::obj(vec![
+                    ("parallelism", Json::Num(exec.parallelism as f64)),
+                    ("domains", domains),
+                    ("workers", Json::Num(exec.workers as f64)),
+                    ("route_cache", Json::Bool(exec.route_cache)),
+                    (
+                        "drain_s",
+                        if exec.drain_s.is_finite() {
+                            Json::Num(exec.drain_s)
+                        } else {
+                            Json::Null
+                        },
+                    ),
+                    ("membership", membership),
+                ]),
+            ),
+        ]);
+        let proxy = match &self.proxy {
+            Some(p) => p.to_json(),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            (
+                "scheduler_label",
+                Json::Str(self.scheduler_label.clone()),
+            ),
+            ("config", config),
+            ("metrics", telemetry::to_json(&self.scheduler, &self.metrics)),
+            ("proxy", proxy),
+        ])
     }
 }

@@ -264,7 +264,7 @@ impl Scenario {
             l.check(h, edges_at)
                 .map_err(|m| err!("leave events[{i}]: {m}"))?;
         }
-        if self.cfg.sim.membership.is_none()
+        if self.cfg.sim.exec.membership.is_none()
             && !(self.flaky_events.is_empty() && self.degrade_events.is_empty())
         {
             bail!(
@@ -359,8 +359,8 @@ impl Scenario {
             }
             "flaky" => {
                 sc.arrival = ArrivalModel::Poisson { rate_mult: 1.0 };
-                sc.cfg.sim.membership = Some(MembershipConfig::new(0.02, 0.05));
-                sc.cfg.sim.drain_s = 0.25;
+                sc.cfg.sim.exec.membership = Some(MembershipConfig::new(0.02, 0.05));
+                sc.cfg.sim.exec.drain_s = 0.25;
                 sc.flaky_events.push(FlakyEvent {
                     t: 0.6,
                     edge_index: 1,

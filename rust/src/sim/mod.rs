@@ -23,10 +23,12 @@
 pub mod arrivals;
 pub mod metrics;
 pub mod scheduler;
+pub mod shard;
 
 pub use arrivals::ArrivalModel;
 pub use metrics::{FrameRecord, LeaveRecord, RunMetrics};
 pub use scheduler::{best_effort, HeyeScheduler, Scheduler};
+pub use shard::ShardedOutcome;
 
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
@@ -273,7 +275,7 @@ impl LeaveEvent {
 }
 
 /// One scripted dynamic event of a scenario run — the union the engine
-/// executes via [`Simulation::run_scripted`].
+/// executes via [`Simulation::run`].
 #[derive(Debug, Clone)]
 pub enum ScriptedEvent {
     Net(NetEvent),
@@ -284,6 +286,48 @@ pub enum ScriptedEvent {
     Flaky(FlakyEvent),
     /// a capability re-advertisement at degraded weight
     Degrade(DegradeEvent),
+}
+
+/// The declarative inputs of one run beyond the workload: the scripted
+/// dynamic-event timeline [`Simulation::run`] executes. A plain run is the
+/// empty plan (`RunPlan::default()`); the scenario engine and the facade
+/// session both compile their event lists into one of these, so the
+/// engine has exactly one driver.
+#[derive(Debug, Clone, Default)]
+pub struct RunPlan {
+    pub events: Vec<ScriptedEvent>,
+}
+
+impl RunPlan {
+    pub fn new() -> RunPlan {
+        RunPlan::default()
+    }
+
+    /// Build a plan from an already-assembled event list.
+    pub fn scripted(events: Vec<ScriptedEvent>) -> RunPlan {
+        RunPlan { events }
+    }
+
+    /// Append one scripted event (any kind).
+    pub fn event(mut self, e: ScriptedEvent) -> RunPlan {
+        self.events.push(e);
+        self
+    }
+
+    /// Append a bandwidth change.
+    pub fn net(self, ev: NetEvent) -> RunPlan {
+        self.event(ScriptedEvent::Net(ev))
+    }
+
+    /// Append a device join.
+    pub fn join(self, ev: JoinEvent) -> RunPlan {
+        self.event(ScriptedEvent::Join(ev))
+    }
+
+    /// Append a device leave/failure.
+    pub fn leave(self, ev: LeaveEvent) -> RunPlan {
+        self.event(ScriptedEvent::Leave(ev))
+    }
 }
 
 /// A structural change applied between event-loop segments: the scripted
@@ -307,38 +351,32 @@ enum Structural {
 // engine configuration
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, Clone)]
-pub struct SimConfig {
-    /// simulated horizon (seconds)
-    pub horizon_s: f64,
-    pub seed: u64,
-    /// multiplicative execution-time noise: work *= exp(noise_frac * N(0,1))
-    pub noise_frac: f64,
-    /// batch same-instant sibling tasks into one mapping round
-    /// (the Grouped strategy of §5.5.5)
-    pub grouped: bool,
+/// The execution knobs of a run, gathered in one place: *how* the engine
+/// executes, as opposed to *what* it simulates (`SimConfig`'s horizon /
+/// seed / noise). One struct, one [`ExecOpts::validate`] — every facade
+/// (`SimConfig`, `PlatformBuilder`, `Session`, config/scenario JSON, the
+/// CLI) plumbs the same instance instead of duplicating fields and checks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecOpts {
     /// candidate-evaluation worker threads handed to the scheduler
     /// (1 = serial, 0 = auto-detect available cores); results are
     /// identical at any setting
     pub parallelism: usize,
-    /// times at which the engine asks the scheduler to drop its adaptive
-    /// session state (sticky placements, static plans) — the Fig. 12
-    /// dynamic-adaptation knob, reachable through
-    /// `Session::reset_sticky_at`
-    pub reset_times: Vec<f64>,
-    /// resolve cross-device routes through the structure-versioned
-    /// [`RouteTable`] (default) instead of per-transfer Dijkstra. Routes,
-    /// placements, and metrics are byte-identical either way (asserted by
-    /// `tests/route_cache.rs`); the knob exists for that assertion and for
-    /// measuring the cache's win.
-    pub route_cache: bool,
     /// orchestration domains (ε-CON / ε-ORC split, [`crate::domain`]):
-    /// `0` = the single global orchestrator (today's behavior), `n >= 1` =
-    /// partition the topology into `n` domains, each with its own sub-ORC
-    /// and cache slices, under a continuum orchestrator that sees only
-    /// per-domain summaries. With `1` domain, placements and metrics are
+    /// `0` = the single global orchestrator, `n >= 1` = partition the
+    /// topology into `n` domains, each with its own sub-ORC and cache
+    /// slices, under a continuum orchestrator that sees only per-domain
+    /// summaries. With `1` domain, placements and metrics are
     /// byte-identical to `0` (asserted by `tests/domains.rs`).
     pub domains: usize,
+    /// shard-driving worker threads for the sharded engine ("Sharded
+    /// execution" in the crate docs): `0` (the default) runs the
+    /// monolithic single-heap engine; `n >= 1` runs one event loop per
+    /// domain, driven by `n` OS threads (`1` = the serial sharded
+    /// baseline), synchronized conservatively at cross-domain transfers.
+    /// `RunMetrics` are byte-identical at any `n >= 1` (asserted by
+    /// `tests/sharded.rs`). Requires `domains >= 1`.
+    pub workers: usize,
     /// organic membership ([`crate::membership`]): when set, every edge
     /// device registers with the continuum and heartbeats on the event
     /// heap; a missed refresh *is* a failure (the engine synthesizes the
@@ -351,6 +389,77 @@ pub struct SimConfig {
     /// escalated to the failure path (kill + re-map) instead of draining
     /// forever. `INFINITY` (the default) preserves unbounded draining.
     pub drain_s: f64,
+    /// resolve cross-device routes through the structure-versioned
+    /// [`RouteTable`] (default) instead of per-transfer Dijkstra. Routes,
+    /// placements, and metrics are byte-identical either way (asserted by
+    /// `tests/route_cache.rs`); the knob exists for that assertion and for
+    /// measuring the cache's win.
+    pub route_cache: bool,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts {
+            parallelism: 1,
+            domains: 0,
+            workers: 0,
+            membership: None,
+            drain_s: f64::INFINITY,
+            route_cache: true,
+        }
+    }
+}
+
+impl ExecOpts {
+    /// The single validation point every facade funnels through
+    /// (`Session::run`, `ExpConfig::validate`, the scenario loader):
+    /// membership invariants, a positive drain deadline, and the
+    /// workers-need-domains coupling of the sharded engine.
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some(m) = &self.membership {
+            m.validate()?;
+        }
+        if self.drain_s.is_nan() || self.drain_s <= 0.0 {
+            return Err(format!(
+                "drain_deadline_s must be positive (got {}); use infinity for \
+                 unbounded draining",
+                self.drain_s
+            ));
+        }
+        if self.workers >= 1 && self.domains == 0 {
+            return Err(format!(
+                "workers={} requires domains >= 1: the sharded engine shards \
+                 by orchestration domain",
+                self.workers
+            ));
+        }
+        Ok(())
+    }
+
+    /// Does this configuration select the sharded engine?
+    pub fn sharded(&self) -> bool {
+        self.workers >= 1
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// simulated horizon (seconds)
+    pub horizon_s: f64,
+    pub seed: u64,
+    /// multiplicative execution-time noise: work *= exp(noise_frac * N(0,1))
+    pub noise_frac: f64,
+    /// batch same-instant sibling tasks into one mapping round
+    /// (the Grouped strategy of §5.5.5)
+    pub grouped: bool,
+    /// times at which the engine asks the scheduler to drop its adaptive
+    /// session state (sticky placements, static plans) — the Fig. 12
+    /// dynamic-adaptation knob, reachable through
+    /// `Session::reset_sticky_at`
+    pub reset_times: Vec<f64>,
+    /// the execution knobs (threads, domains, sharding, membership,
+    /// draining, route cache) — see [`ExecOpts`]
+    pub exec: ExecOpts,
 }
 
 impl Default for SimConfig {
@@ -360,12 +469,8 @@ impl Default for SimConfig {
             seed: 42,
             noise_frac: 0.02,
             grouped: false,
-            parallelism: 1,
             reset_times: Vec::new(),
-            route_cache: true,
-            domains: 0,
-            membership: None,
-            drain_s: f64::INFINITY,
+            exec: ExecOpts::default(),
         }
     }
 }
@@ -393,7 +498,7 @@ impl SimConfig {
 
     /// Scheduler worker threads (0 = auto, 1 = serial).
     pub fn parallelism(mut self, threads: usize) -> Self {
-        self.parallelism = threads;
+        self.exec.parallelism = threads;
         self
     }
 
@@ -407,28 +512,42 @@ impl SimConfig {
     /// Enable/disable the device-pair route cache (on by default; results
     /// are identical either way).
     pub fn route_cache(mut self, on: bool) -> Self {
-        self.route_cache = on;
+        self.exec.route_cache = on;
         self
     }
 
     /// Partition the topology into `n` orchestration domains (0 = one
     /// global orchestrator, the default).
     pub fn domains(mut self, n: usize) -> Self {
-        self.domains = n;
+        self.exec.domains = n;
+        self
+    }
+
+    /// Drive one event loop per domain on `n` worker threads (0 = the
+    /// monolithic engine, the default; `1` = serial sharded baseline).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.exec.workers = n;
         self
     }
 
     /// Enable the organic-membership model: registration, heartbeats, and
     /// missed-refresh failure detection.
     pub fn membership(mut self, m: MembershipConfig) -> Self {
-        self.membership = Some(m);
+        self.exec.membership = Some(m);
         self
     }
 
     /// Bound graceful-leave draining: escalate to the failure path after
     /// `s` seconds if in-flight work remains on the departed device.
     pub fn drain_deadline(mut self, s: f64) -> Self {
-        self.drain_s = s;
+        self.exec.drain_s = s;
+        self
+    }
+
+    /// Replace the execution knobs wholesale (the facades build one
+    /// [`ExecOpts`] and hand it through unchanged).
+    pub fn exec_opts(mut self, exec: ExecOpts) -> Self {
+        self.exec = exec;
         self
     }
 }
@@ -474,6 +593,12 @@ struct Frame {
     /// censored by a device leave: the origin is gone, nothing downstream
     /// runs and no record is emitted
     abandoned: bool,
+    /// sharded engine only: this frame is the single-node stub executing a
+    /// task handed off from another domain ("Sharded execution"). Its
+    /// completion emits a result message back to the home shard instead of
+    /// a [`FrameRecord`], and it is excluded from dropped-frame accounting
+    /// (the home frame carries the QoS outcome). `None` everywhere else.
+    remote_home: Option<shard::RemoteHome>,
     state: Vec<NodeState>,
     /// device the node's input data currently lives on
     data_dev: Vec<NodeId>,
@@ -563,6 +688,13 @@ enum EvKind {
     /// bookkeeping only — heartbeats never touch task state, so monitoring
     /// alone cannot perturb `RunMetrics`
     Heartbeat { dev: NodeId },
+    /// sharded engine only: a cross-domain task handoff arriving at its
+    /// target shard. Injected at a sync barrier; the timestamp already
+    /// includes the modeled cross-domain latency.
+    RemoteHandoff(shard::HandoffMsg),
+    /// sharded engine only: the result of a handed-off task returning to
+    /// its home shard, resolving the home frame's waiting node.
+    RemoteDone(shard::DoneMsg),
 }
 
 struct Ev {
@@ -635,6 +767,35 @@ struct SimState {
 }
 
 impl SimState {
+    /// An empty event-loop state. The monolithic engine builds one for the
+    /// whole run; the sharded engine builds one per domain shard.
+    fn new() -> SimState {
+        SimState {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            frames: Vec::new(),
+            running: BTreeMap::new(),
+            by_dev: BTreeMap::new(),
+            pending_by_dev: BTreeMap::new(),
+            pu_queue: BTreeMap::new(),
+            queued_by_dev: BTreeMap::new(),
+            tenants: BTreeMap::new(),
+            loads: Loads::default(),
+            metrics: RunMetrics::default(),
+            next_uid: 1,
+            sources: Vec::new(),
+            released_count: Vec::new(),
+            src_active: Vec::new(),
+            src_rng: Vec::new(),
+            src_key: Vec::new(),
+            src_gen: Vec::new(),
+            failed: BTreeSet::new(),
+            membership: None,
+            flaky: Vec::new(),
+        }
+    }
+
     fn push(&mut self, t: f64, kind: EvKind) {
         let seq = self.seq;
         self.seq += 1;
@@ -683,57 +844,21 @@ impl Simulation {
     }
 
     /// Run `workload` under `sched` for `cfg.horizon_s` simulated seconds,
-    /// applying dynamic network/join events at their times.
+    /// applying the plan's scripted dynamic events at their times — the
+    /// single entrypoint every harness drives (a plain run is the empty
+    /// plan, [`RunPlan::default`]). Network changes ride the event heap,
+    /// while joins and leaves are structural (they mutate the system
+    /// between event-loop segments).
     pub fn run(
         &mut self,
         sched: &mut dyn Scheduler,
         workload: Workload,
-        net_events: Vec<NetEvent>,
-        join_events: Vec<JoinEvent>,
+        plan: &RunPlan,
         cfg: &SimConfig,
     ) -> RunMetrics {
-        let mut events: Vec<ScriptedEvent> =
-            net_events.into_iter().map(ScriptedEvent::Net).collect();
-        events.extend(join_events.into_iter().map(ScriptedEvent::Join));
-        self.run_scripted(sched, workload, events, cfg)
-    }
-
-    /// Run `workload` under the full scripted event stream — the scenario
-    /// engine's entry point: network changes ride the event heap, while
-    /// joins and leaves are structural (they mutate the system between
-    /// event-loop segments).
-    pub fn run_scripted(
-        &mut self,
-        sched: &mut dyn Scheduler,
-        workload: Workload,
-        events: Vec<ScriptedEvent>,
-        cfg: &SimConfig,
-    ) -> RunMetrics {
-        let mut st = SimState {
-            heap: BinaryHeap::new(),
-            seq: 0,
-            now: 0.0,
-            frames: Vec::new(),
-            running: BTreeMap::new(),
-            by_dev: BTreeMap::new(),
-            pending_by_dev: BTreeMap::new(),
-            pu_queue: BTreeMap::new(),
-            queued_by_dev: BTreeMap::new(),
-            tenants: BTreeMap::new(),
-            loads: Loads::default(),
-            metrics: RunMetrics::default(),
-            next_uid: 1,
-            sources: Vec::new(),
-            released_count: Vec::new(),
-            src_active: Vec::new(),
-            src_rng: Vec::new(),
-            src_key: Vec::new(),
-            src_gen: Vec::new(),
-            failed: BTreeSet::new(),
-            membership: None,
-            flaky: Vec::new(),
-        };
-        sched.set_parallelism(cfg.parallelism);
+        let events = plan.events.clone();
+        let mut st = SimState::new();
+        sched.set_parallelism(cfg.exec.parallelism);
         for src in workload.sources {
             let idx = add_source(&mut st, cfg, src);
             let t = st.sources[idx].start_t;
@@ -774,7 +899,7 @@ impl Simulation {
         // scripted failure would be: one failure mechanism, and
         // heartbeat-detected runs are byte-identical to scripted runs with
         // failures at the same times.
-        if let Some(mcfg) = cfg.membership.as_ref() {
+        if let Some(mcfg) = cfg.exec.membership.as_ref() {
             let mut reg_t: Vec<f64> = vec![0.0; self.decs.edge_devices.len()];
             let mut join_ts: Vec<f64> = structural
                 .iter()
@@ -809,11 +934,11 @@ impl Simulation {
         }
         // drain deadlines: every graceful leave gets an escalation probe
         // one deadline later; it is a no-op if the device finished draining
-        if cfg.drain_s.is_finite() {
+        if cfg.exec.drain_s.is_finite() {
             let probes: Vec<(f64, usize)> = structural
                 .iter()
                 .filter_map(|(t, s)| match s {
-                    Structural::Leave(l) if !l.failure => Some((t + cfg.drain_s, l.edge_index)),
+                    Structural::Leave(l) if !l.failure => Some((t + cfg.exec.drain_s, l.edge_index)),
                     _ => None,
                 })
                 .collect();
@@ -829,7 +954,7 @@ impl Simulation {
         // structural events update them in place (O(delta)) between event-
         // loop segments instead of reconstructing them per event
         let mut slow = CachedSlowdown::new(&self.decs.graph);
-        let mut routes = if cfg.route_cache {
+        let mut routes = if cfg.exec.route_cache {
             Some(RouteTable::new(&self.decs.graph))
         } else {
             None
@@ -851,6 +976,7 @@ impl Simulation {
                 &mut st,
                 cfg,
                 t,
+                None,
             );
             match ev {
                 Structural::Join(j) => {
@@ -911,6 +1037,7 @@ impl Simulation {
             &mut st,
             cfg,
             cfg.horizon_s,
+            None,
         );
 
         // account frames that never completed and are past their budget
@@ -1207,6 +1334,7 @@ fn run_until(
     st: &mut SimState,
     cfg: &SimConfig,
     until: f64,
+    mut ctx: Option<&mut shard::ShardCtx>,
 ) {
     debug_assert!(
         routes.map(|r| r.is_current(&decs.graph)).unwrap_or(true),
@@ -1220,9 +1348,20 @@ fn run_until(
         st.now = ev.t.max(st.now);
         let now = st.now;
         match ev.kind {
-            EvKind::Release { source, gen } => {
-                on_release(decs, net, perf, slow, routes, sched, st, cfg, source, gen, now)
-            }
+            EvKind::Release { source, gen } => on_release(
+                decs,
+                net,
+                perf,
+                slow,
+                routes,
+                sched,
+                st,
+                cfg,
+                source,
+                gen,
+                now,
+                ctx.as_deref_mut(),
+            ),
             EvKind::Ready { frame, node } => assign_batch(
                 decs,
                 net,
@@ -1234,6 +1373,7 @@ fn run_until(
                 cfg,
                 &[(frame, node)],
                 now,
+                ctx.as_deref_mut(),
             ),
             EvKind::TransferDone {
                 frame,
@@ -1274,7 +1414,19 @@ fn run_until(
                     .map(|r| r.epoch == epoch)
                     .unwrap_or(false);
                 if valid {
-                    on_finish(decs, net, perf, slow, routes, sched, st, cfg, uid, now);
+                    on_finish(
+                        decs,
+                        net,
+                        perf,
+                        slow,
+                        routes,
+                        sched,
+                        st,
+                        cfg,
+                        uid,
+                        now,
+                        ctx.as_deref_mut(),
+                    );
                 }
             }
             EvKind::NetSet { link, gbps } => {
@@ -1292,6 +1444,32 @@ fn run_until(
                     st.push(next, EvKind::Heartbeat { dev });
                 }
             }
+            EvKind::RemoteHandoff(msg) => shard::on_handoff(
+                decs,
+                net,
+                perf,
+                slow,
+                routes,
+                sched,
+                st,
+                cfg,
+                msg,
+                now,
+                ctx.as_deref_mut(),
+            ),
+            EvKind::RemoteDone(msg) => shard::on_remote_done(
+                decs,
+                net,
+                perf,
+                slow,
+                routes,
+                sched,
+                st,
+                cfg,
+                msg,
+                now,
+                ctx.as_deref_mut(),
+            ),
         }
     }
     st.now = until;
@@ -1310,6 +1488,7 @@ fn on_release(
     source: usize,
     gen: u32,
     now: f64,
+    ctx: Option<&mut shard::ShardCtx>,
 ) {
     if !st.src_active[source] || gen != st.src_gen[source] {
         // the origin left, or this release belongs to a generation that a
@@ -1352,6 +1531,7 @@ fn on_release(
         resolution,
         noise_key: mix64(st.src_key[source], st.released_count[source]),
         abandoned: false,
+        remote_home: None,
         state,
         data_dev: vec![origin; n],
         data_src: vec![origin; n],
@@ -1388,7 +1568,7 @@ fn on_release(
     // roots are ready immediately
     let ready: Vec<(usize, usize)> = roots.into_iter().map(|r| (fidx, r)).collect();
     if cfg.grouped && ready.len() > 1 {
-        assign_batch(decs, net, perf, slow, routes, sched, st, cfg, &ready, now);
+        assign_batch(decs, net, perf, slow, routes, sched, st, cfg, &ready, now, ctx);
     } else {
         for (f, r) in ready {
             st.push(now, EvKind::Ready { frame: f, node: r });
@@ -1412,6 +1592,7 @@ fn assign_batch(
     cfg: &SimConfig,
     batch: &[(usize, usize)],
     now: f64,
+    mut ctx: Option<&mut shard::ShardCtx>,
 ) {
     let grouped = cfg.grouped && batch.len() > 1;
     let mut first_comm: f64 = 0.0;
@@ -1458,22 +1639,83 @@ fn assign_batch(
             }
         }
         // a placement on a deactivated device is a miss: a scheduler's
-        // membership view may lag a leave (baselines track their own lists)
+        // membership view may lag a leave (baselines track their own lists).
+        // A shard additionally rejects placements outside its own domain —
+        // cross-domain work moves only through the handoff protocol below.
         let placed = r.pu.filter(|&pu| {
             decs.graph
                 .device_of(pu)
-                .map(|d| decs.is_active(d))
+                .map(|d| {
+                    decs.is_active(d)
+                        && ctx.as_ref().map(|c| c.member_set.contains(&d)).unwrap_or(true)
+                })
                 .unwrap_or(false)
         });
         let (pu, degraded) = match placed {
             Some(pu) => (pu, false),
             None => {
+                // sharded escalation: a task the home domain's sub-ORC
+                // cannot place (and that is not pinned to its origin) is
+                // offered to the best foreign domain as a typed handoff
+                // message, drained at the next sync barrier — the async
+                // mirror of the monolithic continuum's synchronous foreign
+                // sub-ORC call. Stub frames (already handed off once) never
+                // re-escalate, so a task crosses domains at most once.
+                let escalate = match ctx.as_deref_mut() {
+                    Some(c)
+                        if !spec.kind.pinned_to_origin()
+                            && st.frames[fidx].remote_home.is_none() =>
+                    {
+                        c.escalation_target().map(|t| (c, t))
+                    }
+                    _ => None,
+                };
+                if let Some((c, (target, cross_s))) = escalate {
+                    let oh = {
+                        // mirror the continuum charge: one ORC round trip
+                        // out to the target domain and back
+                        let mut oh = r.overhead;
+                        oh.comm_s += 2.0 * cross_s;
+                        oh.hops += 2;
+                        oh
+                    };
+                    {
+                        let f = &mut st.frames[fidx];
+                        f.sched_s += oh.total_s();
+                        // the one-way data ship to the target domain; the
+                        // return leg is charged when the result lands
+                        f.comm_s += cross_s;
+                        f.xfer_comm[node] = cross_s;
+                        f.state[node] = NodeState::Transferring;
+                    }
+                    st.metrics.sched_comm_s += oh.comm_s;
+                    st.metrics.sched_compute_s += oh.compute_s;
+                    st.metrics.sched_hops += oh.hops as u64;
+                    st.metrics.traverser_calls += oh.traverser_calls as u64;
+                    c.outbox.push(shard::ShardMsg::Handoff(shard::HandoffMsg {
+                        from: c.id,
+                        to: target,
+                        send_t: now,
+                        cross_s,
+                        spec: spec.clone(),
+                        dl_abs: st.frames[fidx].dl_abs[node],
+                        noise_key: mix64(st.frames[fidx].noise_key, node as u64),
+                        home_frame: fidx,
+                        home_node: node,
+                    }));
+                    continue;
+                }
                 // best-effort fallback so the run measures the miss;
                 // candidates limited to the data device + active servers —
                 // a full-system scan per miss is O(devices) and dominates
-                // wall-clock once a large run starts failing
+                // wall-clock once a large run starts failing. A shard's
+                // candidate pool is its own server members.
+                let server_pool: &[NodeId] = match ctx.as_ref() {
+                    Some(c) => &c.local_servers,
+                    None => &decs.servers,
+                };
                 let all: Vec<NodeId> = std::iter::once(data_dev)
-                    .chain(decs.servers.iter().copied())
+                    .chain(server_pool.iter().copied())
                     .filter(|&d| decs.is_active(d))
                     .collect();
                 let be = {
@@ -1740,6 +1982,7 @@ fn on_finish(
     cfg: &SimConfig,
     uid: u64,
     now: f64,
+    ctx: Option<&mut shard::ShardCtx>,
 ) {
     let r = st.running.remove(&uid).expect("valid finish");
     if let Some(v) = st.by_dev.get_mut(&r.dev) {
@@ -1806,27 +2049,67 @@ fn on_finish(
         return;
     }
 
+    resolve_completion(
+        decs, net, perf, slow, routes, sched, st, cfg, r.frame, r.node, r.dev, now, ctx,
+    );
+}
+
+/// Resolve the completion of `node` of frame `fidx`: decrement successors'
+/// missing-counts (their input now lives on `dev`), schedule the newly
+/// ready ones, and close out the frame when its last node finishes. Shared
+/// by the local finish path ([`on_finish`]) and the sharded engine's
+/// remote-result delivery ([`shard::on_remote_done`]), so a handed-off
+/// task resolves its home frame through exactly the code a local task
+/// uses.
+#[allow(clippy::too_many_arguments)]
+fn resolve_completion(
+    decs: &Decs,
+    net: &mut Network,
+    perf: &ProfileModel,
+    slow: &CachedSlowdown,
+    routes: Option<&RouteTable>,
+    sched: &mut dyn Scheduler,
+    st: &mut SimState,
+    cfg: &SimConfig,
+    fidx: usize,
+    node: usize,
+    dev: NodeId,
+    now: f64,
+    mut ctx: Option<&mut shard::ShardCtx>,
+) {
     // dependency resolution
-    let succs = st.frames[r.frame].cfg.nodes[r.node].succs.clone();
+    let succs = st.frames[fidx].cfg.nodes[node].succs.clone();
     let mut newly_ready = Vec::new();
     for s in succs {
-        let f = &mut st.frames[r.frame];
+        let f = &mut st.frames[fidx];
         if let NodeState::Pending { missing } = f.state[s] {
             if missing == usize::MAX {
                 continue; // node already lost to a device failure
             }
             let m = missing - 1;
             f.state[s] = NodeState::Pending { missing: m };
-            f.data_dev[s] = r.dev;
-            f.data_src[s] = r.dev;
+            f.data_dev[s] = dev;
+            f.data_src[s] = dev;
             if m == 0 {
                 f.ready_t[s] = now;
-                newly_ready.push((r.frame, s));
+                newly_ready.push((fidx, s));
             }
         }
     }
     if cfg.grouped && newly_ready.len() > 1 {
-        assign_batch(decs, net, perf, slow, routes, sched, st, cfg, &newly_ready, now);
+        assign_batch(
+            decs,
+            net,
+            perf,
+            slow,
+            routes,
+            sched,
+            st,
+            cfg,
+            &newly_ready,
+            now,
+            ctx.as_deref_mut(),
+        );
     } else {
         for (f, n) in newly_ready {
             st.push(now, EvKind::Ready { frame: f, node: n });
@@ -1834,9 +2117,31 @@ fn on_finish(
     }
 
     // frame completion
-    if st.frames[r.frame].remaining == 0 && !st.frames[r.frame].done {
-        let f = &mut st.frames[r.frame];
+    if st.frames[fidx].remaining == 0 && !st.frames[fidx].done {
+        let f = &mut st.frames[fidx];
         f.done = true;
+        if let Some(rh) = f.remote_home {
+            // a handed-off stub's "record" is the result message back to
+            // its home shard (drained at the next sync barrier); the home
+            // frame emits the FrameRecord once the result lands
+            let c = ctx
+                .as_deref_mut()
+                .expect("remote stubs exist only under the sharded engine");
+            c.outbox.push(shard::ShardMsg::Done(shard::DoneMsg {
+                to: rh.domain,
+                finish_t: now,
+                cross_s: rh.cross_s,
+                home_frame: rh.frame,
+                home_node: rh.node,
+                compute_s: f.compute_s,
+                slowdown_s: f.slowdown_s,
+                comm_s: f.comm_s,
+                sched_s: f.sched_s,
+                edge_busy_s: f.edge_busy_s,
+                server_busy_s: f.server_busy_s,
+            }));
+            return;
+        }
         // the scheduler's own end-to-end prediction: critical path over its
         // per-task latency predictions (the Fig. 10 validation metric)
         let pred = f.pred.clone();
@@ -1985,7 +2290,7 @@ mod tests {
         let mut sched = heye(&sim.decs);
         let wl = Workload::vr(&sim.decs);
         let cfg = SimConfig::default().horizon(0.6).seed(1);
-        let m = sim.run(&mut sched, wl, vec![], vec![], &cfg);
+        let m = sim.run(&mut sched, wl, &RunPlan::default(), &cfg);
         assert!(!m.frames.is_empty(), "no frames completed");
         // H-EYE on the paper testbed keeps QoS failures low
         assert!(
@@ -2008,7 +2313,7 @@ mod tests {
         let mut sched = heye(&sim.decs);
         let wl = Workload::mining_burst(origin, 3);
         let cfg = SimConfig::default().horizon(0.5).seed(2).noise(0.0);
-        let m = sim.run(&mut sched, wl, vec![], vec![], &cfg);
+        let m = sim.run(&mut sched, wl, &RunPlan::default(), &cfg);
         assert_eq!(m.frames.len(), 3);
         assert_eq!(m.qos_failure_rate(), 0.0, "small burst must meet 100ms");
     }
@@ -2021,7 +2326,7 @@ mod tests {
         let mut sched = heye(&sim.decs);
         let wl = Workload::mining_burst(origin, 12);
         let cfg = SimConfig::default().horizon(0.5).seed(3).noise(0.0);
-        let m = sim.run(&mut sched, wl, vec![], vec![], &cfg);
+        let m = sim.run(&mut sched, wl, &RunPlan::default(), &cfg);
         let slow: f64 = m.frames.iter().map(|f| f.slowdown_s).sum();
         assert!(slow > 0.0, "12 concurrent windows must contend");
     }
@@ -2039,18 +2344,17 @@ mod tests {
         let (mut sim_a, mut sched_a) = mk();
         let cfg = SimConfig::default().horizon(0.5).seed(4).noise(0.0);
         let wl_a = Workload::vr(&sim_a.decs);
-        let base = sim_a.run(&mut sched_a, wl_a, vec![], vec![], &cfg);
+        let base = sim_a.run(&mut sched_a, wl_a, &RunPlan::default(), &cfg);
         let (mut sim_b, mut sched_b) = mk();
         let wl_b = Workload::vr(&sim_b.decs);
         let throttled = sim_b.run(
             &mut sched_b,
             wl_b,
-            vec![NetEvent {
+            &RunPlan::new().net(NetEvent {
                 t: 0.0,
                 link: uplink,
                 gbps: Some(0.5),
-            }],
-            vec![],
+            }),
             &cfg,
         );
         let comm = |m: &RunMetrics| -> f64 {
@@ -2076,7 +2380,7 @@ mod tests {
             uplink_gbps: 10.0,
             vr_source: true,
         }];
-        let m = sim.run(&mut sched, wl, vec![], joins, &cfg);
+        let m = sim.run(&mut sched, wl, &RunPlan { events: joins.into_iter().map(ScriptedEvent::Join).collect() }, &cfg);
         assert_eq!(sim.decs.edge_devices.len(), 2);
         let newcomer = sim.decs.edge_devices[1];
         let served = m.frames.iter().filter(|f| f.origin == newcomer).count();
@@ -2123,7 +2427,7 @@ mod tests {
         };
         let wl = Workload { sources: vec![src] };
         let cfg = SimConfig::default().horizon(0.9).seed(11).noise(0.0);
-        let m = sim.run(&mut sched, wl, vec![], vec![], &cfg);
+        let m = sim.run(&mut sched, wl, &RunPlan::default(), &cfg);
         assert_eq!(m.frames.len(), 1);
         let f = &m.frames[0];
         let placed_remote = m.tasks_on_server > 0;
@@ -2142,7 +2446,7 @@ mod tests {
             let mut sched = heye(&sim.decs);
             let wl = Workload::vr(&sim.decs);
             let cfg = SimConfig::default().horizon(0.3).seed(7);
-            let m = sim.run(&mut sched, wl, vec![], vec![], &cfg);
+            let m = sim.run(&mut sched, wl, &RunPlan::default(), &cfg);
             (m.frames.len(), m.mean_latency_s())
         };
         let (n1, l1) = run();
@@ -2165,7 +2469,7 @@ mod tests {
                 .seed(8)
                 .noise(0.0)
                 .grouped(grouped);
-            sim.run(&mut sched, wl, vec![], vec![], &cfg)
+            sim.run(&mut sched, wl, &RunPlan::default(), &cfg)
         };
         let solo = run(false);
         let grp = run(true);
@@ -2190,10 +2494,10 @@ mod tests {
             edge_index: 1,
             failure: true,
         };
-        let m = sim.run_scripted(
+        let m = sim.run(
             &mut sched,
             wl,
-            vec![ScriptedEvent::Leave(leave)],
+            &RunPlan::new().leave(leave),
             &cfg,
         );
         assert_eq!(m.leaves.len(), 1);
@@ -2228,10 +2532,10 @@ mod tests {
             edge_index: 0,
             failure: false,
         };
-        let m = sim.run_scripted(
+        let m = sim.run(
             &mut sched,
             wl,
-            vec![ScriptedEvent::Leave(leave)],
+            &RunPlan::new().leave(leave),
             &cfg,
         );
         assert_eq!(m.leaves.len(), 1);
@@ -2247,7 +2551,7 @@ mod tests {
             let mut sched = heye(&sim.decs);
             let wl = Workload::vr_open(&sim.decs, arrival, 1.0);
             let cfg = SimConfig::default().horizon(0.5).seed(23).noise(0.0);
-            sim.run(&mut sched, wl, vec![], vec![], &cfg)
+            sim.run(&mut sched, wl, &RunPlan::default(), &cfg)
         };
         let periodic = run(ArrivalModel::Periodic);
         let poisson = run(ArrivalModel::Poisson { rate_mult: 1.0 });
@@ -2278,8 +2582,8 @@ mod tests {
             let mut sched = heye(&sim.decs);
             let wl = Workload::vr(&sim.decs);
             let mut cfg = SimConfig::default().horizon(0.4).seed(31);
-            cfg.membership = memb;
-            sim.run_scripted(&mut sched, wl, vec![], &cfg)
+            cfg.exec.membership = memb;
+            sim.run(&mut sched, wl, &RunPlan::default(), &cfg)
         };
         let off = run(None);
         let on = run(Some(MembershipConfig::new(0.02, 0.05)));
@@ -2306,14 +2610,14 @@ mod tests {
             .horizon(0.6)
             .seed(32)
             .membership(MembershipConfig::new(0.02, 0.05));
-        let m = sim.run_scripted(
+        let m = sim.run(
             &mut sched,
             wl,
-            vec![ScriptedEvent::Flaky(FlakyEvent {
+            &RunPlan::new().event(ScriptedEvent::Flaky(FlakyEvent {
                 t: 0.2,
                 edge_index: 1,
                 until: Some(0.4),
-            })],
+            })),
             &cfg,
         );
         let dev = sim.decs.edge_devices[1];
@@ -2359,14 +2663,14 @@ mod tests {
                 .seed(33)
                 .noise(0.0)
                 .drain_deadline(drain);
-            sim.run_scripted(
+            sim.run(
                 &mut sched,
                 wl,
-                vec![ScriptedEvent::Leave(LeaveEvent {
+                &RunPlan::new().leave(LeaveEvent {
                     t: 0.03,
                     edge_index: 1,
                     failure: false,
-                })],
+                }),
                 &cfg,
             )
         };
@@ -2398,7 +2702,7 @@ mod tests {
         // 40 sensor windows on a lone Orin Nano cannot finish in 100 ms
         let wl = Workload::mining_burst(origin, 40);
         let cfg = SimConfig::default().horizon(2.0).seed(9).noise(0.0);
-        let m = sim.run(&mut sched, wl, vec![], vec![], &cfg);
+        let m = sim.run(&mut sched, wl, &RunPlan::default(), &cfg);
         assert!(
             m.qos_failure_rate() > 0.3,
             "rate {}",

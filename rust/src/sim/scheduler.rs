@@ -12,7 +12,12 @@ use crate::task::TaskSpec;
 use crate::traverser::Traverser;
 
 /// A task-to-PU mapper, invoked by the simulator when a task becomes ready.
-pub trait Scheduler {
+///
+/// `Send` is a supertrait so the sharded engine ([`crate::sim`] "Sharded
+/// execution") can drive one scheduler instance per domain on scoped worker
+/// threads; every in-tree scheduler is plain owned data, so the bound costs
+/// implementations nothing.
+pub trait Scheduler: Send {
     fn name(&self) -> String;
 
     /// Choose a PU for `task` generated on `origin`, whose input data

@@ -1,0 +1,1021 @@
+//! The shard-parallel simulation engine ("Sharded execution" in the crate
+//! docs): one event loop per orchestration domain, synchronized
+//! conservatively at cross-domain transfers.
+//!
+//! Each `Shard` owns a full event-loop state (`SimState`), its own
+//! [`Network`] clone, and *slices* of the structure oracles — a
+//! [`CachedSlowdown`] over its members and a [`RouteTable`] whose rows are
+//! its members and whose columns are its members plus one representative
+//! per foreign domain (what keeps slice memory and SSSP count affordable at
+//! the 10k-edge `metro` scale). Shards advance independently inside
+//! conservative windows bounded by the cheapest cross-domain route latency
+//! (the classical lookahead argument: no message sent inside a window can
+//! demand delivery inside it), and exchange typed `ShardMsg`s at the sync
+//! barriers between windows.
+//!
+//! Determinism is by construction, not by luck: within a window a shard
+//! touches only its own state, outboxes are drained in (domain id, emission
+//! order), and every delivery is re-enqueued through the target heap's own
+//! `(t, seq)` order — so `RunMetrics` are byte-identical for any worker
+//! count `>= 1`, including under churn, membership detection, and flaky
+//! presets (asserted by `tests/sharded.rs`). Structural events (joins,
+//! leaves, detections, drain escalations, capability changes) stay on a
+//! single global timeline applied at barriers, exactly as the monolithic
+//! engine applies them between event-loop segments.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::domain::{resolve_partition, ContinuumOrchestrator, DomainSummary};
+use crate::hwgraph::presets::Decs;
+use crate::hwgraph::{GroupRole, HwGraph, NodeId};
+use crate::membership::{self, Detection, Registry};
+use crate::netsim::{Network, RouteTable};
+use crate::perfmodel::ProfileModel;
+use crate::slowdown::CachedSlowdown;
+use crate::task::{Cfg, TaskSpec};
+use crate::util::par;
+
+use super::{
+    add_source, apply_capability, apply_escalate, apply_join, apply_leave, apply_reregister,
+    assign_batch, flaky_windows, resolve_completion, run_until, EvKind, Frame, LeaveEvent,
+    NodeState, RunMetrics, RunPlan, Scheduler, ScriptedEvent, SimConfig, SimState, Simulation,
+    Structural, Workload,
+};
+
+// ---------------------------------------------------------------------------
+// messages
+// ---------------------------------------------------------------------------
+
+/// Where a handed-off stub frame reports back to: the home shard and the
+/// `(frame, node)` waiting there, plus the cross-domain latency charged per
+/// leg of the round trip.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RemoteHome {
+    pub(crate) domain: usize,
+    pub(crate) frame: usize,
+    pub(crate) node: usize,
+    pub(crate) cross_s: f64,
+}
+
+/// A cross-domain task handoff: the home domain's sub-ORC could not place
+/// the task, and the continuum offered it to `to`. Drained at the next sync
+/// barrier and delivered onto the target shard's heap at
+/// `max(barrier, send_t + 2 * cross_s)` (ORC round trip out and back
+/// precedes the data ship, mirroring the monolithic continuum's charge).
+#[derive(Debug, Clone)]
+pub(crate) struct HandoffMsg {
+    pub(crate) from: usize,
+    pub(crate) to: usize,
+    pub(crate) send_t: f64,
+    /// one-way cross-domain latency advertised by the target's summary
+    pub(crate) cross_s: f64,
+    /// the task, with its remaining-budget deadline already rebased
+    pub(crate) spec: TaskSpec,
+    /// the home node's absolute deadline (stub frames inherit it)
+    pub(crate) dl_abs: f64,
+    /// stable noise stream for the stub: `mix64(home frame key, node)`
+    pub(crate) noise_key: u64,
+    pub(crate) home_frame: usize,
+    pub(crate) home_node: usize,
+}
+
+/// The result of a handed-off task returning home: the stub frame's cost
+/// breakdown, folded into the waiting home frame when this message is
+/// delivered (at `max(barrier, finish_t + cross_s)` — the return leg of
+/// the data ship).
+#[derive(Debug, Clone)]
+pub(crate) struct DoneMsg {
+    pub(crate) to: usize,
+    pub(crate) finish_t: f64,
+    pub(crate) cross_s: f64,
+    pub(crate) home_frame: usize,
+    pub(crate) home_node: usize,
+    pub(crate) compute_s: f64,
+    pub(crate) slowdown_s: f64,
+    pub(crate) comm_s: f64,
+    pub(crate) sched_s: f64,
+    pub(crate) edge_busy_s: f64,
+    pub(crate) server_busy_s: f64,
+}
+
+/// Everything that crosses a domain boundary. There is no third variant:
+/// continuum escalations *are* handoffs, and results are the only traffic
+/// that flows back.
+#[derive(Debug, Clone)]
+pub(crate) enum ShardMsg {
+    Handoff(HandoffMsg),
+    Done(DoneMsg),
+}
+
+// ---------------------------------------------------------------------------
+// per-shard context the event loop sees
+// ---------------------------------------------------------------------------
+
+/// The sharded-engine context threaded through [`super::run_until`]: the
+/// shard's identity, membership, the latest barrier-consistent summaries of
+/// every domain, and the outbox cross-domain messages accumulate in until
+/// the next sync barrier drains them.
+pub(crate) struct ShardCtx {
+    pub(crate) id: usize,
+    /// members in partition order (the first active one is the ingress
+    /// representative hosting handed-off input data)
+    pub(crate) members: Vec<NodeId>,
+    pub(crate) member_set: BTreeSet<NodeId>,
+    /// server-tier members, the shard's best-effort candidate pool
+    pub(crate) local_servers: Vec<NodeId>,
+    /// all domains' summaries as of the last barrier (index == domain id)
+    pub(crate) summaries: Vec<DomainSummary>,
+    pub(crate) con: ContinuumOrchestrator,
+    pub(crate) outbox: Vec<ShardMsg>,
+}
+
+impl ShardCtx {
+    /// The continuum's pick for a task the home sub-ORC cannot place: the
+    /// first foreign domain in ε-CON ranking order with live devices,
+    /// advertised headroom, and a finite cross-domain route. Returns the
+    /// target and the one-way latency its summary advertises — the same
+    /// `(domain, min_cross_route_s)` the monolithic `DomainScheduler`
+    /// escalation uses, read from barrier-consistent summaries instead of
+    /// live foreign state.
+    pub(crate) fn escalation_target(&self) -> Option<(usize, f64)> {
+        for d in self.con.choose(self.id, &self.summaries) {
+            if d == self.id {
+                continue;
+            }
+            let s = &self.summaries[d];
+            if s.devices > 0 && s.headroom_pus > 0 && s.min_cross_route_s.is_finite() {
+                return Some((d, s.min_cross_route_s));
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// message delivery (called from the event loop when a delivery pops)
+// ---------------------------------------------------------------------------
+
+/// A handoff arriving at its target shard: materialize the task as a
+/// single-node *stub frame* anchored at the first active member (the
+/// ingress representative the shipped input data lands on) and send it
+/// straight into the ordinary assignment path. The stub inherits the home
+/// node's absolute deadline and a noise key derived from the home frame,
+/// never re-escalates, and is excluded from dropped-frame accounting — its
+/// completion emits a [`DoneMsg`] instead of a `FrameRecord`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn on_handoff(
+    decs: &Decs,
+    net: &mut Network,
+    perf: &ProfileModel,
+    slow: &CachedSlowdown,
+    routes: Option<&RouteTable>,
+    sched: &mut dyn Scheduler,
+    st: &mut SimState,
+    cfg: &SimConfig,
+    msg: HandoffMsg,
+    now: f64,
+    mut ctx: Option<&mut ShardCtx>,
+) {
+    let rep = {
+        let c = ctx
+            .as_deref_mut()
+            .expect("remote handoffs exist only under the sharded engine");
+        debug_assert_eq!(c.id, msg.to, "handoff delivered to the wrong shard");
+        match c.members.iter().copied().find(|&m| decs.is_active(m)) {
+            Some(r) => r,
+            // the whole target domain churned away between the summary and
+            // the delivery: the handoff starves, and the home node never
+            // resolves — the same fate as work lost to a failed device
+            None => return,
+        }
+    };
+    let mut stub_cfg = Cfg::new();
+    stub_cfg.add(msg.spec.clone());
+    let fidx = st.frames.len();
+    st.frames.push(Frame {
+        origin: rep,
+        cfg: stub_cfg,
+        release_t: now,
+        // the home frame carries the QoS outcome; the stub only executes
+        budget_s: f64::INFINITY,
+        resolution: 1.0,
+        noise_key: msg.noise_key,
+        abandoned: false,
+        remote_home: Some(RemoteHome {
+            domain: msg.from,
+            frame: msg.home_frame,
+            node: msg.home_node,
+            cross_s: msg.cross_s,
+        }),
+        state: vec![NodeState::Pending { missing: 0 }],
+        data_dev: vec![rep],
+        data_src: vec![rep],
+        gen: vec![0],
+        xfer_comm: vec![0.0],
+        ready_t: vec![now],
+        pu_choice: vec![None],
+        pred: vec![0.0],
+        dl_abs: vec![msg.dl_abs],
+        dl_eff: vec![msg.dl_abs],
+        remaining: 1,
+        compute_s: 0.0,
+        slowdown_s: 0.0,
+        comm_s: 0.0,
+        sched_s: 0.0,
+        edge_busy_s: 0.0,
+        server_busy_s: 0.0,
+        degraded: false,
+        done: false,
+    });
+    assign_batch(
+        decs,
+        net,
+        perf,
+        slow,
+        routes,
+        sched,
+        st,
+        cfg,
+        &[(fidx, 0)],
+        now,
+        ctx,
+    );
+}
+
+/// A handed-off task's result landing back on its home shard: fold the
+/// stub's cost breakdown (plus the return-leg latency) into the waiting
+/// node and resolve the completion through exactly the code a local finish
+/// uses — successors see the input data back on the frame's origin.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn on_remote_done(
+    decs: &Decs,
+    net: &mut Network,
+    perf: &ProfileModel,
+    slow: &CachedSlowdown,
+    routes: Option<&RouteTable>,
+    sched: &mut dyn Scheduler,
+    st: &mut SimState,
+    cfg: &SimConfig,
+    msg: DoneMsg,
+    now: f64,
+    ctx: Option<&mut ShardCtx>,
+) {
+    let fidx = msg.home_frame;
+    let node = msg.home_node;
+    {
+        let f = &mut st.frames[fidx];
+        if !matches!(f.state[node], NodeState::Transferring) {
+            // the waiting node was lost in the meantime (e.g. its frame's
+            // data dependencies died with a failed device and the node was
+            // re-entered); a stale remote result is dropped exactly like a
+            // stale TransferDone
+            return;
+        }
+        f.state[node] = NodeState::Done;
+        f.remaining -= 1;
+        f.xfer_comm[node] = 0.0;
+        f.compute_s += msg.compute_s;
+        f.slowdown_s += msg.slowdown_s;
+        // the outbound data ship was charged at escalation time; the
+        // return leg lands here with the result
+        f.comm_s += msg.comm_s + msg.cross_s;
+        f.sched_s += msg.sched_s;
+        f.edge_busy_s += msg.edge_busy_s;
+        f.server_busy_s += msg.server_busy_s;
+    }
+    if st.frames[fidx].abandoned {
+        // censored while the task was away: the work is accounted, but
+        // nothing downstream runs and no record is emitted
+        return;
+    }
+    let origin = st.frames[fidx].origin;
+    resolve_completion(
+        decs, net, perf, slow, routes, sched, st, cfg, fidx, node, origin, now, ctx,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// the shard
+// ---------------------------------------------------------------------------
+
+/// One domain's worth of simulation: event-loop state, scheduler, network
+/// clone, oracle slices, and the continuum-facing context. Built in
+/// parallel (one worker per shard), driven in parallel inside conservative
+/// windows, merged deterministically at the end.
+struct Shard {
+    id: usize,
+    sched: Box<dyn Scheduler>,
+    st: SimState,
+    /// every shard owns a full [`Network`] clone: bandwidth changes are
+    /// broadcast to all heaps, and in-domain flows contend normally.
+    /// Cross-domain transfers are latency-only (no shared bandwidth
+    /// tracking across shards) — the documented domain-isolation semantics
+    /// of the sharded engine.
+    net: Network,
+    slow: CachedSlowdown,
+    routes: RouteTable,
+    active: BTreeSet<NodeId>,
+    servers: BTreeSet<NodeId>,
+    /// capability weights advertised by members (default 1.0), mirroring
+    /// [`crate::domain::Domain`]'s headroom scaling
+    weights: BTreeMap<NodeId, f64>,
+    /// one representative per domain (index == domain id), the foreign
+    /// destination columns of every shard's route slice
+    reps: Vec<NodeId>,
+    ctx: ShardCtx,
+}
+
+impl Shard {
+    fn build(
+        id: usize,
+        members: Vec<NodeId>,
+        decs: &Decs,
+        net: &Network,
+        factory: &(dyn Fn(&Decs) -> Box<dyn Scheduler> + Sync),
+        server_set: &BTreeSet<NodeId>,
+        reps: &[NodeId],
+        cfg: &SimConfig,
+    ) -> Shard {
+        let g = &decs.graph;
+        let member_set: BTreeSet<NodeId> = members.iter().copied().collect();
+        // narrow a fresh scheduler to the members by replaying a leave for
+        // every foreign device — `DomainScheduler`'s exact construction, so
+        // a sub-ORC (or baseline) sees the same world either way
+        let mut sub = factory(decs);
+        sub.set_parallelism(cfg.exec.parallelism);
+        for d in g.groups(GroupRole::Device) {
+            if !member_set.contains(&d) {
+                sub.on_device_leave(g, d);
+            }
+        }
+        let slow = CachedSlowdown::for_devices(g, &members);
+        let routes = route_slice(g, &members, &member_set, reps, id);
+        let servers: BTreeSet<NodeId> =
+            member_set.intersection(server_set).copied().collect();
+        let local_servers: Vec<NodeId> = members
+            .iter()
+            .copied()
+            .filter(|m| servers.contains(m))
+            .collect();
+        Shard {
+            id,
+            sched: sub,
+            st: SimState::new(),
+            net: net.clone(),
+            slow,
+            routes,
+            active: member_set.clone(),
+            servers,
+            weights: BTreeMap::new(),
+            reps: reps.to_vec(),
+            ctx: ShardCtx {
+                id,
+                members,
+                member_set,
+                local_servers,
+                summaries: Vec::new(),
+                con: ContinuumOrchestrator,
+                outbox: Vec::new(),
+            },
+        }
+    }
+
+    /// Rebuild this shard's route slice after a member joined (new source
+    /// row and destination column). Foreign shards only `note_epoch` — a
+    /// leaf join cannot shorten any of their routes.
+    fn rebuild_routes(&mut self, decs: &Decs) {
+        self.routes = route_slice(
+            &decs.graph,
+            &self.ctx.members,
+            &self.ctx.member_set,
+            &self.reps,
+            self.id,
+        );
+    }
+
+    /// This shard's [`DomainSummary`], mirroring [`crate::domain::Domain`]:
+    /// headroom is the capability-weighted PU count over active members,
+    /// and `min_cross_route_s` the cheapest one-way route from any active
+    /// member to any foreign destination column of the slice.
+    fn summary(&self, decs: &Decs) -> DomainSummary {
+        let mut headroom = 0usize;
+        let mut servers = 0usize;
+        for &m in &self.active {
+            let pus = self.slow.pus_of(m).len();
+            let w = self.weights.get(&m).copied().unwrap_or(1.0);
+            headroom += (pus as f64 * w).round() as usize;
+            if self.servers.contains(&m) {
+                servers += 1;
+            }
+        }
+        let mut min_cross = f64::INFINITY;
+        for &from in &self.active {
+            for &to in self.routes.destinations() {
+                if self.ctx.member_set.contains(&to) {
+                    continue;
+                }
+                if let Some(r) = self.routes.route(from, to) {
+                    min_cross = min_cross.min(r.latency_s);
+                }
+            }
+        }
+        DomainSummary {
+            id: self.id,
+            devices: self.active.len(),
+            edges: self.active.len() - servers,
+            servers,
+            headroom_pus: headroom,
+            min_cross_route_s: min_cross,
+            epoch: decs.graph.epoch(),
+        }
+    }
+}
+
+/// One shard's route slice: member source rows over member destination
+/// columns plus one representative per foreign domain. In-shard transfers
+/// (the only transfers the engine executes — cross-domain work moves as
+/// messages) always hit the slice; the representative columns exist so the
+/// summary can price cross-domain reach without paying the
+/// O(members x continuum) table a full-width slice would cost at the
+/// 10k-edge `metro` scale.
+fn route_slice(
+    g: &HwGraph,
+    members: &[NodeId],
+    member_set: &BTreeSet<NodeId>,
+    reps: &[NodeId],
+    id: usize,
+) -> RouteTable {
+    let mut dests: Vec<NodeId> = members.to_vec();
+    for (i, &r) in reps.iter().enumerate() {
+        if i != id && !member_set.contains(&r) {
+            dests.push(r);
+        }
+    }
+    RouteTable::for_pairs(g, members, &dests)
+}
+
+/// The conservative lookahead: no cross-domain message emitted inside a
+/// window can demand delivery inside it, because every message pays at
+/// least one `cross_s` — and every `cross_s` is some summary's
+/// `min_cross_route_s`, so the global minimum bounds them all. Degenerate
+/// minima (a zero-latency cross-domain route) are floored at 0.1% of the
+/// horizon so the loop advances; deliveries that would land inside a
+/// window are clamped to its barrier, which is identical for every worker
+/// count — coarser in time, never divergent. With no finite cross-domain
+/// route at all (one domain, or isolated domains), no message can ever
+/// flow and the window runs straight to the next structural event.
+fn lookahead_of(summaries: &[DomainSummary], horizon_s: f64) -> f64 {
+    let min_cross = summaries
+        .iter()
+        .map(|s| s.min_cross_route_s)
+        .fold(f64::INFINITY, f64::min);
+    let floor = horizon_s * 1e-3;
+    if !min_cross.is_finite() {
+        horizon_s
+    } else if min_cross > floor {
+        min_cross
+    } else {
+        floor
+    }
+}
+
+/// When a drained handoff lands on its target heap: the modeled arrival
+/// (send + ORC round trip) clamped to the barrier it is drained at. The
+/// conservative lookahead makes the clamp a no-op except for degenerate
+/// (near-zero-latency) routes, where a message can model an arrival inside
+/// the window that just closed — it is then delivered *exactly on* the
+/// barrier, the same instant for every worker count.
+fn handoff_delivery_t(send_t: f64, cross_s: f64, barrier: f64) -> f64 {
+    (send_t + 2.0 * cross_s).max(barrier)
+}
+
+/// When a drained result lands back on its home heap: stub finish plus the
+/// one-way return leg, clamped to the barrier (same argument as
+/// [`handoff_delivery_t`]).
+fn done_delivery_t(finish_t: f64, cross_s: f64, barrier: f64) -> f64 {
+    (finish_t + cross_s).max(barrier)
+}
+
+// ---------------------------------------------------------------------------
+// the driver
+// ---------------------------------------------------------------------------
+
+/// What a sharded run returns beyond the merged metrics: the label of the
+/// (per-shard) scheduler, the final per-domain summaries, and the
+/// device-to-domain map — what the facade needs to build reports and
+/// telemetry snapshots without reaching into the engine.
+pub struct ShardedOutcome {
+    pub metrics: RunMetrics,
+    pub scheduler_label: String,
+    pub summaries: Vec<DomainSummary>,
+    pub domain_of: BTreeMap<NodeId, usize>,
+}
+
+impl Simulation {
+    /// Run `workload` under the sharded engine: one event loop per
+    /// orchestration domain (`cfg.exec.domains`), driven by
+    /// `cfg.exec.workers` OS threads, conservatively synchronized at
+    /// cross-domain transfers. `factory` builds one scheduler instance per
+    /// shard (each narrowed to its domain's members), because shards run
+    /// concurrently and cannot share one `&mut` scheduler.
+    ///
+    /// `RunMetrics` are byte-identical for any worker count `>= 1` at a
+    /// fixed domain count — the engine's core contract, asserted across
+    /// churn/membership/flaky presets by `tests/sharded.rs`.
+    pub fn run_sharded(
+        &mut self,
+        factory: &(dyn Fn(&Decs) -> Box<dyn Scheduler> + Sync),
+        workload: Workload,
+        plan: &RunPlan,
+        cfg: &SimConfig,
+    ) -> ShardedOutcome {
+        assert!(
+            cfg.exec.workers >= 1 && cfg.exec.domains >= 1,
+            "the sharded engine needs workers >= 1 and domains >= 1 \
+             (ExecOpts::validate enforces this at every facade)"
+        );
+        let parts = resolve_partition(&self.decs, cfg.exec.domains);
+        let reps: Vec<NodeId> = parts.iter().map(|p| p[0]).collect();
+        let server_set: BTreeSet<NodeId> = self.decs.servers.iter().copied().collect();
+
+        // shard construction is the expensive part at scale (one SSSP per
+        // member row of each route slice): build shards in parallel, one
+        // result slot each, so construction scales with the same knob as
+        // execution
+        let mut slots: Vec<Option<Shard>> = (0..parts.len()).map(|_| None).collect();
+        {
+            let decs = &self.decs;
+            let net = &self.net;
+            let parts = &parts;
+            let reps = &reps;
+            let server_set = &server_set;
+            par::for_each_mut(cfg.exec.workers, &mut slots, |i, slot| {
+                *slot = Some(Shard::build(
+                    i,
+                    parts[i].clone(),
+                    decs,
+                    net,
+                    factory,
+                    server_set,
+                    reps,
+                    cfg,
+                ));
+            });
+        }
+        let mut shards: Vec<Shard> =
+            slots.into_iter().map(|s| s.expect("shard built")).collect();
+        let scheduler_label = shards[0].sched.name();
+        let mut domain_of: BTreeMap<NodeId, usize> = BTreeMap::new();
+        for (i, p) in parts.iter().enumerate() {
+            for &d in p {
+                domain_of.insert(d, i);
+            }
+        }
+
+        // --- serial setup, mirroring `Simulation::run` event for event ---
+        for src in workload.sources {
+            let sid = domain_of.get(&src.origin).copied().unwrap_or(0);
+            let sh = &mut shards[sid];
+            let idx = add_source(&mut sh.st, cfg, src);
+            let t = sh.st.sources[idx].start_t;
+            sh.st.push(t, EvKind::Release { source: idx, gen: 0 });
+        }
+        let mut structural: Vec<(f64, Structural)> = Vec::new();
+        let mut flaky = Vec::new();
+        for e in plan.events.clone() {
+            match e {
+                // bandwidth is a global fact: every shard's network clone
+                // sees the change (and notifies its scheduler)
+                ScriptedEvent::Net(ev) => {
+                    for sh in shards.iter_mut() {
+                        sh.st.push(
+                            ev.t,
+                            EvKind::NetSet {
+                                link: ev.link,
+                                gbps: ev.gbps,
+                            },
+                        );
+                    }
+                }
+                ScriptedEvent::Join(j) => structural.push((j.t, Structural::Join(j))),
+                ScriptedEvent::Leave(l) => structural.push((l.t, Structural::Leave(l))),
+                ScriptedEvent::Flaky(f) => flaky.push(f),
+                ScriptedEvent::Degrade(d) => structural.push((
+                    d.t,
+                    Structural::Capability {
+                        edge_index: d.edge_index,
+                        weight: d.weight,
+                    },
+                )),
+            }
+        }
+        for sh in shards.iter_mut() {
+            sh.st.flaky = flaky.clone();
+            for &t in &cfg.reset_times {
+                sh.st.push(t, EvKind::SchedReset);
+            }
+        }
+        // membership detections are compiled *globally* onto the structural
+        // timeline (they are a pure function of the config and the flaky
+        // windows), which is what keeps them on the structural timeline —
+        // worker-count invariant by construction. Each shard's registry
+        // tracks only its own members, under global edge indices.
+        if let Some(mcfg) = cfg.exec.membership.as_ref() {
+            let mut reg_t: Vec<f64> = vec![0.0; self.decs.edge_devices.len()];
+            let mut join_ts: Vec<f64> = structural
+                .iter()
+                .filter(|(_, s)| matches!(s, Structural::Join(_)))
+                .map(|&(t, _)| t)
+                .collect();
+            join_ts.sort_by(|a, b| a.total_cmp(b));
+            reg_t.extend(join_ts);
+            for d in membership::compile(mcfg, cfg.seed, &flaky, &reg_t, cfg.horizon_s) {
+                match d {
+                    Detection::Fail { t, edge_index } => structural.push((
+                        t,
+                        Structural::Leave(LeaveEvent {
+                            t,
+                            edge_index,
+                            failure: true,
+                        }),
+                    )),
+                    Detection::ReRegister { t, edge_index } => {
+                        structural.push((t, Structural::ReRegister { edge_index }))
+                    }
+                }
+            }
+            for sh in shards.iter_mut() {
+                sh.st.membership = Some(Registry::new(*mcfg, cfg.seed));
+            }
+            for (i, &dev) in self.decs.edge_devices.iter().enumerate() {
+                let sid = domain_of.get(&dev).copied().unwrap_or(0);
+                let sh = &mut shards[sid];
+                let wins = flaky_windows(&sh.st.flaky, i);
+                let reg = sh.st.membership.as_mut().expect("registry installed above");
+                let first = reg.register(dev, i, 0.0, wins);
+                sh.st.push(first, EvKind::Heartbeat { dev });
+            }
+        }
+        if cfg.exec.drain_s.is_finite() {
+            let probes: Vec<(f64, usize)> = structural
+                .iter()
+                .filter_map(|(t, s)| match s {
+                    Structural::Leave(l) if !l.failure => {
+                        Some((t + cfg.exec.drain_s, l.edge_index))
+                    }
+                    _ => None,
+                })
+                .collect();
+            for (t, edge_index) in probes {
+                structural.push((t, Structural::Escalate { edge_index }));
+            }
+        }
+        structural.sort_by(|a, b| a.0.total_cmp(&b.0));
+        structural.retain(|&(t, _)| t < cfg.horizon_s);
+        let mut timeline: VecDeque<(f64, Structural)> = structural.into();
+
+        let mut summaries: Vec<DomainSummary> =
+            shards.iter().map(|sh| sh.summary(&self.decs)).collect();
+        for sh in shards.iter_mut() {
+            sh.ctx.summaries = summaries.clone();
+        }
+        let mut lookahead = lookahead_of(&summaries, cfg.horizon_s);
+
+        // --- the conservative window loop ---
+        let mut now = 0.0f64;
+        loop {
+            let next_struct = timeline.front().map(|&(t, _)| t).unwrap_or(f64::INFINITY);
+            let bound = (now + lookahead).min(next_struct).min(cfg.horizon_s);
+            {
+                let decs = &self.decs;
+                let perf = &self.perf;
+                par::for_each_mut(cfg.exec.workers, &mut shards, |_, sh| {
+                    let routes = if cfg.exec.route_cache {
+                        Some(&sh.routes)
+                    } else {
+                        None
+                    };
+                    run_until(
+                        decs,
+                        &mut sh.net,
+                        perf,
+                        &sh.slow,
+                        routes,
+                        sh.sched.as_mut(),
+                        &mut sh.st,
+                        cfg,
+                        bound,
+                        Some(&mut sh.ctx),
+                    );
+                });
+            }
+            now = bound;
+            // barrier: drain outboxes in (domain id, emission order) — the
+            // deterministic merge order — and enqueue deliveries. The
+            // conservative lookahead guarantees modeled arrivals land at or
+            // after the barrier; degenerate (clamped) ones land exactly on
+            // it, identically for every worker count.
+            let mut msgs: Vec<ShardMsg> = Vec::new();
+            for sh in shards.iter_mut() {
+                msgs.extend(sh.ctx.outbox.drain(..));
+            }
+            for m in msgs {
+                match m {
+                    ShardMsg::Handoff(h) => {
+                        let t = handoff_delivery_t(h.send_t, h.cross_s, now);
+                        let to = h.to;
+                        shards[to].st.push(t, EvKind::RemoteHandoff(h));
+                    }
+                    ShardMsg::Done(d) => {
+                        let t = done_delivery_t(d.finish_t, d.cross_s, now);
+                        let to = d.to;
+                        shards[to].st.push(t, EvKind::RemoteDone(d));
+                    }
+                }
+            }
+            // structural events due at this barrier, applied to the owning
+            // shard through the exact monolithic appliers
+            let mut touched = false;
+            while timeline.front().map(|f| f.0 <= now).unwrap_or(false) {
+                let (t, ev) = timeline.pop_front().expect("peeked above");
+                touched = true;
+                match ev {
+                    Structural::Join(j) => {
+                        // the newcomer lands in the smallest active domain
+                        // (deterministic: ties break by id)
+                        let target = (0..shards.len())
+                            .min_by_key(|&i| (shards[i].active.len(), i))
+                            .expect("at least one shard");
+                        let dev = {
+                            let sh = &mut shards[target];
+                            let dev = apply_join(
+                                &mut self.decs,
+                                sh.sched.as_mut(),
+                                &mut sh.st,
+                                cfg,
+                                &j,
+                                t,
+                            );
+                            sh.ctx.members.push(dev);
+                            sh.ctx.member_set.insert(dev);
+                            sh.active.insert(dev);
+                            sh.slow.on_device_join(&self.decs.graph, dev);
+                            dev
+                        };
+                        domain_of.insert(dev, target);
+                        shards[target].rebuild_routes(&self.decs);
+                    }
+                    Structural::Leave(l) => {
+                        let sid = self
+                            .decs
+                            .edge_devices
+                            .get(l.edge_index)
+                            .and_then(|d| domain_of.get(d).copied());
+                        if let Some(sid) = sid {
+                            let sh = &mut shards[sid];
+                            let left =
+                                apply_leave(&mut self.decs, sh.sched.as_mut(), &mut sh.st, l, t);
+                            if let Some(dev) = left {
+                                sh.active.remove(&dev);
+                                if l.failure {
+                                    sh.slow.on_device_leave(&self.decs.graph, dev);
+                                }
+                                if let Some(reg) = sh.st.membership.as_mut() {
+                                    if l.failure {
+                                        reg.mark_failed(dev);
+                                    } else {
+                                        reg.mark_left(dev);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Structural::Escalate { edge_index } => {
+                        let sid = self
+                            .decs
+                            .edge_devices
+                            .get(edge_index)
+                            .and_then(|d| domain_of.get(d).copied());
+                        if let Some(sid) = sid {
+                            let sh = &mut shards[sid];
+                            apply_escalate(
+                                &self.decs,
+                                sh.sched.as_mut(),
+                                &mut sh.st,
+                                &mut sh.slow,
+                                edge_index,
+                                t,
+                            );
+                        }
+                    }
+                    Structural::ReRegister { edge_index } => {
+                        let sid = self
+                            .decs
+                            .edge_devices
+                            .get(edge_index)
+                            .and_then(|d| domain_of.get(d).copied());
+                        if let Some(sid) = sid {
+                            let sh = &mut shards[sid];
+                            let back = apply_reregister(
+                                &mut self.decs,
+                                sh.sched.as_mut(),
+                                &mut sh.st,
+                                edge_index,
+                                t,
+                            );
+                            if let Some(dev) = back {
+                                sh.active.insert(dev);
+                                sh.slow.on_device_join(&self.decs.graph, dev);
+                            }
+                        }
+                    }
+                    Structural::Capability { edge_index, weight } => {
+                        let sid = self
+                            .decs
+                            .edge_devices
+                            .get(edge_index)
+                            .and_then(|d| domain_of.get(d).copied());
+                        if let Some(sid) = sid {
+                            let sh = &mut shards[sid];
+                            apply_capability(
+                                &self.decs,
+                                sh.sched.as_mut(),
+                                &mut sh.st,
+                                &mut sh.slow,
+                                edge_index,
+                                weight,
+                                t,
+                            );
+                            if let Some(&dev) = self.decs.edge_devices.get(edge_index) {
+                                sh.weights.insert(dev, weight);
+                            }
+                        }
+                    }
+                }
+            }
+            if touched {
+                // adopt any epoch movement (a join rebuilt its owner's
+                // slice above; reactivations and joins bump the epoch
+                // without changing foreign routes), refresh every summary,
+                // redistribute, and re-derive the lookahead
+                for sh in shards.iter_mut() {
+                    sh.routes.note_epoch(&self.decs.graph);
+                }
+                summaries = shards.iter().map(|sh| sh.summary(&self.decs)).collect();
+                for sh in shards.iter_mut() {
+                    sh.ctx.summaries = summaries.clone();
+                }
+                lookahead = lookahead_of(&summaries, cfg.horizon_s);
+            }
+            if now >= cfg.horizon_s {
+                break;
+            }
+        }
+
+        // --- per-shard run closure + deterministic merge ---
+        for sh in shards.iter_mut() {
+            for f in &sh.st.frames {
+                // stubs are excluded: the home frame carries the outcome
+                if f.remote_home.is_none()
+                    && !f.done
+                    && !f.abandoned
+                    && cfg.horizon_s - f.release_t > f.budget_s
+                {
+                    sh.st.metrics.dropped += 1;
+                }
+            }
+            if let Some(reg) = sh.st.membership.as_ref() {
+                sh.st.metrics.membership = Some(reg.report());
+            }
+        }
+        let metrics = merge_metrics(shards.into_iter().map(|sh| sh.st.metrics).collect());
+        ShardedOutcome {
+            metrics,
+            scheduler_label,
+            summaries,
+            domain_of,
+        }
+    }
+}
+
+/// Merge per-shard metrics into one `RunMetrics` whose orders do not
+/// depend on the partition: frames sort by (finish, release, origin),
+/// leaves by (time, device), maps merge additively. A monolithic run's
+/// frame order (heap pop order) and a sharded run's (concatenation) would
+/// otherwise differ even when their *contents* match.
+fn merge_metrics(parts: Vec<RunMetrics>) -> RunMetrics {
+    let mut m = RunMetrics::default();
+    for p in parts {
+        m.frames.extend(p.frames);
+        for (k, v) in p.released {
+            *m.released.entry(k).or_insert(0) += v;
+        }
+        m.sched_comm_s += p.sched_comm_s;
+        m.sched_compute_s += p.sched_compute_s;
+        m.sched_hops += p.sched_hops;
+        m.traverser_calls += p.traverser_calls;
+        for (k, v) in p.busy_by_device {
+            *m.busy_by_device.entry(k).or_insert(0.0) += v;
+        }
+        m.tasks_on_edge += p.tasks_on_edge;
+        m.tasks_on_server += p.tasks_on_server;
+        m.dropped += p.dropped;
+        for (k, v) in p.placements {
+            *m.placements.entry(k).or_insert(0) += v;
+        }
+        m.leaves.extend(p.leaves);
+        if let Some(r) = p.membership {
+            let t = m.membership.get_or_insert_with(Default::default);
+            t.devices += r.devices;
+            t.beats += r.beats;
+            t.misses += r.misses;
+            t.failures_detected += r.failures_detected;
+            t.reregistrations += r.reregistrations;
+            t.escalations += r.escalations;
+            t.degrades += r.degrades;
+            t.down_at_end += r.down_at_end;
+        }
+    }
+    m.frames.sort_by(|a, b| {
+        a.finish_t
+            .total_cmp(&b.finish_t)
+            .then(a.release_t.total_cmp(&b.release_t))
+            .then(a.origin.cmp(&b.origin))
+    });
+    m.leaves
+        .sort_by(|a, b| a.t.total_cmp(&b.t).then(a.device.cmp(&b.device)));
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary_with(min_cross: f64) -> DomainSummary {
+        DomainSummary {
+            id: 0,
+            devices: 3,
+            edges: 2,
+            servers: 1,
+            headroom_pus: 8,
+            min_cross_route_s: min_cross,
+            epoch: 0,
+        }
+    }
+
+    #[test]
+    fn lookahead_is_the_cheapest_cross_domain_route() {
+        // floor at horizon 0.1 is 1e-4, below every minimum here, so the
+        // cheapest route wins
+        let s = [summary_with(2.0e-3), summary_with(5.0e-4), summary_with(9.0e-3)];
+        assert_eq!(lookahead_of(&s, 0.1), 5.0e-4);
+        // a horizon long enough to push the floor past the cheapest route
+        // flips the same summaries onto the floored branch
+        assert_eq!(lookahead_of(&s, 1.0), 1.0e-3);
+    }
+
+    /// A zero-latency cross-domain route degenerates the classical
+    /// lookahead to nothing; the engine floors it at 0.1% of the horizon so
+    /// the window loop still advances (deliveries clamp to barriers, which
+    /// stays worker-count invariant).
+    #[test]
+    fn zero_latency_route_floors_the_lookahead() {
+        let s = [summary_with(0.0), summary_with(3.0e-4)];
+        let la = lookahead_of(&s, 2.0);
+        assert_eq!(la, 2.0 * 1e-3);
+        assert!(la > 0.0, "the loop must always advance");
+        // sub-floor but nonzero minima floor identically
+        let s = [summary_with(1.0e-12)];
+        assert_eq!(lookahead_of(&s, 2.0), 2.0 * 1e-3);
+    }
+
+    /// No finite cross-domain route (one domain, or isolated domains) means
+    /// no message can ever flow: windows run straight to the horizon / next
+    /// structural event.
+    #[test]
+    fn isolated_domains_get_horizon_lookahead() {
+        let s = [summary_with(f64::INFINITY), summary_with(f64::INFINITY)];
+        assert_eq!(lookahead_of(&s, 1.5), 1.5);
+        assert!(lookahead_of(&[], 1.5) == 1.5, "no summaries, no messages");
+    }
+
+    /// A transfer whose modeled arrival lands exactly on the sync horizon
+    /// is delivered at that instant — not retimed, not pushed into the next
+    /// window — and one landing inside the closed window clamps forward to
+    /// the barrier. Both are pure functions of (message, barrier), so every
+    /// worker count computes the same delivery time.
+    #[test]
+    fn deliveries_on_the_sync_horizon_are_not_retimed() {
+        // handoff: send 0.4 + 2 * 0.05 round trip = 0.5, exactly the barrier
+        assert_eq!(handoff_delivery_t(0.4, 0.05, 0.5), 0.5);
+        // result: finish 0.45 + 0.05 return leg = 0.5, exactly the barrier
+        assert_eq!(done_delivery_t(0.45, 0.05, 0.5), 0.5);
+        // an arrival modeled past the barrier keeps its modeled time
+        assert_eq!(handoff_delivery_t(0.49, 0.05, 0.5), 0.49 + 0.1);
+        assert_eq!(done_delivery_t(0.49, 0.05, 0.5), 0.49 + 0.05);
+        // a degenerate (zero-latency) arrival inside the window clamps to
+        // the barrier instead of landing in simulated past
+        assert_eq!(handoff_delivery_t(0.42, 0.0, 0.5), 0.5);
+        assert_eq!(done_delivery_t(0.42, 0.0, 0.5), 0.5);
+    }
+}

@@ -93,6 +93,44 @@ where
         .collect()
 }
 
+/// Deterministic parallel for-each over a mutable slice: applies `f` to
+/// every item in place, dealing items to workers in strides. Unlike
+/// [`map`], there is **no** minimum-items gate: this drives coarse-grained
+/// work (one simulation shard per item), where even two items are worth a
+/// thread each. With `threads <= 1` (or a single item) it runs inline, in
+/// item order, on the caller's thread.
+pub fn for_each_mut<T, F>(threads: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let workers = resolve(threads).min(n).max(1);
+    if workers <= 1 {
+        for (i, t) in items.iter_mut().enumerate() {
+            f(i, t);
+        }
+        return;
+    }
+    let f = &f;
+    // strided deal matching `map_with`: worker w owns items w, w+W, ...
+    // Split the slice into per-worker bundles of &mut references so each
+    // worker has exclusive access to its stride.
+    let mut bundles: Vec<Vec<(usize, &mut T)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, t) in items.iter_mut().enumerate() {
+        bundles[i % workers].push((i, t));
+    }
+    std::thread::scope(|scope| {
+        for bundle in bundles {
+            scope.spawn(move || {
+                for (i, t) in bundle {
+                    f(i, t);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +189,18 @@ mod tests {
         let items = ["a", "b", "c"];
         let got = map(3, &items, |i, &s| format!("{i}{s}"));
         assert_eq!(got, vec!["0a", "1b", "2c"]);
+    }
+
+    #[test]
+    fn for_each_mut_visits_every_item_once() {
+        // no min-items gate: even 2 items fan out at threads=2, and the
+        // result is identical to the serial path
+        for threads in [1, 2, 8] {
+            let mut items: Vec<u64> = (0..5).collect();
+            for_each_mut(threads, &mut items, |i, x| *x = *x * 10 + i as u64);
+            assert_eq!(items, vec![0, 11, 22, 33, 44]);
+        }
+        let mut empty: Vec<u64> = Vec::new();
+        for_each_mut(4, &mut empty, |_, _| unreachable!());
     }
 }

@@ -147,8 +147,8 @@ fn fleet_one_domain_is_byte_identical_to_global() {
 fn churn_metrics(domains: usize, parallelism: usize) -> RunMetrics {
     let mut sc = Scenario::preset("churn").expect("churn preset");
     sc.cfg.sim.horizon_s = 1.5;
-    sc.cfg.sim.domains = domains;
-    sc.cfg.sim.parallelism = parallelism;
+    sc.cfg.sim.exec.domains = domains;
+    sc.cfg.sim.exec.parallelism = parallelism;
     sc.run().expect("churn run").run.metrics
 }
 

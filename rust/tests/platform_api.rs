@@ -210,7 +210,7 @@ fn parallelism_knob_flows_from_builder_and_session() {
         .noise(0.0)
         .run()
         .expect("builder-parallelism run");
-    assert_eq!(report.config.parallelism, 2);
+    assert_eq!(report.config.exec.parallelism, 2);
     let report = platform
         .session(WorkloadSpec::MiningBurst { origin: 0, n: 2 })
         .horizon(0.4)
@@ -218,7 +218,7 @@ fn parallelism_knob_flows_from_builder_and_session() {
         .parallelism(4)
         .run()
         .expect("session-parallelism run");
-    assert_eq!(report.config.parallelism, 4);
+    assert_eq!(report.config.exec.parallelism, 4);
     assert!(report.frames() > 0);
 }
 

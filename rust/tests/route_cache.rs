@@ -99,8 +99,8 @@ fn churn_scenario(sched: &str, route_cache: bool, parallelism: usize) -> RunMetr
     let mut sc = Scenario::preset("churn").expect("churn preset");
     sc.cfg.sched = sched.to_string();
     sc.cfg.sim.horizon_s = 1.5;
-    sc.cfg.sim.route_cache = route_cache;
-    sc.cfg.sim.parallelism = parallelism;
+    sc.cfg.sim.exec.route_cache = route_cache;
+    sc.cfg.sim.exec.parallelism = parallelism;
     let report = sc.run().expect("churn run");
     report.run.metrics
 }

@@ -1,0 +1,352 @@
+//! Contract tests for the sharded engine (`heye::sim::shard`): one event
+//! loop per orchestration domain, conservatively synchronized at
+//! cross-domain transfers.
+//!
+//! The core contract is **worker-count invariance**: at a fixed domain
+//! count, `RunMetrics` are byte-identical for every worker count `>= 1` —
+//! on the paper VR testbed, at fleet scale, through the churn preset
+//! (failure + join + graceful leave) and through the flaky preset
+//! (heartbeat detection + re-registration + capability degrade). The
+//! conservative-sync edge cases ride along: a continuum whose cross-domain
+//! routes have zero latency (the lookahead degenerates to its floor) must
+//! still terminate and agree, and an overloaded domain must hand work
+//! across the boundary through the typed message protocol.
+
+use heye::domain::DOMAINS_AUTO;
+use heye::hwgraph::presets::{Decs, DecsSpec, ORIN_NANO, SERVER1};
+use heye::hwgraph::LinkKind;
+use heye::platform::{Platform, SchedulerRegistry, WorkloadSpec};
+use heye::scenario::Scenario;
+use heye::sim::{RunMetrics, RunPlan, Scheduler, SimConfig, Simulation, Workload};
+use std::collections::BTreeMap;
+
+/// Bit-level equality of everything deterministic in a run's metrics
+/// (`sched_compute_s` / per-frame `sched_s` fold in measured wall-clock by
+/// design, so they are the only fields allowed to differ).
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.frames.len(), b.frames.len(), "{what}: frame count");
+    for (i, (x, y)) in a.frames.iter().zip(b.frames.iter()).enumerate() {
+        assert_eq!(x.origin, y.origin, "{what}: frame {i} origin");
+        assert_eq!(
+            x.release_t.to_bits(),
+            y.release_t.to_bits(),
+            "{what}: frame {i} release"
+        );
+        assert_eq!(
+            x.finish_t.to_bits(),
+            y.finish_t.to_bits(),
+            "{what}: frame {i} finish"
+        );
+        assert_eq!(
+            x.latency_s.to_bits(),
+            y.latency_s.to_bits(),
+            "{what}: frame {i} latency"
+        );
+        assert_eq!(
+            x.comm_s.to_bits(),
+            y.comm_s.to_bits(),
+            "{what}: frame {i} comm"
+        );
+        assert_eq!(
+            x.compute_s.to_bits(),
+            y.compute_s.to_bits(),
+            "{what}: frame {i} compute"
+        );
+        assert_eq!(x.degraded, y.degraded, "{what}: frame {i} degraded");
+        assert_eq!(
+            x.resolution.to_bits(),
+            y.resolution.to_bits(),
+            "{what}: frame {i} resolution"
+        );
+        assert_eq!(
+            x.predicted_s.to_bits(),
+            y.predicted_s.to_bits(),
+            "{what}: frame {i} prediction"
+        );
+    }
+    assert_eq!(a.placements, b.placements, "{what}: placement counts");
+    assert_eq!(a.tasks_on_edge, b.tasks_on_edge, "{what}: edge tasks");
+    assert_eq!(a.tasks_on_server, b.tasks_on_server, "{what}: server tasks");
+    assert_eq!(a.dropped, b.dropped, "{what}: dropped");
+    assert_eq!(a.released, b.released, "{what}: released");
+    assert_eq!(a.sched_hops, b.sched_hops, "{what}: hops");
+    assert_eq!(
+        a.sched_comm_s.to_bits(),
+        b.sched_comm_s.to_bits(),
+        "{what}: sched comm"
+    );
+    assert_eq!(a.traverser_calls, b.traverser_calls, "{what}: traverser calls");
+    assert_eq!(a.busy_by_device, b.busy_by_device, "{what}: busy accounting");
+    assert_eq!(a.leaves.len(), b.leaves.len(), "{what}: leave records");
+    for (i, (x, y)) in a.leaves.iter().zip(b.leaves.iter()).enumerate() {
+        assert_eq!(x.t.to_bits(), y.t.to_bits(), "{what}: leave {i} time");
+        assert_eq!(x.device, y.device, "{what}: leave {i} device");
+        assert_eq!(x.failure, y.failure, "{what}: leave {i} kind");
+        assert_eq!(
+            x.frames_abandoned, y.frames_abandoned,
+            "{what}: leave {i} abandoned"
+        );
+        assert_eq!(
+            x.tasks_remapped, y.tasks_remapped,
+            "{what}: leave {i} remapped"
+        );
+        assert_eq!(x.tasks_dropped, y.tasks_dropped, "{what}: leave {i} dropped");
+    }
+    assert_eq!(a.membership, b.membership, "{what}: membership report");
+}
+
+fn run_sharded_once(
+    platform: &Platform,
+    wl: WorkloadSpec,
+    sched: &str,
+    domains: usize,
+    workers: usize,
+    horizon: f64,
+) -> RunMetrics {
+    platform
+        .session(wl)
+        .scheduler(sched)
+        .config(
+            SimConfig::default()
+                .horizon(horizon)
+                .seed(11)
+                .domains(domains)
+                .workers(workers),
+        )
+        .run()
+        .expect("sharded run")
+        .metrics
+}
+
+fn domain_label(domains: usize) -> String {
+    if domains == DOMAINS_AUTO {
+        "auto".to_string()
+    } else {
+        domains.to_string()
+    }
+}
+
+/// The tentpole contract on the paper VR testbed: for every domain count
+/// the facade accepts — one, a fixed split, the hierarchy-derived auto
+/// partition — a parallel sharded run is byte-identical to the serial
+/// sharded baseline.
+#[test]
+fn vr_sharded_is_worker_count_invariant() {
+    let platform = Platform::builder().paper_vr().build().unwrap();
+    for domains in [1usize, 3, DOMAINS_AUTO] {
+        let serial = run_sharded_once(&platform, WorkloadSpec::Vr, "heye", domains, 1, 0.5);
+        let parallel = run_sharded_once(&platform, WorkloadSpec::Vr, "heye", domains, 4, 0.5);
+        assert!(!serial.frames.is_empty(), "vr sharded run produced no frames");
+        assert_metrics_identical(
+            &serial,
+            &parallel,
+            &format!("vr/domains={}", domain_label(domains)),
+        );
+    }
+}
+
+/// Same at fleet scale (192 edges + 12 servers), where the auto partition
+/// yields one shard per virtual sub-cluster and the mining workload spans
+/// every domain.
+#[test]
+fn fleet_sharded_is_worker_count_invariant() {
+    let platform = Platform::builder().fleet().build().unwrap();
+    let wl = WorkloadSpec::Mining {
+        sensors: 48,
+        hz: 10.0,
+    };
+    for domains in [3usize, DOMAINS_AUTO] {
+        let serial = run_sharded_once(&platform, wl.clone(), "heye", domains, 1, 0.15);
+        let parallel = run_sharded_once(&platform, wl.clone(), "heye", domains, 4, 0.15);
+        assert!(serial.released.values().sum::<u64>() > 0, "fleet released nothing");
+        assert_metrics_identical(
+            &serial,
+            &parallel,
+            &format!("fleet/domains={}", domain_label(domains)),
+        );
+    }
+}
+
+fn scenario_metrics(preset: &str, domains: usize, workers: usize) -> RunMetrics {
+    let mut sc = Scenario::preset(preset).expect("preset");
+    sc.cfg.sim.horizon_s = 1.5;
+    sc.cfg.sim.exec.domains = domains;
+    sc.cfg.sim.exec.workers = workers;
+    sc.run().expect("scenario run").run.metrics
+}
+
+/// Worker invariance through the churn preset: a failure, a join (which
+/// lands in the smallest domain and rebuilds exactly one route slice), and
+/// a graceful leave all ride the global structural timeline, applied at
+/// barriers identically for every worker count.
+#[test]
+fn churn_sharded_is_worker_count_invariant() {
+    for domains in [1usize, 3] {
+        let serial = scenario_metrics("churn", domains, 1);
+        let parallel = scenario_metrics("churn", domains, 4);
+        assert!(!serial.leaves.is_empty(), "churn must record leaves");
+        assert_metrics_identical(&serial, &parallel, &format!("churn/domains={domains}"));
+    }
+}
+
+/// Worker invariance through the flaky preset: heartbeat-detected failures,
+/// re-registration, a capability degrade, and the drain deadline are all
+/// compiled onto the structural timeline up front, so membership reports
+/// merge to the same counters at any worker count.
+#[test]
+fn flaky_sharded_is_worker_count_invariant() {
+    for domains in [1usize, 3] {
+        let serial = scenario_metrics("flaky", domains, 1);
+        let parallel = scenario_metrics("flaky", domains, 4);
+        let report = serial
+            .membership
+            .as_ref()
+            .expect("flaky preset enables membership");
+        assert!(report.failures_detected > 0, "flaky must detect the outage");
+        assert_metrics_identical(&serial, &parallel, &format!("flaky/domains={domains}"));
+    }
+}
+
+fn heye_factory() -> impl Fn(&Decs) -> Box<dyn Scheduler> + Sync {
+    |d: &Decs| SchedulerRegistry::create("heye", d).unwrap()
+}
+
+/// Conservative-sync edge case #1: zero-latency cross-domain routes. With a
+/// direct zero-latency link from every edge to the router, the cheapest
+/// cross-domain route collapses to (numerically) nothing and the classical
+/// lookahead degenerates; the engine floors the window at 0.1% of the
+/// horizon and clamps in-window deliveries to barriers, so the loop
+/// terminates and stays worker-count invariant.
+#[test]
+fn zero_latency_cross_domain_routes_terminate_and_agree() {
+    let run = |workers: usize| {
+        let mut decs = Decs::build(&DecsSpec::mixed(6, 2));
+        let router = decs.router;
+        for e in decs.edge_devices.clone() {
+            decs.graph.add_edge(e, router, LinkKind::Lan, 10.0, 0.0);
+        }
+        let mut sim = Simulation::new(decs);
+        let wl = Workload::mining(&sim.decs, 12, 10.0);
+        let cfg = SimConfig::default()
+            .horizon(0.3)
+            .seed(7)
+            .domains(2)
+            .workers(workers);
+        sim.run_sharded(&heye_factory(), wl, &RunPlan::default(), &cfg)
+            .metrics
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert!(
+        !serial.frames.is_empty(),
+        "degenerate lookahead must not starve the run"
+    );
+    assert_metrics_identical(&serial, &parallel, "zero-latency/workers");
+}
+
+/// Conservative-sync edge case #2: the handoff protocol end to end. Four
+/// Orin Nanos and one server split into two domains (the fixed partition
+/// deals the only server to domain 0), and a 60-window burst lands on a
+/// domain-1 nano — far past what its domain can finish within the mining
+/// deadline, so the sub-ORC runs out of local candidates and the continuum
+/// hands the overflow to domain 0 as typed messages. Work observed on
+/// domain-0 devices can only have arrived that way.
+#[test]
+fn overload_hands_work_across_the_domain_boundary() {
+    let run = |workers: usize| {
+        let decs = Decs::build(&DecsSpec {
+            edges: vec![(ORIN_NANO.into(), 4)],
+            servers: vec![(SERVER1.into(), 1)],
+            edge_uplink_gbps: 10.0,
+            wan_gbps: 10.0,
+        });
+        let origin = *decs.edge_devices.last().unwrap();
+        let wl = Workload::mining_burst(origin, 60);
+        let mut sim = Simulation::new(decs);
+        let cfg = SimConfig::default()
+            .horizon(0.9)
+            .seed(11)
+            .noise(0.0)
+            .domains(2)
+            .workers(workers);
+        let out = sim.run_sharded(&heye_factory(), wl, &RunPlan::default(), &cfg);
+        (out.metrics, out.domain_of, origin)
+    };
+    let (serial, domain_of, origin) = run(1);
+    let (parallel, _, _) = run(4);
+    assert_metrics_identical(&serial, &parallel, "burst/workers");
+
+    let home = domain_of[&origin];
+    assert_eq!(home, 1, "the burst origin must sit in the server-less domain");
+    let foreign_busy: f64 = serial
+        .busy_by_device
+        .iter()
+        .filter(|(d, _)| domain_of[*d] != home)
+        .map(|(_, s)| *s)
+        .sum();
+    assert!(
+        foreign_busy > 0.0,
+        "the overloaded domain must hand work across the boundary"
+    );
+    assert!(
+        !serial.frames.is_empty(),
+        "handed-off windows must resolve back into completed frames"
+    );
+}
+
+/// The facade wiring: a sharded session reports through the same unified
+/// `RunReport` as a monolithic one — scheduler label, config echo (with
+/// the worker count), a telemetry proxy snapshot whose domain view matches
+/// the partition the engine actually used.
+#[test]
+fn sharded_sessions_report_through_the_unified_facade() {
+    let platform = Platform::builder().paper_vr().build().unwrap();
+    let report = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .config(
+            SimConfig::default()
+                .horizon(0.3)
+                .seed(11)
+                .domains(3)
+                .workers(2),
+        )
+        .run()
+        .expect("sharded session");
+    assert_eq!(report.scheduler, "heye");
+    assert!(!report.metrics.frames.is_empty());
+    let proxy = report.proxy.as_ref().expect("sharded runs snapshot a proxy");
+    assert_eq!(proxy.domains.len(), 3, "one proxy domain per shard");
+    let json = report.to_json().to_string();
+    assert!(json.contains("\"workers\""), "config echo must carry workers");
+
+    // ExecOpts validation still guards the facade: workers without domains
+    // is a config error, not a panic deep in the engine.
+    let err = platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .config(SimConfig::default().horizon(0.3).workers(2))
+        .run();
+    assert!(err.is_err(), "workers >= 1 must require domains >= 1");
+
+    // and the device -> domain map covers every device exactly once
+    let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+    let cfg = SimConfig::default().horizon(0.2).seed(11).domains(3).workers(1);
+    let wl = Workload::vr(&sim.decs);
+    let out = sim.run_sharded(&heye_factory(), wl, &RunPlan::default(), &cfg);
+    let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+    for (&dev, &dom) in &out.domain_of {
+        assert!(
+            sim.decs.edge_devices.contains(&dev) || sim.decs.servers.contains(&dev),
+            "domain map entry for a non-device"
+        );
+        *counts.entry(dom).or_insert(0) += 1;
+    }
+    let mapped: usize = counts.values().sum();
+    assert_eq!(
+        mapped,
+        sim.decs.edge_devices.len() + sim.decs.servers.len(),
+        "every device belongs to exactly one domain"
+    );
+    assert_eq!(out.summaries.len(), 3, "one summary per domain");
+}
