@@ -143,6 +143,17 @@ impl ExpConfig {
             // shard-driving threads for the sharded engine (0 = monolithic)
             c.sim.exec.workers = v as usize;
         }
+        if let Some(v) = j.get("trace").and_then(|v| v.as_bool()) {
+            // deterministic structured tracing (crate::trace)
+            c.sim.exec.trace.enabled = v;
+        }
+        if let Some(v) = j.get("trace_wall").and_then(|v| v.as_bool()) {
+            // the optional wall-clock scheduling channel; implies trace
+            c.sim.exec.trace.wall = v;
+            if v {
+                c.sim.exec.trace.enabled = true;
+            }
+        }
         if let Some(v) = j.get("sensors").and_then(|v| v.as_u64()) {
             c.sensors = v as usize;
         }
@@ -367,6 +378,19 @@ mod tests {
         // domains at parse time
         let e = ExpConfig::parse(r#"{ "workers": 2 }"#).unwrap_err();
         assert!(e.to_string().contains("domains"), "{e}");
+    }
+
+    #[test]
+    fn parses_trace_knobs() {
+        let c = ExpConfig::parse(r#"{ "trace": true }"#).unwrap();
+        assert!(c.sim.exec.trace.enabled);
+        assert!(!c.sim.exec.trace.wall);
+        // the wall channel implies tracing
+        let c = ExpConfig::parse(r#"{ "trace_wall": true }"#).unwrap();
+        assert!(c.sim.exec.trace.enabled && c.sim.exec.trace.wall);
+        // off by default
+        let c = ExpConfig::parse("{}").unwrap();
+        assert!(!c.sim.exec.trace.enabled && !c.sim.exec.trace.wall);
     }
 
     #[test]

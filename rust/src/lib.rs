@@ -284,6 +284,58 @@
 //! [`telemetry::ProxySnapshot::escalation_order`] works identically
 //! against either engine.
 //!
+//! ## Observability: [`trace`] — deterministic event traces + metrics
+//!
+//! The paper's headline operational claim — large latency wins at **less
+//! than 2% scheduling overhead** — deserves more than one aggregate
+//! number. `Session::trace(true)` (or `"trace": true` in config/scenario
+//! JSON, `--trace PATH` on the CLI) turns on the structured tracing seam:
+//! the engine records typed [`trace::TraceEvent`]s — frame releases,
+//! scheduler decisions carrying the `Overhead` accounting, transfers,
+//! execution spans, queueing, completions, cross-domain handoffs, sync
+//! barriers, and the whole membership lifecycle — into per-shard
+//! append-only buffers stamped with simulated time, assembled into a
+//! [`trace::Trace`] on [`platform::RunReport::trace`].
+//!
+//! **Determinism invariants.** (1) `RunMetrics` are byte-identical with
+//! tracing on or off — the tracer only observes. (2) A sharded run's
+//! trace is byte-identical for any worker count `>= 1`: each shard's
+//! buffer fills identically regardless of the driving thread, and the
+//! merge tags records with `(shard, seq)` in id order. (3) The tracer is
+//! zero-cost when disabled: `emit` takes a closure that is never
+//! evaluated off. The only nondeterministic signal — measured wall-clock
+//! scheduler compute — lives on an explicit opt-in channel
+//! (`Session::trace_wall`, `--trace-wall`) as `sched_wall` events,
+//! excluded from the byte-identity guarantees.
+//!
+//! **Chrome trace export.** [`platform::RunReport::chrome_trace_json`]
+//! (CLI: `--trace out.json`) writes a Chrome trace-event document
+//! loadable in Perfetto / `chrome://tracing`: one process per domain, one
+//! thread per device (plus a synthetic orchestrator track), `X` spans for
+//! execution and transfers, instants for the rest, and a `"heye"` header
+//! with schema version and run metadata. Every event carries its raw
+//! full-precision fields in `args`, so the JSON is lossless:
+//! [`trace::Trace::from_json`] round-trips exactly, and `heye trace
+//! overhead FILE` reconstructs the per-scheduler overhead report
+//! ([`trace::OverheadReport`]) from the file alone — replaying the
+//! engine's float-accumulation order so the totals match the run's
+//! `RunMetrics` bit for bit, and reproducing the <2% figure with
+//! `--budget 2`. `heye trace validate FILE` schema-checks a document.
+//!
+//! **Metrics registry.** [`trace::MetricsRegistry`] distills a trace into
+//! counters, gauges, and log-bucketed histograms
+//! ([`util::stats::LogHistogram`]: frame latency/compute, transfer
+//! delays/bytes, execution spans, per-decision scheduling comm), exported
+//! with `--trace-metrics PATH` alongside a per-domain utilization
+//! timeline ([`trace::Trace::utilization`]).
+//!
+//! **Migration.** The three ad-hoc `HEYE_TRACE_{TRYDEV,ASSIGN,XFER}`
+//! eprintln hooks are now subscribers on this seam (one shared
+//! [`util::env_flag`] cache; output routed through
+//! [`trace::log_line`] as `[heye::trydev]`-style lines). The env vars
+//! keep working unchanged, tracer on or off.
+//! `rust/examples/scenario_trace.json` is the runnable exemplar.
+//!
 //! ## The mechanisms underneath
 //!
 //! The low-level modules stay public for by-hand composition — the
@@ -318,6 +370,9 @@
 //!   compiled from the L2 JAX models; gated behind the `pjrt` feature.
 //! * [`telemetry`] — metric collection, figure-style reporting, and
 //!   multi-scheduler comparison over the facade.
+//! * [`trace`] — deterministic structured tracing + metrics registry
+//!   (Chrome trace export, scheduling-overhead reconstruction; the
+//!   "Observability" section above).
 //! * [`util`] — from-scratch substrates (errors, JSON, PRNG, CLI, stats,
 //!   bench, property testing).
 
@@ -336,5 +391,6 @@ pub mod sim;
 pub mod slowdown;
 pub mod task;
 pub mod telemetry;
+pub mod trace;
 pub mod traverser;
 pub mod util;

@@ -13,8 +13,10 @@ use heye::platform::{Platform, RunReport, SchedulerRegistry, WorkloadSpec};
 use heye::scenario::Scenario;
 use heye::sim::SimConfig;
 use heye::telemetry;
+use heye::trace::{MetricsRegistry, Trace};
 use heye::util::cli::Args;
 use heye::util::error::Result;
+use heye::util::json::Json;
 
 const USAGE: &str = "\
 heye — holistic resource modeling and management for edge-cloud systems
@@ -27,6 +29,7 @@ USAGE:
                [--fleet] [--metro] [--sensors K] [--horizon S] [--seed N]
                [--noise F] [--parallelism T] [--domains N|auto] [--workers W]
                [--json] [--report-json PATH] [--config FILE] [--placements]
+               [--trace PATH] [--trace-metrics PATH] [--trace-wall]
   heye compare [--app vr|mining] [--edges N] [--servers M] [--fleet]
                [--sensors K] [--horizon S] [--seed N] [--parallelism T]
   heye domains list [--edges N] [--servers M] [--fleet] [--domains N|auto]
@@ -34,8 +37,11 @@ USAGE:
   heye scenario list
   heye scenario run (--file FILE | --preset NAME) [--sched NAME] [--seed N]
                [--horizon S] [--parallelism T] [--report-json PATH]
+               [--trace PATH] [--trace-metrics PATH] [--trace-wall]
   heye membership run (--file FILE | --preset NAME) [--sched NAME] [--seed N]
                [--horizon S] [--parallelism T] [--proxy-json PATH]
+  heye trace validate FILE
+  heye trace overhead FILE [--budget PCT]
 
 SCHEDULERS: resolved through the registry — run `heye schedulers` to list
 PARALLELISM: scheduler candidate-evaluation worker threads
@@ -54,7 +60,14 @@ SCENARIOS: declarative dynamic runs (open-loop arrivals + churn); see
 MEMBERSHIP: organic membership runs (heartbeats, failure detection,
             re-registration); the scenario needs a `membership` config
             (default preset: flaky). `--proxy-json` exports the read-only
-            telemetry proxy snapshot for external tooling";
+            telemetry proxy snapshot for external tooling
+TRACE: deterministic structured tracing (crate::trace). `--trace PATH`
+       writes Chrome trace-event JSON (open in Perfetto); `--trace-metrics
+       PATH` writes the distilled metrics registry + per-domain
+       utilization; `--trace-wall` adds the wall-clock scheduling channel.
+       `heye trace overhead FILE` reconstructs the scheduling-overhead
+       budget report from a trace file alone (`--budget PCT` makes it a
+       gate); `heye trace validate FILE` schema-checks a trace file";
 
 fn platform_from(args: &Args) -> Result<Platform> {
     let edges = args.get_usize("edges", 0);
@@ -81,6 +94,12 @@ fn domains_arg(args: &Args) -> usize {
     }
 }
 
+/// Any of the trace flags asks for a traced run (`--trace`/`--trace-metrics`
+/// carry output paths; `--trace-wall` adds the wall-clock channel).
+fn wants_trace(args: &Args) -> bool {
+    args.has("trace") || args.has("trace-metrics") || args.has("trace-wall")
+}
+
 fn sim_config(args: &Args) -> SimConfig {
     SimConfig::default()
         .horizon(args.get_f64("horizon", 1.0))
@@ -89,6 +108,8 @@ fn sim_config(args: &Args) -> SimConfig {
         .parallelism(args.get_usize("parallelism", 1))
         .domains(domains_arg(args))
         .workers(args.get_usize("workers", 0))
+        .trace(wants_trace(args))
+        .trace_wall(args.has("trace-wall"))
 }
 
 fn workload_from(args: &Args) -> WorkloadSpec {
@@ -169,11 +190,19 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
 }
 
 fn run_report(args: &Args) -> Result<RunReport> {
-    // --config FILE overrides all other flags
+    // --config FILE overrides all other flags (except the trace outputs,
+    // which are CLI-side and may enable tracing on top of the file)
     if let Some(path) = args.get("config") {
         let c = heye::config::ExpConfig::load(path)?;
         let platform = c.platform()?;
-        Ok(c.session(&platform).run()?)
+        let mut session = c.session(&platform);
+        if wants_trace(args) {
+            session = session.trace(true);
+        }
+        if args.has("trace-wall") {
+            session = session.trace_wall(true);
+        }
+        Ok(session.run()?)
     } else {
         let platform = platform_from(args)?;
         Ok(platform
@@ -182,6 +211,32 @@ fn run_report(args: &Args) -> Result<RunReport> {
             .config(sim_config(args))
             .run()?)
     }
+}
+
+/// Write the `--trace` / `--trace-metrics` outputs of a finished run.
+fn write_trace_outputs(args: &Args, report: &RunReport) -> Result<()> {
+    if args.get("trace").is_none() && args.get("trace-metrics").is_none() {
+        return Ok(());
+    }
+    let tr: &Trace = report
+        .trace
+        .as_ref()
+        .ok_or_else(|| heye::err!("the run produced no trace (tracing disabled)"))?;
+    if let Some(path) = args.get("trace") {
+        let doc = report.chrome_trace_json().expect("trace present");
+        std::fs::write(path, doc.to_string())?;
+        println!("wrote Chrome trace JSON to {path} ({} events)", tr.len());
+    }
+    if let Some(path) = args.get("trace-metrics") {
+        let reg = MetricsRegistry::from_trace(tr);
+        let doc = Json::obj(vec![
+            ("metrics", reg.to_json()),
+            ("utilization", tr.utilization_json(50)),
+        ]);
+        std::fs::write(path, doc.to_string())?;
+        println!("wrote trace metrics JSON to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -207,6 +262,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         std::fs::write(path, report.to_json().to_string())?;
         println!("wrote report JSON to {path}");
     }
+    write_trace_outputs(args, &report)?;
     Ok(())
 }
 
@@ -249,12 +305,19 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             if args.has("parallelism") {
                 sc.cfg.sim.exec.parallelism = args.get_usize("parallelism", sc.cfg.sim.exec.parallelism);
             }
+            if wants_trace(args) {
+                sc.cfg.sim.exec.trace.enabled = true;
+            }
+            if args.has("trace-wall") {
+                sc.cfg.sim.exec.trace.wall = true;
+            }
             let report = sc.run()?;
             report.print(&sc.name);
             if let Some(path) = args.get("report-json") {
                 std::fs::write(path, report.to_json().to_string())?;
                 println!("\nwrote report JSON to {path}");
             }
+            write_trace_outputs(args, &report.run)?;
             Ok(())
         }
         _ => {
@@ -393,6 +456,60 @@ fn cmd_domains(args: &Args) -> Result<()> {
     }
 }
 
+/// Load and schema-check a Chrome trace file written by `--trace`.
+fn load_trace(path: &str) -> Result<Trace> {
+    let text = std::fs::read_to_string(path)?;
+    let doc = Json::parse(&text).map_err(|e| heye::err!("{path}: {e}"))?;
+    Trace::from_json(&doc).map_err(|e| heye::err!("{path}: {e}"))
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let sub = args.positional.first().map(|s| s.as_str());
+    let file = args.positional.get(1).map(|s| s.as_str());
+    match (sub, file) {
+        (Some("validate"), Some(path)) => {
+            let tr = load_trace(path)?;
+            println!(
+                "{path}: valid heye Chrome trace (schema {}) — {} events, \
+                 scheduler {}, {} shard(s), horizon {} s, wall={}",
+                heye::trace::SCHEMA_VERSION,
+                tr.len(),
+                tr.meta.scheduler,
+                tr.meta.shards.max(1),
+                tr.meta.horizon_s,
+                tr.meta.wall
+            );
+            Ok(())
+        }
+        (Some("overhead"), Some(path)) => {
+            let tr = load_trace(path)?;
+            let rep = tr.overhead_report();
+            println!("{rep}");
+            if let Some(budget) = args.get("budget") {
+                let pct: f64 = budget
+                    .parse()
+                    .map_err(|_| heye::err!("--budget wants a percentage, got `{budget}`"))?;
+                if rep.within_budget(pct) {
+                    println!(
+                        "within budget: {:.3}% <= {pct}%",
+                        rep.overhead_ratio() * 100.0
+                    );
+                } else {
+                    heye::bail!(
+                        "scheduling overhead {:.3}% exceeds the {pct}% budget",
+                        rep.overhead_ratio() * 100.0
+                    );
+                }
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
 fn cmd_compare(args: &Args) -> Result<()> {
     let platform = platform_from(args)?;
     println!(
@@ -426,6 +543,7 @@ fn main() -> Result<()> {
         "domains" => cmd_domains(&args),
         "scenario" => cmd_scenario(&args),
         "membership" => cmd_membership(&args),
+        "trace" => cmd_trace(&args),
         _ => {
             println!("{USAGE}");
             Ok(())

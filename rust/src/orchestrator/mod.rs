@@ -138,11 +138,11 @@ fn kind_tag(k: TaskKind) -> u8 {
     k as u8
 }
 
-/// `HEYE_TRACE_TRYDEV` presence, resolved once per process — an env-map
-/// lookup per candidate evaluation is measurable at fleet scale.
+/// `HEYE_TRACE_TRYDEV` presence, resolved once per process by the shared
+/// [`crate::util::env_flag`] cache — an env-map lookup per candidate
+/// evaluation is measurable at fleet scale.
 fn trace_trydev() -> bool {
-    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
-    *ON.get_or_init(|| std::env::var("HEYE_TRACE_TRYDEV").is_ok())
+    crate::util::env_flag("HEYE_TRACE_TRYDEV")
 }
 
 impl Orchestrator {
@@ -334,15 +334,18 @@ impl Orchestrator {
             traverser_calls: calls,
         };
         if best.is_none() && trace_trydev() && now < 0.1 {
-            eprintln!(
-                "TRYDEV-FAIL t={now:.4} task={} dev={} deadline={:.2}ms active={:?}",
-                task.kind.name(),
-                g.node(dev).name,
-                task.constraints.deadline_s * 1e3,
-                active
-                    .iter()
-                    .map(|a| (a.kind.name(), a.remaining_s * 1e3, a.deadline_abs))
-                    .collect::<Vec<_>>()
+            crate::trace::log_line(
+                "trydev",
+                format_args!(
+                    "TRYDEV-FAIL t={now:.4} task={} dev={} deadline={:.2}ms active={:?}",
+                    task.kind.name(),
+                    g.node(dev).name,
+                    task.constraints.deadline_s * 1e3,
+                    active
+                        .iter()
+                        .map(|a| (a.kind.name(), a.remaining_s * 1e3, a.deadline_abs))
+                        .collect::<Vec<_>>()
+                ),
             );
         }
         (best, oh)

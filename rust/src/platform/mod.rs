@@ -536,6 +536,30 @@ impl Session<'_> {
         self
     }
 
+    /// Enable deterministic structured tracing for this run: the engine
+    /// records typed events ([`crate::trace::TraceEvent`]) on the
+    /// simulated-time channel and the report carries the assembled
+    /// [`crate::trace::Trace`]. `RunMetrics` are byte-identical traced or
+    /// not, and sharded trace output is byte-identical for any worker
+    /// count — see the "Observability" section of the crate docs.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.cfg.exec.trace.enabled = on;
+        self
+    }
+
+    /// Also record the wall-clock scheduling channel (one
+    /// `sched_wall` event per decision carrying the *measured*
+    /// constraint-check seconds). Implies [`Session::trace`]. The wall
+    /// channel is machine-dependent by nature and excluded from the
+    /// byte-identity guarantees.
+    pub fn trace_wall(mut self, on: bool) -> Self {
+        self.cfg.exec.trace.wall = on;
+        if on {
+            self.cfg.exec.trace.enabled = true;
+        }
+        self
+    }
+
     /// Ask the scheduler to drop its adaptive session state (sticky
     /// placements, static plans) at time `t` — the dynamic-adaptation
     /// reset of the Fig. 12 runs, previously only reachable by hand-wiring
@@ -735,6 +759,7 @@ impl Session<'_> {
                 decs,
                 metrics: outcome.metrics,
                 proxy,
+                trace: outcome.trace,
             });
         }
         // domains >= 1 wraps the resolved scheduler in the two-level
@@ -760,7 +785,7 @@ impl Session<'_> {
             Built::Flat(b) => b.as_mut(),
             Built::Domains(d) => d,
         };
-        let metrics = sim.run(sched_dyn, workload, &plan, &cfg);
+        let (metrics, trace) = sim.run_traced(sched_dyn, workload, &plan, &cfg);
         let scheduler_label = sched_dyn.name();
         let Simulation { decs, .. } = sim;
         // observation seam: mirror post-run membership/domain state into a
@@ -788,6 +813,7 @@ impl Session<'_> {
             decs,
             metrics,
             proxy,
+            trace,
         })
     }
 
@@ -821,6 +847,10 @@ pub struct RunReport {
     /// heartbeat health (`Some` when the run used domains or membership) —
     /// what external tooling queries instead of engine state
     pub proxy: Option<ProxySnapshot>,
+    /// the deterministic event trace (`Some` when the session enabled
+    /// tracing) — export with [`RunReport::chrome_trace_json`] or distill
+    /// with [`crate::trace::MetricsRegistry::from_trace`]
+    pub trace: Option<crate::trace::Trace>,
 }
 
 impl RunReport {
@@ -863,6 +893,22 @@ impl RunReport {
     /// Per-origin-device latency breakdown (the Fig. 11a view).
     pub fn per_device(&self) -> Vec<telemetry::DeviceBreakdown> {
         telemetry::per_device(&self.decs, &self.metrics)
+    }
+
+    /// The run's trace as Chrome trace-event JSON (loadable in Perfetto /
+    /// `chrome://tracing`), thread tracks labeled with device names from
+    /// the post-run system. `None` when the session did not enable
+    /// tracing.
+    pub fn chrome_trace_json(&self) -> Option<Json> {
+        self.trace.as_ref().map(|t| {
+            let g = &self.decs.graph;
+            let names: BTreeMap<u64, String> = g
+                .groups(crate::hwgraph::GroupRole::Device)
+                .into_iter()
+                .map(|d| (d.0 as u64, g.node(d).name.clone()))
+                .collect();
+            t.to_chrome_json(Some(&names))
+        })
     }
 
     /// One-line summary (scheduler, frames, latency, QoS, overhead).
@@ -916,6 +962,8 @@ impl RunReport {
                         },
                     ),
                     ("membership", membership),
+                    ("trace", Json::Bool(exec.trace.enabled)),
+                    ("trace_wall", Json::Bool(exec.trace.wall)),
                 ]),
             ),
         ]);

@@ -439,7 +439,10 @@ mod tests {
     #[test]
     fn manifest_parses_and_covers_both_apps() {
         if !artifacts_dir().join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            crate::trace::log_line(
+                "runtime",
+                format_args!("skipping: artifacts not built (run `make artifacts`)"),
+            );
             return;
         }
         let m = Manifest::load(&artifacts_dir()).expect("manifest");
@@ -456,7 +459,10 @@ mod tests {
     #[test]
     fn manifest_maps_task_kinds() {
         if !artifacts_dir().join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            crate::trace::log_line(
+                "runtime",
+                format_args!("skipping: artifacts not built (run `make artifacts`)"),
+            );
             return;
         }
         let m = Manifest::load(&artifacts_dir()).expect("manifest");

@@ -40,6 +40,7 @@ use crate::orchestrator::Loads;
 use crate::perfmodel::{PerfModel, ProfileModel, Unit};
 use crate::slowdown::{CachedSlowdown, Placed};
 use crate::task::{workloads, Cfg, TaskId, TaskKind};
+use crate::trace::{log_line, Trace, TraceEvent, TraceMeta, Tracer};
 use crate::traverser::{ActiveTask, Traverser};
 use crate::util::rng::{mix64, Rng};
 
@@ -395,6 +396,12 @@ pub struct ExecOpts {
     /// `tests/route_cache.rs`); the knob exists for that assertion and for
     /// measuring the cache's win.
     pub route_cache: bool,
+    /// structured tracing ([`crate::trace`]): off by default (and
+    /// zero-cost then); when enabled the engine records the deterministic
+    /// event channel, plus the wall-clock scheduler-compute channel when
+    /// `trace.wall` is also set. `RunMetrics` are byte-identical either
+    /// way (asserted by `tests/trace.rs`).
+    pub trace: crate::trace::TraceSpec,
 }
 
 impl Default for ExecOpts {
@@ -406,6 +413,7 @@ impl Default for ExecOpts {
             membership: None,
             drain_s: f64::INFINITY,
             route_cache: true,
+            trace: crate::trace::TraceSpec::default(),
         }
     }
 }
@@ -544,26 +552,29 @@ impl SimConfig {
         self
     }
 
+    /// Record the deterministic structured-trace channel ([`crate::trace`]).
+    pub fn trace(mut self, on: bool) -> Self {
+        self.exec.trace.enabled = on;
+        self
+    }
+
+    /// Additionally record measured wall-clock scheduler compute seconds
+    /// on the trace (implies [`SimConfig::trace`]; nondeterministic by
+    /// nature, so excluded from byte-identity guarantees).
+    pub fn trace_wall(mut self, on: bool) -> Self {
+        self.exec.trace.wall = on;
+        if on {
+            self.exec.trace.enabled = true;
+        }
+        self
+    }
+
     /// Replace the execution knobs wholesale (the facades build one
     /// [`ExecOpts`] and hand it through unchanged).
     pub fn exec_opts(mut self, exec: ExecOpts) -> Self {
         self.exec = exec;
         self
     }
-}
-
-/// `HEYE_TRACE_ASSIGN` presence, resolved once per process.
-fn trace_assign() -> bool {
-    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
-    *ON.get_or_init(|| std::env::var("HEYE_TRACE_ASSIGN").is_ok())
-}
-
-/// `HEYE_TRACE_XFER` presence, resolved once per process — this sat on the
-/// per-transfer hot path, where an env-map lookup per call is measurable
-/// at fleet scale.
-fn trace_xfer() -> bool {
-    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
-    *ON.get_or_init(|| std::env::var("HEYE_TRACE_XFER").is_ok())
 }
 
 // ---------------------------------------------------------------------------
@@ -764,6 +775,11 @@ struct SimState {
     /// the run's flaky windows, kept so devices joining mid-run register
     /// with their own suppression windows
     flaky: Vec<FlakyEvent>,
+    /// structured-event recorder ([`crate::trace`]): disabled (and then
+    /// zero-cost) unless `SimConfig::exec.trace` turns it on. Per-shard in
+    /// the sharded engine — each shard's buffer fills deterministically,
+    /// so the merged trace is worker-count invariant.
+    trace: Tracer,
 }
 
 impl SimState {
@@ -793,6 +809,7 @@ impl SimState {
             failed: BTreeSet::new(),
             membership: None,
             flaky: Vec::new(),
+            trace: Tracer::off(),
         }
     }
 
@@ -856,8 +873,23 @@ impl Simulation {
         plan: &RunPlan,
         cfg: &SimConfig,
     ) -> RunMetrics {
+        self.run_traced(sched, workload, plan, cfg).0
+    }
+
+    /// [`Simulation::run`], additionally returning the structured trace
+    /// when `cfg.exec.trace` enables it (`None` otherwise). Tracing never
+    /// touches the virtual timeline: the metrics are byte-identical with
+    /// the tracer on or off.
+    pub fn run_traced(
+        &mut self,
+        sched: &mut dyn Scheduler,
+        workload: Workload,
+        plan: &RunPlan,
+        cfg: &SimConfig,
+    ) -> (RunMetrics, Option<Trace>) {
         let events = plan.events.clone();
         let mut st = SimState::new();
+        st.trace = Tracer::new(cfg.exec.trace);
         sched.set_parallelism(cfg.exec.parallelism);
         for src in workload.sources {
             let idx = add_source(&mut st, cfg, src);
@@ -1051,7 +1083,19 @@ impl Simulation {
         if let Some(reg) = st.membership.as_ref() {
             st.metrics.membership = Some(reg.report());
         }
-        st.metrics
+        let trace = st.trace.enabled().then(|| {
+            Trace::assemble(
+                TraceMeta {
+                    scheduler: sched.name(),
+                    horizon_s: cfg.horizon_s,
+                    seed: cfg.seed,
+                    shards: 0,
+                    wall: st.trace.wall(),
+                },
+                vec![st.trace.take()],
+            )
+        });
+        (st.metrics, trace)
     }
 }
 
@@ -1077,6 +1121,9 @@ fn apply_join(
     now: f64,
 ) -> NodeId {
     let dev = decs.join_edge(&j.model, j.uplink_gbps);
+    st.trace.emit(now, || TraceEvent::Join {
+        device: dev.0 as u64,
+    });
     sched.on_device_join(&decs.graph, dev);
     if j.vr_source {
         let mut src = FrameSource::vr(dev, &j.model);
@@ -1147,6 +1194,10 @@ fn apply_leave(
         kill_inflight(decs, st, dev, &mut rec, now);
     }
     st.metrics.leaves.push(rec);
+    st.trace.emit(now, || TraceEvent::Leave {
+        device: dev.0 as u64,
+        failure: ev.failure,
+    });
     Some(dev)
 }
 
@@ -1258,6 +1309,9 @@ fn apply_escalate(
         reg.note_escalation();
     }
     st.metrics.leaves.push(rec);
+    st.trace.emit(now, || TraceEvent::DrainEscalate {
+        device: dev.0 as u64,
+    });
 }
 
 /// A device re-registering after a detected failure: reactivate it in the
@@ -1290,6 +1344,9 @@ fn apply_reregister(
     if let Some(reg) = st.membership.as_mut() {
         reg.mark_reregistered(dev, now);
     }
+    st.trace.emit(now, || TraceEvent::ReRegister {
+        device: dev.0 as u64,
+    });
     Some(dev)
 }
 
@@ -1306,7 +1363,7 @@ fn apply_capability(
     slow: &mut CachedSlowdown,
     edge_index: usize,
     weight: f64,
-    _now: f64,
+    now: f64,
 ) {
     let dev = match decs.edge_devices.get(edge_index) {
         Some(&d) if decs.is_active(d) => d,
@@ -1317,6 +1374,10 @@ fn apply_capability(
     }
     sched.on_capability(&decs.graph, dev, weight);
     slow.on_device_join(&decs.graph, dev);
+    st.trace.emit(now, || TraceEvent::Capability {
+        device: dev.0 as u64,
+        weight,
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -1554,6 +1615,10 @@ fn on_release(
     });
     *st.metrics.released.entry(origin).or_insert(0) += 1;
     st.released_count[source] += 1;
+    st.trace.emit(now, || TraceEvent::FrameRelease {
+        frame: fidx as u64,
+        origin: origin.0 as u64,
+    });
 
     // schedule the next release from this source's arrival process (its
     // own RNG stream); events past the horizon are never popped
@@ -1692,6 +1757,27 @@ fn assign_batch(
                     st.metrics.sched_compute_s += oh.compute_s;
                     st.metrics.sched_hops += oh.hops as u64;
                     st.metrics.traverser_calls += oh.traverser_calls as u64;
+                    st.trace.emit(now, || TraceEvent::SchedDecision {
+                        frame: fidx as u64,
+                        node: node as u64,
+                        dev: None,
+                        comm_s: oh.comm_s,
+                        hops: oh.hops as u64,
+                        calls: oh.traverser_calls as u64,
+                        escalated: true,
+                        degraded: false,
+                    });
+                    if st.trace.wall() {
+                        st.trace.emit(now, || TraceEvent::SchedWall { compute_s: oh.compute_s });
+                    }
+                    let from_domain = c.id as u64;
+                    st.trace.emit(now, || TraceEvent::HandoffSend {
+                        frame: fidx as u64,
+                        node: node as u64,
+                        from_domain,
+                        to_domain: target as u64,
+                        cross_s,
+                    });
                     c.outbox.push(shard::ShardMsg::Handoff(shard::HandoffMsg {
                         from: c.id,
                         to: target,
@@ -1748,16 +1834,32 @@ fn assign_batch(
         st.metrics.traverser_calls += oh.traverser_calls as u64;
 
         let dev = decs.graph.device_of(pu).unwrap_or(origin);
-        if trace_assign() && now < 0.2 {
-            eprintln!(
-                "ASSIGN t={:.3} origin={} {} -> {} (pred {:.1}ms, deadline {:.1}ms, degraded={})",
-                now,
-                origin.0,
-                spec.kind.name(),
-                decs.graph.node(pu).name,
-                r.predicted_latency_s * 1e3,
-                spec.constraints.deadline_s * 1e3,
-                degraded
+        st.trace.emit(now, || TraceEvent::SchedDecision {
+            frame: fidx as u64,
+            node: node as u64,
+            dev: Some(dev.0 as u64),
+            comm_s: oh.comm_s,
+            hops: oh.hops as u64,
+            calls: oh.traverser_calls as u64,
+            escalated: false,
+            degraded,
+        });
+        if st.trace.wall() {
+            st.trace.emit(now, || TraceEvent::SchedWall { compute_s: oh.compute_s });
+        }
+        if st.trace.echo_assign() && now < 0.2 {
+            log_line(
+                "assign",
+                format_args!(
+                    "ASSIGN t={:.3} origin={} {} -> {} (pred {:.1}ms, deadline {:.1}ms, degraded={})",
+                    now,
+                    origin.0,
+                    spec.kind.name(),
+                    decs.graph.node(pu).name,
+                    r.predicted_latency_s * 1e3,
+                    spec.constraints.deadline_s * 1e3,
+                    degraded
+                ),
             );
         }
         let on_server = decs.servers.contains(&dev);
@@ -1793,16 +1895,29 @@ fn assign_batch(
             st.frames[fidx].degraded = true;
             continue;
         }
-        if trace_xfer() && delay > 0.02 {
-            eprintln!(
-                "XFER t={:.3} {} {}B from={} to={} delay={:.1}ms",
-                now,
-                spec.kind.name(),
-                bytes,
-                from_dev.0,
-                dev.0,
-                delay * 1e3
+        if st.trace.echo_xfer() && delay > 0.02 {
+            log_line(
+                "xfer",
+                format_args!(
+                    "XFER t={:.3} {} {}B from={} to={} delay={:.1}ms",
+                    now,
+                    spec.kind.name(),
+                    bytes,
+                    from_dev.0,
+                    dev.0,
+                    delay * 1e3
+                ),
             );
+        }
+        if from_dev != dev {
+            st.trace.emit(now, || TraceEvent::Transfer {
+                frame: fidx as u64,
+                node: node as u64,
+                from: from_dev.0 as u64,
+                to: dev.0 as u64,
+                bytes,
+                delay_s: delay,
+            });
         }
         net.open_flow(&route);
         {
@@ -1948,15 +2063,21 @@ fn tenant_cap(class: crate::hwgraph::PuClass) -> usize {
 
 /// Admit `uid` onto its PU if below the tenant cap, else queue it.
 fn admit_or_queue(decs: &Decs, slow: &CachedSlowdown, st: &mut SimState, uid: u64, now: f64) {
-    let (pu, dev) = {
+    let (pu, dev, frame, node) = {
         let r = &st.running[&uid];
-        (r.pu, r.dev)
+        (r.pu, r.dev, r.frame, r.node)
     };
     let class = decs.graph.pu_class(pu).expect("is a pu");
     let cur = st.tenants.get(&pu).copied().unwrap_or(0);
     if cur >= tenant_cap(class) {
         st.pu_queue.entry(pu).or_default().push(uid);
         st.queued_by_dev.entry(dev).or_default().push(uid);
+        st.trace.emit(now, || TraceEvent::Queued {
+            frame: frame as u64,
+            node: node as u64,
+            device: dev.0 as u64,
+            pu: pu.0 as u64,
+        });
         sync_loads_device(st, dev);
         return;
     }
@@ -2042,6 +2163,13 @@ fn on_finish(
         }
         f.remaining -= 1;
     }
+    st.trace.emit(now, || TraceEvent::ExecSpan {
+        frame: r.frame as u64,
+        node: r.node as u64,
+        device: r.dev.0 as u64,
+        pu: r.pu.0 as u64,
+        start_t: r.start_t,
+    });
 
     if st.frames[r.frame].abandoned {
         // censored frame (its origin left): the work is accounted, but
@@ -2161,6 +2289,24 @@ fn resolve_completion(
             degraded: f.degraded,
             resolution: f.resolution,
             predicted_s,
+        });
+        let rec = st.metrics.frames.last().expect("just pushed");
+        let (origin_id, release_t, latency_s, compute_s, qos_ok, was_degraded) = (
+            rec.origin.0 as u64,
+            rec.release_t,
+            rec.latency_s,
+            rec.compute_s,
+            rec.qos_ok(),
+            rec.degraded,
+        );
+        st.trace.emit(now, || TraceEvent::FrameComplete {
+            frame: fidx as u64,
+            origin: origin_id,
+            release_t,
+            latency_s,
+            compute_s,
+            qos_ok,
+            degraded: was_degraded,
         });
     }
 }

@@ -33,6 +33,7 @@ use crate::netsim::{Network, RouteTable};
 use crate::perfmodel::ProfileModel;
 use crate::slowdown::CachedSlowdown;
 use crate::task::{Cfg, TaskSpec};
+use crate::trace::{Trace, TraceEvent, TraceMeta, Tracer};
 use crate::util::par;
 
 use super::{
@@ -177,6 +178,10 @@ pub(crate) fn on_handoff(
     mut ctx: Option<&mut ShardCtx>,
 ) {
     let rep = {
+        st.trace.emit(now, || TraceEvent::HandoffRecv {
+            from_domain: msg.from as u64,
+            to_domain: msg.to as u64,
+        });
         let c = ctx
             .as_deref_mut()
             .expect("remote handoffs exist only under the sharded engine");
@@ -283,6 +288,11 @@ pub(crate) fn on_remote_done(
         f.edge_busy_s += msg.edge_busy_s;
         f.server_busy_s += msg.server_busy_s;
     }
+    st.trace.emit(now, || TraceEvent::RemoteDone {
+        frame: fidx as u64,
+        node: node as u64,
+        cross_s: msg.cross_s,
+    });
     if st.frames[fidx].abandoned {
         // censored while the task was away: the work is accounted, but
         // nothing downstream runs and no record is emitted
@@ -357,10 +367,12 @@ impl Shard {
             .copied()
             .filter(|m| servers.contains(m))
             .collect();
+        let mut st = SimState::new();
+        st.trace = Tracer::new(cfg.exec.trace);
         Shard {
             id,
             sched: sub,
-            st: SimState::new(),
+            st,
             net: net.clone(),
             slow,
             routes,
@@ -509,6 +521,8 @@ pub struct ShardedOutcome {
     pub scheduler_label: String,
     pub summaries: Vec<DomainSummary>,
     pub domain_of: BTreeMap<NodeId, usize>,
+    /// the assembled deterministic trace, when `cfg.exec.trace` enabled it
+    pub trace: Option<Trace>,
 }
 
 impl Simulation {
@@ -719,18 +733,33 @@ impl Simulation {
             for sh in shards.iter_mut() {
                 msgs.extend(sh.ctx.outbox.drain(..));
             }
+            let mut delivered: Vec<u64> = vec![0; shards.len()];
             for m in msgs {
                 match m {
                     ShardMsg::Handoff(h) => {
                         let t = handoff_delivery_t(h.send_t, h.cross_s, now);
                         let to = h.to;
                         shards[to].st.push(t, EvKind::RemoteHandoff(h));
+                        delivered[to] += 1;
                     }
                     ShardMsg::Done(d) => {
                         let t = done_delivery_t(d.finish_t, d.cross_s, now);
                         let to = d.to;
                         shards[to].st.push(t, EvKind::RemoteDone(d));
+                        delivered[to] += 1;
                     }
+                }
+            }
+            // a barrier event per shard that *received* messages this
+            // window (keeps quiet shards' buffers clean and the schedule
+            // worker-count invariant: both `bound` and the delivery counts
+            // are pure functions of the drained messages)
+            for (i, &n) in delivered.iter().enumerate() {
+                if n > 0 {
+                    shards[i].st.trace.emit(now, || TraceEvent::Barrier {
+                        window_end: now,
+                        delivered: n,
+                    });
                 }
             }
             // structural events due at this barrier, applied to the owning
@@ -888,12 +917,35 @@ impl Simulation {
                 sh.st.metrics.membership = Some(reg.report());
             }
         }
-        let metrics = merge_metrics(shards.into_iter().map(|sh| sh.st.metrics).collect());
+        let nshards = shards.len();
+        let mut buffers: Vec<Vec<crate::trace::TraceRecord>> = Vec::new();
+        let mut parts: Vec<RunMetrics> = Vec::with_capacity(nshards);
+        for sh in shards {
+            let mut st = sh.st;
+            if cfg.exec.trace.enabled {
+                buffers.push(st.trace.take());
+            }
+            parts.push(st.metrics);
+        }
+        let metrics = merge_metrics(parts);
+        let trace = cfg.exec.trace.enabled.then(|| {
+            Trace::assemble(
+                TraceMeta {
+                    scheduler: scheduler_label.clone(),
+                    horizon_s: cfg.horizon_s,
+                    seed: cfg.seed,
+                    shards: nshards as u64,
+                    wall: cfg.exec.trace.wall,
+                },
+                buffers,
+            )
+        });
         ShardedOutcome {
             metrics,
             scheduler_label,
             summaries,
             domain_of,
+            trace,
         }
     }
 }

@@ -1,0 +1,1405 @@
+//! Structured tracing and metrics: deterministic event traces, Chrome
+//! trace-event export, and scheduling-overhead reconstruction.
+//!
+//! A [`Tracer`] lives inside each engine shard and records typed
+//! [`TraceEvent`]s (frame release / scheduler decision / transfer /
+//! execution span / completion, cross-domain handoffs and sync barriers,
+//! membership joins / leaves / re-registrations / drain escalations,
+//! admission queueing) into a per-shard append-only buffer stamped with
+//! simulated time. Tracing is **zero-cost when disabled**: `emit` takes the
+//! event as a closure and checks one `bool` before building anything, and
+//! `RunMetrics` are byte-identical trace-on vs trace-off (asserted in
+//! `tests/trace.rs`).
+//!
+//! ## Determinism invariants
+//!
+//! Each shard's buffer is filled by that shard's deterministic event loop,
+//! so the buffers are identical for any worker count; [`Trace::assemble`]
+//! concatenates them in shard-id order and tags every record with
+//! `(shard, seq)`. Serialization ([`Trace::to_chrome_json`]) orders
+//! records by `(t, shard, seq)` over sorted-key objects, so the trace
+//! *output is byte-identical for any worker count >= 1*.
+//!
+//! Two channels keep that invariant honest:
+//!
+//! * the **simulated-time channel** (everything above) is a pure function
+//!   of the configuration;
+//! * the optional **wall-clock channel** ([`TraceSpec::wall`]) adds one
+//!   [`TraceEvent::SchedWall`] per scheduler decision carrying the
+//!   *measured* `Overhead::compute_s` — real nondeterministic wall time,
+//!   excluded from byte-identity assertions and off by default.
+//!
+//! ## Overhead reconstruction
+//!
+//! [`Trace::overhead_report`] re-derives the engine's `Overhead`
+//! accounting **from the trace alone**, replaying the same accumulation
+//! order the engine used (per-shard sequence order, shard-order merge,
+//! completion-order frame-compute sum) so the floats match the engine's
+//! `RunMetrics` bit for bit — `heye trace overhead out.json` prints the
+//! paper's <2%-scheduling-overhead budget report from a file.
+//!
+//! ## Chrome trace-event schema
+//!
+//! The export is a standard Chrome trace-event JSON object (loadable in
+//! Perfetto / `chrome://tracing`): `{"displayTimeUnit": "ms", "heye":
+//! {meta}, "traceEvents": [...]}` with one *process* per orchestration
+//! domain (shard) and one *thread* per device; execution spans and
+//! transfers are `"ph": "X"` duration events, everything else is an
+//! instant (`"ph": "i"`), and `"M"` metadata events name the tracks.
+//! Perfetto ignores the extra `"heye"` object and the raw per-event
+//! fields under `"args"`, which is where [`Trace::from_json`] reads the
+//! full-precision values back (the `ts` microseconds are display-only).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+
+/// Trace-file schema version (the `"heye"."schema"` field).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Synthetic Chrome thread id for events that belong to the orchestrator
+/// itself rather than a device track.
+const ORC_TID: u64 = 999_999;
+
+/// Tracing knobs, carried by `sim::ExecOpts`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceSpec {
+    /// record the deterministic simulated-time event channel
+    pub enabled: bool,
+    /// additionally record measured wall-clock scheduler compute seconds
+    /// (one [`TraceEvent::SchedWall`] per decision) — nondeterministic by
+    /// nature, so it is opt-in and excluded from byte-identity tests
+    pub wall: bool,
+}
+
+/// The structured stderr seam: every ad-hoc diagnostic the crate used to
+/// `eprintln!` directly funnels through here with a topic tag, so headless
+/// bench runs capture one greppable `[heye::<topic>] ...` format.
+pub fn log_line(topic: &str, msg: std::fmt::Arguments<'_>) {
+    eprintln!("[heye::{topic}] {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// events
+// ---------------------------------------------------------------------------
+
+/// One typed trace event. Ids are raw (`NodeId::0` widened to `u64`) so the
+/// trace file is self-contained.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// a source released a frame
+    FrameRelease { frame: u64, origin: u64 },
+    /// one scheduler MapTask decision — the deterministic half of the
+    /// engine's `Overhead` accounting (`dev` is `None` when the decision
+    /// escalated to a foreign domain instead of placing locally)
+    SchedDecision {
+        frame: u64,
+        node: u64,
+        dev: Option<u64>,
+        comm_s: f64,
+        hops: u64,
+        calls: u64,
+        escalated: bool,
+        degraded: bool,
+    },
+    /// wall-clock channel: measured constraint-check seconds of the
+    /// immediately preceding decision
+    SchedWall { compute_s: f64 },
+    /// a cross-device input transfer opened for a placed task
+    Transfer {
+        frame: u64,
+        node: u64,
+        from: u64,
+        to: u64,
+        bytes: f64,
+        delay_s: f64,
+    },
+    /// a task's execution span on a PU (recorded at completion; the record
+    /// time is the end of the span)
+    ExecSpan {
+        frame: u64,
+        node: u64,
+        device: u64,
+        pu: u64,
+        start_t: f64,
+    },
+    /// admission control queued a ready task behind the tenancy cap
+    Queued {
+        frame: u64,
+        node: u64,
+        device: u64,
+        pu: u64,
+    },
+    /// a frame completed (the record time is its finish time)
+    FrameComplete {
+        frame: u64,
+        origin: u64,
+        release_t: f64,
+        latency_s: f64,
+        compute_s: f64,
+        qos_ok: bool,
+        degraded: bool,
+    },
+    /// a sub-ORC miss escalated across domains (send side)
+    HandoffSend {
+        frame: u64,
+        node: u64,
+        from_domain: u64,
+        to_domain: u64,
+        cross_s: f64,
+    },
+    /// a handoff arrived at the target domain's ingress
+    HandoffRecv { from_domain: u64, to_domain: u64 },
+    /// a remote stub's result folded back into its home frame
+    RemoteDone { frame: u64, node: u64, cross_s: f64 },
+    /// a sharded sync barrier delivered cross-domain messages to this shard
+    Barrier { window_end: f64, delivered: u64 },
+    /// a device joined (scripted join or membership re-registration ride
+    /// separate events)
+    Join { device: u64 },
+    /// a device left — gracefully or by failure (scripted, or synthesized
+    /// by a missed heartbeat deadline; the engine keeps the two
+    /// byte-identical by design)
+    Leave { device: u64, failure: bool },
+    /// a flaky device re-registered after a detected failure
+    ReRegister { device: u64 },
+    /// a graceful drain exceeded its deadline and escalated to the failure
+    /// path
+    DrainEscalate { device: u64 },
+    /// a capability re-advertisement rescaled a device's headroom
+    Capability { device: u64, weight: f64 },
+}
+
+impl TraceEvent {
+    /// Stable kind tag used as the Chrome event name and the `args.kind`
+    /// discriminator.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::FrameRelease { .. } => "release",
+            TraceEvent::SchedDecision { .. } => "sched",
+            TraceEvent::SchedWall { .. } => "sched_wall",
+            TraceEvent::Transfer { .. } => "xfer",
+            TraceEvent::ExecSpan { .. } => "exec",
+            TraceEvent::Queued { .. } => "queued",
+            TraceEvent::FrameComplete { .. } => "frame",
+            TraceEvent::HandoffSend { .. } => "handoff_send",
+            TraceEvent::HandoffRecv { .. } => "handoff_recv",
+            TraceEvent::RemoteDone { .. } => "remote_done",
+            TraceEvent::Barrier { .. } => "barrier",
+            TraceEvent::Join { .. } => "join",
+            TraceEvent::Leave { .. } => "leave",
+            TraceEvent::ReRegister { .. } => "rereg",
+            TraceEvent::DrainEscalate { .. } => "drain_escalate",
+            TraceEvent::Capability { .. } => "capability",
+        }
+    }
+
+    /// Chrome thread id: the device the event is anchored to, or the
+    /// synthetic orchestrator track.
+    fn tid(&self) -> u64 {
+        match *self {
+            TraceEvent::FrameRelease { origin, .. } => origin,
+            TraceEvent::SchedDecision { dev, .. } => dev.unwrap_or(ORC_TID),
+            TraceEvent::Transfer { to, .. } => to,
+            TraceEvent::ExecSpan { device, .. } => device,
+            TraceEvent::Queued { device, .. } => device,
+            TraceEvent::FrameComplete { origin, .. } => origin,
+            TraceEvent::Join { device }
+            | TraceEvent::Leave { device, .. }
+            | TraceEvent::ReRegister { device }
+            | TraceEvent::DrainEscalate { device }
+            | TraceEvent::Capability { device, .. } => device,
+            TraceEvent::SchedWall { .. }
+            | TraceEvent::HandoffSend { .. }
+            | TraceEvent::HandoffRecv { .. }
+            | TraceEvent::RemoteDone { .. }
+            | TraceEvent::Barrier { .. } => ORC_TID,
+        }
+    }
+
+    /// Event-specific `args` fields (the common `kind`/`t`/`shard`/`seq`
+    /// are added by the exporter).
+    fn args(&self) -> Vec<(&'static str, Json)> {
+        let num = |v: u64| Json::Num(v as f64);
+        match *self {
+            TraceEvent::FrameRelease { frame, origin } => {
+                vec![("frame", num(frame)), ("origin", num(origin))]
+            }
+            TraceEvent::SchedDecision {
+                frame,
+                node,
+                dev,
+                comm_s,
+                hops,
+                calls,
+                escalated,
+                degraded,
+            } => vec![
+                ("frame", num(frame)),
+                ("node", num(node)),
+                ("dev", dev.map(num).unwrap_or(Json::Null)),
+                ("comm_s", Json::Num(comm_s)),
+                ("hops", num(hops)),
+                ("calls", num(calls)),
+                ("escalated", Json::Bool(escalated)),
+                ("degraded", Json::Bool(degraded)),
+            ],
+            TraceEvent::SchedWall { compute_s } => vec![("compute_s", Json::Num(compute_s))],
+            TraceEvent::Transfer {
+                frame,
+                node,
+                from,
+                to,
+                bytes,
+                delay_s,
+            } => vec![
+                ("frame", num(frame)),
+                ("node", num(node)),
+                ("from", num(from)),
+                ("to", num(to)),
+                ("bytes", Json::Num(bytes)),
+                ("delay_s", Json::Num(delay_s)),
+            ],
+            TraceEvent::ExecSpan {
+                frame,
+                node,
+                device,
+                pu,
+                start_t,
+            } => vec![
+                ("frame", num(frame)),
+                ("node", num(node)),
+                ("device", num(device)),
+                ("pu", num(pu)),
+                ("start_t", Json::Num(start_t)),
+            ],
+            TraceEvent::Queued {
+                frame,
+                node,
+                device,
+                pu,
+            } => vec![
+                ("frame", num(frame)),
+                ("node", num(node)),
+                ("device", num(device)),
+                ("pu", num(pu)),
+            ],
+            TraceEvent::FrameComplete {
+                frame,
+                origin,
+                release_t,
+                latency_s,
+                compute_s,
+                qos_ok,
+                degraded,
+            } => vec![
+                ("frame", num(frame)),
+                ("origin", num(origin)),
+                ("release_t", Json::Num(release_t)),
+                ("latency_s", Json::Num(latency_s)),
+                ("compute_s", Json::Num(compute_s)),
+                ("qos_ok", Json::Bool(qos_ok)),
+                ("degraded", Json::Bool(degraded)),
+            ],
+            TraceEvent::HandoffSend {
+                frame,
+                node,
+                from_domain,
+                to_domain,
+                cross_s,
+            } => vec![
+                ("frame", num(frame)),
+                ("node", num(node)),
+                ("from_domain", num(from_domain)),
+                ("to_domain", num(to_domain)),
+                ("cross_s", Json::Num(cross_s)),
+            ],
+            TraceEvent::HandoffRecv {
+                from_domain,
+                to_domain,
+            } => vec![
+                ("from_domain", num(from_domain)),
+                ("to_domain", num(to_domain)),
+            ],
+            TraceEvent::RemoteDone {
+                frame,
+                node,
+                cross_s,
+            } => vec![
+                ("frame", num(frame)),
+                ("node", num(node)),
+                ("cross_s", Json::Num(cross_s)),
+            ],
+            TraceEvent::Barrier {
+                window_end,
+                delivered,
+            } => vec![
+                ("window_end", Json::Num(window_end)),
+                ("delivered", num(delivered)),
+            ],
+            TraceEvent::Join { device } => vec![("device", num(device))],
+            TraceEvent::Leave { device, failure } => {
+                vec![("device", num(device)), ("failure", Json::Bool(failure))]
+            }
+            TraceEvent::ReRegister { device } => vec![("device", num(device))],
+            TraceEvent::DrainEscalate { device } => vec![("device", num(device))],
+            TraceEvent::Capability { device, weight } => {
+                vec![("device", num(device)), ("weight", Json::Num(weight))]
+            }
+        }
+    }
+
+    /// Rebuild an event from its `args` object. The inverse of
+    /// [`TraceEvent::args`]; unknown kinds and missing fields are errors.
+    fn from_args(kind: &str, args: &BTreeMap<String, Json>) -> Result<TraceEvent, String> {
+        let f = |k: &str| -> Result<f64, String> {
+            args.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("event `{kind}` missing numeric args.{k}"))
+        };
+        let u = |k: &str| -> Result<u64, String> { f(k).map(|v| v as u64) };
+        let b = |k: &str| -> Result<bool, String> {
+            args.get(k)
+                .and_then(Json::as_bool)
+                .ok_or_else(|| format!("event `{kind}` missing bool args.{k}"))
+        };
+        Ok(match kind {
+            "release" => TraceEvent::FrameRelease {
+                frame: u("frame")?,
+                origin: u("origin")?,
+            },
+            "sched" => TraceEvent::SchedDecision {
+                frame: u("frame")?,
+                node: u("node")?,
+                dev: match args.get("dev") {
+                    Some(Json::Null) | None => None,
+                    Some(v) => Some(v.as_f64().ok_or("args.dev must be a number or null")? as u64),
+                },
+                comm_s: f("comm_s")?,
+                hops: u("hops")?,
+                calls: u("calls")?,
+                escalated: b("escalated")?,
+                degraded: b("degraded")?,
+            },
+            "sched_wall" => TraceEvent::SchedWall {
+                compute_s: f("compute_s")?,
+            },
+            "xfer" => TraceEvent::Transfer {
+                frame: u("frame")?,
+                node: u("node")?,
+                from: u("from")?,
+                to: u("to")?,
+                bytes: f("bytes")?,
+                delay_s: f("delay_s")?,
+            },
+            "exec" => TraceEvent::ExecSpan {
+                frame: u("frame")?,
+                node: u("node")?,
+                device: u("device")?,
+                pu: u("pu")?,
+                start_t: f("start_t")?,
+            },
+            "queued" => TraceEvent::Queued {
+                frame: u("frame")?,
+                node: u("node")?,
+                device: u("device")?,
+                pu: u("pu")?,
+            },
+            "frame" => TraceEvent::FrameComplete {
+                frame: u("frame")?,
+                origin: u("origin")?,
+                release_t: f("release_t")?,
+                latency_s: f("latency_s")?,
+                compute_s: f("compute_s")?,
+                qos_ok: b("qos_ok")?,
+                degraded: b("degraded")?,
+            },
+            "handoff_send" => TraceEvent::HandoffSend {
+                frame: u("frame")?,
+                node: u("node")?,
+                from_domain: u("from_domain")?,
+                to_domain: u("to_domain")?,
+                cross_s: f("cross_s")?,
+            },
+            "handoff_recv" => TraceEvent::HandoffRecv {
+                from_domain: u("from_domain")?,
+                to_domain: u("to_domain")?,
+            },
+            "remote_done" => TraceEvent::RemoteDone {
+                frame: u("frame")?,
+                node: u("node")?,
+                cross_s: f("cross_s")?,
+            },
+            "barrier" => TraceEvent::Barrier {
+                window_end: f("window_end")?,
+                delivered: u("delivered")?,
+            },
+            "join" => TraceEvent::Join {
+                device: u("device")?,
+            },
+            "leave" => TraceEvent::Leave {
+                device: u("device")?,
+                failure: b("failure")?,
+            },
+            "rereg" => TraceEvent::ReRegister {
+                device: u("device")?,
+            },
+            "drain_escalate" => TraceEvent::DrainEscalate {
+                device: u("device")?,
+            },
+            "capability" => TraceEvent::Capability {
+                device: u("device")?,
+                weight: f("weight")?,
+            },
+            other => return Err(format!("unknown trace event kind `{other}`")),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the recorder
+// ---------------------------------------------------------------------------
+
+/// One time-stamped event in a shard's buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// simulated seconds
+    pub t: f64,
+    pub ev: TraceEvent,
+}
+
+/// Per-shard append-only event recorder. Lives inside the engine state;
+/// when disabled, [`Tracer::emit`] is one branch and the event closure is
+/// never evaluated. The legacy `HEYE_TRACE_ASSIGN` / `HEYE_TRACE_XFER`
+/// stderr echoes ride this seam as cached flags (resolved once via
+/// `util::env_flag`), independent of whether recording is on.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    enabled: bool,
+    wall: bool,
+    echo_assign: bool,
+    echo_xfer: bool,
+    records: Vec<TraceRecord>,
+}
+
+impl Tracer {
+    /// A disabled tracer (the engine-state default).
+    pub fn off() -> Tracer {
+        Tracer::default()
+    }
+
+    pub fn new(spec: TraceSpec) -> Tracer {
+        Tracer {
+            enabled: spec.enabled,
+            wall: spec.enabled && spec.wall,
+            echo_assign: crate::util::env_flag("HEYE_TRACE_ASSIGN"),
+            echo_xfer: crate::util::env_flag("HEYE_TRACE_XFER"),
+            records: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Is the wall-clock channel on?
+    #[inline]
+    pub fn wall(&self) -> bool {
+        self.wall
+    }
+
+    /// Legacy `HEYE_TRACE_ASSIGN` stderr echo requested?
+    #[inline]
+    pub fn echo_assign(&self) -> bool {
+        self.echo_assign
+    }
+
+    /// Legacy `HEYE_TRACE_XFER` stderr echo requested?
+    #[inline]
+    pub fn echo_xfer(&self) -> bool {
+        self.echo_xfer
+    }
+
+    /// Record an event at simulated time `t`. The closure is only called
+    /// when tracing is enabled.
+    #[inline]
+    pub fn emit(&mut self, t: f64, ev: impl FnOnce() -> TraceEvent) {
+        if self.enabled {
+            self.records.push(TraceRecord { t, ev: ev() });
+        }
+    }
+
+    /// Drain the buffer (for [`Trace::assemble`]).
+    pub fn take(&mut self) -> Vec<TraceRecord> {
+        std::mem::take(&mut self.records)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the merged trace
+// ---------------------------------------------------------------------------
+
+/// Run-level metadata carried in the trace file's `"heye"` object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMeta {
+    pub scheduler: String,
+    pub horizon_s: f64,
+    pub seed: u64,
+    /// shard count of the engine that ran: `0` = monolithic, `n >= 1` =
+    /// sharded over `n` domains. Overhead reconstruction needs this to
+    /// replay the engine's exact float-accumulation order.
+    pub shards: u64,
+    /// wall-clock channel recorded?
+    pub wall: bool,
+}
+
+/// A record tagged with its origin shard and per-shard sequence number —
+/// the deterministic merge key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaggedRecord {
+    pub shard: u64,
+    pub seq: u64,
+    pub t: f64,
+    pub ev: TraceEvent,
+}
+
+/// A finished run's merged trace. Records are stored in `(shard, seq)`
+/// order — per-shard emission order, shards concatenated in id order —
+/// which is the order every reconstruction replays; the Chrome export
+/// re-sorts a view by `(t, shard, seq)` for display.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    pub records: Vec<TaggedRecord>,
+}
+
+impl Trace {
+    /// Merge per-shard buffers (index = shard id; the monolithic engine
+    /// passes one buffer) into a trace. Deterministic: the output depends
+    /// only on buffer contents, which each shard's event loop fills
+    /// identically for any worker count.
+    pub fn assemble(meta: TraceMeta, buffers: Vec<Vec<TraceRecord>>) -> Trace {
+        let mut records = Vec::new();
+        for (shard, buf) in buffers.into_iter().enumerate() {
+            for (seq, r) in buf.into_iter().enumerate() {
+                records.push(TaggedRecord {
+                    shard: shard as u64,
+                    seq: seq as u64,
+                    t: r.t,
+                    ev: r.ev,
+                });
+            }
+        }
+        Trace { meta, records }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    // ----- Chrome trace-event export ------------------------------------
+
+    /// Export as a Chrome trace-event JSON document (see the module docs
+    /// for the schema). `names` optionally maps device ids to display
+    /// names for the thread tracks; it does not affect `args` payloads.
+    pub fn to_chrome_json(&self, names: Option<&BTreeMap<u64, String>>) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        // metadata: name one process per shard, one thread per device
+        let shards: BTreeSet<u64> = self.records.iter().map(|r| r.shard).collect();
+        let threads: BTreeSet<(u64, u64)> =
+            self.records.iter().map(|r| (r.shard, r.ev.tid())).collect();
+        for &pid in &shards {
+            events.push(Json::obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("name", Json::Str("process_name".into())),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(0.0)),
+                (
+                    "args",
+                    Json::obj(vec![("name", Json::Str(format!("domain {pid}")))]),
+                ),
+            ]));
+        }
+        for &(pid, tid) in &threads {
+            let label = if tid == ORC_TID {
+                "orchestrator".to_string()
+            } else {
+                names
+                    .and_then(|m| m.get(&tid).cloned())
+                    .unwrap_or_else(|| format!("dev {tid}"))
+            };
+            events.push(Json::obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("name", Json::Str("thread_name".into())),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", Json::obj(vec![("name", Json::Str(label))])),
+            ]));
+        }
+        // display order: by time, ties broken by the merge key
+        let mut order: Vec<&TaggedRecord> = self.records.iter().collect();
+        order.sort_by(|a, b| {
+            a.t.total_cmp(&b.t)
+                .then(a.shard.cmp(&b.shard))
+                .then(a.seq.cmp(&b.seq))
+        });
+        for r in order {
+            let mut args = vec![
+                ("kind", Json::Str(r.ev.kind().into())),
+                ("t", Json::Num(r.t)),
+                ("shard", Json::Num(r.shard as f64)),
+                ("seq", Json::Num(r.seq as f64)),
+            ];
+            args.extend(r.ev.args());
+            // duration events: exec spans start at start_t, transfers at t
+            let (ph, ts, dur) = match r.ev {
+                TraceEvent::ExecSpan { start_t, .. } => ("X", start_t, Some(r.t - start_t)),
+                TraceEvent::Transfer { delay_s, .. } => ("X", r.t, Some(delay_s)),
+                _ => ("i", r.t, None),
+            };
+            let mut ev = vec![
+                ("ph", Json::Str(ph.into())),
+                ("name", Json::Str(r.ev.kind().into())),
+                ("ts", Json::Num(ts * 1e6)),
+                ("pid", Json::Num(r.shard as f64)),
+                ("tid", Json::Num(r.ev.tid() as f64)),
+            ];
+            if let Some(d) = dur {
+                ev.push(("dur", Json::Num(d * 1e6)));
+            }
+            if ph == "i" {
+                // instant scope: thread
+                ev.push(("s", Json::Str("t".into())));
+            }
+            ev.push(("args", Json::obj(args)));
+            events.push(Json::obj(ev));
+        }
+        Json::obj(vec![
+            ("displayTimeUnit", Json::Str("ms".into())),
+            (
+                "heye",
+                Json::obj(vec![
+                    ("schema", Json::Num(SCHEMA_VERSION as f64)),
+                    ("scheduler", Json::Str(self.meta.scheduler.clone())),
+                    ("horizon_s", Json::Num(self.meta.horizon_s)),
+                    ("seed", Json::Num(self.meta.seed as f64)),
+                    ("shards", Json::Num(self.meta.shards as f64)),
+                    ("wall", Json::Bool(self.meta.wall)),
+                ]),
+            ),
+            ("traceEvents", Json::Arr(events)),
+        ])
+    }
+
+    /// Parse (and schema-validate) a Chrome trace-event document produced
+    /// by [`Trace::to_chrome_json`]. Full-precision values are read from
+    /// `args`; the `ts`/`dur` microseconds are display-only and ignored.
+    pub fn from_json(doc: &Json) -> Result<Trace, String> {
+        let heye = doc
+            .get("heye")
+            .ok_or("not an heye trace: missing top-level \"heye\" object")?;
+        let schema = heye.get("schema").and_then(Json::as_u64).unwrap_or(0);
+        if schema != SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported trace schema {schema} (this build reads {SCHEMA_VERSION})"
+            ));
+        }
+        let meta = TraceMeta {
+            scheduler: heye
+                .get("scheduler")
+                .and_then(Json::as_str)
+                .ok_or("heye.scheduler missing")?
+                .to_string(),
+            horizon_s: heye
+                .get("horizon_s")
+                .and_then(Json::as_f64)
+                .ok_or("heye.horizon_s missing")?,
+            seed: heye.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            shards: heye
+                .get("shards")
+                .and_then(Json::as_u64)
+                .ok_or("heye.shards missing")?,
+            wall: heye.get("wall").and_then(Json::as_bool).unwrap_or(false),
+        };
+        let events = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or("missing \"traceEvents\" array")?;
+        let mut records = Vec::new();
+        for (i, e) in events.iter().enumerate() {
+            let ph = e
+                .get("ph")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("traceEvents[{i}]: missing ph"))?;
+            match ph {
+                "M" => continue, // metadata: display-only
+                "X" | "i" => {}
+                other => return Err(format!("traceEvents[{i}]: unsupported ph `{other}`")),
+            }
+            for key in ["name", "ts", "pid", "tid"] {
+                if e.get(key).is_none() {
+                    return Err(format!("traceEvents[{i}]: missing {key}"));
+                }
+            }
+            let args = e
+                .get("args")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| format!("traceEvents[{i}]: missing args object"))?;
+            let kind = args
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("traceEvents[{i}]: missing args.kind"))?;
+            let t = args
+                .get("t")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("traceEvents[{i}]: missing args.t"))?;
+            let shard = args
+                .get("shard")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("traceEvents[{i}]: missing args.shard"))?;
+            let seq = args
+                .get("seq")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("traceEvents[{i}]: missing args.seq"))?;
+            let ev = TraceEvent::from_args(kind, args)
+                .map_err(|m| format!("traceEvents[{i}]: {m}"))?;
+            records.push(TaggedRecord { shard, seq, t, ev });
+        }
+        // restore storage order and check the merge key is sound
+        records.sort_by(|a, b| a.shard.cmp(&b.shard).then(a.seq.cmp(&b.seq)));
+        for w in records.windows(2) {
+            if w[0].shard == w[1].shard && w[0].seq == w[1].seq {
+                return Err(format!(
+                    "duplicate (shard, seq) = ({}, {})",
+                    w[0].shard, w[0].seq
+                ));
+            }
+        }
+        Ok(Trace { meta, records })
+    }
+
+    // ----- overhead reconstruction --------------------------------------
+
+    /// Re-derive the engine's scheduling-overhead accounting from the
+    /// trace alone — the `heye trace overhead` report. Floats are
+    /// accumulated in the engine's exact order (per-shard sequence order,
+    /// then shard-order merge; frame compute in completion-report order),
+    /// so the totals match the run's `RunMetrics` bit for bit.
+    pub fn overhead_report(&self) -> OverheadReport {
+        let mut comm = 0.0f64;
+        let mut wall = 0.0f64;
+        let mut hops = 0u64;
+        let mut calls = 0u64;
+        let mut decisions = 0u64;
+        let mut escalations = 0u64;
+        let mut idx = 0;
+        while idx < self.records.len() {
+            let shard = self.records[idx].shard;
+            // per-shard subtotal in seq order, folded in shard order —
+            // mirrors the engine's per-shard accumulators and the sharded
+            // merge (a monolithic run is the single-shard case)
+            let mut sub_comm = 0.0f64;
+            let mut sub_wall = 0.0f64;
+            while idx < self.records.len() && self.records[idx].shard == shard {
+                match self.records[idx].ev {
+                    TraceEvent::SchedDecision {
+                        comm_s,
+                        hops: h,
+                        calls: c,
+                        escalated,
+                        ..
+                    } => {
+                        sub_comm += comm_s;
+                        hops += h;
+                        calls += c;
+                        decisions += 1;
+                        escalations += escalated as u64;
+                    }
+                    TraceEvent::SchedWall { compute_s } => sub_wall += compute_s,
+                    _ => {}
+                }
+                idx += 1;
+            }
+            comm += sub_comm;
+            wall += sub_wall;
+        }
+        // frame compute in the order RunMetrics reports frames: push order
+        // for the monolithic engine, the sharded merge's
+        // (finish, release, origin) stable sort otherwise
+        let mut frames: Vec<(f64, f64, u64, f64, bool)> = self
+            .records
+            .iter()
+            .filter_map(|r| match r.ev {
+                TraceEvent::FrameComplete {
+                    origin,
+                    release_t,
+                    compute_s,
+                    qos_ok,
+                    ..
+                } => Some((r.t, release_t, origin, compute_s, qos_ok)),
+                _ => None,
+            })
+            .collect();
+        if self.meta.shards >= 1 {
+            frames.sort_by(|a, b| {
+                a.0.total_cmp(&b.0)
+                    .then(a.1.total_cmp(&b.1))
+                    .then(a.2.cmp(&b.2))
+            });
+        }
+        let frame_compute: f64 = frames.iter().map(|f| f.3).sum();
+        let qos_ok = frames.iter().filter(|f| f.4).count() as u64;
+        OverheadReport {
+            scheduler: self.meta.scheduler.clone(),
+            decisions,
+            escalations,
+            sched_comm_s: comm,
+            sched_compute_s: if self.meta.wall { Some(wall) } else { None },
+            sched_hops: hops,
+            traverser_calls: calls,
+            frames: frames.len() as u64,
+            frames_qos_ok: qos_ok,
+            frame_compute_s: frame_compute,
+        }
+    }
+
+    // ----- utilization --------------------------------------------------
+
+    /// Per-domain busy seconds over `buckets` equal slices of the horizon,
+    /// smeared from the execution spans: the utilization timeline behind
+    /// the metrics snapshot.
+    pub fn utilization(&self, buckets: usize) -> BTreeMap<u64, Vec<f64>> {
+        let n = buckets.max(1);
+        let width = self.meta.horizon_s / n as f64;
+        let mut by_domain: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
+        if !(width > 0.0) {
+            return by_domain;
+        }
+        for r in &self.records {
+            let TraceEvent::ExecSpan { start_t, .. } = r.ev else {
+                continue;
+            };
+            let (a, b) = (start_t.max(0.0), r.t.min(self.meta.horizon_s));
+            if !(b > a) {
+                continue;
+            }
+            let slots = by_domain.entry(r.shard).or_insert_with(|| vec![0.0; n]);
+            let first = ((a / width).floor() as usize).min(n - 1);
+            let last = ((b / width).ceil() as usize).clamp(first + 1, n);
+            for (i, slot) in slots.iter_mut().enumerate().take(last).skip(first) {
+                let lo = i as f64 * width;
+                let hi = lo + width;
+                let overlap = (b.min(hi) - a.max(lo)).max(0.0);
+                *slot += overlap;
+            }
+        }
+        by_domain
+    }
+
+    /// The utilization timeline as JSON: `[{domain, bucket_s, busy_s:
+    /// [...]}, ...]`.
+    pub fn utilization_json(&self, buckets: usize) -> Json {
+        let width = self.meta.horizon_s / buckets.max(1) as f64;
+        Json::Arr(
+            self.utilization(buckets)
+                .into_iter()
+                .map(|(d, busy)| {
+                    Json::obj(vec![
+                        ("domain", Json::Num(d as f64)),
+                        ("bucket_s", Json::Num(width)),
+                        ("busy_s", Json::Arr(busy.into_iter().map(Json::Num).collect())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the overhead budget report
+// ---------------------------------------------------------------------------
+
+/// Scheduling-overhead accounting reconstructed from a trace — the
+/// `heye trace overhead` budget report reproducing the paper's <2% figure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverheadReport {
+    pub scheduler: String,
+    pub decisions: u64,
+    pub escalations: u64,
+    /// modeled scheduler communication seconds (deterministic channel)
+    pub sched_comm_s: f64,
+    /// measured constraint-check wall seconds (`None` when the trace was
+    /// recorded without the wall channel)
+    pub sched_compute_s: Option<f64>,
+    pub sched_hops: u64,
+    pub traverser_calls: u64,
+    pub frames: u64,
+    pub frames_qos_ok: u64,
+    /// standalone compute seconds of the completed frames — the
+    /// denominator of the paper's Fig. 14 overhead ratio
+    pub frame_compute_s: f64,
+}
+
+impl OverheadReport {
+    /// The Fig. 14 metric: total scheduling overhead over frame compute —
+    /// the same expression `RunMetrics::overhead_ratio` evaluates.
+    pub fn overhead_ratio(&self) -> f64 {
+        if self.frame_compute_s <= 0.0 {
+            return 0.0;
+        }
+        (self.sched_comm_s + self.sched_compute_s.unwrap_or(0.0)) / self.frame_compute_s
+    }
+
+    /// Share of the overhead that is modeled communication (vs measured
+    /// compute); `1.0` when the wall channel is off.
+    pub fn comm_fraction(&self) -> f64 {
+        let total = self.sched_comm_s + self.sched_compute_s.unwrap_or(0.0);
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.sched_comm_s / total
+    }
+
+    /// Does the ratio stay under `budget_pct` percent?
+    pub fn within_budget(&self, budget_pct: f64) -> bool {
+        self.overhead_ratio() * 100.0 <= budget_pct
+    }
+}
+
+impl std::fmt::Display for OverheadReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "== scheduling-overhead budget (from trace) ==")?;
+        writeln!(f, "scheduler        {}", self.scheduler)?;
+        writeln!(
+            f,
+            "decisions        {} ({} escalations)",
+            self.decisions, self.escalations
+        )?;
+        writeln!(
+            f,
+            "sched comm       {:.3} ms ({} hops, {} traverser calls)",
+            self.sched_comm_s * 1e3,
+            self.sched_hops,
+            self.traverser_calls
+        )?;
+        match self.sched_compute_s {
+            Some(w) => writeln!(f, "sched compute    {:.3} ms (measured, wall channel)", w * 1e3)?,
+            None => writeln!(
+                f,
+                "sched compute    not recorded (re-run with --trace-wall)"
+            )?,
+        }
+        writeln!(
+            f,
+            "frame compute    {:.3} ms over {} frames ({} QoS-ok)",
+            self.frame_compute_s * 1e3,
+            self.frames,
+            self.frames_qos_ok
+        )?;
+        write!(
+            f,
+            "overhead         {:.3}% of frame compute (comm fraction {:.0}%)",
+            self.overhead_ratio() * 100.0,
+            self.comm_fraction() * 100.0
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// metrics registry
+// ---------------------------------------------------------------------------
+
+/// Named counters, gauges, and log-bucketed histograms snapshotted per run
+/// — the aggregate view a trace distills into (`heye run --trace-metrics`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, LogHistogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record `v` into the named latency-shaped histogram.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(LogHistogram::latency)
+            .push(v);
+    }
+
+    /// Fold another registry in: counters and histograms add, gauges take
+    /// the other side's value.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.histograms {
+            self.histograms
+                .entry(k.clone())
+                .or_insert_with(LogHistogram::latency)
+                .merge(h);
+        }
+    }
+
+    /// Distill a trace into the standard per-run snapshot: event counters,
+    /// latency/transfer/span histograms, and the overhead gauges.
+    pub fn from_trace(tr: &Trace) -> MetricsRegistry {
+        let mut reg = MetricsRegistry::new();
+        for r in &tr.records {
+            reg.inc(&format!("events.{}", r.ev.kind()), 1);
+            match r.ev {
+                TraceEvent::FrameComplete {
+                    latency_s,
+                    compute_s,
+                    qos_ok,
+                    ..
+                } => {
+                    reg.observe("frame.latency_s", latency_s);
+                    reg.observe("frame.compute_s", compute_s);
+                    if !qos_ok {
+                        reg.inc("frames.qos_miss", 1);
+                    }
+                }
+                TraceEvent::Transfer { delay_s, bytes, .. } => {
+                    reg.observe("xfer.delay_s", delay_s);
+                    reg.observe("xfer.bytes", bytes);
+                }
+                TraceEvent::ExecSpan { start_t, .. } => {
+                    reg.observe("exec.span_s", r.t - start_t);
+                }
+                TraceEvent::SchedDecision { comm_s, .. } => {
+                    reg.observe("sched.comm_s", comm_s);
+                }
+                TraceEvent::SchedWall { compute_s } => {
+                    reg.observe("sched.compute_s", compute_s);
+                }
+                _ => {}
+            }
+        }
+        let report = tr.overhead_report();
+        reg.gauge("sched.overhead_ratio", report.overhead_ratio());
+        reg.gauge("sched.comm_fraction", report.comm_fraction());
+        reg.gauge("frames.completed", report.frames as f64);
+        reg
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                .collect(),
+        );
+        let histograms = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    let buckets = Json::Arr(
+                        h.buckets()
+                            .map(|(lo, hi, c)| {
+                                Json::Arr(vec![
+                                    Json::Num(lo),
+                                    Json::Num(hi),
+                                    Json::Num(c as f64),
+                                ])
+                            })
+                            .collect(),
+                    );
+                    let quant = |q: f64| {
+                        let v = h.quantile(q);
+                        if v.is_finite() {
+                            Json::Num(v)
+                        } else {
+                            Json::Null
+                        }
+                    };
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(h.count() as f64)),
+                            ("underflow", Json::Num(h.underflow() as f64)),
+                            ("mean", Json::Num(h.mean())),
+                            ("p50", quant(0.5)),
+                            ("p95", quant(0.95)),
+                            ("p99", quant(0.99)),
+                            ("buckets", buckets),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(shards: u64, wall: bool) -> TraceMeta {
+        TraceMeta {
+            scheduler: "heye".into(),
+            horizon_s: 1.0,
+            seed: 7,
+            shards,
+            wall,
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing_and_skips_the_closure() {
+        let mut tr = Tracer::off();
+        let mut evaluated = false;
+        tr.emit(0.1, || {
+            evaluated = true;
+            TraceEvent::Join { device: 1 }
+        });
+        assert!(!evaluated, "event closure must not run when disabled");
+        assert!(tr.take().is_empty());
+    }
+
+    #[test]
+    fn assemble_tags_records_with_shard_and_seq() {
+        let buf0 = vec![TraceRecord {
+            t: 0.2,
+            ev: TraceEvent::Join { device: 1 },
+        }];
+        let buf1 = vec![
+            TraceRecord {
+                t: 0.1,
+                ev: TraceEvent::Join { device: 2 },
+            },
+            TraceRecord {
+                t: 0.3,
+                ev: TraceEvent::Leave {
+                    device: 2,
+                    failure: true,
+                },
+            },
+        ];
+        let tr = Trace::assemble(meta(2, false), vec![buf0, buf1]);
+        let tags: Vec<(u64, u64)> = tr.records.iter().map(|r| (r.shard, r.seq)).collect();
+        assert_eq!(tags, vec![(0, 0), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn chrome_roundtrip_preserves_records_and_meta() {
+        let buf = vec![
+            TraceRecord {
+                t: 0.25,
+                ev: TraceEvent::SchedDecision {
+                    frame: 3,
+                    node: 1,
+                    dev: Some(4),
+                    comm_s: 0.001234567890123,
+                    hops: 2,
+                    calls: 17,
+                    escalated: false,
+                    degraded: true,
+                },
+            },
+            TraceRecord {
+                t: 0.5,
+                ev: TraceEvent::ExecSpan {
+                    frame: 3,
+                    node: 1,
+                    device: 4,
+                    pu: 9,
+                    start_t: 0.26,
+                },
+            },
+            TraceRecord {
+                t: 0.5,
+                ev: TraceEvent::FrameComplete {
+                    frame: 3,
+                    origin: 0,
+                    release_t: 0.25,
+                    latency_s: 0.25,
+                    compute_s: 0.2,
+                    qos_ok: true,
+                    degraded: false,
+                },
+            },
+        ];
+        let tr = Trace::assemble(meta(0, false), vec![buf]);
+        let doc = tr.to_chrome_json(None);
+        let text = doc.to_string();
+        let parsed = Trace::from_json(&Json::parse(&text).expect("emitted JSON parses"))
+            .expect("round-trips");
+        assert_eq!(parsed, tr, "records and meta survive bit-for-bit");
+        // and serialization is deterministic
+        assert_eq!(parsed.to_chrome_json(None).to_string(), text);
+    }
+
+    #[test]
+    fn from_json_rejects_schema_and_shape_errors() {
+        assert!(Trace::from_json(&Json::parse("{}").unwrap())
+            .unwrap_err()
+            .contains("heye"));
+        let bad_schema = r#"{"heye": {"schema": 99}, "traceEvents": []}"#;
+        assert!(Trace::from_json(&Json::parse(bad_schema).unwrap())
+            .unwrap_err()
+            .contains("schema"));
+        let bad_event = r#"{
+          "heye": {"schema": 1, "scheduler": "x", "horizon_s": 1, "seed": 0,
+                   "shards": 0, "wall": false},
+          "traceEvents": [{"ph": "i", "name": "y", "ts": 0, "pid": 0,
+                           "tid": 0, "args": {"kind": "nope", "t": 0,
+                           "shard": 0, "seq": 0}}]
+        }"#;
+        assert!(Trace::from_json(&Json::parse(bad_event).unwrap())
+            .unwrap_err()
+            .contains("unknown trace event kind"));
+    }
+
+    #[test]
+    fn overhead_report_accumulates_per_shard_then_merges() {
+        let decision = |comm_s: f64| TraceEvent::SchedDecision {
+            frame: 0,
+            node: 0,
+            dev: Some(1),
+            comm_s,
+            hops: 1,
+            calls: 3,
+            escalated: false,
+            degraded: false,
+        };
+        let frame = |compute_s: f64| TraceEvent::FrameComplete {
+            frame: 0,
+            origin: 0,
+            release_t: 0.0,
+            latency_s: 0.1,
+            compute_s,
+            qos_ok: true,
+            degraded: false,
+        };
+        let buf0 = vec![
+            TraceRecord {
+                t: 0.1,
+                ev: decision(0.001),
+            },
+            TraceRecord {
+                t: 0.2,
+                ev: frame(0.05),
+            },
+        ];
+        let buf1 = vec![
+            TraceRecord {
+                t: 0.15,
+                ev: decision(0.002),
+            },
+            TraceRecord {
+                t: 0.18,
+                ev: frame(0.07),
+            },
+        ];
+        let tr = Trace::assemble(meta(2, false), vec![buf0, buf1]);
+        let rep = tr.overhead_report();
+        assert_eq!(rep.decisions, 2);
+        assert_eq!(rep.sched_hops, 2);
+        assert_eq!(rep.traverser_calls, 6);
+        assert_eq!(rep.frames, 2);
+        assert!((rep.sched_comm_s - 0.003).abs() < 1e-15);
+        assert!((rep.frame_compute_s - 0.12).abs() < 1e-15);
+        assert!(rep.sched_compute_s.is_none(), "wall channel off");
+        assert!((rep.overhead_ratio() - 0.003 / 0.12).abs() < 1e-12);
+        assert!(rep.within_budget(2.51) && !rep.within_budget(2.49));
+    }
+
+    #[test]
+    fn utilization_smears_spans_over_buckets() {
+        let buf = vec![TraceRecord {
+            t: 0.3,
+            ev: TraceEvent::ExecSpan {
+                frame: 0,
+                node: 0,
+                device: 1,
+                pu: 0,
+                start_t: 0.1,
+            },
+        }];
+        let tr = Trace::assemble(meta(0, false), vec![buf]);
+        let util = tr.utilization(10); // 0.1 s buckets over 1 s
+        let busy = &util[&0];
+        assert!((busy[1] - 0.1).abs() < 1e-12);
+        assert!((busy[2] - 0.1).abs() < 1e-12);
+        assert!((busy.iter().sum::<f64>() - 0.2).abs() < 1e-12);
+        assert_eq!(busy[0], 0.0);
+    }
+
+    #[test]
+    fn registry_distills_counters_histograms_and_gauges() {
+        let buf = vec![
+            TraceRecord {
+                t: 0.1,
+                ev: TraceEvent::SchedDecision {
+                    frame: 0,
+                    node: 0,
+                    dev: Some(1),
+                    comm_s: 0.001,
+                    hops: 1,
+                    calls: 2,
+                    escalated: true,
+                    degraded: false,
+                },
+            },
+            TraceRecord {
+                t: 0.2,
+                ev: TraceEvent::FrameComplete {
+                    frame: 0,
+                    origin: 0,
+                    release_t: 0.1,
+                    latency_s: 0.1,
+                    compute_s: 0.08,
+                    qos_ok: false,
+                    degraded: false,
+                },
+            },
+        ];
+        let tr = Trace::assemble(meta(0, false), vec![buf]);
+        let reg = MetricsRegistry::from_trace(&tr);
+        assert_eq!(reg.counters["events.sched"], 1);
+        assert_eq!(reg.counters["frames.qos_miss"], 1);
+        assert_eq!(reg.histograms["frame.latency_s"].count(), 1);
+        assert!(reg.gauges["sched.overhead_ratio"] > 0.0);
+        // snapshot JSON parses back
+        let text = reg.to_json().to_string();
+        assert!(Json::parse(&text).is_ok());
+        // merge: counters add
+        let mut twice = reg.clone();
+        twice.merge(&reg);
+        assert_eq!(twice.counters["events.sched"], 2);
+        assert_eq!(twice.histograms["frame.latency_s"].count(), 2);
+    }
+}

@@ -12,3 +12,19 @@ pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+
+/// Process-wide cached boolean env flag: the variable being *set* (to any
+/// value, including empty) means `true`. Each flag is resolved from the
+/// environment exactly once per process, so hot paths may query it freely;
+/// later `std::env::set_var` calls are intentionally not observed, which
+/// keeps the answer stable for the lifetime of a run.
+pub fn env_flag(name: &str) -> bool {
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex, OnceLock};
+    static FLAGS: OnceLock<Mutex<BTreeMap<String, bool>>> = OnceLock::new();
+    let flags = FLAGS.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let mut cached = flags.lock().unwrap_or_else(|e| e.into_inner());
+    *cached
+        .entry(name.to_string())
+        .or_insert_with(|| std::env::var(name).is_ok())
+}

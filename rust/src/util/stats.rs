@@ -183,6 +183,166 @@ impl Samples {
     }
 }
 
+/// Log-bucketed histogram: bucket `i` covers `[lo * growth^i, lo *
+/// growth^(i+1))`, so relative resolution is a constant `growth` factor at
+/// any magnitude — the right shape for latencies spanning microseconds to
+/// seconds. Values below `lo` (including zero and negatives) land in a
+/// dedicated underflow bucket; NaN and non-finite values are dropped like
+/// [`Samples`] drops NaN. Buckets are integer counts, so
+/// [`LogHistogram::merge`] is exact and associative on everything except
+/// the float `sum`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    lo: f64,
+    growth: f64,
+    /// cached `growth.ln()` — derived from `growth`, never diverges
+    log_growth: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// `lo` is the smallest resolvable value (> 0), `growth` the per-bucket
+    /// width factor (> 1). Panics on invalid parameters — the two numbers
+    /// are compile-time-ish choices, not data.
+    pub fn new(lo: f64, growth: f64) -> Self {
+        assert!(lo > 0.0 && lo.is_finite(), "LogHistogram lo must be > 0");
+        assert!(
+            growth > 1.0 && growth.is_finite(),
+            "LogHistogram growth must be > 1"
+        );
+        Self {
+            lo,
+            growth,
+            log_growth: growth.ln(),
+            counts: Vec::new(),
+            underflow: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Default shape for latency-like seconds: 1 µs floor, 25% buckets
+    /// (~104 buckets to reach 1e4 s).
+    pub fn latency() -> Self {
+        Self::new(1e-6, 1.25)
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        // float error on a boundary value may land it one bucket early or
+        // late; either way the bucket edges still bound it within `growth`
+        let idx = ((v / self.lo).ln() / self.log_growth).floor().max(0.0) as usize;
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Lower edge of bucket `i`.
+    pub fn bucket_lo(&self, i: usize) -> f64 {
+        self.lo * self.growth.powi(i as i32)
+    }
+
+    /// Non-empty buckets as `(lo_edge, hi_edge, count)`, underflow excluded.
+    pub fn buckets(&self) -> impl Iterator<Item = (f64, f64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (self.bucket_lo(i), self.bucket_lo(i + 1), c))
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    /// Merge `other` into `self`. Both histograms must share `(lo, growth)`
+    /// — merging differently-shaped histograms is a programming error.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert!(
+            self.lo == other.lo && self.growth == other.growth,
+            "LogHistogram::merge requires identical (lo, growth)"
+        );
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.underflow += other.underflow;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Upper bucket edge of the `ceil(q * count)`-th smallest recorded
+    /// value (`q` clamped to [0, 1]). For any recorded value `v >= lo`
+    /// at that rank the estimate `e` satisfies `v <= e <= v * growth` (up
+    /// to float rounding); ranks that fall in the underflow bucket report
+    /// `lo`. Empty histograms report NaN.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = self.underflow;
+        if rank <= seen {
+            return self.lo;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if rank <= seen {
+                return self.bucket_lo(i + 1);
+            }
+        }
+        // only reachable when every value is non-finite-filtered (counts
+        // empty but count > 0 cannot happen); fall back to max
+        self.max
+    }
+}
+
 /// One-line latency summary used across harness tables.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
@@ -294,5 +454,114 @@ mod tests {
         let w = Welford::new();
         assert_eq!(w.mean(), 0.0);
         assert_eq!(w.var(), 0.0);
+        let h = LogHistogram::latency();
+        assert_eq!(h.count(), 0);
+        assert!(h.quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn log_histogram_buckets_and_underflow() {
+        let mut h = LogHistogram::new(1e-3, 2.0);
+        for v in [0.0, -1.0, 5e-4, 1.5e-3, 3e-3, 3.5e-3, 0.1, f64::NAN] {
+            h.push(v);
+        }
+        assert_eq!(h.count(), 7, "NaN dropped, everything else counted");
+        assert_eq!(h.underflow(), 3, "zero, negative, and sub-lo values");
+        let buckets: Vec<_> = h.buckets().collect();
+        // 1.5e-3 -> [1e-3, 2e-3); 3e-3 and 3.5e-3 -> [2e-3, 4e-3); 0.1 high
+        assert_eq!(buckets[0].2, 1);
+        assert_eq!(buckets[1].2, 2);
+        assert_eq!(h.min(), -1.0);
+        assert_eq!(h.max(), 0.1);
+    }
+
+    /// A log histogram drawn from random samples, for property tests.
+    fn random_hist(
+        rng: &mut crate::util::rng::Rng,
+        lo: f64,
+        growth: f64,
+        n: usize,
+    ) -> (LogHistogram, Vec<f64>) {
+        let mut h = LogHistogram::new(lo, growth);
+        let mut xs = Vec::with_capacity(n);
+        for _ in 0..n {
+            // log-uniform over six decades above lo
+            let v = lo * 10f64.powf(rng.range_f64(0.0, 6.0));
+            h.push(v);
+            xs.push(v);
+        }
+        (h, xs)
+    }
+
+    /// Merge is associative: counts, extrema, and quantiles are integer /
+    /// order-statistic derived, so they must match exactly; only the float
+    /// `sum` is allowed rounding slack.
+    #[test]
+    fn log_histogram_merge_associative() {
+        crate::util::prop::check("hist-merge-assoc", crate::util::prop::default_cases(), |rng| {
+            let (lo, growth) = (1e-6, 1.25);
+            let (a, _) = random_hist(rng, lo, growth, rng.range(1, 50));
+            let (b, _) = random_hist(rng, lo, growth, rng.range(1, 50));
+            let (c, _) = random_hist(rng, lo, growth, rng.range(1, 50));
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            if left.count() != right.count()
+                || left.underflow() != right.underflow()
+                || left.min() != right.min()
+                || left.max() != right.max()
+                || left.buckets().collect::<Vec<_>>() != right.buckets().collect::<Vec<_>>()
+            {
+                return Err("count/bucket state differs by merge order".into());
+            }
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                if left.quantile(q) != right.quantile(q) {
+                    return Err(format!("quantile({q}) differs by merge order"));
+                }
+            }
+            let rel = (left.sum() - right.sum()).abs() / right.sum().abs().max(1e-300);
+            if rel > 1e-9 {
+                return Err(format!("sum diverged beyond rounding: rel {rel}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// `quantile(q)` brackets the exact order statistic at the same rank
+    /// within one `growth` factor, and the endpoints bracket the exact
+    /// [`Samples`] p0/p100.
+    #[test]
+    fn log_histogram_quantile_bounds_vs_exact_samples() {
+        crate::util::prop::check("hist-quantile-bounds", crate::util::prop::default_cases(), |rng| {
+            let growth = 1.0 + rng.range_f64(0.1, 1.0);
+            let (h, mut xs) = random_hist(rng, 1e-6, growth, rng.range(1, 200));
+            let mut samples = Samples::new();
+            samples.extend(&xs);
+            xs.sort_by(|a, b| a.total_cmp(b));
+            let n = xs.len();
+            let slack = 1.0 + 1e-9;
+            for q in [0.1, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                // same rank convention as LogHistogram::quantile
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = xs[rank - 1];
+                let est = h.quantile(q);
+                if est < exact / slack || est > exact * growth * slack {
+                    return Err(format!(
+                        "quantile({q}) = {est} outside [{exact}, {}]",
+                        exact * growth
+                    ));
+                }
+            }
+            // exact Samples endpoints (no interpolation at p0/p100)
+            let (p0, p100) = (samples.percentile(0.0), samples.percentile(100.0));
+            if h.quantile(0.0) < p0 / slack || h.quantile(1.0) > p100 * growth * slack {
+                return Err("endpoints escaped the exact Samples bounds".into());
+            }
+            Ok(())
+        });
     }
 }

@@ -18,6 +18,7 @@ use heye::hwgraph::LinkKind;
 use heye::platform::{Platform, SchedulerRegistry, WorkloadSpec};
 use heye::scenario::Scenario;
 use heye::sim::{RunMetrics, RunPlan, Scheduler, SimConfig, Simulation, Workload};
+use heye::util::json::Json;
 use std::collections::BTreeMap;
 
 /// Bit-level equality of everything deterministic in a run's metrics
@@ -349,4 +350,58 @@ fn sharded_sessions_report_through_the_unified_facade() {
         "every device belongs to exactly one domain"
     );
     assert_eq!(out.summaries.len(), 3, "one summary per domain");
+}
+
+/// The telemetry proxy under sharded execution: the snapshot a sharded
+/// session captures must round-trip through its own JSON encoding, and the
+/// delegated-orchestration claim must hold across engines — for every home
+/// domain, `escalation_order` computed from the sharded proxy equals the
+/// order computed from the monolithic domain-scheduler proxy of the same
+/// configuration (summaries are structural, so the two engines advertise
+/// the same capability aggregates for the same partition).
+#[test]
+fn sharded_proxy_snapshot_roundtrips_and_matches_monolithic_escalation() {
+    let platform = Platform::builder().paper_vr().build().unwrap();
+    let run = |workers: usize| {
+        platform
+            .session(WorkloadSpec::Vr)
+            .scheduler("heye")
+            .config(
+                SimConfig::default()
+                    .horizon(0.3)
+                    .seed(11)
+                    .domains(3)
+                    .workers(workers),
+            )
+            .run()
+            .expect("proxy run")
+    };
+    let mono = run(0);
+    let sharded = run(2);
+    let mono_proxy = mono.proxy.as_ref().expect("monolithic runs snapshot a proxy");
+    let shard_proxy = sharded.proxy.as_ref().expect("sharded runs snapshot a proxy");
+    assert_eq!(mono_proxy.domains.len(), 3, "one mirror per monolithic domain");
+    assert_eq!(shard_proxy.domains.len(), 3, "one mirror per shard");
+
+    // JSON round-trip: the encoding parses, re-serializes byte-identically,
+    // and mirrors every device the snapshot holds.
+    let text = shard_proxy.to_json().to_string();
+    let parsed = Json::parse(&text).expect("sharded proxy JSON parses");
+    assert_eq!(parsed.to_string(), text, "proxy JSON must round-trip");
+    let devices = parsed.get("devices").and_then(|d| d.as_arr()).unwrap();
+    assert_eq!(
+        devices.len(),
+        shard_proxy.devices.len(),
+        "every device mirrored in the JSON export"
+    );
+
+    // Delegated orchestration is engine-independent: the ε-CON ranks the
+    // mirrored summaries the same whichever engine produced them.
+    for home in 0..3 {
+        assert_eq!(
+            mono_proxy.escalation_order(home),
+            shard_proxy.escalation_order(home),
+            "escalation order from home {home} must match across engines"
+        );
+    }
 }

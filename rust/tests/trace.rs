@@ -1,0 +1,311 @@
+//! Contract tests for the structured tracing layer (`heye::trace`).
+//!
+//! Three invariants anchor the design:
+//!
+//! 1. **Zero observable cost**: `RunMetrics` are byte-identical with the
+//!    tracer on vs off, for both engines.
+//! 2. **Worker-count invariance**: a traced sharded run serializes to
+//!    byte-identical Chrome trace JSON for every worker count `>= 1` — on
+//!    the paper VR testbed, at fleet scale, and through the flaky
+//!    membership preset.
+//! 3. **Bit-exact reconstruction**: `Trace::overhead_report` re-derives
+//!    the engine's scheduling-overhead accounting from the trace alone,
+//!    matching `RunMetrics` bit for bit (the `heye trace overhead` CLI).
+
+use heye::domain::DOMAINS_AUTO;
+use heye::platform::{Platform, RunReport, WorkloadSpec};
+use heye::scenario::Scenario;
+use heye::sim::{RunMetrics, SimConfig};
+use heye::trace::{MetricsRegistry, Trace};
+use heye::util::json::Json;
+
+/// Bit-level equality of everything deterministic in a run's metrics
+/// (`sched_compute_s` / per-frame `sched_s` fold in measured wall-clock by
+/// design, so they are the only fields allowed to differ).
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.frames.len(), b.frames.len(), "{what}: frame count");
+    for (i, (x, y)) in a.frames.iter().zip(b.frames.iter()).enumerate() {
+        assert_eq!(x.origin, y.origin, "{what}: frame {i} origin");
+        assert_eq!(
+            x.release_t.to_bits(),
+            y.release_t.to_bits(),
+            "{what}: frame {i} release"
+        );
+        assert_eq!(
+            x.finish_t.to_bits(),
+            y.finish_t.to_bits(),
+            "{what}: frame {i} finish"
+        );
+        assert_eq!(
+            x.latency_s.to_bits(),
+            y.latency_s.to_bits(),
+            "{what}: frame {i} latency"
+        );
+        assert_eq!(
+            x.comm_s.to_bits(),
+            y.comm_s.to_bits(),
+            "{what}: frame {i} comm"
+        );
+        assert_eq!(
+            x.compute_s.to_bits(),
+            y.compute_s.to_bits(),
+            "{what}: frame {i} compute"
+        );
+        assert_eq!(x.degraded, y.degraded, "{what}: frame {i} degraded");
+    }
+    assert_eq!(a.placements, b.placements, "{what}: placement counts");
+    assert_eq!(a.dropped, b.dropped, "{what}: dropped");
+    assert_eq!(a.released, b.released, "{what}: released");
+    assert_eq!(a.sched_hops, b.sched_hops, "{what}: hops");
+    assert_eq!(
+        a.sched_comm_s.to_bits(),
+        b.sched_comm_s.to_bits(),
+        "{what}: sched comm"
+    );
+    assert_eq!(a.traverser_calls, b.traverser_calls, "{what}: traverser calls");
+    assert_eq!(a.busy_by_device, b.busy_by_device, "{what}: busy accounting");
+    assert_eq!(a.membership, b.membership, "{what}: membership report");
+}
+
+fn vr_report(workers: usize, trace: bool, wall: bool) -> RunReport {
+    let platform = Platform::builder().paper_vr().build().unwrap();
+    platform
+        .session(WorkloadSpec::Vr)
+        .scheduler("heye")
+        .config(
+            SimConfig::default()
+                .horizon(0.4)
+                .seed(11)
+                .domains(3)
+                .workers(workers)
+                .trace(trace)
+                .trace_wall(wall),
+        )
+        .run()
+        .expect("vr run")
+}
+
+fn fleet_report(workers: usize, trace: bool, wall: bool) -> RunReport {
+    let platform = Platform::builder().fleet().build().unwrap();
+    platform
+        .session(WorkloadSpec::Mining {
+            sensors: 48,
+            hz: 10.0,
+        })
+        .scheduler("heye")
+        .config(
+            SimConfig::default()
+                .horizon(0.15)
+                .seed(11)
+                .domains(DOMAINS_AUTO)
+                .workers(workers)
+                .trace(trace)
+                .trace_wall(wall),
+        )
+        .run()
+        .expect("fleet run")
+}
+
+fn flaky_chrome(workers: usize) -> String {
+    let mut sc = Scenario::preset("flaky").expect("preset");
+    sc.cfg.sim.horizon_s = 1.5;
+    sc.cfg.sim.exec.domains = 3;
+    sc.cfg.sim.exec.workers = workers;
+    sc.cfg.sim.exec.trace.enabled = true;
+    let report = sc.run().expect("flaky scenario");
+    report
+        .run
+        .trace
+        .as_ref()
+        .expect("trace recorded")
+        .to_chrome_json(None)
+        .to_string()
+}
+
+/// Invariant 1: tracing must not perturb the run. The deterministic
+/// metrics of a traced run are byte-identical to an untraced one, through
+/// both the monolithic (workers = 0) and sharded engines.
+#[test]
+fn run_metrics_are_byte_identical_trace_on_vs_off() {
+    for workers in [0usize, 2] {
+        let off = vr_report(workers, false, false);
+        let on = vr_report(workers, true, false);
+        assert!(!off.metrics.frames.is_empty(), "run produced no frames");
+        assert!(off.trace.is_none(), "tracing off must record nothing");
+        assert!(
+            on.trace.as_ref().is_some_and(|t| !t.is_empty()),
+            "tracing on must record events"
+        );
+        assert_metrics_identical(
+            &off.metrics,
+            &on.metrics,
+            &format!("trace on/off, workers={workers}"),
+        );
+    }
+}
+
+/// Invariant 2 on the paper VR testbed and at fleet scale: the serialized
+/// Chrome trace is byte-identical for every worker count `>= 1`.
+#[test]
+fn trace_bytes_are_worker_count_invariant() {
+    let vr = |workers| {
+        vr_report(workers, true, false)
+            .trace
+            .expect("trace recorded")
+            .to_chrome_json(None)
+            .to_string()
+    };
+    let base = vr(1);
+    assert!(base.contains("\"traceEvents\""));
+    for workers in [2usize, 4] {
+        assert_eq!(vr(workers), base, "vr trace bytes, workers={workers}");
+    }
+
+    let fleet = |workers| {
+        fleet_report(workers, true, false)
+            .trace
+            .expect("trace recorded")
+            .to_chrome_json(None)
+            .to_string()
+    };
+    let base = fleet(1);
+    assert_eq!(fleet(4), base, "fleet trace bytes, workers=4");
+}
+
+/// Invariant 2 through the flaky membership preset: heartbeat-detected
+/// failures, re-registration, and capability degrades all land in the
+/// trace at barrier-identical points for every worker count.
+#[test]
+fn flaky_preset_trace_is_worker_count_invariant_and_records_membership() {
+    let base = flaky_chrome(1);
+    assert_eq!(flaky_chrome(2), base, "flaky trace bytes, workers=2");
+    assert_eq!(flaky_chrome(4), base, "flaky trace bytes, workers=4");
+    for kind in ["\"leave\"", "\"rereg\"", "\"capability\""] {
+        assert!(base.contains(kind), "flaky trace must record {kind} events");
+    }
+}
+
+fn assert_overhead_reconstructs(report: &RunReport, what: &str) {
+    let m = &report.metrics;
+    let tr = report.trace.as_ref().expect("trace recorded");
+    let rep = tr.overhead_report();
+    assert_eq!(
+        rep.sched_comm_s.to_bits(),
+        m.sched_comm_s.to_bits(),
+        "{what}: sched comm"
+    );
+    assert_eq!(rep.sched_hops, m.sched_hops, "{what}: hops");
+    assert_eq!(
+        rep.traverser_calls, m.traverser_calls,
+        "{what}: traverser calls"
+    );
+    assert_eq!(
+        rep.sched_compute_s.expect("wall channel on").to_bits(),
+        m.sched_compute_s.to_bits(),
+        "{what}: wall compute"
+    );
+    assert_eq!(rep.frames as usize, m.frames.len(), "{what}: frame count");
+    let frame_compute: f64 = m.frames.iter().map(|f| f.compute_s).sum();
+    assert_eq!(
+        rep.frame_compute_s.to_bits(),
+        frame_compute.to_bits(),
+        "{what}: frame compute"
+    );
+    assert_eq!(
+        rep.overhead_ratio().to_bits(),
+        m.overhead_ratio().to_bits(),
+        "{what}: overhead ratio"
+    );
+}
+
+/// Invariant 3: with the wall channel on, `Trace::overhead_report`
+/// reproduces the engine's `Overhead` accounting bit for bit — monolithic
+/// VR and sharded fleet. The budget gate itself is exercised against the
+/// reconstructed ratio, and the deterministic communication share stays
+/// within the repo's Fig. 14 shape (~2% mining / ~4% VR).
+#[test]
+fn overhead_report_matches_engine_accounting_bit_for_bit() {
+    let vr = vr_report(0, true, true);
+    assert_overhead_reconstructs(&vr, "vr monolithic");
+    let fleet = fleet_report(2, true, true);
+    assert_overhead_reconstructs(&fleet, "fleet sharded");
+
+    // the budget gate is a strict threshold on the reconstructed ratio
+    let rep = vr.trace.as_ref().unwrap().overhead_report();
+    let pct = rep.overhead_ratio() * 100.0;
+    assert!(rep.within_budget(pct + 0.1));
+    if pct > 0.2 {
+        assert!(!rep.within_budget(pct - 0.1));
+    }
+
+    // deterministic channel only: comm-share of the overhead, which the
+    // Fig. 14 reproduction keeps in the low single digits of frame compute
+    let comm_only = fleet_report(1, true, false)
+        .trace
+        .expect("trace recorded")
+        .overhead_report();
+    assert!(
+        comm_only.sched_compute_s.is_none(),
+        "wall channel off leaves compute unrecorded"
+    );
+    assert!(
+        comm_only.within_budget(10.0),
+        "fleet comm overhead blew the paper-shaped budget: {:.3}%",
+        comm_only.overhead_ratio() * 100.0
+    );
+}
+
+/// The Chrome export round-trips losslessly through the parser on a real
+/// sharded run (handoffs, barriers, and all), and re-serializes to the
+/// same bytes — what `heye trace validate` relies on.
+#[test]
+fn chrome_export_round_trips_a_real_sharded_run() {
+    let report = fleet_report(2, true, false);
+    let tr = report.trace.as_ref().expect("trace recorded");
+    let doc = report.chrome_trace_json().expect("chrome export");
+    let text = doc.to_string();
+    let parsed =
+        Trace::from_json(&Json::parse(&text).expect("export parses")).expect("export validates");
+    assert_eq!(&parsed, tr, "records and meta survive bit-for-bit");
+    assert_eq!(
+        parsed.to_chrome_json(None).to_string(),
+        tr.to_chrome_json(None).to_string(),
+        "re-serialization is deterministic"
+    );
+
+    // the registry distilled from the parsed trace equals the original's
+    assert_eq!(
+        MetricsRegistry::from_trace(&parsed),
+        MetricsRegistry::from_trace(tr),
+        "metrics registry survives the round trip"
+    );
+}
+
+/// The shipped exemplar runs end to end: scenario parse, traced sharded
+/// run, schema-valid Chrome export, utilization timeline, and a
+/// reconstructed overhead report consistent with the run's metrics.
+#[test]
+fn example_trace_scenario_runs_end_to_end() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_trace.json");
+    let sc = Scenario::load(path).unwrap();
+    assert_eq!(sc.name, "trace");
+    assert!(sc.cfg.sim.exec.trace.enabled, "exemplar must enable tracing");
+    assert!(sc.cfg.sim.exec.workers >= 1, "exemplar must run sharded");
+    let report = sc.run().unwrap();
+    let tr = report.run.trace.as_ref().expect("traced scenario run");
+    assert!(!tr.is_empty(), "exemplar trace must record events");
+    let doc = report.run.chrome_trace_json().expect("chrome export");
+    let parsed = Trace::from_json(&doc).expect("exemplar export validates");
+    assert_eq!(parsed.len(), tr.len());
+    let rep = tr.overhead_report();
+    assert_eq!(rep.frames as usize, report.run.metrics.frames.len());
+    assert_eq!(
+        rep.sched_comm_s.to_bits(),
+        report.run.metrics.sched_comm_s.to_bits(),
+        "exemplar overhead reconstructs"
+    );
+    assert!(
+        !tr.utilization(50).is_empty(),
+        "exemplar must yield a utilization timeline"
+    );
+}
