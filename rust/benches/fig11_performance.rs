@@ -112,6 +112,7 @@ fn fig11b() {
                             start_t: 0.0,
                             count: None,
                             arrival: heye::sim::ArrivalModel::Periodic,
+                            qos_class: heye::task::QosClass::Interactive,
                         }
                     })
                     .collect();

@@ -1,0 +1,323 @@
+//! Fig. 21 (reproduction extension) — million-client steady state: an
+//! arrival-rate sweep to the saturation knee under the frame fast path
+//! and QoS-class admission control.
+//!
+//! The workload is fleet-scale mining with the sensor population dealt
+//! round-robin over the three QoS classes (`interactive` / `standard` /
+//! `bulk`), so every admission decision path is live. The harness first
+//! probes upward (rate doubling) until the admission gate starts shedding
+//! — that rate is the *knee* — then times full runs below / at / past the
+//! knee, with the gate on and (past the knee) off.
+//!
+//! Untimed assertions before any timing is trusted:
+//!   * below saturation, admission on is byte-identical to admission off
+//!     (the gate is pass-through), and the fast path on is byte-identical
+//!     to off (the cache never changes a decision);
+//!   * the no-churn steady state is fast-path dominated: >= 90% hit rate
+//!     on the process-wide counters;
+//!   * past the knee the gate sheds bulk (and only ever bulk/standard —
+//!     interactive still completes frames).
+//!
+//! The admission config is deliberately tightened
+//! (`saturation_tasks_per_pu` well under the 2.0 default) so the knee
+//! lands inside the sweep at bench scale; the class *ordering* is
+//! scale-free.
+//!
+//! Flags:
+//!   --reps N     timed runs per cell (default 3, smoke 2)
+//!   --smoke      fleet topology (192 edges) instead of metro (10k)
+//!   --json PATH  write the runs + sweep curve as BENCH_saturation.json
+//!   --gate PATH  compare p50 per case against a committed baseline
+//!   --tol X      gate tolerance multiple (default 4)
+
+use heye::hwgraph::presets::{Decs, DecsSpec};
+use heye::orchestrator::fastpath;
+use heye::platform::SchedulerRegistry;
+use heye::sim::{AdmissionConfig, RunMetrics, RunPlan, SimConfig, Simulation, Workload};
+use heye::task::QosClass;
+use heye::util::bench::{bench, gate, report, results_json, BenchResult};
+use heye::util::cli::Args;
+use heye::util::json::Json;
+
+/// Mining at `10 * rate` Hz with the sensors dealt over the QoS classes.
+fn workload(decs: &Decs, sensors: usize, rate: f64) -> Workload {
+    let mut wl = Workload::mining(decs, sensors, 10.0 * rate);
+    for (i, s) in wl.sources.iter_mut().enumerate() {
+        s.qos_class = QosClass::ALL[i % QosClass::ALL.len()];
+    }
+    wl
+}
+
+fn run_once(
+    sim: &mut Simulation,
+    sensors: usize,
+    rate: f64,
+    admission: Option<&AdmissionConfig>,
+    fast: bool,
+    horizon: f64,
+) -> RunMetrics {
+    let entry = SchedulerRegistry::lookup("heye").expect("heye registered");
+    let wl = workload(&sim.decs, sensors, rate);
+    let mut cfg = SimConfig::default().horizon(horizon).seed(11).fast_path(fast);
+    if let Some(a) = admission {
+        cfg = cfg.admission(a.clone());
+    }
+    let mut sched = entry.build(&sim.decs);
+    sim.run(sched.as_mut(), wl, &RunPlan::default(), &cfg)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let reps = args.get_usize("reps", if smoke { 2 } else { 3 }).max(1);
+    let horizon = 0.2;
+
+    println!("=== Fig. 21: saturation knee, fast path + QoS-class admission ===");
+    let spec = if smoke {
+        DecsSpec::fleet()
+    } else {
+        DecsSpec::metro()
+    };
+    let decs = Decs::build(&spec);
+    let n_edges = decs.edge_devices.len();
+    let sensors = (n_edges / 4).max(16);
+    println!(
+        "topology: {} edges, {} servers ({}), {} sensors dealt over {:?}",
+        n_edges,
+        decs.servers.len(),
+        if smoke { "fleet" } else { "metro" },
+        sensors,
+        QosClass::ALL.map(|c| c.name()),
+    );
+    let mut sim = Simulation::new(decs);
+
+    // tightened knee so the sweep crosses it at bench scale
+    let adm = AdmissionConfig {
+        saturation_tasks_per_pu: 0.02,
+        queue_cap: 32,
+        queue_delay_s: 0.002,
+    };
+
+    // --- untimed contract assertions -----------------------------------
+    // below saturation: a loose (default) gate is pass-through, and the
+    // fast path never changes a decision
+    {
+        let same = |a: &RunMetrics, b: &RunMetrics, what: &str| {
+            assert_eq!(a.frames.len(), b.frames.len(), "{what}: frame count");
+            assert_eq!(a.placements, b.placements, "{what}: placements");
+            assert_eq!(a.busy_by_device, b.busy_by_device, "{what}: busy accounting");
+            assert_eq!(a.released, b.released, "{what}: released");
+            assert_eq!(a.dropped, b.dropped, "{what}: dropped");
+        };
+        let bare = run_once(&mut sim, sensors, 1.0, None, true, horizon);
+        let loose = AdmissionConfig::default();
+        let gated = run_once(&mut sim, sensors, 1.0, Some(&loose), true, horizon);
+        same(&bare, &gated, "below-saturation admission on vs off");
+        let a = gated.admission.as_ref().expect("gated run carries a report");
+        assert_eq!(a.shed_total() + a.deferred, 0, "loose gate must not intervene");
+        let slow = run_once(&mut sim, sensors, 1.0, None, false, horizon);
+        same(&bare, &slow, "fast path on vs off");
+        println!(
+            "identity: admission pass-through + fast path on/off byte-identical \
+             at rate 1x ({} frames, asserted)",
+            bare.frames.len()
+        );
+    }
+
+    // no-churn steady state: the fast path must dominate (>= 90% hits on
+    // the process-wide counters, long horizon so cold misses amortize)
+    let steady_hit_rate = {
+        fastpath::reset_counters();
+        let m = run_once(&mut sim, sensors, 1.0, None, true, 2.0);
+        let (hits, misses) = fastpath::counters();
+        assert!(hits + misses > 0, "steady run drove no assigns");
+        let rate = hits as f64 / (hits + misses) as f64;
+        assert!(
+            rate >= 0.9,
+            "steady-state fast-path hit rate {rate:.3} < 0.9 (hits={hits} misses={misses})"
+        );
+        println!(
+            "steady state: fast-path hit rate {:.1}% over {} frames (asserted >= 90%)\n",
+            rate * 100.0,
+            m.frames.len()
+        );
+        rate
+    };
+
+    // --- probe the knee: double the rate until the gate sheds -----------
+    struct Point {
+        rate: f64,
+        frames: usize,
+        shed_bulk: u64,
+        shed_standard: u64,
+        deferred: u64,
+        queue_p95: u32,
+        hit_rate: f64,
+        sched_us_per_frame: f64,
+        goodput: Vec<(QosClass, u64, u64)>,
+    }
+    let mut curve: Vec<Point> = Vec::new();
+    let mut knee: Option<f64> = None;
+    let mut rate = 1.0;
+    while rate <= 64.0 {
+        fastpath::reset_counters();
+        let m = run_once(&mut sim, sensors, rate, Some(&adm), true, horizon);
+        let (hits, misses) = fastpath::counters();
+        let a = m.admission.clone().unwrap_or_default();
+        let p = Point {
+            rate,
+            frames: m.frames.len(),
+            shed_bulk: a.shed_bulk,
+            shed_standard: a.shed_standard,
+            deferred: a.deferred,
+            queue_p95: a.queue_depth_p95(),
+            hit_rate: hits as f64 / (hits + misses).max(1) as f64,
+            sched_us_per_frame: m.sched_compute_s * 1e6 / m.frames.len().max(1) as f64,
+            goodput: QosClass::ALL
+                .iter()
+                .map(|&c| {
+                    let (good, total) = m.class_goodput(c);
+                    (c, good, total)
+                })
+                .collect(),
+        };
+        println!(
+            "rate {:>4.1}x: {} frames, shed bulk={} std={}, deferred={}, queue p95={}, \
+             hit rate {:.1}%, sched {:.1} us/frame",
+            p.rate,
+            p.frames,
+            p.shed_bulk,
+            p.shed_standard,
+            p.deferred,
+            p.queue_p95,
+            p.hit_rate * 100.0,
+            p.sched_us_per_frame,
+        );
+        let shedding = a.shed_total() > 0;
+        curve.push(p);
+        if shedding {
+            knee = Some(rate);
+            break;
+        }
+        rate *= 2.0;
+    }
+    let knee = knee.expect("the admission gate never shed: knee not found by rate 64x");
+    let at = curve.last().expect("knee probe recorded its run");
+    assert!(at.shed_bulk > 0, "bulk must shed first at the knee");
+    let (inter_good, inter_total) = at
+        .goodput
+        .iter()
+        .find_map(|&(c, g, t)| (c == QosClass::Interactive).then_some((g, t)))
+        .expect("interactive class present");
+    assert!(
+        inter_total > 0,
+        "interactive frames must keep completing at the knee (never shed)"
+    );
+    println!(
+        "\nknee: rate {knee:.0}x — bulk sheds ({}), interactive still completes \
+         {inter_good}/{inter_total} good frames\n",
+        at.shed_bulk
+    );
+
+    // --- timed cells: below / at / past the knee ------------------------
+    let mut results: Vec<BenchResult> = Vec::new();
+    let cells: &[(&str, f64, bool)] = &[
+        ("saturation run: below knee (admission on)", knee / 2.0, true),
+        ("saturation run: at knee (admission on)", knee, true),
+        ("saturation run: past knee (admission on)", knee * 2.0, true),
+        ("saturation run: past knee (admission off)", knee * 2.0, false),
+    ];
+    for &(label, r, gated) in cells {
+        let admission = gated.then_some(&adm);
+        results.push(bench(label, 1, reps, || {
+            std::hint::black_box(run_once(&mut sim, sensors, r, admission, true, horizon));
+        }));
+    }
+    report("full simulation runs around the saturation knee", &results);
+    println!(
+        "\nshape: below the knee the gate is pass-through and the fast path \
+         keeps per-frame scheduling flat; past it, bulk sheds first and \
+         standard absorbs the rest in its bounded queue, so interactive \
+         goodput stays flat while total throughput bends."
+    );
+
+    if let Some(path) = args.get("json") {
+        let mut json = results_json("fig21_saturation", &results);
+        if let Json::Obj(map) = &mut json {
+            map.insert("edges".to_string(), Json::Num(n_edges as f64));
+            map.insert("sensors".to_string(), Json::Num(sensors as f64));
+            map.insert("horizon_s".to_string(), Json::Num(horizon));
+            map.insert("knee_rate".to_string(), Json::Num(knee));
+            map.insert("steady_hit_rate".to_string(), Json::Num(steady_hit_rate));
+            map.insert(
+                "knee_hit_rate".to_string(),
+                Json::Num(curve.last().map(|p| p.hit_rate).unwrap_or(f64::NAN)),
+            );
+            map.insert(
+                "knee_sched_us_per_frame".to_string(),
+                Json::Num(
+                    curve
+                        .last()
+                        .map(|p| p.sched_us_per_frame)
+                        .unwrap_or(f64::NAN),
+                ),
+            );
+            map.insert(
+                "sweep".to_string(),
+                Json::Arr(
+                    curve
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("rate", Json::Num(p.rate)),
+                                ("frames", Json::Num(p.frames as f64)),
+                                ("shed_bulk", Json::Num(p.shed_bulk as f64)),
+                                ("shed_standard", Json::Num(p.shed_standard as f64)),
+                                ("deferred", Json::Num(p.deferred as f64)),
+                                ("queue_p95", Json::Num(p.queue_p95 as f64)),
+                                ("hit_rate", Json::Num(p.hit_rate)),
+                                (
+                                    "sched_us_per_frame",
+                                    Json::Num(p.sched_us_per_frame),
+                                ),
+                                (
+                                    "goodput",
+                                    Json::Arr(
+                                        p.goodput
+                                            .iter()
+                                            .map(|&(c, good, total)| {
+                                                Json::obj(vec![
+                                                    ("class", Json::Str(c.name().into())),
+                                                    ("good", Json::Num(good as f64)),
+                                                    ("total", Json::Num(total as f64)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        std::fs::write(path, json.to_string()).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("gate") {
+        let tol = args.get_f64("tol", 4.0);
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("reading baseline {path}: {e}"));
+        let baseline = Json::parse(&text).unwrap_or_else(|e| panic!("parsing {path}: {e}"));
+        let violations = gate(&baseline, &results, tol);
+        if violations.is_empty() {
+            println!("bench gate: all cases within {tol:.1}x of {path}");
+        } else {
+            eprintln!("bench gate FAILED against {path}:");
+            for v in &violations {
+                eprintln!("  {v}");
+            }
+            std::process::exit(1);
+        }
+    }
+}

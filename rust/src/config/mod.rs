@@ -154,6 +154,42 @@ impl ExpConfig {
                 c.sim.exec.trace.enabled = true;
             }
         }
+        if let Some(v) = j.get("fast_path").and_then(|v| v.as_bool()) {
+            // the steady-state frame fast path (on by default; modeled
+            // results are byte-identical either way)
+            c.sim.exec.fast_path = v;
+        }
+        if let Some(a) = j.get("admission") {
+            // QoS-class admission control: `true` for the defaults, or an
+            // object overriding individual AdmissionConfig knobs
+            let mut ac = crate::sim::AdmissionConfig::default();
+            match a {
+                Json::Bool(true) => {}
+                Json::Bool(false) => bail!("admission: omit the key to disable"),
+                _ => {
+                    let obj = a
+                        .as_obj()
+                        .ok_or_else(|| err!("admission must be true or an object"))?;
+                    for k in obj.keys() {
+                        if !["saturation_tasks_per_pu", "queue_cap", "queue_delay_s"]
+                            .contains(&k.as_str())
+                        {
+                            bail!("admission.{k} is not a knob");
+                        }
+                    }
+                    if let Some(v) = a.get("saturation_tasks_per_pu").and_then(|v| v.as_f64()) {
+                        ac.saturation_tasks_per_pu = v;
+                    }
+                    if let Some(v) = a.get("queue_cap").and_then(|v| v.as_u64()) {
+                        ac.queue_cap = v as usize;
+                    }
+                    if let Some(v) = a.get("queue_delay_s").and_then(|v| v.as_f64()) {
+                        ac.queue_delay_s = v;
+                    }
+                }
+            }
+            c.sim.exec.admission = Some(ac);
+        }
         if let Some(v) = j.get("sensors").and_then(|v| v.as_u64()) {
             c.sensors = v as usize;
         }
@@ -429,6 +465,37 @@ mod tests {
         assert!(e.to_string().contains("deadline_s"), "{e}");
         // non-positive drain deadline
         assert!(ExpConfig::parse(r#"{ "drain_deadline_s": 0 }"#).is_err());
+    }
+
+    #[test]
+    fn parses_admission_and_fast_path_knobs() {
+        // `true` selects the defaults
+        let c = ExpConfig::parse(r#"{ "admission": true }"#).unwrap();
+        let a = c.sim.exec.admission.unwrap();
+        assert_eq!(a, crate::sim::AdmissionConfig::default());
+        // an object overrides individual knobs
+        let c = ExpConfig::parse(
+            r#"{ "admission": { "saturation_tasks_per_pu": 1.5, "queue_cap": 8 } }"#,
+        )
+        .unwrap();
+        let a = c.sim.exec.admission.unwrap();
+        assert_eq!(a.saturation_tasks_per_pu, 1.5);
+        assert_eq!(a.queue_cap, 8);
+        assert_eq!(
+            a.queue_delay_s,
+            crate::sim::AdmissionConfig::default().queue_delay_s
+        );
+        // misconfigurations are parse-time errors via the single
+        // ExecOpts validation point
+        assert!(ExpConfig::parse(r#"{ "admission": { "queue_cap": 0 } }"#).is_err());
+        assert!(ExpConfig::parse(r#"{ "admission": { "quue_cap": 4 } }"#).is_err());
+        assert!(ExpConfig::parse(r#"{ "admission": false }"#).is_err());
+        // fast path: on by default, disablable
+        assert!(ExpConfig::parse("{}").unwrap().sim.exec.fast_path);
+        let c = ExpConfig::parse(r#"{ "fast_path": false }"#).unwrap();
+        assert!(!c.sim.exec.fast_path);
+        // off by default
+        assert!(ExpConfig::parse("{}").unwrap().sim.exec.admission.is_none());
     }
 
     #[test]

@@ -252,6 +252,10 @@ impl Domain {
         self.sub.set_parallelism(threads);
     }
 
+    pub(super) fn set_fast_path(&mut self, on: bool) {
+        self.sub.set_fast_path(on);
+    }
+
     pub(super) fn reset(&mut self) {
         self.sub.reset();
     }

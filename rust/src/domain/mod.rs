@@ -322,6 +322,12 @@ impl Scheduler for DomainScheduler {
         }
     }
 
+    fn set_fast_path(&mut self, on: bool) {
+        for d in &mut self.domains {
+            d.set_fast_path(on);
+        }
+    }
+
     fn reset(&mut self) {
         for d in &mut self.domains {
             d.reset();

@@ -89,7 +89,7 @@
 //! ## CI bench gate
 //!
 //! CI runs `perf_hotpath` with `--json BENCH_hotpath.json --gate
-//! rust/benches/baselines/BENCH_hotpath.json --tol 6`: each case's p50
+//! rust/benches/baselines/BENCH_hotpath.json --tol 5`: each case's p50
 //! must stay within the tolerance multiple of the committed baseline or
 //! the job fails; both bench JSONs are uploaded as workflow artifacts. To
 //! refresh the baseline after an intentional perf change, run
@@ -147,8 +147,8 @@
 //! horizon, out-of-range `edge_index`, membership misconfigurations are
 //! errors naming the entry). Runs return a [`scenario::ScenarioReport`]:
 //! p50/p95/p99 latency, QoS-miss rate, a goodput timeline, and
-//! per-disruption costs. Six presets ship built in — `steady`,
-//! `flashcrowd`, `diurnal`, `churn`, `partition`, `flaky` —
+//! per-disruption costs. Seven presets ship built in — `steady`,
+//! `flashcrowd`, `diurnal`, `churn`, `partition`, `flaky`, `storm` —
 //! listed by `heye scenario list` and run by `heye scenario run --preset
 //! churn` (or `--file rust/examples/scenario_churn.json`); `heye run
 //! --report-json out.json` and `heye scenario run --report-json out.json`
@@ -221,9 +221,10 @@
 //! JSON-exportable mirror of per-domain membership, per-device load, and
 //! heartbeat health captured after every domain or membership run
 //! ([`platform::RunReport::proxy`]). External tooling — and the admission
-//! layer planned on top — queries the snapshot instead of touching engine
-//! state; [`telemetry::ProxySnapshot::escalation_order`] reproduces the
-//! live ε-CON's domain ranking from the mirror alone.
+//! layer built on the same headroom signal ("Admission control & the
+//! frame fast path" below) — queries the snapshot instead of touching
+//! engine state; [`telemetry::ProxySnapshot::escalation_order`]
+//! reproduces the live ε-CON's domain ranking from the mirror alone.
 //!
 //! ## Sharded execution: one event loop per domain
 //!
@@ -283,6 +284,60 @@
 //! from the engine's own final summaries, so
 //! [`telemetry::ProxySnapshot::escalation_order`] works identically
 //! against either engine.
+//!
+//! ## Admission control & the frame fast path
+//!
+//! Million-client steady state splits frame scheduling into a **fast
+//! path** (the common case: nothing changed, revalidate and go) and a
+//! **slow path** (the full mapping search), with a **QoS-class admission
+//! gate** in front of both.
+//!
+//! **QoS classes.** Every [`sim::FrameSource`] — and every frame it
+//! releases, end to end into [`sim::FrameRecord`] — carries a
+//! [`task::QosClass`]: `interactive` (VR's default), `standard` (mining's
+//! default), or `bulk`. Override per run with `Session::qos_class`,
+//! `"qos_class"` in scenario JSON, or `heye run --qos CLASS`; per-source
+//! classes go through `WorkloadSpec::custom` (`FrameSource::qos_class` is
+//! public). [`sim::RunMetrics::class_goodput`] splits goodput by class.
+//!
+//! **The fast path.** [`orchestrator::fastpath::PlacementCache`] keeps
+//! one sticky placement per (origin, task kind), revalidated in O(1)
+//! against the structural epoch, device liveness, and tenancy headroom —
+//! a hit skips the per-tier broadcast entirely; a miss falls through to
+//! the full `map_task` and re-arms the entry. The cache is
+//! delta-maintained on join / leave / fail / degrade (epoch bumps
+//! invalidate exactly the affected entries; `tests/fastpath.rs` asserts
+//! the delta path byte-identical to a from-scratch rebuild at every epoch
+//! bump). Placements and `RunMetrics` are **byte-identical with the fast
+//! path on or off** — only the per-frame scheduling cost changes
+//! ([`orchestrator::fastpath::counters`] exposes process-global
+//! hit/miss counts; `fig21_saturation` asserts a ≥90% hit rate in
+//! no-churn steady state). Knobs: [`sim::SimConfig::fast_path`],
+//! `PlatformBuilder::fast_path` / `Session::fast_path`, `"fast_path"` in
+//! config/scenario JSON, `heye run --no-fastpath` (on by default).
+//!
+//! **Admission control.** [`sim::AdmissionConfig`] inserts an admission
+//! gate between the [`sim::ArrivalModel`] and the scheduler — in *both*
+//! engines (the monolithic loop decides per arrival against a live
+//! active-PU headroom count; each shard decides against its domain's
+//! barrier-consistent [`domain::DomainSummary`] headroom, keeping
+//! `RunMetrics` worker-count invariant). Per-class policy when the
+//! backlog saturates (`saturation_tasks_per_pu`): **`bulk` sheds first**,
+//! **`standard` waits** in a bounded queue (`queue_cap` deep, re-polled
+//! every `queue_delay_s`, its QoS budget still anchored at arrival), and
+//! **`interactive` is never shed**. Shed arrivals never become frames:
+//! they are excluded from `dropped` and
+//! [`sim::RunMetrics::qos_failure_rate`] by construction and separated in
+//! [`sim::AdmissionReport`] (shed per class, deferrals, p95 queue depth),
+//! with typed `FrameShed` / `FrameDeferred` trace events on the
+//! deterministic channel. Below saturation the gate is invisible:
+//! `RunMetrics` are **byte-identical with admission on or off**. Knobs:
+//! [`sim::SimConfig::admission`], `PlatformBuilder::admission` /
+//! `Session::admission`, `"admission"` in config/scenario JSON, `heye run
+//! --admission`. The `storm` preset composes a fleet-scale flash crowd,
+//! churn, and a healed partition under the gate, and `cargo bench --bench
+//! fig21_saturation` sweeps arrival rate past the knee — interactive
+//! goodput stays flat while bulk sheds.
 //!
 //! ## Observability: [`trace`] — deterministic event traces + metrics
 //!

@@ -9,9 +9,10 @@
 //! heye compare --app mining          # H-EYE vs every baseline
 //! ```
 
-use heye::platform::{Platform, RunReport, SchedulerRegistry, WorkloadSpec};
+use heye::platform::{Platform, RunReport, SchedulerRegistry, Session, WorkloadSpec};
 use heye::scenario::Scenario;
-use heye::sim::SimConfig;
+use heye::sim::{AdmissionConfig, SimConfig};
+use heye::task::QosClass;
 use heye::telemetry;
 use heye::trace::{MetricsRegistry, Trace};
 use heye::util::cli::Args;
@@ -28,6 +29,7 @@ USAGE:
   heye run     [--app vr|mining] [--sched NAME] [--edges N] [--servers M]
                [--fleet] [--metro] [--sensors K] [--horizon S] [--seed N]
                [--noise F] [--parallelism T] [--domains N|auto] [--workers W]
+               [--admission] [--no-fastpath] [--qos CLASS]
                [--json] [--report-json PATH] [--config FILE] [--placements]
                [--trace PATH] [--trace-metrics PATH] [--trace-wall]
   heye compare [--app vr|mining] [--edges N] [--servers M] [--fleet]
@@ -36,8 +38,8 @@ USAGE:
                [--sched NAME]
   heye scenario list
   heye scenario run (--file FILE | --preset NAME) [--sched NAME] [--seed N]
-               [--horizon S] [--parallelism T] [--report-json PATH]
-               [--trace PATH] [--trace-metrics PATH] [--trace-wall]
+               [--horizon S] [--parallelism T] [--admission] [--report-json
+               PATH] [--trace PATH] [--trace-metrics PATH] [--trace-wall]
   heye membership run (--file FILE | --preset NAME) [--sched NAME] [--seed N]
                [--horizon S] [--parallelism T] [--proxy-json PATH]
   heye trace validate FILE
@@ -55,6 +57,12 @@ WORKERS: shard-driving worker threads for the sharded engine
 FLEET: the continuum-scale preset (hundreds of edges; see fig16_fleet)
 METRO: the metro-scale preset (ten thousand edges; the fig20_shards
        topology — pair with --domains auto --workers 0|N)
+ADMISSION: QoS-class admission control with the default knobs (shed `bulk`
+           first, bounded-queue `standard`, never shed `interactive`);
+           config/scenario files tune the knobs via an `admission` object.
+           --no-fastpath disables the O(1) sticky-placement revalidation
+           (results are byte-identical; only scheduling cost changes).
+           --qos interactive|standard|bulk overrides every source's class
 SCENARIOS: declarative dynamic runs (open-loop arrivals + churn); see
            `heye scenario list` for presets and rust/examples/ for schema
 MEMBERSHIP: organic membership runs (heartbeats, failure detection,
@@ -189,9 +197,25 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Session-level flags shared by the flag-driven and `--config` paths:
+/// `--admission` (default knobs), `--no-fastpath`, `--qos CLASS`.
+fn apply_session_flags<'p>(args: &Args, mut session: Session<'p>) -> Result<Session<'p>> {
+    if args.has("admission") {
+        session = session.admission(AdmissionConfig::default());
+    }
+    if args.has("no-fastpath") {
+        session = session.fast_path(false);
+    }
+    if let Some(c) = args.get("qos") {
+        let class = QosClass::parse(c).map_err(|m| heye::err!("--qos: {m}"))?;
+        session = session.qos_class(class);
+    }
+    Ok(session)
+}
+
 fn run_report(args: &Args) -> Result<RunReport> {
-    // --config FILE overrides all other flags (except the trace outputs,
-    // which are CLI-side and may enable tracing on top of the file)
+    // --config FILE overrides all other flags (except the trace outputs
+    // and session flags, which are CLI-side and layer on top of the file)
     if let Some(path) = args.get("config") {
         let c = heye::config::ExpConfig::load(path)?;
         let platform = c.platform()?;
@@ -202,14 +226,15 @@ fn run_report(args: &Args) -> Result<RunReport> {
         if args.has("trace-wall") {
             session = session.trace_wall(true);
         }
+        session = apply_session_flags(args, session)?;
         Ok(session.run()?)
     } else {
         let platform = platform_from(args)?;
-        Ok(platform
+        let session = platform
             .session(workload_from(args))
             .scheduler(&args.get_or("sched", "heye"))
-            .config(sim_config(args))
-            .run()?)
+            .config(sim_config(args));
+        Ok(apply_session_flags(args, session)?.run()?)
     }
 }
 
@@ -242,6 +267,14 @@ fn write_trace_outputs(args: &Args, report: &RunReport) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let report = run_report(args)?;
     report.print_summary();
+    if let Some(a) = &report.metrics.admission {
+        println!(
+            "admission: shed={} deferred={} queue_p95={}",
+            a.shed_total(),
+            a.deferred,
+            a.queue_depth_p95()
+        );
+    }
     report.print_breakdown(&format!("per-device breakdown ({})", report.scheduler));
     if args.has("placements") {
         println!("\nplacements (kind / pu class / tier):");
@@ -304,6 +337,9 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             }
             if args.has("parallelism") {
                 sc.cfg.sim.exec.parallelism = args.get_usize("parallelism", sc.cfg.sim.exec.parallelism);
+            }
+            if args.has("admission") {
+                sc.cfg.sim.exec.admission = Some(AdmissionConfig::default());
             }
             if wants_trace(args) {
                 sc.cfg.sim.exec.trace.enabled = true;

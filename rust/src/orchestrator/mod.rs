@@ -15,6 +15,7 @@
 //! measured* local compute time of the constraint checks — is accounted per
 //! mapping and reported by Fig. 14/15 harnesses.
 
+pub mod fastpath;
 pub mod hierarchy;
 pub mod policy;
 
@@ -134,7 +135,7 @@ pub struct Orchestrator {
     parallelism: usize,
 }
 
-fn kind_tag(k: TaskKind) -> u8 {
+pub(crate) fn kind_tag(k: TaskKind) -> u8 {
     k as u8
 }
 
@@ -199,34 +200,7 @@ impl Orchestrator {
         loads: &Loads,
     ) -> MapResult {
         let mut overhead = Overhead::default();
-        // pinned stages never leave the origin (sensor/display attached)
-        let candidates: Vec<NodeId> = if task.kind.pinned_to_origin() {
-            vec![origin_dev]
-        } else {
-            self.search_order(origin_dev, data_dev, task)
-        };
-        // Escalation through the hierarchy is a *broadcast* per tier: the
-        // cluster ORC fans MapTask out to its children in parallel (this is
-        // what keeps the paper's ORC message complexity logarithmic, §3.5),
-        // so communication time is paid once per tier reached, while `hops`
-        // still counts every message sent. Within one tier, the ORC selects
-        // the *best* satisfying node among its children's answers (Alg. 1
-        // line 7, "BestNode <- select best node"); the search stops at the
-        // first tier that produces any satisfying node.
-        //
-        // Tiers are keyed by the *quantized* hop count, not the raw float
-        // distance: same-tier siblings whose `orc_distance_s` sums differ
-        // only by rounding must share one broadcast, not pay a round trip
-        // each. The charged hop latency is re-derived from the quantum so
-        // it is identical for every member regardless of summation order.
-        let mut tiers: Vec<(u64, Vec<NodeId>)> = Vec::new();
-        for dev in candidates {
-            let q = hierarchy::hop_quanta(self.hierarchy.orc_distance_s(origin_dev, dev));
-            match tiers.iter_mut().find(|(tq, _)| *tq == q) {
-                Some((_, v)) => v.push(dev),
-                None => tiers.push((q, vec![dev])),
-            }
-        }
+        let tiers = self.plan_tiers(task, origin_dev, data_dev);
         // single-task probe CFG shared by every candidate evaluation
         let mut probe = Cfg::new();
         probe.add(task.clone());
@@ -236,28 +210,8 @@ impl Orchestrator {
                 overhead.comm_s += 2.0 * hop; // one broadcast round trip
                 overhead.hops += 2 * devs.len() as u32;
             }
-            // the per-tier broadcast: evaluate every sibling device on the
-            // worker pool; reduce below in *device order* (not thread
-            // arrival order), so parallel and serial searches choose
-            // identical placements. Tiers too narrow to amortize thread
-            // spawns stay inline (par's built-in per-worker minimum).
-            let evals = par::map_with(
-                self.parallelism,
-                &devs,
-                Scratch::default,
-                |scratch, _, &dev| {
-                    Self::eval_device(tr, scratch, &probe, task, data_dev, dev, now, loads)
-                },
-            );
-            let mut best: Option<(NodeId, NodeId, f64)> = None;
-            for (di, (cand, oh)) in evals.iter().enumerate() {
-                overhead.add(oh);
-                if let Some((pu, latency)) = *cand {
-                    if best.map(|(_, _, b)| latency < b).unwrap_or(true) {
-                        best = Some((devs[di], pu, latency));
-                    }
-                }
-            }
+            let (best, oh) = self.eval_tier(tr, &probe, task, data_dev, &devs, now, loads);
+            overhead.add(&oh);
             if let Some((dev, pu, latency)) = best {
                 if !task.kind.pinned_to_origin() {
                     self.sticky.insert((origin_dev, kind_tag(task.kind)), dev);
@@ -274,6 +228,118 @@ impl Orchestrator {
             predicted_latency_s: f64::INFINITY,
             overhead,
         }
+    }
+
+    /// The escalation plan `map_task` walks: candidate devices grouped into
+    /// broadcast tiers, in visit order.
+    ///
+    /// Escalation through the hierarchy is a *broadcast* per tier: the
+    /// cluster ORC fans MapTask out to its children in parallel (this is
+    /// what keeps the paper's ORC message complexity logarithmic, §3.5),
+    /// so communication time is paid once per tier reached, while `hops`
+    /// still counts every message sent. Within one tier, the ORC selects
+    /// the *best* satisfying node among its children's answers (Alg. 1
+    /// line 7, "BestNode <- select best node"); the search stops at the
+    /// first tier that produces any satisfying node.
+    ///
+    /// Tiers are keyed by the *quantized* hop count, not the raw float
+    /// distance: same-tier siblings whose `orc_distance_s` sums differ
+    /// only by rounding must share one broadcast, not pay a round trip
+    /// each. The charged hop latency is re-derived from the quantum so
+    /// it is identical for every member regardless of summation order.
+    ///
+    /// Exposed `pub(crate)` so [`fastpath::PlacementCache`] can capture the
+    /// exact steady-state plan when it fills an entry.
+    pub(crate) fn plan_tiers(
+        &mut self,
+        task: &TaskSpec,
+        origin_dev: NodeId,
+        data_dev: NodeId,
+    ) -> Vec<(u64, Vec<NodeId>)> {
+        // pinned stages never leave the origin (sensor/display attached)
+        let candidates: Vec<NodeId> = if task.kind.pinned_to_origin() {
+            vec![origin_dev]
+        } else {
+            self.search_order(origin_dev, data_dev, task)
+        };
+        let mut tiers: Vec<(u64, Vec<NodeId>)> = Vec::new();
+        for dev in candidates {
+            let q = hierarchy::hop_quanta(self.hierarchy.orc_distance_s(origin_dev, dev));
+            match tiers.iter_mut().find(|(tq, _)| *tq == q) {
+                Some((_, v)) => v.push(dev),
+                None => tiers.push((q, vec![dev])),
+            }
+        }
+        tiers
+    }
+
+    /// One tier's broadcast: evaluate every sibling device on the worker
+    /// pool; reduce in *device order* (not thread arrival order), so
+    /// parallel and serial searches choose identical placements. Tiers too
+    /// narrow to amortize thread spawns stay inline (par's built-in
+    /// per-worker minimum). Shared verbatim by `map_task` and the fast
+    /// path, which is what makes a cache hit byte-identical to the full
+    /// search reaching the same tier.
+    pub(crate) fn eval_tier(
+        &self,
+        tr: &Traverser,
+        probe: &Cfg,
+        task: &TaskSpec,
+        data_dev: NodeId,
+        devs: &[NodeId],
+        now: f64,
+        loads: &Loads,
+    ) -> (Option<(NodeId, NodeId, f64)>, Overhead) {
+        let evals = par::map_with(
+            self.parallelism,
+            devs,
+            Scratch::default,
+            |scratch, _, &dev| {
+                Self::eval_device(tr, scratch, probe, task, data_dev, dev, now, loads)
+            },
+        );
+        let mut overhead = Overhead::default();
+        let mut best: Option<(NodeId, NodeId, f64)> = None;
+        for (di, (cand, oh)) in evals.iter().enumerate() {
+            overhead.add(oh);
+            if let Some((pu, latency)) = *cand {
+                if best.map(|(_, _, b)| latency < b).unwrap_or(true) {
+                    best = Some((devs[di], pu, latency));
+                }
+            }
+        }
+        (best, overhead)
+    }
+
+    /// Constraint-check one device against an *empty* load snapshot — the
+    /// fast path's fill probe. A device that rejects a task when idle
+    /// rejects it under any load (co-tenant slowdown factors are >= 1 and
+    /// extra active tasks only add constraints to re-validate), so an
+    /// idle-reject is a structural fact the cache may rely on until the
+    /// hierarchy, network or capabilities change.
+    pub(crate) fn probe_idle(
+        &self,
+        tr: &Traverser,
+        probe: &Cfg,
+        task: &TaskSpec,
+        data_dev: NodeId,
+        dev: NodeId,
+        now: f64,
+    ) -> (Option<(NodeId, f64)>, Overhead) {
+        let empty = Loads::default();
+        let mut scratch = Scratch::default();
+        Self::eval_device(tr, &mut scratch, probe, task, data_dev, dev, now, &empty)
+    }
+
+    /// The sticky placement recorded for `(origin, kind)`, if any.
+    pub(crate) fn sticky_of(&self, origin: NodeId, kind: TaskKind) -> Option<NodeId> {
+        self.sticky.get(&(origin, kind_tag(kind))).copied()
+    }
+
+    /// Record a sticky placement — the fast path mirrors the insert
+    /// `map_task` performs on a successful mapping.
+    pub(crate) fn set_sticky(&mut self, origin: NodeId, kind: TaskKind, dev: NodeId) {
+        self.sticky.insert((origin, kind_tag(kind)), dev);
     }
 
     /// CheckTaskConstraints (Alg. 1 lines 11-19) over every candidate PU of

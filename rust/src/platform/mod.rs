@@ -40,9 +40,10 @@ use crate::hwgraph::NodeId;
 use crate::membership::{DegradeEvent, FlakyEvent, MembershipConfig};
 use crate::scenario::ScenarioReport;
 use crate::sim::{
-    ArrivalModel, ExecOpts, JoinEvent, LeaveEvent, NetEvent, RunMetrics, RunPlan, ScriptedEvent,
-    SimConfig, Simulation, Workload,
+    AdmissionConfig, ArrivalModel, ExecOpts, JoinEvent, LeaveEvent, NetEvent, RunMetrics, RunPlan,
+    ScriptedEvent, SimConfig, Simulation, Workload,
 };
+use crate::task::QosClass;
 use crate::telemetry;
 use crate::telemetry::ProxySnapshot;
 use crate::util::json::Json;
@@ -191,6 +192,25 @@ impl PlatformBuilder {
         self
     }
 
+    /// Default QoS-class admission control for sessions on this platform:
+    /// arrivals pass through an admission gate before they become frames —
+    /// `bulk` is shed first, `standard` waits in a bounded queue, and
+    /// `interactive` is never shed (see "Admission control & the frame
+    /// fast path" in the crate docs). Off by default.
+    pub fn admission(mut self, a: AdmissionConfig) -> Self {
+        self.exec.admission = Some(a);
+        self
+    }
+
+    /// Default fast-path setting for sessions on this platform: when on
+    /// (the default), per-source sticky placements are revalidated in O(1)
+    /// and only cache misses pay the full mapping search. `RunMetrics`
+    /// are byte-identical either way.
+    pub fn fast_path(mut self, on: bool) -> Self {
+        self.exec.fast_path = on;
+        self
+    }
+
     /// Fully custom topology.
     pub fn topology(mut self, spec: DecsSpec) -> Self {
         self.spec = spec;
@@ -303,6 +323,7 @@ impl Platform {
             workload,
             scheduler: "heye".to_string(),
             cfg,
+            qos_class: None,
             net_events: Vec::new(),
             join_events: Vec::new(),
             leave_events: Vec::new(),
@@ -466,6 +487,8 @@ pub struct Session<'p> {
     workload: WorkloadSpec,
     scheduler: String,
     cfg: SimConfig,
+    /// override the QoS class of every source the workload builds
+    qos_class: Option<QosClass>,
     net_events: Vec<NetEventSpec>,
     join_events: Vec<JoinEvent>,
     leave_events: Vec<LeaveEvent>,
@@ -533,6 +556,35 @@ impl Session<'_> {
     /// `n >= 1`.
     pub fn workers(mut self, n: usize) -> Self {
         self.cfg.exec.workers = n;
+        self
+    }
+
+    /// Override the QoS class of every source this session's workload
+    /// builds (workloads carry per-app defaults: VR sources are
+    /// `interactive`, mining sensors `standard`). Per-source classes go
+    /// through [`WorkloadSpec::custom`] — `FrameSource::qos_class` is
+    /// public.
+    pub fn qos_class(mut self, class: QosClass) -> Self {
+        self.qos_class = Some(class);
+        self
+    }
+
+    /// QoS-class admission control for this run (overrides the platform
+    /// default): arrivals pass an admission gate before they become frames
+    /// — `bulk` sheds first, `standard` waits in a bounded queue, and
+    /// `interactive` is never shed. Below saturation `RunMetrics` are
+    /// byte-identical with admission off.
+    pub fn admission(mut self, a: AdmissionConfig) -> Self {
+        self.cfg.exec.admission = Some(a);
+        self
+    }
+
+    /// Enable/disable the placement fast path for this run (overrides the
+    /// platform default; on by default). `RunMetrics` are byte-identical
+    /// either way — the knob only changes how much scheduling work a
+    /// steady-state frame costs.
+    pub fn fast_path(mut self, on: bool) -> Self {
+        self.cfg.exec.fast_path = on;
         self
     }
 
@@ -700,7 +752,12 @@ impl Session<'_> {
             e.check(cfg.horizon_s, edges_at(e.t))
                 .map_err(|m| PlatformError::InvalidSession(format!("degrade_events[{i}]: {m}")))?;
         }
-        let workload = self.workload.build(&decs)?;
+        let mut workload = self.workload.build(&decs)?;
+        if let Some(class) = self.qos_class {
+            for s in &mut workload.sources {
+                s.qos_class = class;
+            }
+        }
         let net_events = self
             .net_events
             .iter()
@@ -933,6 +990,17 @@ impl RunReport {
         } else {
             Json::Num(exec.domains as f64)
         };
+        let admission = match &exec.admission {
+            Some(a) => Json::obj(vec![
+                (
+                    "saturation_tasks_per_pu",
+                    Json::Num(a.saturation_tasks_per_pu),
+                ),
+                ("queue_cap", Json::Num(a.queue_cap as f64)),
+                ("queue_delay_s", Json::Num(a.queue_delay_s)),
+            ]),
+            None => Json::Null,
+        };
         let membership = match &exec.membership {
             Some(m) => Json::obj(vec![
                 ("heartbeat_s", Json::Num(m.heartbeat_s)),
@@ -962,6 +1030,8 @@ impl RunReport {
                         },
                     ),
                     ("membership", membership),
+                    ("fast_path", Json::Bool(exec.fast_path)),
+                    ("admission", admission),
                     ("trace", Json::Bool(exec.trace.enabled)),
                     ("trace_wall", Json::Bool(exec.trace.wall)),
                 ]),

@@ -39,18 +39,25 @@
 //! }
 //! ```
 //!
+//! A top-level `"qos_class"` key (`interactive` | `standard` | `bulk`)
+//! overrides the per-app default class of every source, and `"admission"`
+//! (shared with the [`ExpConfig`] schema) turns on QoS-class admission
+//! control — see "Admission control & the frame fast path" in the crate
+//! docs.
+//!
 //! Event lists are validated on load — negative times, events past the
 //! horizon, out-of-range `edge_index`, and membership events without a
 //! `membership` config are rejected with an error naming the offending
-//! entry. Six presets ship built in (`heye scenario list`):
+//! entry. Seven presets ship built in (`heye scenario list`):
 //! [`Scenario::preset`] resolves `steady`, `flashcrowd`, `diurnal`,
-//! `churn`, `partition`, and `flaky`.
+//! `churn`, `partition`, `flaky`, and `storm`.
 
 use crate::config::ExpConfig;
-use crate::hwgraph::presets::EDGE_MODELS;
+use crate::hwgraph::presets::{DecsSpec, EDGE_MODELS};
 use crate::membership::{DegradeEvent, FlakyEvent, MembershipConfig};
 use crate::platform::{Platform, RunReport, Session, WorkloadSpec};
-use crate::sim::{ArrivalModel, JoinEvent, LeaveEvent};
+use crate::sim::{AdmissionConfig, ArrivalModel, JoinEvent, LeaveEvent};
+use crate::task::QosClass;
 use crate::telemetry;
 use crate::util::error::Result;
 use crate::util::json::Json;
@@ -73,6 +80,9 @@ pub struct Scenario {
     pub arrival: ArrivalModel,
     /// client-population multiplier scaling every source's base rate
     pub clients: f64,
+    /// override the QoS class of every source (None keeps the per-app
+    /// defaults: VR `interactive`, mining `standard`)
+    pub qos_class: Option<QosClass>,
     /// device leave/failure timeline
     pub leave_events: Vec<LeaveEvent>,
     /// organic-membership silence windows (`flaky` events; require a
@@ -90,6 +100,7 @@ impl Default for Scenario {
             cfg: ExpConfig::default(),
             arrival: ArrivalModel::Periodic,
             clients: 1.0,
+            qos_class: None,
             leave_events: Vec::new(),
             flaky_events: Vec::new(),
             degrade_events: Vec::new(),
@@ -151,6 +162,12 @@ impl Scenario {
         }
         if let Some(v) = j.get("clients").and_then(|v| v.as_f64()) {
             sc.clients = v;
+        }
+        if let Some(v) = j.get("qos_class") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| err!("qos_class must be a string"))?;
+            sc.qos_class = Some(QosClass::parse(s).map_err(|m| err!("{m}"))?);
         }
         if let Some(arr) = j.get("events").and_then(|v| v.as_arr()) {
             for (i, e) in arr.iter().enumerate() {
@@ -308,6 +325,11 @@ impl Scenario {
                 "organic membership: a silence window detected by heartbeat, \
                  recovery by re-registration, plus a capability degrade",
             ),
+            (
+                "storm",
+                "fleet-scale composition: bursty flash crowd + device churn + \
+                 a healed partition, under QoS-class admission control",
+            ),
         ]
     }
 
@@ -372,6 +394,43 @@ impl Scenario {
                     weight: 0.5,
                 });
             }
+            "storm" => {
+                // everything at once, at fleet scale: a flash crowd of
+                // standard-class sensor traffic slams a 192-edge continuum
+                // while devices churn and two uplinks partition — the run
+                // the admission gate exists for
+                sc.cfg.decs_spec = DecsSpec::fleet();
+                sc.cfg.app = "mining".into();
+                sc.cfg.sensors = 96;
+                sc.cfg.sim.exec.domains = crate::domain::DOMAINS_AUTO;
+                sc.cfg.sim.exec.admission = Some(AdmissionConfig::default());
+                sc.arrival = ArrivalModel::Bursty {
+                    on_mult: 2.5,
+                    off_mult: 0.5,
+                    on_s: 0.25,
+                    off_s: 0.75,
+                };
+                sc.clients = 1.5;
+                // churn: a failure, a join, a graceful leave
+                sc.leave_events.push(LeaveEvent {
+                    t: 0.5,
+                    edge_index: 3,
+                    failure: true,
+                });
+                sc.cfg
+                    .join_events
+                    .push((0.9, "xavier_nx".to_string(), false));
+                sc.leave_events.push(LeaveEvent {
+                    t: 1.3,
+                    edge_index: 0,
+                    failure: false,
+                });
+                // partition: two uplinks throttled to near-zero, then healed
+                sc.cfg.net_events.push((0.6, 1, Some(0.05)));
+                sc.cfg.net_events.push((0.6, 2, Some(0.05)));
+                sc.cfg.net_events.push((1.1, 1, None));
+                sc.cfg.net_events.push((1.1, 2, None));
+            }
             _ => return None,
         }
         sc.description = Self::presets()
@@ -426,6 +485,9 @@ impl Scenario {
             .session(self.workload_spec())
             .scheduler(&self.cfg.sched)
             .config(self.cfg.sim.clone());
+        if let Some(class) = self.qos_class {
+            session = session.qos_class(class);
+        }
         for &(t, edge, gbps) in &self.cfg.net_events {
             session = session.throttle_uplink(edge, t, gbps);
         }
@@ -502,6 +564,17 @@ pub struct ScenarioReport {
     pub goodput_bucket_s: f64,
     pub goodput: Vec<GoodputPoint>,
     pub disruptions: Vec<Disruption>,
+    /// per-class goodput, one row per class that saw traffic:
+    /// `(class, frames completing within budget, completions)`
+    pub class_goodput: Vec<(QosClass, u64, u64)>,
+    /// arrivals the admission gate shed (they never became frames, so they
+    /// are in neither `dropped` nor the latency percentiles)
+    pub shed: u64,
+    /// arrivals that waited in the bounded standard-class queue
+    pub deferred: u64,
+    /// p95 admission queue depth, sampled at each first deferral (0 when
+    /// admission is off or the queue never formed)
+    pub queue_depth_p95: u32,
 }
 
 impl ScenarioReport {
@@ -556,6 +629,17 @@ impl ScenarioReport {
             })
             .collect();
         let qos_miss_rate = run.metrics.qos_failure_rate();
+        let class_goodput: Vec<(QosClass, u64, u64)> = QosClass::ALL
+            .iter()
+            .filter_map(|&c| {
+                let (good, total) = run.metrics.class_goodput(c);
+                (total > 0).then_some((c, good, total))
+            })
+            .collect();
+        let (shed, deferred, queue_depth_p95) = match &run.metrics.admission {
+            Some(a) => (a.shed_total(), a.deferred, a.queue_depth_p95()),
+            None => (0, 0, 0),
+        };
         ScenarioReport {
             run,
             latency,
@@ -563,6 +647,10 @@ impl ScenarioReport {
             goodput_bucket_s: bucket,
             goodput,
             disruptions,
+            class_goodput,
+            shed,
+            deferred,
+            queue_depth_p95,
         }
     }
 
@@ -584,6 +672,17 @@ impl ScenarioReport {
             self.latency.p99 * 1e3,
             self.latency.mean * 1e3
         );
+        if self.run.metrics.admission.is_some() {
+            println!(
+                "admission shed={} deferred={} queue_p95={}",
+                self.shed, self.deferred, self.queue_depth_p95
+            );
+        }
+        if self.class_goodput.len() > 1 {
+            for (c, good, total) in &self.class_goodput {
+                println!("  {:<12} goodput {good}/{total}", c.name());
+            }
+        }
         println!("\ngoodput timeline ({}s buckets):", self.goodput_bucket_s);
         println!("{:>8} {:>8} {:>8}", "t", "frames", "good");
         for p in &self.goodput {
@@ -637,10 +736,25 @@ impl ScenarioReport {
                 ])
             })
             .collect();
+        let class_goodput: Vec<Json> = self
+            .class_goodput
+            .iter()
+            .map(|(c, good, total)| {
+                Json::obj(vec![
+                    ("class", Json::Str(c.name().to_string())),
+                    ("good", Json::Num(*good as f64)),
+                    ("total", Json::Num(*total as f64)),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("scheduler", Json::Str(self.run.scheduler.clone())),
             ("latency", telemetry::summary_json(&self.latency)),
             ("qos_miss_rate", Json::Num(self.qos_miss_rate)),
+            ("class_goodput", Json::Arr(class_goodput)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("deferred", Json::Num(self.deferred as f64)),
+            ("queue_depth_p95", Json::Num(self.queue_depth_p95 as f64)),
             (
                 "frames_abandoned",
                 Json::Num(self.run.metrics.frames_abandoned() as f64),
@@ -801,6 +915,44 @@ mod tests {
                              { "kind": "fail", "t": 0.2, "edge_index": 5 } ] }"#,
         );
         assert!(bad.is_err());
+    }
+
+    #[test]
+    fn parses_qos_class_and_admission() {
+        let sc = Scenario::parse(
+            r#"{ "app": "mining", "horizon_s": 1.0, "qos_class": "bulk",
+                 "admission": { "queue_cap": 8 } }"#,
+        )
+        .expect("valid scenario");
+        assert_eq!(sc.qos_class, Some(QosClass::Bulk));
+        let a = sc.cfg.sim.exec.admission.as_ref().expect("admission on");
+        assert_eq!(a.queue_cap, 8);
+        let e = Scenario::parse(r#"{ "qos_class": "gold" }"#).unwrap_err();
+        assert!(e.to_string().contains("qos_class"), "{e}");
+    }
+
+    #[test]
+    fn storm_preset_runs_end_to_end_with_admission() {
+        let mut sc = Scenario::preset("storm").unwrap();
+        // keep the unit test quick: fewer sensors, horizon just past the
+        // last scripted event — the composition itself is unchanged
+        sc.cfg.sensors = 24;
+        sc.cfg.sim.horizon_s = 1.4;
+        let report = sc.run().expect("storm run");
+        assert!(report.run.frames() > 0);
+        let a = report
+            .run
+            .metrics
+            .admission
+            .as_ref()
+            .expect("storm runs under admission control");
+        assert_eq!(report.shed, a.shed_total());
+        assert_eq!(report.deferred, a.deferred);
+        assert!(!report.class_goodput.is_empty());
+        let back = Json::parse(&report.to_json().to_string()).expect("reparse");
+        assert!(back.get("class_goodput").and_then(|g| g.as_arr()).is_some());
+        assert!(back.get("shed").is_some());
+        assert!(back.get("queue_depth_p95").is_some());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 
 use crate::hwgraph::NodeId;
+use crate::task::QosClass;
 use crate::util::stats::{Samples, Summary};
 
 /// Per-frame record emitted when the last task of a frame completes (or the
@@ -35,6 +36,8 @@ pub struct FrameRecord {
     /// the scheduler's own end-to-end latency prediction for this frame
     /// (critical path over its per-task predictions; Fig. 10 validation)
     pub predicted_s: f64,
+    /// QoS class inherited from the releasing source (per-class goodput)
+    pub qos_class: QosClass,
 }
 
 impl FrameRecord {
@@ -57,6 +60,46 @@ pub struct LeaveRecord {
     pub tasks_remapped: u64,
     /// in-flight tasks whose input data died with the device
     pub tasks_dropped: u64,
+}
+
+/// What the admission controller did across one run (`Some` when
+/// [`crate::sim::AdmissionConfig`] enabled it). Shed and deferred arrivals
+/// never become [`FrameRecord`]s — they were *refused*, not executed — so
+/// they are disjoint from both `RunMetrics::frames` and
+/// `RunMetrics::dropped` by construction.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdmissionReport {
+    /// bulk-class arrivals shed at a saturated instant
+    pub shed_bulk: u64,
+    /// standard-class arrivals shed (bounded queue full, or their source
+    /// died while they were queued)
+    pub shed_standard: u64,
+    /// standard-class arrivals deferred into the bounded queue (each
+    /// counted once, at first deferral; re-probes that stay queued do not
+    /// recount)
+    pub deferred: u64,
+    /// queue depth observed at each first deferral, in decision order
+    pub queue_depths: Vec<u32>,
+}
+
+impl AdmissionReport {
+    /// Arrivals refused outright, either class.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_bulk + self.shed_standard
+    }
+
+    /// 95th-percentile standard-queue depth over the run's deferrals
+    /// (0 when nothing was ever deferred).
+    pub fn queue_depth_p95(&self) -> u32 {
+        if self.queue_depths.is_empty() {
+            return 0;
+        }
+        let mut d = self.queue_depths.clone();
+        d.sort_unstable();
+        // nearest-rank p95 on the sorted sample
+        let rank = ((d.len() as f64) * 0.95).ceil() as usize;
+        d[rank.clamp(1, d.len()) - 1]
+    }
 }
 
 /// Aggregated run metrics.
@@ -87,9 +130,20 @@ pub struct RunMetrics {
     /// scripted-vs-detected equivalence checks — it is observability, not
     /// outcome.
     pub membership: Option<crate::membership::MembershipReport>,
+    /// admission-controller outcomes (`Some` when
+    /// [`crate::sim::AdmissionConfig`] enabled it)
+    pub admission: Option<AdmissionReport>,
 }
 
 impl RunMetrics {
+    /// Fraction of *executed* frames that missed their QoS budget:
+    /// completed-late plus dropped, over completed plus dropped. Frames
+    /// the admission controller shed never started executing, so they are
+    /// deliberately excluded from both numerator and denominator — a
+    /// controller that sheds bulk work under overload *improves* this
+    /// rate, and [`RunMetrics::admission`] accounts for the refused
+    /// arrivals separately ([`RunMetrics::class_goodput`] combines the
+    /// two views per class).
     pub fn qos_failure_rate(&self) -> f64 {
         let total = self.frames.len() as u64 + self.dropped;
         if total == 0 {
@@ -97,6 +151,24 @@ impl RunMetrics {
         }
         let bad = self.frames.iter().filter(|f| !f.qos_ok()).count() as u64 + self.dropped;
         bad as f64 / total as f64
+    }
+
+    /// Per-class goodput: `(QoS-meeting completions, completions)` for
+    /// frames of `class`. Shed and deferred-then-shed arrivals are not
+    /// completions; read [`RunMetrics::admission`] for those.
+    pub fn class_goodput(&self, class: QosClass) -> (u64, u64) {
+        let mut good = 0u64;
+        let mut total = 0u64;
+        for f in &self.frames {
+            if f.qos_class != class {
+                continue;
+            }
+            total += 1;
+            if f.qos_ok() {
+                good += 1;
+            }
+        }
+        (good, total)
     }
 
     pub fn latency_summary(&self) -> Summary {
@@ -232,6 +304,7 @@ mod tests {
             degraded: false,
             resolution: 1.0,
             predicted_s: lat,
+            qos_class: QosClass::Standard,
         }
     }
 
@@ -263,6 +336,46 @@ mod tests {
         assert_eq!(m.frames_abandoned(), 0);
         assert!(m.goodput_timeline(0.1, 1.0).iter().all(|&(_, c, _)| c == 0));
         assert!(m.goodput_timeline(0.0, 1.0).is_empty());
+    }
+
+    #[test]
+    fn shed_arrivals_stay_out_of_the_failure_rate() {
+        // one on-time completion, one drop, plus a controller that shed
+        // 10 bulk arrivals: the rate reflects executed frames only
+        let mut m = RunMetrics::default();
+        m.frames.push(frame(0.03, 0.05));
+        m.dropped = 1;
+        m.admission = Some(AdmissionReport {
+            shed_bulk: 10,
+            ..AdmissionReport::default()
+        });
+        assert!((m.qos_failure_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(m.admission.as_ref().unwrap().shed_total(), 10);
+    }
+
+    #[test]
+    fn class_goodput_splits_by_class() {
+        let mut m = RunMetrics::default();
+        let mut vr = frame(0.03, 0.05); // on time
+        vr.qos_class = QosClass::Interactive;
+        let mut vr_late = frame(0.08, 0.05); // late
+        vr_late.qos_class = QosClass::Interactive;
+        m.frames.push(vr);
+        m.frames.push(vr_late);
+        m.frames.push(frame(0.03, 0.05)); // standard, on time
+        assert_eq!(m.class_goodput(QosClass::Interactive), (1, 2));
+        assert_eq!(m.class_goodput(QosClass::Standard), (1, 1));
+        assert_eq!(m.class_goodput(QosClass::Bulk), (0, 0));
+    }
+
+    #[test]
+    fn queue_depth_p95_is_nearest_rank() {
+        let mut rep = AdmissionReport::default();
+        assert_eq!(rep.queue_depth_p95(), 0);
+        rep.queue_depths = vec![5, 1, 3];
+        assert_eq!(rep.queue_depth_p95(), 5);
+        rep.queue_depths = (1..=100).collect();
+        assert_eq!(rep.queue_depth_p95(), 95);
     }
 
     #[test]

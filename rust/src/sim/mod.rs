@@ -26,20 +26,20 @@ pub mod scheduler;
 pub mod shard;
 
 pub use arrivals::ArrivalModel;
-pub use metrics::{FrameRecord, LeaveRecord, RunMetrics};
+pub use metrics::{AdmissionReport, FrameRecord, LeaveRecord, RunMetrics};
 pub use scheduler::{best_effort, HeyeScheduler, Scheduler};
 pub use shard::ShardedOutcome;
 
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use crate::hwgraph::presets::Decs;
-use crate::hwgraph::{EdgeId, NodeId};
+use crate::hwgraph::{EdgeId, GroupRole, NodeId};
 use crate::membership::{self, DegradeEvent, Detection, FlakyEvent, MembershipConfig, Registry};
 use crate::netsim::{Network, Route, RouteTable};
 use crate::orchestrator::Loads;
 use crate::perfmodel::{PerfModel, ProfileModel, Unit};
 use crate::slowdown::{CachedSlowdown, Placed};
-use crate::task::{workloads, Cfg, TaskId, TaskKind};
+use crate::task::{workloads, Cfg, QosClass, TaskId, TaskKind};
 use crate::trace::{log_line, Trace, TraceEvent, TraceMeta, Tracer};
 use crate::traverser::{ActiveTask, Traverser};
 use crate::util::rng::{mix64, Rng};
@@ -66,6 +66,11 @@ pub struct FrameSource {
     /// release process relative to `period_s` (open-loop models draw from
     /// the source's own deterministic RNG stream)
     pub arrival: ArrivalModel,
+    /// QoS class carried by every frame this source releases, read by the
+    /// admission controller ([`AdmissionConfig`]): `interactive` is never
+    /// refused, `standard` defers into a bounded queue at saturation, and
+    /// `bulk` is shed first
+    pub qos_class: QosClass,
 }
 
 impl FrameSource {
@@ -87,6 +92,8 @@ impl FrameSource {
             start_t: 0.0,
             count: None,
             arrival: ArrivalModel::Periodic,
+            // a headset frame is a human looking at a screen
+            qos_class: QosClass::Interactive,
         }
     }
 
@@ -100,6 +107,8 @@ impl FrameSource {
             start_t: 0.0,
             count: None,
             arrival: ArrivalModel::Periodic,
+            // sensor windows tolerate deferral but still carry a deadline
+            qos_class: QosClass::Standard,
         }
     }
 }
@@ -352,6 +361,67 @@ enum Structural {
 // engine configuration
 // ---------------------------------------------------------------------------
 
+/// QoS-class admission control at the frame release point ("Admission
+/// control & the frame fast path" in the crate docs). When configured, an
+/// arriving frame is admitted, deferred, or shed *before* any engine state
+/// is created for it, based on the releasing source's [`QosClass`] and the
+/// engine's in-flight backlog measured against its active-PU headroom:
+///
+/// * `interactive` frames are never refused;
+/// * `standard` frames defer into a bounded queue while the system is
+///   saturated, and shed only when that queue is full;
+/// * `bulk` frames shed outright at any saturated instant.
+///
+/// Decisions read only state that is deterministic for any worker count —
+/// the shard-local backlog plus a headroom figure refreshed at structural
+/// events (monolithic) or sync barriers (sharded) — so admission keeps the
+/// sharded engine's byte-identity contract. Below saturation every frame
+/// takes the exact code path an admission-free run takes, so `RunMetrics`
+/// stay byte-identical there too.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    /// the saturation knee: the engine counts as saturated once its
+    /// in-flight task count reaches `active PUs * saturation_tasks_per_pu`
+    pub saturation_tasks_per_pu: f64,
+    /// bounded standard-class queue: deferrals beyond this depth shed
+    pub queue_cap: usize,
+    /// how long a deferred arrival waits before re-probing admission
+    pub queue_delay_s: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            saturation_tasks_per_pu: 2.0,
+            queue_cap: 32,
+            queue_delay_s: 0.002,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.saturation_tasks_per_pu.is_finite() || self.saturation_tasks_per_pu <= 0.0 {
+            return Err(format!(
+                "admission saturation_tasks_per_pu must be positive and finite (got {})",
+                self.saturation_tasks_per_pu
+            ));
+        }
+        if self.queue_cap == 0 {
+            return Err(
+                "admission queue_cap must be >= 1 (mark sources bulk to always shed)".into(),
+            );
+        }
+        if !self.queue_delay_s.is_finite() || self.queue_delay_s <= 0.0 {
+            return Err(format!(
+                "admission queue_delay_s must be positive and finite (got {})",
+                self.queue_delay_s
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// The execution knobs of a run, gathered in one place: *how* the engine
 /// executes, as opposed to *what* it simulates (`SimConfig`'s horizon /
 /// seed / noise). One struct, one [`ExecOpts::validate`] — every facade
@@ -402,6 +472,17 @@ pub struct ExecOpts {
     /// `trace.wall` is also set. `RunMetrics` are byte-identical either
     /// way (asserted by `tests/trace.rs`).
     pub trace: crate::trace::TraceSpec,
+    /// QoS-class admission control at frame release ([`AdmissionConfig`]).
+    /// `None` (the default) admits everything — the legacy behaviour.
+    /// Below saturation, a configured controller leaves `RunMetrics`
+    /// byte-identical to `None` (asserted by `tests/fastpath.rs`).
+    pub admission: Option<AdmissionConfig>,
+    /// the steady-state frame fast path
+    /// ([`crate::orchestrator::fastpath::PlacementCache`]): on by default.
+    /// Placements and metrics are byte-identical either way (asserted by
+    /// `tests/fastpath.rs`); the knob exists for that assertion and for
+    /// measuring the fast path's win.
+    pub fast_path: bool,
 }
 
 impl Default for ExecOpts {
@@ -414,6 +495,8 @@ impl Default for ExecOpts {
             drain_s: f64::INFINITY,
             route_cache: true,
             trace: crate::trace::TraceSpec::default(),
+            admission: None,
+            fast_path: true,
         }
     }
 }
@@ -440,6 +523,9 @@ impl ExecOpts {
                  by orchestration domain",
                 self.workers
             ));
+        }
+        if let Some(a) = &self.admission {
+            a.validate()?;
         }
         Ok(())
     }
@@ -552,6 +638,20 @@ impl SimConfig {
         self
     }
 
+    /// Put the QoS-class admission controller between arrivals and the
+    /// scheduler ([`AdmissionConfig`]; off by default).
+    pub fn admission(mut self, a: AdmissionConfig) -> Self {
+        self.exec.admission = Some(a);
+        self
+    }
+
+    /// Enable/disable the steady-state frame fast path (on by default;
+    /// modeled results are identical either way).
+    pub fn fast_path(mut self, on: bool) -> Self {
+        self.exec.fast_path = on;
+        self
+    }
+
     /// Record the deterministic structured-trace channel ([`crate::trace`]).
     pub fn trace(mut self, on: bool) -> Self {
         self.exec.trace.enabled = on;
@@ -597,6 +697,9 @@ struct Frame {
     release_t: f64,
     budget_s: f64,
     resolution: f64,
+    /// QoS class inherited from the releasing source, carried through to
+    /// the [`FrameRecord`] so per-class goodput is computable after the run
+    qos: QosClass,
     /// stable key for per-(frame, node) noise draws: mixes the source's
     /// stream key with the frame's per-source sequence number, so churn
     /// elsewhere never shifts this frame's execution noise
@@ -673,6 +776,18 @@ enum EvKind {
         /// before the failure cannot double-start the chain
         gen: u32,
     },
+    /// a deferred standard-class arrival re-probing admission
+    /// ([`AdmissionConfig`]): carries everything `on_release` had computed
+    /// at arrival time — the original release instant (queue wait counts
+    /// against the frame's budget), the resolution quoted then, and the
+    /// frozen per-source sequence number for the noise key
+    Admit {
+        source: usize,
+        gen: u32,
+        release_t: f64,
+        resolution: f64,
+        seq: u64,
+    },
     Ready {
         frame: usize,
         node: usize,
@@ -732,6 +847,30 @@ impl Ord for Ev {
     }
 }
 
+/// Live state of the admission controller ([`AdmissionConfig`]) inside one
+/// event loop. `headroom_pus` is refreshed only at structural events
+/// (monolithic engine) or sync barriers (sharded engine) — never mid-window
+/// — so decisions are a pure function of shard-local state and the decision
+/// stream is worker-count invariant by construction.
+struct AdmissionState {
+    cfg: AdmissionConfig,
+    /// active-PU headroom the saturation test scales against: the
+    /// monolithic engine counts active PUs directly; each shard of the
+    /// sharded engine adopts its domain's barrier-consistent
+    /// `DomainSummary::headroom_pus` (capability-weighted)
+    headroom_pus: u64,
+    /// standard-class frames currently deferred (bounds the queue)
+    queued: u64,
+}
+
+impl AdmissionState {
+    /// The saturation test every admission decision shares: is the
+    /// in-flight task count at or past the configured knee?
+    fn saturated(&self, in_flight: usize) -> bool {
+        in_flight as f64 >= self.headroom_pus as f64 * self.cfg.saturation_tasks_per_pu
+    }
+}
+
 struct SimState {
     heap: BinaryHeap<Ev>,
     seq: u64,
@@ -780,6 +919,9 @@ struct SimState {
     /// the sharded engine — each shard's buffer fills deterministically,
     /// so the merged trace is worker-count invariant.
     trace: Tracer,
+    /// the QoS-class admission controller (`SimConfig::exec.admission`):
+    /// `None` admits everything with zero per-release cost
+    admission: Option<AdmissionState>,
 }
 
 impl SimState {
@@ -810,6 +952,7 @@ impl SimState {
             membership: None,
             flaky: Vec::new(),
             trace: Tracer::off(),
+            admission: None,
         }
     }
 
@@ -838,6 +981,31 @@ fn add_source(st: &mut SimState, cfg: &SimConfig, src: FrameSource) -> usize {
     st.released_count.push(0);
     st.sources.push(src);
     st.sources.len() - 1
+}
+
+/// Count the PUs on currently-active devices — the admission controller's
+/// headroom figure. `members` restricts the count to one domain's member
+/// set (the sharded engine's initial per-shard figure before the first
+/// barrier summary arrives); `None` counts the whole continuum. Unweighted
+/// on purpose: the monolithic controller reacts to devices appearing and
+/// disappearing, while capability *weights* flow through the sharded
+/// engine's `DomainSummary::headroom_pus` — the two engines make no
+/// cross-engine identity promise for admission (only worker-count
+/// invariance within each).
+fn active_pu_count(decs: &Decs, members: Option<&BTreeSet<NodeId>>) -> u64 {
+    let mut n = 0u64;
+    for d in decs.graph.groups(GroupRole::Device) {
+        if !decs.is_active(d) {
+            continue;
+        }
+        if let Some(m) = members {
+            if !m.contains(&d) {
+                continue;
+            }
+        }
+        n += decs.graph.pus_in(d).len() as u64;
+    }
+    n
 }
 
 // ---------------------------------------------------------------------------
@@ -891,6 +1059,15 @@ impl Simulation {
         let mut st = SimState::new();
         st.trace = Tracer::new(cfg.exec.trace);
         sched.set_parallelism(cfg.exec.parallelism);
+        sched.set_fast_path(cfg.exec.fast_path);
+        if let Some(a) = &cfg.exec.admission {
+            st.admission = Some(AdmissionState {
+                cfg: a.clone(),
+                headroom_pus: active_pu_count(&self.decs, None),
+                queued: 0,
+            });
+            st.metrics.admission = Some(AdmissionReport::default());
+        }
         for src in workload.sources {
             let idx = add_source(&mut st, cfg, src);
             let t = st.sources[idx].start_t;
@@ -1056,6 +1233,17 @@ impl Simulation {
                 }
                 Structural::Capability { edge_index, weight } => {
                     apply_capability(&self.decs, sched, &mut st, &mut slow, edge_index, weight, t);
+                }
+            }
+            // the active-device population may just have changed: refresh
+            // the admission headroom at the same boundary the scheduler
+            // learns about the event — never mid-window, which keeps the
+            // decision stream identical to what the sharded engine's
+            // barrier-refreshed headroom would produce for this domain
+            if st.admission.is_some() {
+                let h = active_pu_count(&self.decs, None);
+                if let Some(a) = st.admission.as_mut() {
+                    a.headroom_pus = h;
                 }
             }
         }
@@ -1423,6 +1611,29 @@ fn run_until(
                 now,
                 ctx.as_deref_mut(),
             ),
+            EvKind::Admit {
+                source,
+                gen,
+                release_t,
+                resolution,
+                seq,
+            } => on_admit(
+                decs,
+                net,
+                perf,
+                slow,
+                routes,
+                sched,
+                st,
+                cfg,
+                source,
+                gen,
+                release_t,
+                resolution,
+                seq,
+                now,
+                ctx.as_deref_mut(),
+            ),
             EvKind::Ready { frame, node } => assign_batch(
                 decs,
                 net,
@@ -1558,9 +1769,148 @@ fn on_release(
     }
     let resolution =
         sched.frame_resolution(st.sources[source].origin, &decs.graph, net, routes);
-    let (origin, budget, period, count, start_t, arrival) = {
+
+    // the admission decision point ([`AdmissionConfig`]): before any frame
+    // state exists. Shed and deferred arrivals still count as *released*
+    // (the arrival happened) and still advance the source's arrival
+    // process through the same RNG draws, so the arrival timeline — and
+    // with it every admitted frame's bytes — is invariant to admission
+    // outcomes. With no controller this match is a single branch to Admit.
+    match admission_decision(st, source) {
+        Admission::Admit => {}
+        Admission::Defer => {
+            let seq = st.released_count[source];
+            let origin = st.sources[source].origin;
+            *st.metrics.released.entry(origin).or_insert(0) += 1;
+            st.released_count[source] += 1;
+            let (depth, delay) = {
+                let a = st.admission.as_mut().expect("Defer without a controller");
+                a.queued += 1;
+                (a.queued, a.cfg.queue_delay_s)
+            };
+            if let Some(rep) = st.metrics.admission.as_mut() {
+                rep.deferred += 1;
+                rep.queue_depths.push(depth as u32);
+            }
+            st.trace.emit(now, || TraceEvent::FrameDeferred {
+                origin: origin.0 as u64,
+                depth,
+            });
+            st.push(
+                now + delay,
+                EvKind::Admit {
+                    source,
+                    gen,
+                    release_t: now,
+                    resolution,
+                    seq,
+                },
+            );
+            schedule_next_release(st, source, gen, now);
+            return;
+        }
+        Admission::Shed => {
+            let (origin, class) = {
+                let s = &st.sources[source];
+                (s.origin, s.qos_class)
+            };
+            *st.metrics.released.entry(origin).or_insert(0) += 1;
+            st.released_count[source] += 1;
+            if let Some(rep) = st.metrics.admission.as_mut() {
+                match class {
+                    QosClass::Bulk => rep.shed_bulk += 1,
+                    _ => rep.shed_standard += 1,
+                }
+            }
+            st.trace.emit(now, || TraceEvent::FrameShed {
+                origin: origin.0 as u64,
+                class: class as u64,
+            });
+            schedule_next_release(st, source, gen, now);
+            return;
+        }
+    }
+
+    let seq = st.released_count[source];
+    let (fidx, roots) = build_frame(st, source, resolution, now, seq, now);
+    let origin = st.frames[fidx].origin;
+    *st.metrics.released.entry(origin).or_insert(0) += 1;
+    st.released_count[source] += 1;
+    schedule_next_release(st, source, gen, now);
+
+    // roots are ready immediately
+    let ready: Vec<(usize, usize)> = roots.into_iter().map(|r| (fidx, r)).collect();
+    if cfg.grouped && ready.len() > 1 {
+        assign_batch(decs, net, perf, slow, routes, sched, st, cfg, &ready, now, ctx);
+    } else {
+        for (f, r) in ready {
+            st.push(now, EvKind::Ready { frame: f, node: r });
+        }
+    }
+}
+
+/// What happens to the frame arriving now from `source`? A pure function
+/// of the controller state and the *shard-local* in-flight backlog
+/// (`st.running`), so the decision stream is identical for any worker
+/// count: `interactive` always admits; below the saturation knee everyone
+/// admits (taking exactly the code path an admission-free run takes);
+/// past it `standard` defers while the bounded queue has room, and
+/// everything else sheds.
+enum Admission {
+    Admit,
+    Defer,
+    Shed,
+}
+
+fn admission_decision(st: &SimState, source: usize) -> Admission {
+    let a = match st.admission.as_ref() {
+        Some(a) => a,
+        None => return Admission::Admit,
+    };
+    let class = st.sources[source].qos_class;
+    if class == QosClass::Interactive || !a.saturated(st.running.len()) {
+        return Admission::Admit;
+    }
+    if class == QosClass::Standard && (a.queued as usize) < a.cfg.queue_cap {
+        return Admission::Defer;
+    }
+    Admission::Shed
+}
+
+/// Schedule the source's next release from its arrival process (its own
+/// RNG stream); events past the horizon are never popped. Factored out of
+/// [`on_release`] so shed and deferred arrivals consume exactly the same
+/// draws an admitted one does.
+fn schedule_next_release(st: &mut SimState, source: usize, gen: u32, now: f64) {
+    let (period, count, start_t, arrival) = {
         let s = &st.sources[source];
-        (s.origin, s.budget_s, s.period_s, s.count, s.start_t, s.arrival)
+        (s.period_s, s.count, s.start_t, s.arrival)
+    };
+    let more = count.map(|c| st.released_count[source] < c).unwrap_or(true);
+    if more {
+        let dt = arrival.next_interval(period, now - start_t, &mut st.src_rng[source]);
+        if dt.is_finite() {
+            st.push(now + dt, EvKind::Release { source, gen });
+        }
+    }
+}
+
+/// Materialize one frame for `source` and return its index and root
+/// nodes. `release_t` anchors the frame's QoS budget; `now` anchors stage
+/// deadlines and root readiness; `seq` keys execution noise. Shared by
+/// [`on_release`] (all three time arguments coincide with the arrival)
+/// and [`on_admit`] (the arrival happened a queue wait earlier).
+fn build_frame(
+    st: &mut SimState,
+    source: usize,
+    resolution: f64,
+    release_t: f64,
+    seq: u64,
+    now: f64,
+) -> (usize, Vec<usize>) {
+    let (origin, budget, qos) = {
+        let s = &st.sources[source];
+        (s.origin, s.budget_s, s.qos_class)
     };
     let frame_cfg = (st.sources[source].make_cfg)(resolution);
     let n = frame_cfg.len();
@@ -1573,7 +1923,7 @@ fn on_release(
         })
         .collect();
     // cumulative absolute deadlines: dl[i] = max over preds + own stage
-    // deadline, anchored at the release time
+    // deadline, anchored at the instant the stages can actually start
     let mut dl_abs = vec![f64::INFINITY; n];
     for &i in &frame_cfg.topo_order() {
         let base = frame_cfg.nodes[i]
@@ -1587,10 +1937,11 @@ fn on_release(
     st.frames.push(Frame {
         origin,
         cfg: frame_cfg,
-        release_t: now,
+        release_t,
         budget_s: budget,
         resolution,
-        noise_key: mix64(st.src_key[source], st.released_count[source]),
+        qos,
+        noise_key: mix64(st.src_key[source], seq),
         abandoned: false,
         remote_home: None,
         state,
@@ -1613,24 +1964,81 @@ fn on_release(
         degraded: false,
         done: false,
     });
-    *st.metrics.released.entry(origin).or_insert(0) += 1;
-    st.released_count[source] += 1;
     st.trace.emit(now, || TraceEvent::FrameRelease {
         frame: fidx as u64,
         origin: origin.0 as u64,
     });
+    (fidx, roots)
+}
 
-    // schedule the next release from this source's arrival process (its
-    // own RNG stream); events past the horizon are never popped
-    let more = count.map(|c| st.released_count[source] < c).unwrap_or(true);
-    if more {
-        let dt = arrival.next_interval(period, now - start_t, &mut st.src_rng[source]);
-        if dt.is_finite() {
-            st.push(now + dt, EvKind::Release { source, gen });
+/// A deferred arrival's re-probe ([`EvKind::Admit`]). Still saturated →
+/// defer again: the frame waits out the storm holding its queue slot (no
+/// new depth sample — the queue did not grow). Source died while queued →
+/// the frame sheds, counted under its class (standard by construction).
+/// Otherwise build the frame exactly as [`on_release`] would have, with
+/// its release time — and therefore its QoS budget — anchored at the
+/// *original arrival* (queue wait is not free), while stage deadlines
+/// anchor at the admit instant, where the stages can actually start.
+#[allow(clippy::too_many_arguments)]
+fn on_admit(
+    decs: &Decs,
+    net: &mut Network,
+    perf: &ProfileModel,
+    slow: &CachedSlowdown,
+    routes: Option<&RouteTable>,
+    sched: &mut dyn Scheduler,
+    st: &mut SimState,
+    cfg: &SimConfig,
+    source: usize,
+    gen: u32,
+    release_t: f64,
+    resolution: f64,
+    seq: u64,
+    now: f64,
+    ctx: Option<&mut shard::ShardCtx>,
+) {
+    if !st.src_active[source] || gen != st.src_gen[source] {
+        // the origin left (or re-registered) while the frame sat in the
+        // queue: release the slot and count the frame as shed
+        if let Some(a) = st.admission.as_mut() {
+            a.queued = a.queued.saturating_sub(1);
         }
+        if let Some(rep) = st.metrics.admission.as_mut() {
+            rep.shed_standard += 1;
+        }
+        let origin = st.sources[source].origin;
+        st.trace.emit(now, || TraceEvent::FrameShed {
+            origin: origin.0 as u64,
+            class: QosClass::Standard as u64,
+        });
+        return;
     }
-
-    // roots are ready immediately
+    let (still_saturated, delay) = {
+        let a = st
+            .admission
+            .as_ref()
+            .expect("Admit event without a controller");
+        (a.saturated(st.running.len()), a.cfg.queue_delay_s)
+    };
+    if still_saturated {
+        st.push(
+            now + delay,
+            EvKind::Admit {
+                source,
+                gen,
+                release_t,
+                resolution,
+                seq,
+            },
+        );
+        return;
+    }
+    if let Some(a) = st.admission.as_mut() {
+        a.queued = a.queued.saturating_sub(1);
+    }
+    // released/released_count advanced at deferral time; only the frame
+    // itself is late
+    let (fidx, roots) = build_frame(st, source, resolution, release_t, seq, now);
     let ready: Vec<(usize, usize)> = roots.into_iter().map(|r| (fidx, r)).collect();
     if cfg.grouped && ready.len() > 1 {
         assign_batch(decs, net, perf, slow, routes, sched, st, cfg, &ready, now, ctx);
@@ -2289,6 +2697,7 @@ fn resolve_completion(
             degraded: f.degraded,
             resolution: f.resolution,
             predicted_s,
+            qos_class: f.qos,
         });
         let rec = st.metrics.frames.last().expect("just pushed");
         let (origin_id, release_t, latency_s, compute_s, qos_ok, was_degraded) = (
@@ -2570,6 +2979,7 @@ mod tests {
             start_t: 0.0,
             count: Some(1),
             arrival: ArrivalModel::Periodic,
+            qos_class: QosClass::Standard,
         };
         let wl = Workload { sources: vec![src] };
         let cfg = SimConfig::default().horizon(0.9).seed(11).noise(0.0);
@@ -2853,6 +3263,96 @@ mod tests {
             m.qos_failure_rate() > 0.3,
             "rate {}",
             m.qos_failure_rate()
+        );
+    }
+
+    #[test]
+    fn admission_below_saturation_is_byte_identical_to_none() {
+        // the default knee (2 in-flight tasks per active PU) is never
+        // reached by the paper VR workload, so a controller below
+        // saturation must take the exact legacy code path: same frames,
+        // same bits, zero interventions
+        let run = |admit: bool| {
+            let mut sim = Simulation::new(Decs::build(&DecsSpec::paper_vr()));
+            let mut sched = heye(&sim.decs);
+            let wl = Workload::vr(&sim.decs);
+            let mut cfg = SimConfig::default().horizon(0.4).seed(7);
+            if admit {
+                cfg = cfg.admission(AdmissionConfig::default());
+            }
+            sim.run(&mut sched, wl, &RunPlan::default(), &cfg)
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(off.frames.len(), on.frames.len());
+        for (a, b) in off.frames.iter().zip(&on.frames) {
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+            assert_eq!(a.finish_t.to_bits(), b.finish_t.to_bits());
+        }
+        assert_eq!(off.released, on.released);
+        assert_eq!(off.placements, on.placements);
+        let rep = on.admission.expect("controller was configured");
+        assert_eq!(rep.shed_total(), 0);
+        assert_eq!(rep.deferred, 0);
+        assert!(off.admission.is_none());
+    }
+
+    #[test]
+    fn admission_sheds_bulk_first_and_never_interactive() {
+        // one VR headset (interactive) plus bulk and standard sensor
+        // streams on the same Orin Nano, with the knee forced below a
+        // single in-flight task: every arrival that lands while anything
+        // runs faces the controller
+        let decs = Decs::build(&DecsSpec {
+            edges: vec![(ORIN_NANO.into(), 1)],
+            servers: vec![(crate::hwgraph::presets::SERVER1.into(), 1)],
+            edge_uplink_gbps: 10.0,
+            wan_gbps: 10.0,
+        });
+        let origin = decs.edge_devices[0];
+        let model = decs.device_model(origin).to_string();
+        let mut sim = Simulation::new(decs);
+        let mut sched = heye(&sim.decs);
+        let mut sources = vec![FrameSource::vr(origin, &model)];
+        for i in 0..4 {
+            let mut s = FrameSource::mining(origin, 50.0);
+            s.qos_class = QosClass::Bulk;
+            s.start_t = i as f64 * 0.001;
+            sources.push(s);
+        }
+        for i in 0..2 {
+            let mut s = FrameSource::mining(origin, 50.0);
+            s.start_t = 0.0005 + i as f64 * 0.001;
+            sources.push(s);
+        }
+        let cfg = SimConfig::default()
+            .horizon(0.5)
+            .seed(3)
+            .noise(0.0)
+            .admission(AdmissionConfig {
+                saturation_tasks_per_pu: 0.01,
+                queue_cap: 4,
+                queue_delay_s: 0.005,
+            });
+        let m = sim.run(&mut sched, Workload { sources }, &RunPlan::default(), &cfg);
+        let rep = m.admission.as_ref().expect("controller was configured");
+        assert!(rep.shed_bulk > 0, "bulk must shed under overload");
+        assert!(rep.deferred > 0, "standard must queue under overload");
+        assert!(rep.queue_depth_p95() >= 1);
+        // interactive frames keep flowing: the controller refused none,
+        // and the headset's completions stay on the record
+        let (_, vr_total) = m.class_goodput(QosClass::Interactive);
+        assert!(vr_total > 0, "interactive frames must keep completing");
+        // every arrival is exactly one of: executed (completed or
+        // dropped), shed, or still queued at the horizon. Shed frames
+        // never became engine frames, so they cannot inflate `dropped`
+        // (satellite: shed vs dropped distinction).
+        let arrivals: u64 = m.released.values().sum();
+        let executed = m.frames.len() as u64 + m.dropped;
+        assert!(
+            executed + rep.shed_total() <= arrivals,
+            "executed {executed} + shed {} must not exceed arrivals {arrivals}",
+            rep.shed_total()
         );
     }
 }

@@ -85,6 +85,14 @@ pub trait Scheduler: Send {
     /// Implementations must keep results identical at any setting.
     fn set_parallelism(&mut self, _threads: usize) {}
 
+    /// Enable/disable the steady-state frame fast path
+    /// ([`crate::orchestrator::fastpath::PlacementCache`]). The engine
+    /// forwards `ExecOpts::fast_path` here before a run. Implementations
+    /// must keep modeled results byte-identical at either setting — the
+    /// fast path may only change how much work a decision *costs*, never
+    /// the decision. Schedulers without one ignore the knob.
+    fn set_fast_path(&mut self, _on: bool) {}
+
     /// Drop adaptive session state (sticky placements, static plans). The
     /// engine calls this at each `SimConfig::reset_times` entry — the
     /// session-level reset the Fig. 12 dynamic-adaptation runs use without
@@ -92,14 +100,33 @@ pub trait Scheduler: Send {
     fn reset(&mut self) {}
 }
 
-/// H-EYE: the Orchestrator as a Scheduler.
+/// H-EYE: the Orchestrator as a Scheduler, fronted by the steady-state
+/// placement fast path (on by default; `set_fast_path(false)` drops it).
 pub struct HeyeScheduler {
     pub orc: Orchestrator,
+    fastpath: Option<crate::orchestrator::fastpath::PlacementCache>,
 }
 
 impl HeyeScheduler {
     pub fn new(orc: Orchestrator) -> Self {
-        Self { orc }
+        Self {
+            orc,
+            fastpath: Some(crate::orchestrator::fastpath::PlacementCache::new()),
+        }
+    }
+
+    /// Exact per-instance fast-path counters: (hits, misses, probe calls).
+    /// All zero when the fast path is disabled.
+    pub fn fastpath_stats(&self) -> (u64, u64, u64) {
+        self.fastpath
+            .as_ref()
+            .map(|c| c.stats())
+            .unwrap_or((0, 0, 0))
+    }
+
+    /// The placement cache, for white-box assertions in tests.
+    pub fn fastpath(&self) -> Option<&crate::orchestrator::fastpath::PlacementCache> {
+        self.fastpath.as_ref()
     }
 }
 
@@ -127,23 +154,66 @@ impl Scheduler for HeyeScheduler {
         now: f64,
         loads: &Loads,
     ) -> MapResult {
+        if let Some(cache) = self.fastpath.as_mut() {
+            if let Some(r) = cache.try_fast(&mut self.orc, tr, task, origin, data_dev, now, loads)
+            {
+                return r;
+            }
+            let r = self.orc.map_task(tr, task, origin, data_dev, now, loads);
+            cache.fill(&mut self.orc, tr, task, origin, data_dev, now, &r);
+            return r;
+        }
         self.orc.map_task(tr, task, origin, data_dev, now, loads)
+    }
+
+    fn on_network_change(&mut self, _g: &HwGraph, _net: &Network) {
+        // retimed links can flip an idle-reject; the orchestrator itself
+        // prices the live network on every evaluation
+        if let Some(c) = self.fastpath.as_mut() {
+            c.clear();
+        }
     }
 
     fn on_device_join(&mut self, g: &HwGraph, dev: NodeId) {
         self.orc.on_device_join(g, dev);
+        if let Some(c) = self.fastpath.as_mut() {
+            c.on_device_join(dev);
+        }
     }
 
     fn on_device_leave(&mut self, g: &HwGraph, dev: NodeId) {
         self.orc.on_device_leave(g, dev);
+        if let Some(c) = self.fastpath.as_mut() {
+            c.on_device_leave(dev);
+        }
+    }
+
+    fn on_capability(&mut self, _g: &HwGraph, _dev: NodeId, _weight: f64) {
+        // capacity re-advertisements can flip an idle-reject
+        if let Some(c) = self.fastpath.as_mut() {
+            c.clear();
+        }
     }
 
     fn set_parallelism(&mut self, threads: usize) {
         self.orc.set_parallelism(threads);
     }
 
+    fn set_fast_path(&mut self, on: bool) {
+        match (on, self.fastpath.is_some()) {
+            (true, false) => {
+                self.fastpath = Some(crate::orchestrator::fastpath::PlacementCache::new())
+            }
+            (false, true) => self.fastpath = None,
+            _ => {}
+        }
+    }
+
     fn reset(&mut self) {
         self.orc.reset_sticky();
+        if let Some(c) = self.fastpath.as_mut() {
+            c.clear();
+        }
     }
 }
 

@@ -204,6 +204,7 @@ pub(crate) fn on_handoff(
         // the home frame carries the QoS outcome; the stub only executes
         budget_s: f64::INFINITY,
         resolution: 1.0,
+        qos: crate::task::QosClass::Standard,
         noise_key: msg.noise_key,
         abandoned: false,
         remote_home: Some(RemoteHome {
@@ -353,6 +354,7 @@ impl Shard {
         // a sub-ORC (or baseline) sees the same world either way
         let mut sub = factory(decs);
         sub.set_parallelism(cfg.exec.parallelism);
+        sub.set_fast_path(cfg.exec.fast_path);
         for d in g.groups(GroupRole::Device) {
             if !member_set.contains(&d) {
                 sub.on_device_leave(g, d);
@@ -369,6 +371,18 @@ impl Shard {
             .collect();
         let mut st = SimState::new();
         st.trace = Tracer::new(cfg.exec.trace);
+        if let Some(a) = &cfg.exec.admission {
+            // headroom 0 until the first barrier-consistent summaries land
+            // (before any frame releases), so every shard's controller
+            // reads the same capability-weighted figure regardless of
+            // worker count
+            st.admission = Some(super::AdmissionState {
+                cfg: a.clone(),
+                headroom_pus: 0,
+                queued: 0,
+            });
+            st.metrics.admission = Some(crate::sim::metrics::AdmissionReport::default());
+        }
         Shard {
             id,
             sched: sub,
@@ -693,6 +707,15 @@ impl Simulation {
         for sh in shards.iter_mut() {
             sh.ctx.summaries = summaries.clone();
         }
+        // seed each shard's admission headroom from its own summary —
+        // computed before the first window (and refreshed only at
+        // structural barriers below), so decisions depend on barrier-
+        // consistent state only, never on worker interleaving
+        for (i, sh) in shards.iter_mut().enumerate() {
+            if let Some(a) = sh.st.admission.as_mut() {
+                a.headroom_pus = summaries[i].headroom_pus as u64;
+            }
+        }
         let mut lookahead = lookahead_of(&summaries, cfg.horizon_s);
 
         // --- the conservative window loop ---
@@ -894,6 +917,15 @@ impl Simulation {
                 for sh in shards.iter_mut() {
                     sh.ctx.summaries = summaries.clone();
                 }
+                // admission headroom tracks the refreshed summaries at the
+                // same barrier the schedulers learn about the structural
+                // change — the sharded twin of the monolithic engine's
+                // post-structural-event refresh
+                for (i, sh) in shards.iter_mut().enumerate() {
+                    if let Some(a) = sh.st.admission.as_mut() {
+                        a.headroom_pus = summaries[i].headroom_pus as u64;
+                    }
+                }
                 lookahead = lookahead_of(&summaries, cfg.horizon_s);
             }
             if now >= cfg.horizon_s {
@@ -976,6 +1008,13 @@ fn merge_metrics(parts: Vec<RunMetrics>) -> RunMetrics {
             *m.placements.entry(k).or_insert(0) += v;
         }
         m.leaves.extend(p.leaves);
+        if let Some(r) = p.admission {
+            let t = m.admission.get_or_insert_with(Default::default);
+            t.shed_bulk += r.shed_bulk;
+            t.shed_standard += r.shed_standard;
+            t.deferred += r.deferred;
+            t.queue_depths.extend(r.queue_depths);
+        }
         if let Some(r) = p.membership {
             let t = m.membership.get_or_insert_with(Default::default);
             t.devices += r.devices;
@@ -996,6 +1035,11 @@ fn merge_metrics(parts: Vec<RunMetrics>) -> RunMetrics {
     });
     m.leaves
         .sort_by(|a, b| a.t.total_cmp(&b.t).then(a.device.cmp(&b.device)));
+    // per-shard depth samples concatenate in shard order; sort so the
+    // distribution (all any consumer reads) is partition-invariant
+    if let Some(a) = m.admission.as_mut() {
+        a.queue_depths.sort_unstable();
+    }
     m
 }
 

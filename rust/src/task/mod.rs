@@ -125,6 +125,46 @@ impl TaskKind {
     }
 }
 
+/// QoS class of a frame source, carried on every frame end-to-end and
+/// consumed by the admission controller (shed `Bulk` first, bounded queue
+/// for `Standard`, never shed `Interactive`). Ordering is by priority:
+/// `Interactive < Standard < Bulk` sorts the most protected class first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum QosClass {
+    /// Latency-critical, user-facing (VR pipelines). Never shed.
+    Interactive,
+    /// Deadline-bearing but deferrable (mining analytics). Queued under
+    /// saturation, bounded; shed only when the queue is full.
+    #[default]
+    Standard,
+    /// Throughput work with no interactive deadline. First to shed.
+    Bulk,
+}
+
+impl QosClass {
+    pub const ALL: [QosClass; 3] = [QosClass::Interactive, QosClass::Standard, QosClass::Bulk];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Standard => "standard",
+            QosClass::Bulk => "bulk",
+        }
+    }
+
+    /// Parse the scenario/config JSON spelling (`"qos_class"` values).
+    pub fn parse(s: &str) -> Result<QosClass, String> {
+        match s {
+            "interactive" => Ok(QosClass::Interactive),
+            "standard" => Ok(QosClass::Standard),
+            "bulk" => Ok(QosClass::Bulk),
+            other => Err(format!(
+                "unknown qos_class {other:?} (expected interactive|standard|bulk)"
+            )),
+        }
+    }
+}
+
 /// Latency constraints (QoS) attached to a task.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Constraints {
@@ -210,6 +250,16 @@ mod tests {
         assert!(TaskKind::Capture.pinned_to_origin());
         assert!(TaskKind::Display.pinned_to_origin());
         assert!(!TaskKind::Render.pinned_to_origin());
+    }
+
+    #[test]
+    fn qos_class_round_trips() {
+        for c in QosClass::ALL {
+            assert_eq!(QosClass::parse(c.name()), Ok(c));
+        }
+        assert!(QosClass::parse("best-effort").is_err());
+        assert_eq!(QosClass::default(), QosClass::Standard);
+        assert!(QosClass::Interactive < QosClass::Bulk);
     }
 
     #[test]

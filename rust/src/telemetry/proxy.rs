@@ -8,6 +8,13 @@
 //! borrows the engine immutably and copies what it mirrors — nothing a
 //! consumer does with the snapshot can perturb a run, and the snapshot
 //! stays valid after the engine that produced it is gone.
+//!
+//! The `headroom_pus` each [`DomainMirror`] carries is the same signal
+//! the QoS-class admission gate consumes live: the sharded engine feeds
+//! each shard's gate from its domain's barrier-consistent summary, so a
+//! post-run snapshot shows exactly the headroom admission decisions were
+//! made against ("Admission control & the frame fast path" in the crate
+//! docs).
 
 use crate::domain::{ContinuumOrchestrator, DomainSummary};
 use crate::hwgraph::presets::Decs;

@@ -90,6 +90,13 @@ pub fn log_line(topic: &str, msg: std::fmt::Arguments<'_>) {
 pub enum TraceEvent {
     /// a source released a frame
     FrameRelease { frame: u64, origin: u64 },
+    /// the admission controller refused an arrival outright (`class` is
+    /// the [`crate::task::QosClass`] discriminant: 0 interactive,
+    /// 1 standard, 2 bulk — interactive never sheds by policy)
+    FrameShed { origin: u64, class: u64 },
+    /// the admission controller deferred a standard-class arrival into
+    /// the bounded queue; `depth` is the queue depth after the deferral
+    FrameDeferred { origin: u64, depth: u64 },
     /// one scheduler MapTask decision — the deterministic half of the
     /// engine's `Overhead` accounting (`dev` is `None` when the decision
     /// escalated to a foreign domain instead of placing locally)
@@ -177,6 +184,8 @@ impl TraceEvent {
     pub fn kind(&self) -> &'static str {
         match self {
             TraceEvent::FrameRelease { .. } => "release",
+            TraceEvent::FrameShed { .. } => "shed",
+            TraceEvent::FrameDeferred { .. } => "deferred",
             TraceEvent::SchedDecision { .. } => "sched",
             TraceEvent::SchedWall { .. } => "sched_wall",
             TraceEvent::Transfer { .. } => "xfer",
@@ -200,6 +209,8 @@ impl TraceEvent {
     fn tid(&self) -> u64 {
         match *self {
             TraceEvent::FrameRelease { origin, .. } => origin,
+            TraceEvent::FrameShed { origin, .. } => origin,
+            TraceEvent::FrameDeferred { origin, .. } => origin,
             TraceEvent::SchedDecision { dev, .. } => dev.unwrap_or(ORC_TID),
             TraceEvent::Transfer { to, .. } => to,
             TraceEvent::ExecSpan { device, .. } => device,
@@ -225,6 +236,12 @@ impl TraceEvent {
         match *self {
             TraceEvent::FrameRelease { frame, origin } => {
                 vec![("frame", num(frame)), ("origin", num(origin))]
+            }
+            TraceEvent::FrameShed { origin, class } => {
+                vec![("origin", num(origin)), ("class", num(class))]
+            }
+            TraceEvent::FrameDeferred { origin, depth } => {
+                vec![("origin", num(origin)), ("depth", num(depth))]
             }
             TraceEvent::SchedDecision {
                 frame,
@@ -368,6 +385,14 @@ impl TraceEvent {
             "release" => TraceEvent::FrameRelease {
                 frame: u("frame")?,
                 origin: u("origin")?,
+            },
+            "shed" => TraceEvent::FrameShed {
+                origin: u("origin")?,
+                class: u("class")?,
+            },
+            "deferred" => TraceEvent::FrameDeferred {
+                origin: u("origin")?,
+                depth: u("depth")?,
             },
             "sched" => TraceEvent::SchedDecision {
                 frame: u("frame")?,

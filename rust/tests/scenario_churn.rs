@@ -218,6 +218,33 @@ fn example_churn_scenario_runs_end_to_end() {
 }
 
 #[test]
+fn example_storm_scenario_runs_end_to_end() {
+    // the composed exemplar: a fleet-scale flash crowd with churn and a
+    // healed partition, the whole run gated by QoS-class admission control
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/scenario_storm.json");
+    let sc = Scenario::load(path).expect("exemplar parses and validates");
+    assert_eq!(sc.name, "storm");
+    assert!(sc.cfg.sim.exec.admission.is_some(), "admission gate is on");
+    assert_eq!(sc.qos_class, Some(heye::task::QosClass::Standard));
+    let report = sc.run().expect("exemplar runs");
+    let m = &report.run.metrics;
+    assert_eq!(m.leaves.len(), 2, "failure + graceful leave both applied");
+    assert!(m.leaves[0].failure);
+    assert!(!m.leaves[1].failure);
+    assert!(report.run.frames() > 0, "the fleet keeps serving through the storm");
+    let a = m.admission.as_ref().expect("admission report present");
+    assert_eq!(report.shed, a.shed_total());
+    assert_eq!(report.deferred, a.deferred);
+    // every completed frame carries the overridden class end-to-end
+    assert!(m
+        .frames
+        .iter()
+        .all(|f| f.qos_class == heye::task::QosClass::Standard));
+    assert_eq!(report.class_goodput.len(), 1);
+    assert_eq!(report.class_goodput[0].0, heye::task::QosClass::Standard);
+}
+
+#[test]
 fn scenario_report_is_deterministic_for_the_same_seed() {
     let mut sc = Scenario::preset("churn").unwrap();
     sc.cfg.sim.horizon_s = 0.8;
